@@ -1,0 +1,109 @@
+//! END-TO-END DRIVER: two-stage progressive ANN serving through all three
+//! layers (Sec VII-B / Fig 9).
+//!
+//!   L1  Pallas distance kernels  ──┐ lowered once by `make artifacts`
+//!   L2  JAX two-stage graphs     ──┘ into artifacts/*.hlo.txt
+//!   L3  this binary: router → dynamic batcher → PJRT execution,
+//!       with the SSD cost of every promoted fetch accounted through the
+//!       analytical device model.
+//!
+//! Run (after `make artifacts && cargo build --release`):
+//!     cargo run --release --example ann_serving
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fivemin::ann::{ann_throughput, AnnScenario};
+use fivemin::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
+use fivemin::coordinator::batcher::BatchPolicy;
+use fivemin::coordinator::{Coordinator, Router, ServingCorpus};
+use fivemin::runtime::{default_artifacts_dir, SERVE};
+use fivemin::util::rng::Rng;
+use fivemin::util::table::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // ---- corpus + serving stack ------------------------------------------
+    let n_shards = 4;
+    let corpus = Arc::new(ServingCorpus::synthetic(n_shards, 42));
+    println!(
+        "corpus: {} embeddings ({} reduced + {} full per vector), {} shards",
+        corpus.n,
+        512,
+        4096,
+        n_shards
+    );
+    println!("starting 2 workers (router round-robins across them)…");
+    let w1 = Coordinator::start(dir.clone(), corpus.clone(), BatchPolicy::default())?;
+    let w2 = Coordinator::start(dir, corpus.clone(), BatchPolicy::default())?;
+    let router = Router::new(vec![w1, w2]);
+
+    // ---- serve a batched query stream (concurrent submission) -------------
+    let n_queries = 256;
+    let mut rng = Rng::new(9);
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..n_queries)
+        .map(|_| {
+            let target = rng.below(corpus.n as u64) as usize;
+            (target, router.submit(corpus.query_near(target, 0.02, &mut rng)))
+        })
+        .collect();
+    let mut hits = 0usize;
+    let mut served = 0usize;
+    for (target, rx) in pending {
+        let res = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+        served += 1;
+        if res.ids[0] as usize == target {
+            hits += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+
+    let stats = router.stats();
+    let queries: u64 = stats.iter().map(|s| s.queries).sum();
+    let batches: u64 = stats.iter().map(|s| s.batches).sum();
+    println!("\n=== end-to-end serving results ===");
+    println!("queries    : {served} in {dt:.2}s  ->  {:.0} QPS", served as f64 / dt);
+    println!("recall@1   : {:.1}%", 100.0 * hits as f64 / served as f64);
+    println!("batches    : {batches} ({:.1} queries/batch avg)", queries as f64 / batches as f64);
+    for (i, s) in stats.iter().enumerate() {
+        println!(
+            "worker {i}   : {} queries, latency p50 {} p99 {}, stage1 p50 {}, stage2 p50 {}",
+            s.queries,
+            fmt_secs(s.latency_ns.percentile(0.5) / 1e9),
+            fmt_secs(s.latency_ns.percentile(0.99) / 1e9),
+            fmt_secs(s.stage1_ns.percentile(0.5) / 1e9),
+            fmt_secs(s.stage2_ns.percentile(0.5) / 1e9),
+        );
+    }
+    let ssd_reads: u64 = stats.iter().map(|s| s.ssd_reads).sum();
+    println!("SSD fetches: {ssd_reads} promoted full vectors ({} per query)", SERVE.topk);
+
+    // ---- what this workload costs at paper scale --------------------------
+    println!("\n=== Fig 10 projection at paper scale (8G embeddings) ===");
+    let gpu = PlatformConfig::preset(PlatformKind::GpuGddr);
+    let sn = SsdConfig::storage_next(NandKind::Slc);
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    for kb in [2u64, 4, 6, 8] {
+        let sc = AnnScenario::paper_default(kb);
+        let small = ann_throughput(&sc, &gpu, &sn, 32.0 * GB);
+        let large = ann_throughput(&sc, &gpu, &sn, 512.0 * GB);
+        println!(
+            "  512B->{kb}KB ({:.0}% promoted): {:>5.1} KQPS @32GB -> {:>5.1} KQPS @512GB ({})",
+            sc.promote_frac * 100.0,
+            small.qps / 1e3,
+            large.qps / 1e3,
+            large.limiter
+        );
+    }
+    println!("\nDiskANN-class systems report ~5 KQPS at billion scale; GPU+Storage-Next");
+    println!("pushes toward tens of KQPS while keeping HNSW-level recall.");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! SSD-resident KV store demo (Sec VII-A): the functional blocked-Cuckoo
+//! engine running a YCSB-style mixed workload with DRAM hot-pair caching
+//! and WAL consolidation, followed by the paper-scale Fig 8 projection.
+//!
+//!     cargo run --release --example kv_store_demo
+
+use fivemin::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
+use fivemin::kvstore::{
+    kv_throughput, CuckooParams, KvEngine, KvScenario, MemStore,
+};
+use fivemin::util::rng::{Rng, Zipf};
+use fivemin::util::table::{fmt_si, Table};
+
+fn main() {
+    // ---- functional engine at demo scale --------------------------------
+    let n_items = 200_000u64;
+    let params = CuckooParams::for_capacity(n_items, 0.7, 512, 64);
+    let store = MemStore::new(params.n_buckets, params.slots_per_bucket);
+    let mut engine = KvEngine::new(params, store, 20_000, 512);
+
+    println!("loading {n_items} items into the blocked-Cuckoo store…");
+    for k in 1..=n_items {
+        engine.put(k, k.wrapping_mul(0x9E37_79B9));
+    }
+    engine.flush();
+
+    println!("running 500k ops of 90:10 GET:PUT with zipf(1.1) popularity…");
+    let zipf = Zipf::new(n_items as usize, 1.1);
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let ops = 500_000u64;
+    for i in 0..ops {
+        let key = 1 + zipf.sample(&mut rng) as u64;
+        if rng.bool(0.9) {
+            let v = engine.get(key);
+            assert!(v.is_some(), "key {key} lost");
+        } else {
+            engine.put(key, i);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let st = engine.stats;
+    println!("  engine throughput : {} ops/s (in-process, correctness-focused)", fmt_si(ops as f64 / dt));
+    println!("  cache hit rate    : {:.1}%", 100.0 * engine.cache.hit_rate());
+    println!("  SSD I/Os per op   : {:.3} ({} reads, {} writes)",
+        engine.ios_per_op(), st.ssd_reads, st.ssd_writes);
+    println!("  WAL appends/flushes: {} / {}", st.wal_appends, st.flushes);
+    println!("  failed inserts    : {}\n", st.failed_inserts);
+
+    // ---- paper-scale projection (Fig 8) ----------------------------------
+    println!("Fig 8 projection — 5TB store (80G x 64B), strong locality:");
+    let mut t = Table::new(
+        "achievable Mops/s by platform/device and DRAM capacity",
+        &["config", "64GB", "256GB", "512GB"],
+    );
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    for (pname, pk) in [("CPU", PlatformKind::CpuDdr), ("GPU", PlatformKind::GpuGddr)] {
+        let plat = PlatformConfig::preset(pk);
+        for (dname, cfg) in [
+            ("NR", SsdConfig::normal(NandKind::Slc)),
+            ("SN", SsdConfig::storage_next(NandKind::Slc)),
+        ] {
+            let sc = KvScenario::paper_default(0.9, 1.2);
+            let mut row = vec![format!("{pname}+{dname}")];
+            for cap in [64.0, 256.0, 512.0] {
+                let r = kv_throughput(&sc, &plat, &cfg, cap * GB);
+                row.push(format!("{:.0}M ({})", r.achievable / 1e6, r.limiter));
+            }
+            t.row(row);
+        }
+    }
+    println!("{}", t.render());
+    println!("GPU + Storage-Next sustains 100+ Mops/s — in-memory-KV-class \
+              throughput from an SSD-resident store.");
+}

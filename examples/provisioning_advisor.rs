@@ -1,0 +1,67 @@
+//! Provisioning advisor: the Sec V workload-aware framework end to end.
+//!
+//! Takes the paper's Fig 6 workload (1e9 blocks, 200GB/s, log-normal
+//! σ=1.2), walks both platforms through viability analysis at several DRAM
+//! capacities, and prints the upgrade advice the framework produces.
+//!
+//!     cargo run --release --example provisioning_advisor
+
+use fivemin::config::{IoMix, NandKind, PlatformConfig, PlatformKind, SsdConfig};
+use fivemin::figures::fig_provisioning::tier90;
+use fivemin::model::{platform as plat_model, upgrade};
+use fivemin::util::table::{fmt_bytes, fmt_secs};
+use fivemin::workload::LognormalProfile;
+
+fn main() {
+    let l_blk = 512u64;
+    let mix = IoMix::paper_default();
+    let profile = LognormalProfile::calibrated(200e9, 1.2, 1e9, l_blk);
+    println!(
+        "workload: 1e9 x {l_blk}B blocks ({}), 200GB/s aggregate, sigma=1.2\n",
+        fmt_bytes(1e9 * l_blk as f64)
+    );
+
+    for pk in PlatformKind::all() {
+        let plat = PlatformConfig::preset(pk);
+        for cfg in [SsdConfig::normal(NandKind::Slc), SsdConfig::storage_next(NandKind::Slc)] {
+            let Some(pr) = plat_model::provision(&profile, &plat, &cfg, mix, tier90(l_blk))
+            else {
+                println!("{} + {}: infeasible at any DRAM capacity", plat.name(), cfg.name);
+                continue;
+            };
+            println!("=== {} + {} ===", plat.name(), cfg.name);
+            println!(
+                "  thresholds: T_B={} T_S={} tau_be={}",
+                fmt_secs(pr.t_b),
+                fmt_secs(pr.t_s),
+                fmt_secs(pr.break_even.total)
+            );
+            println!(
+                "  min viable DRAM: {:>9}   economics-optimal DRAM: {:>9}",
+                fmt_bytes(pr.cap_viable),
+                fmt_bytes(pr.cap_optimal)
+            );
+
+            // what does the advisor say at half the viable capacity?
+            let advice = upgrade::advise(
+                &profile, &plat, &cfg, mix, tier90(l_blk), pr.cap_viable * 0.5,
+            );
+            println!(
+                "  at {} DRAM: viable={} -> {:?}",
+                fmt_bytes(pr.cap_viable * 0.5),
+                advice.verdict.viable,
+                advice.recommendations[0]
+            );
+            // and at the optimum?
+            let advice = upgrade::advise(
+                &profile, &plat, &cfg, mix, tier90(l_blk), pr.cap_optimal * 1.05,
+            );
+            println!(
+                "  at {} DRAM: viable={} optimal={}\n",
+                fmt_bytes(pr.cap_optimal * 1.05),
+                advice.verdict.viable,
+                advice.verdict.economics_optimal
+            );
+        }
+    }
+}

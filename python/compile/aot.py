@@ -1,0 +1,76 @@
+"""AOT lowering: jax graphs -> HLO *text* artifacts + a JSON manifest.
+
+HLO text (not `.serialize()`d HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowering uses return_tuple=True, so
+the Rust side unwraps results with `to_tuple()`.
+
+Run via `make artifacts` (a no-op when inputs are unchanged):
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "return_tuple": True, "entries": {}}
+    for name, fn, example_args in model.entry_specs():
+        text = lower_entry(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)}
+                for a in example_args
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # model.hlo.txt: canonical alias required by the top-level Makefile
+    # contract — points at the fused two-stage serving graph.
+    two_stage = manifest["entries"]["two_stage"]["file"]
+    src = os.path.join(args.out_dir, two_stage)
+    dst = os.path.join(args.out_dir, "model.hlo.txt")
+    with open(src) as f, open(dst, "w") as g:
+        g.write(f.read())
+    manifest["entries"]["model"] = dict(
+        manifest["entries"]["two_stage"], file="model.hlo.txt"
+    )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Layer-1 Pallas kernels: the ANN distance-computation hot-spot.
+
+The paper's two-stage progressive ANN search (Sec VII-B) spends its compute
+in query x candidate distance evaluation:
+
+  * stage 1: score a query batch against a DRAM-resident shard of
+    reduced-dimension vectors (512B = 128 x f32) and keep the top-K;
+  * stage 2: re-rank each query's K promoted candidates with their
+    full-dimension vectors (2KB-8KB = 512-2048 x f32) fetched from the SSD.
+
+Hardware adaptation (DESIGN.md SSHardware-Adaptation): the paper frames this
+for GPU warps + tensor cores; here each kernel is tiled for the TPU memory
+system instead. BlockSpec expresses the HBM->VMEM schedule (one corpus tile
+of BLOCK_N vectors resident in VMEM per grid step) and the inner product is
+a single MXU-shaped `dot_general`. Kernels are lowered with interpret=True
+so the emitted HLO runs on the CPU PJRT plugin (real-TPU lowering produces
+Mosaic custom-calls the CPU client cannot execute); TPU efficiency is
+estimated analytically in DESIGN.md SSPerf.
+
+Every public wrapper pads ragged shapes up to tile multiples and slices the
+result back, so callers may pass arbitrary (B, N, D).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile of corpus vectors staged into VMEM per grid step. 128 matches the
+# MXU systolic-array edge; a (128 x 1024) f32 tile is 512KB of VMEM,
+# comfortably inside the ~16MB/core budget with double buffering.
+BLOCK_N = 128
+
+
+def _ip_kernel(q_ref, c_ref, o_ref):
+    """One grid step: scores for all queries vs one corpus tile.
+
+    q_ref: (B, D) queries (replicated across the grid; stays in VMEM)
+    c_ref: (BLOCK_N, D) corpus tile for this grid step
+    o_ref: (B, BLOCK_N) output tile
+    """
+    o_ref[...] = jax.lax.dot_general(
+        q_ref[...],
+        c_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _l2_kernel(q_ref, c_ref, o_ref):
+    """Squared-L2 scores: ||q||^2 - 2 q.c + ||c||^2 per (query, candidate)."""
+    ip = jax.lax.dot_general(
+        q_ref[...],
+        c_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    qn = jnp.sum(q_ref[...].astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    cn = jnp.sum(c_ref[...].astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    o_ref[...] = qn - 2.0 * ip + cn.T
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+def _scores(kernel, queries: jax.Array, corpus: jax.Array) -> jax.Array:
+    if queries.ndim != 2 or corpus.ndim != 2:
+        raise ValueError("queries and corpus must be rank-2")
+    if queries.shape[1] != corpus.shape[1]:
+        raise ValueError(
+            f"dimension mismatch: queries D={queries.shape[1]} "
+            f"corpus D={corpus.shape[1]}"
+        )
+    b, _ = queries.shape
+    n, d = corpus.shape
+    cp = _pad_axis(corpus, 0, BLOCK_N)
+    np_ = cp.shape[0]
+    grid = (np_ // BLOCK_N,)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, BLOCK_N), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, np_), jnp.float32),
+        interpret=True,
+    )(queries, cp)
+    return out[:, :n]
+
+
+def ip_scores(queries: jax.Array, corpus: jax.Array) -> jax.Array:
+    """Inner-product scores, (B, D) x (N, D) -> (B, N) f32."""
+    return _scores(_ip_kernel, queries, corpus)
+
+
+def l2_scores(queries: jax.Array, corpus: jax.Array) -> jax.Array:
+    """Squared-L2 distances, (B, D) x (N, D) -> (B, N) f32."""
+    return _scores(_l2_kernel, queries, corpus)
+
+
+def _rerank_kernel(q_ref, cand_ref, o_ref):
+    """Stage-2 re-rank for a single query's promoted candidates.
+
+    q_ref: (1, D) this query's full-dimension vector
+    cand_ref: (1, K, D) its K promoted full-dimension candidates
+    o_ref: (1, K) inner-product scores
+    """
+    q = q_ref[0, :]
+    cand = cand_ref[0, :, :]
+    o_ref[0, :] = jax.lax.dot_general(
+        cand,
+        q[:, None],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+
+
+def rerank_scores(queries: jax.Array, candidates: jax.Array) -> jax.Array:
+    """Per-query candidate re-rank, (B, D) x (B, K, D) -> (B, K) f32.
+
+    Unlike `ip_scores`, each query scores its *own* candidate set (the
+    vectors promoted by stage 1), so the grid walks the batch dimension
+    and each step stages one (K x D) candidate block into VMEM.
+    """
+    if queries.ndim != 2 or candidates.ndim != 3:
+        raise ValueError("queries must be rank-2 and candidates rank-3")
+    b, d = queries.shape
+    bc, k, dc = candidates.shape
+    if bc != b or dc != d:
+        raise ValueError(
+            f"shape mismatch: queries {queries.shape} candidates {candidates.shape}"
+        )
+    return pl.pallas_call(
+        _rerank_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, k, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=True,
+    )(queries, candidates)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes_per_step(b: int, d: int, block_n: int = BLOCK_N) -> int:
+    """Analytic VMEM footprint of one `_ip_kernel` grid step (SSPerf input)."""
+    f32 = 4
+    return (b * d + block_n * d + b * block_n) * f32

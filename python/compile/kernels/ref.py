@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in `distance.py` must match these references to float32
+tolerance under pytest + hypothesis sweeps (python/tests/test_kernels.py).
+Keeping the oracle free of pallas imports guarantees an independent
+lowering path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ip_scores_ref(queries, corpus):
+    """(B, D) x (N, D) -> (B, N) inner-product scores in f32."""
+    return jnp.matmul(
+        queries.astype(jnp.float32), corpus.astype(jnp.float32).T
+    )
+
+
+def l2_scores_ref(queries, corpus):
+    """(B, D) x (N, D) -> (B, N) squared-L2 distances in f32."""
+    q = queries.astype(jnp.float32)
+    c = corpus.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1, keepdims=True)
+    return qn - 2.0 * jnp.matmul(q, c.T) + cn.T
+
+
+def rerank_scores_ref(queries, candidates):
+    """(B, D) x (B, K, D) -> (B, K) per-query inner products in f32."""
+    q = queries.astype(jnp.float32)
+    c = candidates.astype(jnp.float32)
+    return jnp.einsum("bd,bkd->bk", q, c)

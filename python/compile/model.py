@@ -1,0 +1,161 @@
+"""Layer-2 JAX compute graphs, lowered once by aot.py and executed from Rust.
+
+Two families of graphs:
+
+  * ANN serving graphs (Sec VII-B): `reduced_topk` (stage-1 shard scan over
+    reduced-dimension vectors + top-K), `full_rerank` (stage-2 re-rank of
+    SSD-fetched full-dimension candidates), and a fused `two_stage` used by
+    tests and the quickstart. The distance inner loops are the Layer-1
+    Pallas kernels, so they lower into the same HLO module.
+
+  * `breakeven_sweep`: the calibrated break-even interval (Eq. 1) evaluated
+    vectorized over a parameter grid. The Rust analytical framework owns
+    the scalar model; this graph lets the figure harness cross-check the
+    Rust implementation against an independently lowered XLA evaluation.
+
+All functions are shape-polymorphic in Python; aot.py pins the serving
+shapes (SERVE_*) that the Rust runtime expects (mirrored in
+rust/src/runtime/artifacts.rs and recorded in artifacts/manifest.json).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distance
+
+# ---------------------------------------------------------------------------
+# Serving shapes baked into the AOT artifacts. The Rust runtime asserts the
+# manifest matches these constants; change both sides together.
+# ---------------------------------------------------------------------------
+SERVE_BATCH = 32        # queries per coordinator batch
+SERVE_SHARD = 4096      # reduced-dim vectors per DRAM-cache shard scan
+SERVE_TOPK = 64         # candidates promoted to full-dimension re-rank
+REDUCED_DIM = 128       # 512B / f32 — the paper's reduced-vector block
+FULL_DIM = 1024         # 4KB / f32 — the paper's default full vector
+SWEEP_GRID = 64         # break-even sweep grid points
+
+
+def _topk(scores: jax.Array, k: int):
+    """Sort-based descending top-k.
+
+    Deliberately avoids `jax.lax.top_k`: modern jax lowers it to the
+    dedicated `topk` HLO instruction whose text form (k=…, largest=…) the
+    xla_extension 0.5.1 parser used by the Rust runtime rejects. argsort
+    lowers to the classic `sort` op, which round-trips cleanly.
+    """
+    idx = jnp.argsort(-scores, axis=-1)[..., :k].astype(jnp.int32)
+    vals = jnp.take_along_axis(scores, idx, axis=-1)
+    return vals, idx
+
+
+def reduced_topk(q_red: jax.Array, shard: jax.Array, k: int = SERVE_TOPK):
+    """Stage 1: score a query batch against one reduced-dim shard, keep top-K.
+
+    q_red: (B, REDUCED_DIM) f32, shard: (N, REDUCED_DIM) f32.
+    Returns (scores (B, K) f32, indices (B, K) i32) sorted descending.
+    """
+    scores = distance.ip_scores(q_red, shard)
+    return _topk(scores, k)
+
+
+def full_rerank(q_full: jax.Array, cand_full: jax.Array):
+    """Stage 2: re-rank each query's promoted candidates by full-dim score.
+
+    q_full: (B, FULL_DIM) f32, cand_full: (B, K, FULL_DIM) f32 — the vectors
+    the Rust coordinator fetched from the (simulated) SSD for the stage-1
+    survivors. Returns (scores (B, K) f32, order (B, K) i32): `order[b]`
+    permutes candidate slots best-first.
+    """
+    scores = distance.rerank_scores(q_full, cand_full)
+    return _topk(scores, scores.shape[1])
+
+
+def two_stage(q_red, shard_red, q_full, shard_full, k: int = SERVE_TOPK):
+    """Fused two-stage search where the full corpus shard is available.
+
+    Used by tests and the quickstart to validate that progressive search
+    (reduced-dim prune -> full-dim re-rank) agrees with brute force; the
+    serving path splits the stages around the SSD fetch instead.
+    Returns (final_scores (B, k) f32, corpus_indices (B, k) i32).
+    """
+    _, idx = reduced_topk(q_red, shard_red, k)
+    cand_full = jnp.take(shard_full, idx, axis=0)  # (B, k, FULL_DIM)
+    vals, order = full_rerank(q_full, cand_full)
+    final_idx = jnp.take_along_axis(idx, order, axis=1)
+    return vals, final_idx
+
+
+def breakeven_sweep(
+    iops_ssd, cost_ssd, cost_core, iops_core, cost_dram_die,
+    bw_dram_die, cap_dram_die, blk_bytes,
+):
+    """Vectorized Eq. 1: tau = (core + dram-bw + ssd costs) * cap/(blk*$dram).
+
+    All arguments are (SWEEP_GRID,) f32 arrays (scalars broadcast by the
+    caller); returns break-even seconds per grid point.
+    """
+    per_io = (
+        cost_core / iops_core
+        + blk_bytes * cost_dram_die / bw_dram_die
+        + cost_ssd / iops_ssd
+    )
+    rent_rate = blk_bytes * cost_dram_die / cap_dram_die
+    return per_io / rent_rate
+
+
+# ---------------------------------------------------------------------------
+# Entry points pinned to serving shapes for AOT lowering.
+# ---------------------------------------------------------------------------
+
+def serve_reduced_entry(q_red, shard):
+    return reduced_topk(q_red, shard, SERVE_TOPK)
+
+
+def serve_full_entry(q_full, cand_full):
+    return full_rerank(q_full, cand_full)
+
+
+def serve_two_stage_entry(q_red, shard_red, q_full, shard_full):
+    return two_stage(q_red, shard_red, q_full, shard_full, SERVE_TOPK)
+
+
+def sweep_entry(iops_ssd, cost_ssd, cost_core, iops_core, cost_dram_die,
+                bw_dram_die, cap_dram_die, blk_bytes):
+    return (
+        breakeven_sweep(iops_ssd, cost_ssd, cost_core, iops_core,
+                        cost_dram_die, bw_dram_die, cap_dram_die, blk_bytes),
+    )
+
+
+def entry_specs():
+    """(name, fn, example-arg shapes) for every AOT artifact."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    g = (SWEEP_GRID,)
+    return [
+        (
+            "reduced_score",
+            serve_reduced_entry,
+            (s((SERVE_BATCH, REDUCED_DIM), f32),
+             s((SERVE_SHARD, REDUCED_DIM), f32)),
+        ),
+        (
+            "full_score",
+            serve_full_entry,
+            (s((SERVE_BATCH, FULL_DIM), f32),
+             s((SERVE_BATCH, SERVE_TOPK, FULL_DIM), f32)),
+        ),
+        (
+            "two_stage",
+            serve_two_stage_entry,
+            (s((8, 64), f32), s((1024, 64), f32),
+             s((8, 256), f32), s((1024, 256), f32)),
+        ),
+        (
+            "breakeven_sweep",
+            sweep_entry,
+            tuple(s(g, f32) for _ in range(8)),
+        ),
+    ]

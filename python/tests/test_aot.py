@@ -1,0 +1,63 @@
+"""AOT pipeline: lowering emits loadable HLO text + a consistent manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    return out
+
+
+def test_all_entries_emitted(artifacts):
+    names = {n for n, _, _ in model.entry_specs()} | {"model"}
+    for name in names:
+        path = artifacts / f"{name}.hlo.txt"
+        assert path.exists(), f"missing {path}"
+        text = path.read_text()
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ROOT" in text
+
+
+def test_manifest_matches_entry_specs(artifacts):
+    manifest = json.loads((artifacts / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    assert manifest["return_tuple"] is True
+    for name, _, args in model.entry_specs():
+        entry = manifest["entries"][name]
+        assert entry["file"] == f"{name}.hlo.txt"
+        assert [tuple(i["shape"]) for i in entry["inputs"]] == [
+            tuple(a.shape) for a in args
+        ]
+
+
+def test_serving_shape_constants():
+    """Shape contract mirrored in rust/src/runtime — keep in sync."""
+    assert model.SERVE_BATCH == 32
+    assert model.SERVE_SHARD == 4096
+    assert model.SERVE_TOPK == 64
+    assert model.REDUCED_DIM == 128
+    assert model.FULL_DIM == 1024
+    assert model.REDUCED_DIM * 4 == 512      # 512B reduced vector (f32)
+    assert model.FULL_DIM * 4 == 4096        # 4KB full vector (f32)
+
+
+def test_hlo_text_has_no_64bit_id_proto_serialization(artifacts):
+    """Interchange must be text (xla_extension 0.5.1 rejects jax>=0.5 protos)."""
+    text = (artifacts / "reduced_score.hlo.txt").read_text()
+    # plain ASCII text module, not a binary proto
+    assert text.isprintable() or "\n" in text

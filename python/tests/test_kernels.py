@@ -1,0 +1,118 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core numeric signal for the whole stack: the AOT artifacts the
+Rust runtime executes are lowered from exactly these kernels. Hypothesis
+sweeps shapes (including ragged, non-tile-multiple corpus sizes) and
+dtypes; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distance, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+shape_strategy = st.tuples(
+    st.integers(min_value=1, max_value=9),      # B
+    st.integers(min_value=1, max_value=300),    # N (crosses BLOCK_N=128)
+    st.integers(min_value=1, max_value=160),    # D
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_strategy)
+def test_ip_scores_matches_ref(params):
+    b, n, d, seed = params
+    q = _rand((b, d), jnp.float32, seed)
+    c = _rand((n, d), jnp.float32, seed + 1)
+    got = distance.ip_scores(q, c)
+    want = ref.ip_scores_ref(q, c)
+    assert got.shape == (b, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shape_strategy)
+def test_l2_scores_matches_ref(params):
+    b, n, d, seed = params
+    q = _rand((b, d), jnp.float32, seed)
+    c = _rand((n, d), jnp.float32, seed + 1)
+    got = distance.l2_scores(q, c)
+    want = ref.l2_scores_ref(q, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=8),    # B
+    st.integers(min_value=1, max_value=64),   # K
+    st.integers(min_value=1, max_value=128),  # D
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rerank_scores_matches_ref(b, k, d, seed):
+    q = _rand((b, d), jnp.float32, seed)
+    cand = _rand((b, k, d), jnp.float32, seed + 1)
+    got = distance.rerank_scores(q, cand)
+    want = ref.rerank_scores_ref(q, cand)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_ip_scores_dtypes(dtype):
+    """Kernels accept reduced-precision inputs and accumulate in f32."""
+    q = _rand((4, 128), dtype, 7)
+    c = _rand((256, 128), dtype, 8)
+    got = distance.ip_scores(q, c)
+    want = ref.ip_scores_ref(q, c)
+    assert got.dtype == jnp.float32
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_l2_zero_distance_on_identical_vectors():
+    v = _rand((3, 64), jnp.float32, 3)
+    d = distance.l2_scores(v, v)
+    np.testing.assert_allclose(np.asarray(jnp.diagonal(d)), 0.0, atol=1e-3)
+
+
+def test_ip_scores_exact_tile_boundary():
+    """N exactly at BLOCK_N and at BLOCK_N +/- 1 (padding edge cases)."""
+    for n in (distance.BLOCK_N - 1, distance.BLOCK_N, distance.BLOCK_N + 1,
+              2 * distance.BLOCK_N):
+        q = _rand((2, 32), jnp.float32, n)
+        c = _rand((n, 32), jnp.float32, n + 1)
+        got = distance.ip_scores(q, c)
+        want = ref.ip_scores_ref(q, c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_shape_validation_errors():
+    q = _rand((2, 8), jnp.float32, 0)
+    c = _rand((4, 9), jnp.float32, 1)
+    with pytest.raises(ValueError):
+        distance.ip_scores(q, c)
+    with pytest.raises(ValueError):
+        distance.rerank_scores(q, _rand((3, 2, 8), jnp.float32, 2))
+
+
+def test_vmem_budget_for_serving_shapes():
+    """SSPerf guard: one grid step of the serving config stays under 4MB."""
+    from compile import model
+    step = distance.vmem_bytes_per_step(model.SERVE_BATCH, model.FULL_DIM)
+    assert step <= 4 * 1024 * 1024

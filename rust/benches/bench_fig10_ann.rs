@@ -1,0 +1,7 @@
+//! Bench E13: regenerate Fig 10 (two-stage ANN throughput).
+mod common;
+use fivemin::figures::fig_casestudies;
+
+fn main() {
+    common::bench_figure("fig10", 5, fig_casestudies::fig10);
+}

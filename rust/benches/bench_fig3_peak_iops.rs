@@ -1,0 +1,7 @@
+//! Bench E1: regenerate Fig 3 (peak IOPS by NAND type x block size).
+mod common;
+use fivemin::figures::fig_peak_iops;
+
+fn main() {
+    common::bench_figure("fig3", 20, fig_peak_iops::fig3);
+}

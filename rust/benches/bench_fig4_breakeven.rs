@@ -1,0 +1,8 @@
+//! Bench E3: regenerate Fig 4 (break-even interval decompositions).
+mod common;
+use fivemin::figures::fig_breakeven;
+
+fn main() {
+    common::bench_figure("fig4", 20, || fig_breakeven::fig4().0);
+    println!("{}", fig_breakeven::fig4().1);
+}

@@ -1,0 +1,9 @@
+//! Bench E5/E6: regenerate Fig 5 (constraint-aware break-even under host
+//! budgets and tail-latency tiers).
+mod common;
+use fivemin::figures::fig_breakeven;
+
+fn main() {
+    common::bench_figure("fig5ab", 20, fig_breakeven::fig5_host_budget);
+    common::bench_figure("fig5cd", 20, fig_breakeven::fig5_latency_tiers);
+}

@@ -1,0 +1,7 @@
+//! Bench E7: regenerate Fig 6 (min DRAM for viability/optimality).
+mod common;
+use fivemin::figures::fig_provisioning;
+
+fn main() {
+    common::bench_figure("fig6", 10, fig_provisioning::fig6);
+}

@@ -1,0 +1,12 @@
+//! Bench E8-E11: regenerate Fig 7 (MQSim-Next validation + sensitivity).
+//! Pass FIVEMIN_FULL=1 for the longer simulation windows.
+mod common;
+use fivemin::figures::fig_mqsim;
+
+fn main() {
+    let quick = std::env::var("FIVEMIN_FULL").is_err();
+    common::bench_figure("fig7a", 1, || fig_mqsim::fig7a(quick));
+    common::bench_figure("fig7b", 1, || fig_mqsim::fig7b(quick));
+    common::bench_figure("fig7c", 1, || fig_mqsim::fig7c(quick));
+    common::bench_figure("fig7d", 1, || fig_mqsim::fig7d(quick));
+}

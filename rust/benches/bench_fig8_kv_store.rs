@@ -1,0 +1,8 @@
+//! Bench E12: regenerate Fig 8 (KV-store achievable throughput).
+mod common;
+use fivemin::figures::fig_casestudies;
+
+fn main() {
+    common::bench_figure("fig8", 5, fig_casestudies::fig8);
+    println!("{}", fig_casestudies::fig8_chart());
+}

@@ -1,0 +1,159 @@
+//! Perf benches for the hot paths (EXPERIMENTS.md §Perf):
+//!   * MQSim-Next event throughput (the simulator bottleneck)
+//!   * analytical-framework evaluation rates (break-even, thresholds)
+//!   * KV engine ops/s (in-process mechanism cost)
+//!   * HNSW search latency
+//!   * PJRT two-stage batch execution (when artifacts are present)
+
+mod common;
+
+use fivemin::config::{IoMix, NandKind, PlatformConfig, PlatformKind, SsdConfig};
+use fivemin::kvstore::{CuckooParams, KvEngine, MemStore};
+use fivemin::model::economics;
+use fivemin::sim::{run_uniform, SimParams};
+use fivemin::util::rng::{Rng, Zipf};
+use fivemin::util::Timer;
+
+fn bench_sim_event_rate() {
+    use fivemin::sim::{SsdSim, TraceSource};
+    use fivemin::workload::trace::{AddressDist, TraceCfg, TraceGen};
+    let cfg = SsdConfig::storage_next(NandKind::Slc);
+    let prm = SimParams::default_for(512);
+    // split setup (precondition) from the event loop proper
+    let t_setup = Timer::start();
+    let mut sim = SsdSim::new(cfg.clone(), prm.clone());
+    let setup = t_setup.elapsed_s();
+    let mut gen = TraceGen::new(TraceCfg {
+        n_blocks: sim.logical_blocks(),
+        block_bytes: 512,
+        read_frac: 0.9,
+        addr: AddressDist::Uniform,
+        seed: 1,
+    });
+    let mut src = TraceSource { gen: &mut gen };
+    let t_run = Timer::start();
+    let stats = sim.run_closed_loop(&mut src, 300_000, 3_000_000).clone();
+    let wall = t_run.elapsed_s();
+    let ios = stats.reads_done + stats.writes_done;
+    println!(
+        "bench sim_hotpath: setup {:.2}s | {:.2}M simulated IOPS | {:.0}k host IOs in {:.2}s wall -> {:.2}M IO/s sim rate",
+        setup,
+        stats.iops() / 1e6,
+        ios as f64 / 1e3,
+        wall,
+        ios as f64 / wall / 1e6
+    );
+}
+
+fn bench_breakeven_rate() {
+    let plat = PlatformConfig::preset(PlatformKind::GpuGddr);
+    let cfg = SsdConfig::storage_next(NandKind::Slc);
+    let mix = IoMix::paper_default();
+    let n = 1_000_000u64;
+    let t = Timer::start();
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        let l = 512 << (i % 4);
+        acc += economics::break_even(&plat, &cfg, l, mix).total;
+    }
+    let dt = t.elapsed_s();
+    println!(
+        "bench breakeven_eval: {:.1}M evals/s (acc {acc:.1})",
+        n as f64 / dt / 1e6
+    );
+}
+
+fn bench_kv_engine() {
+    let n_items = 100_000u64;
+    let params = CuckooParams::for_capacity(n_items, 0.7, 512, 64);
+    let store = MemStore::new(params.n_buckets, params.slots_per_bucket);
+    let mut engine = KvEngine::new(params, store, 10_000, 512);
+    for k in 1..=n_items {
+        engine.put(k, k);
+    }
+    engine.flush();
+    let zipf = Zipf::new(n_items as usize, 1.1);
+    let mut rng = Rng::new(3);
+    let ops = 400_000u64;
+    let t = Timer::start();
+    for i in 0..ops {
+        let key = 1 + zipf.sample(&mut rng) as u64;
+        if rng.bool(0.9) {
+            std::hint::black_box(engine.get(key));
+        } else {
+            engine.put(key, i);
+        }
+    }
+    let dt = t.elapsed_s();
+    println!(
+        "bench kv_engine: {:.2}M ops/s (hit rate {:.1}%, {:.3} SSD IO/op)",
+        ops as f64 / dt / 1e6,
+        100.0 * engine.cache.hit_rate(),
+        engine.ios_per_op()
+    );
+}
+
+fn bench_hnsw_search() {
+    use fivemin::ann::Hnsw;
+    let mut rng = Rng::new(5);
+    let d = 64;
+    let mut idx = Hnsw::new(d, 12, 96, 6);
+    for _ in 0..20_000 {
+        let v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        idx.insert(v);
+    }
+    let queries: Vec<Vec<f32>> = (0..200)
+        .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+        .collect();
+    let t = Timer::start();
+    let mut visited = 0u64;
+    for q in &queries {
+        let (_, c) = idx.search(q, 10, 96);
+        visited += c.visited;
+    }
+    let dt = t.elapsed_s();
+    println!(
+        "bench hnsw_search: {:.0} QPS over 20k nodes ({:.0} visits/query)",
+        queries.len() as f64 / dt,
+        visited as f64 / queries.len() as f64
+    );
+}
+
+fn bench_pjrt_two_stage() {
+    use fivemin::coordinator::batcher::BatchPolicy;
+    use fivemin::coordinator::{Coordinator, ServingCorpus};
+    use std::sync::Arc;
+    let dir = fivemin::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench pjrt_two_stage: skipped (run `make artifacts`)");
+        return;
+    }
+    let corpus = Arc::new(ServingCorpus::synthetic(1, 42));
+    let co = Coordinator::start(dir, corpus.clone(), BatchPolicy::default()).unwrap();
+    let mut rng = Rng::new(7);
+    let n = 128;
+    let t = Timer::start();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| co.submit(corpus.query_near(rng.below(corpus.n as u64) as usize, 0.02, &mut rng)))
+        .collect();
+    for r in rxs {
+        r.recv().unwrap().unwrap();
+    }
+    let dt = t.elapsed_s();
+    let st = co.stats();
+    println!(
+        "bench pjrt_two_stage: {:.0} QPS ({} batches, stage1 p50 {:.1}ms, stage2 p50 {:.1}ms)",
+        n as f64 / dt,
+        st.batches,
+        st.stage1_ns.percentile(0.5) / 1e6,
+        st.stage2_ns.percentile(0.5) / 1e6
+    );
+}
+
+fn main() {
+    bench_breakeven_rate();
+    bench_sim_event_rate();
+    bench_kv_engine();
+    bench_hnsw_search();
+    bench_pjrt_two_stage();
+}

@@ -1,0 +1,7 @@
+//! Bench E2: regenerate Table II (sensitivity to N_CH / N_NAND / tau_CMD).
+mod common;
+use fivemin::figures::fig_peak_iops;
+
+fn main() {
+    common::bench_figure("tab2", 20, fig_peak_iops::tab2);
+}

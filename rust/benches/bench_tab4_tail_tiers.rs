@@ -1,0 +1,7 @@
+//! Bench E4: regenerate Table IV (p99 tail-latency tiers vs rho_max).
+mod common;
+use fivemin::figures::fig_breakeven;
+
+fn main() {
+    common::bench_figure("tab4", 20, fig_breakeven::tab4);
+}

@@ -1,0 +1,42 @@
+//! Shared mini-bench harness (criterion is unavailable offline): timed
+//! sections with mean/min reporting, plus the figure-regeneration wrapper
+//! used by every per-figure bench target.
+
+use std::path::Path;
+
+use fivemin::util::table::Table;
+use fivemin::util::{bench_time, Timer};
+
+/// Time a closure and report; returns the closure's last result.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> T {
+    let (mean, min) = bench_time(warmup, iters, &mut f);
+    println!(
+        "bench {name:<40} mean {:>10.3} ms   min {:>10.3} ms   ({iters} iters)",
+        mean * 1e3,
+        min * 1e3
+    );
+    f()
+}
+
+/// Regenerate one figure table, print it, persist the CSV, and report the
+/// generation time — the contract of every `bench_figX` target.
+pub fn bench_figure(id: &str, iters: usize, f: impl Fn() -> Table) {
+    let t = Timer::start();
+    let table = f();
+    let first = t.elapsed_s();
+    println!("{}", table.render());
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&out).ok();
+    table.write_csv(&out.join(format!("{id}.csv"))).unwrap();
+    if iters > 1 {
+        let (mean, min) = bench_time(0, iters - 1, &f);
+        println!(
+            "bench {id:<40} first {:>8.1} ms   mean {:>8.1} ms   min {:>8.1} ms",
+            first * 1e3,
+            mean * 1e3,
+            min * 1e3
+        );
+    } else {
+        println!("bench {id:<40} took {:>8.1} ms", first * 1e3);
+    }
+}

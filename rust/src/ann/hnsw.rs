@@ -1,0 +1,368 @@
+//! HNSW (Hierarchical Navigable Small World) graph for the ANN case study
+//! (Sec VII-B). A compact, correct implementation: probabilistic layer
+//! assignment, greedy beam search per layer, M-bounded neighbour lists.
+//!
+//! In the SSD-resident design, each node's links are co-located with its
+//! reduced-dimension vector in one SSD block; DRAM caches the hot upper
+//! layers. The functional index here runs in memory and *counts* node
+//! visits so the serving engine and tests can account SSD I/O faithfully.
+
+use crate::util::rng::Rng;
+
+/// Inner-product similarity (MRL-style normalized embeddings => cosine).
+#[inline]
+pub fn ip(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    /// Neighbour lists per layer (layer 0 at index 0).
+    links: Vec<Vec<u32>>,
+}
+
+/// Visit accounting for I/O modeling: every scored node is one SSD block
+/// read in the disaggregated design.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SearchCost {
+    pub visited: u64,
+    /// Visits in layers > 0 (the DRAM-cache-friendly share).
+    pub upper_visits: u64,
+}
+
+pub struct Hnsw {
+    pub dim: usize,
+    /// Max neighbours per node per layer (2M at layer 0).
+    pub m: usize,
+    pub ef_construction: usize,
+    vectors: Vec<Vec<f32>>,
+    nodes: Vec<Node>,
+    entry: Option<u32>,
+    max_layer: usize,
+    rng: Rng,
+    /// 1/ln(M) — standard level-assignment multiplier.
+    level_mult: f64,
+}
+
+impl Hnsw {
+    pub fn new(dim: usize, m: usize, ef_construction: usize, seed: u64) -> Self {
+        assert!(m >= 2);
+        Hnsw {
+            dim,
+            m,
+            ef_construction,
+            vectors: Vec::new(),
+            nodes: Vec::new(),
+            entry: None,
+            max_layer: 0,
+            rng: Rng::new(seed),
+            level_mult: 1.0 / (m as f64).ln(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.vectors.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.vectors.is_empty()
+    }
+    pub fn vector(&self, id: u32) -> &[f32] {
+        &self.vectors[id as usize]
+    }
+    /// Layer count of a node (for trace generation).
+    pub fn node_layers(&self, id: u32) -> usize {
+        self.nodes[id as usize].links.len()
+    }
+
+    fn random_level(&mut self) -> usize {
+        let u = loop {
+            let u = self.rng.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        ((-u.ln()) * self.level_mult).floor() as usize
+    }
+
+    /// Greedy descent on one layer from `start`, beam width `ef`.
+    /// Returns candidates sorted best-first.
+    fn search_layer(
+        &self,
+        query: &[f32],
+        start: u32,
+        layer: usize,
+        ef: usize,
+        cost: &mut SearchCost,
+    ) -> Vec<(f32, u32)> {
+        use std::collections::{BinaryHeap, HashSet};
+        let mut visited = HashSet::new();
+        // max-heap of candidates by score; results tracked as min over top-ef
+        let mut cand: BinaryHeap<(Ordered, u32)> = BinaryHeap::new();
+        let mut result: Vec<(f32, u32)> = Vec::new();
+        let s0 = ip(query, self.vector(start));
+        cost.visited += 1;
+        if layer > 0 {
+            cost.upper_visits += 1;
+        }
+        visited.insert(start);
+        cand.push((ordered(s0), start));
+        result.push((s0, start));
+        while let Some((os, u)) = cand.pop() {
+            let s = os.0;
+            // lower bound: worst of current result set
+            let worst = result
+                .iter()
+                .map(|&(v, _)| v)
+                .fold(f32::INFINITY, f32::min);
+            if result.len() >= ef && s < worst {
+                break;
+            }
+            let links = &self.nodes[u as usize].links;
+            if layer >= links.len() {
+                continue;
+            }
+            for &v in &links[layer] {
+                if !visited.insert(v) {
+                    continue;
+                }
+                let sv = ip(query, self.vector(v));
+                cost.visited += 1;
+                if layer > 0 {
+                    cost.upper_visits += 1;
+                }
+                let worst = result
+                    .iter()
+                    .map(|&(w, _)| w)
+                    .fold(f32::INFINITY, f32::min);
+                if result.len() < ef || sv > worst {
+                    cand.push((ordered(sv), v));
+                    result.push((sv, v));
+                    if result.len() > ef {
+                        // drop current worst
+                        let (mut wi, mut wv) = (0usize, f32::INFINITY);
+                        for (i, &(w, _)) in result.iter().enumerate() {
+                            if w < wv {
+                                wv = w;
+                                wi = i;
+                            }
+                        }
+                        result.swap_remove(wi);
+                    }
+                }
+            }
+        }
+        result.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        result
+    }
+
+    /// Insert a vector; returns its id.
+    pub fn insert(&mut self, vec: Vec<f32>) -> u32 {
+        assert_eq!(vec.len(), self.dim);
+        let id = self.vectors.len() as u32;
+        let level = self.random_level();
+        self.vectors.push(vec);
+        self.nodes.push(Node { links: vec![Vec::new(); level + 1] });
+        let Some(mut cur) = self.entry else {
+            self.entry = Some(id);
+            self.max_layer = level;
+            return id;
+        };
+        let q = self.vectors[id as usize].clone();
+        let mut cost = SearchCost::default();
+        // descend from the top to level+1 greedily (ef = 1)
+        for l in ((level + 1)..=self.max_layer).rev() {
+            let r = self.search_layer(&q, cur, l, 1, &mut cost);
+            cur = r[0].1;
+        }
+        // connect on layers min(level, max_layer)..0
+        for l in (0..=level.min(self.max_layer)).rev() {
+            let cands = self.search_layer(&q, cur, l, self.ef_construction, &mut cost);
+            cur = cands[0].1;
+            let m_max = if l == 0 { 2 * self.m } else { self.m };
+            let selected: Vec<u32> =
+                cands.iter().take(m_max).map(|&(_, v)| v).collect();
+            for &v in &selected {
+                self.nodes[id as usize].links[l].push(v);
+                self.nodes[v as usize].links[l].push(id);
+                if self.nodes[v as usize].links[l].len() > m_max {
+                    // prune: keep the m_max highest-scoring neighbours of v
+                    let vv = self.vectors[v as usize].clone();
+                    let mut scored: Vec<(f32, u32)> = self.nodes[v as usize].links[l]
+                        .iter()
+                        .map(|&w| (ip(&vv, self.vector(w)), w))
+                        .collect();
+                    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                    self.nodes[v as usize].links[l] =
+                        scored.into_iter().take(m_max).map(|(_, w)| w).collect();
+                }
+            }
+        }
+        if level > self.max_layer {
+            self.max_layer = level;
+            self.entry = Some(id);
+        }
+        id
+    }
+
+    /// k-NN search with beam width `ef`; returns (score, id) best-first.
+    pub fn search(&self, query: &[f32], k: usize, ef: usize) -> (Vec<(f32, u32)>, SearchCost) {
+        let mut cost = SearchCost::default();
+        let Some(mut cur) = self.entry else {
+            return (Vec::new(), cost);
+        };
+        for l in (1..=self.max_layer).rev() {
+            let r = self.search_layer(query, cur, l, 1, &mut cost);
+            cur = r[0].1;
+        }
+        let mut res = self.search_layer(query, cur, 0, ef.max(k), &mut cost);
+        res.truncate(k);
+        (res, cost)
+    }
+}
+
+/// Total-ordered f32 wrapper for heap use (NaN-free inputs by contract).
+#[derive(PartialEq)]
+struct Ordered(f32);
+#[allow(non_snake_case)]
+fn ordered(x: f32) -> Ordered {
+    Ordered(x)
+}
+impl Eq for Ordered {}
+impl PartialOrd for Ordered {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ordered {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn normed(rng: &mut Rng, d: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        for x in &mut v {
+            *x /= n;
+        }
+        v
+    }
+
+    fn build(n: usize, d: usize, seed: u64) -> (Hnsw, Vec<Vec<f32>>) {
+        let mut rng = Rng::new(seed);
+        let mut idx = Hnsw::new(d, 8, 64, seed ^ 1);
+        let mut data = Vec::new();
+        for _ in 0..n {
+            let v = normed(&mut rng, d);
+            idx.insert(v.clone());
+            data.push(v);
+        }
+        (idx, data)
+    }
+
+    fn brute_top1(data: &[Vec<f32>], q: &[f32]) -> u32 {
+        let mut best = (f32::MIN, 0u32);
+        for (i, v) in data.iter().enumerate() {
+            let s = ip(q, v);
+            if s > best.0 {
+                best = (s, i as u32);
+            }
+        }
+        best.1
+    }
+
+    #[test]
+    fn exact_match_found() {
+        let (idx, data) = build(500, 16, 3);
+        for i in (0..500).step_by(37) {
+            let (res, _) = idx.search(&data[i], 1, 64);
+            assert_eq!(res[0].1, i as u32, "self-query must return self");
+        }
+    }
+
+    #[test]
+    fn recall_at_10_high() {
+        let (idx, data) = build(2000, 24, 7);
+        let mut rng = Rng::new(99);
+        let mut hits = 0;
+        let trials = 100;
+        for _ in 0..trials {
+            let q = normed(&mut rng, 24);
+            let truth = brute_top1(&data, &q);
+            let (res, _) = idx.search(&q, 10, 128);
+            if res.iter().any(|&(_, id)| id == truth) {
+                hits += 1;
+            }
+        }
+        let recall = hits as f64 / trials as f64;
+        assert!(recall >= 0.95, "recall@10 {recall}");
+    }
+
+    #[test]
+    fn search_cost_sublinear() {
+        let (idx, _) = build(4000, 16, 11);
+        let mut rng = Rng::new(5);
+        let q = normed(&mut rng, 16);
+        let (_, cost) = idx.search(&q, 10, 64);
+        assert!(
+            cost.visited < 1500,
+            "visited {} of 4000 — not sublinear",
+            cost.visited
+        );
+        assert!(cost.visited > 10);
+    }
+
+    #[test]
+    fn upper_layers_small_share_of_visits() {
+        // HNSW concentrates traversal in layer 0; upper layers (the
+        // DRAM-cached part) see a small fraction of visits.
+        let (idx, _) = build(4000, 16, 13);
+        let mut rng = Rng::new(8);
+        let mut total = SearchCost::default();
+        for _ in 0..50 {
+            let q = normed(&mut rng, 16);
+            let (_, c) = idx.search(&q, 10, 64);
+            total.visited += c.visited;
+            total.upper_visits += c.upper_visits;
+        }
+        let share = total.upper_visits as f64 / total.visited as f64;
+        assert!(share < 0.3, "upper-layer visit share {share}");
+    }
+
+    #[test]
+    fn layer_sizes_shrink_geometrically() {
+        let (idx, _) = build(4000, 8, 17);
+        let mut counts = vec![0usize; 8];
+        for id in 0..idx.len() as u32 {
+            for l in 0..idx.node_layers(id).min(8) {
+                counts[l] += 1;
+            }
+        }
+        assert_eq!(counts[0], 4000);
+        assert!(counts[1] < 4000 / 4, "layer1 {} too big", counts[1]);
+        if counts[2] > 0 {
+            assert!(counts[2] < counts[1]);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let idx = Hnsw::new(4, 4, 8, 0);
+        let (r, _) = idx.search(&[0.0; 4], 5, 8);
+        assert!(r.is_empty());
+        let mut idx = Hnsw::new(4, 4, 8, 0);
+        idx.insert(vec![1.0, 0.0, 0.0, 0.0]);
+        let (r, _) = idx.search(&[1.0, 0.0, 0.0, 0.0], 5, 8);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].1, 0);
+    }
+}

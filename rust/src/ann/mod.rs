@@ -1,0 +1,19 @@
+//! Case study 2 (Sec VII-B): SSD-resident two-stage progressive ANN search.
+//!
+//! * [`hnsw`] — the HNSW graph substrate (layered, M-bounded, visit-
+//!   counting for I/O accounting).
+//! * [`progressive`] — the dual-form (reduced 512B + full 2-8KB) two-stage
+//!   search engine with per-query I/O cost splits.
+//! * [`analysis`] — the paper-scale throughput model behind Fig 10.
+//!
+//! The serving path (runtime + coordinator) executes the same two-stage
+//! scoring through the AOT-compiled Pallas kernels; this module provides
+//! the in-process reference implementation and the graph substrate.
+
+pub mod analysis;
+pub mod hnsw;
+pub mod progressive;
+
+pub use analysis::{ann_throughput, AnnScenario, AnnThroughput};
+pub use hnsw::Hnsw;
+pub use progressive::{ProgressiveIndex, QueryCost};

@@ -1,0 +1,308 @@
+//! SSD device configuration: NAND timing/geometry, channel, controller,
+//! FTL DRAM, PCIe, and ECC architecture (Table I of the paper).
+//!
+//! All values are physics/architecture-grounded (ISSCC device
+//! characterizations, ONFI interface specs, SCA protocol timing) rather
+//! than vendor datasheet peaks — this is the paper's central methodological
+//! point. Costs are normalized to the NAND-die cost (Table III note).
+
+/// NAND cell technology presets from Table I.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NandKind {
+    /// 1 bit/cell, low-latency (XL-Flash / Z-NAND class).
+    Slc,
+    /// TLC operated in pseudo-SLC mode.
+    Pslc,
+    /// Standard 3 bit/cell.
+    Tlc,
+}
+
+impl NandKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NandKind::Slc => "SLC",
+            NandKind::Pslc => "pSLC",
+            NandKind::Tlc => "TLC",
+        }
+    }
+    pub fn all() -> [NandKind; 3] {
+        [NandKind::Slc, NandKind::Pslc, NandKind::Tlc]
+    }
+}
+
+/// Per-die NAND parameters (Table I rows).
+#[derive(Clone, Copy, Debug)]
+pub struct NandConfig {
+    pub kind: NandKind,
+    /// Array sensing latency (s).
+    pub tau_sense: f64,
+    /// Page program latency (s).
+    pub tau_prog: f64,
+    /// Physical page size (bytes).
+    pub page_bytes: u64,
+    /// Planes per die supporting independent reads.
+    pub n_plane: u32,
+    /// Die capacity (bytes).
+    pub die_capacity: u64,
+    /// Normalized die cost (NAND die = 1.0 by definition).
+    pub cost: f64,
+}
+
+impl NandConfig {
+    pub fn preset(kind: NandKind) -> Self {
+        const GB: u64 = 1 << 30;
+        match kind {
+            NandKind::Slc => NandConfig {
+                kind,
+                tau_sense: 5e-6,
+                tau_prog: 50e-6,
+                page_bytes: 4 * 1024,
+                n_plane: 6,
+                die_capacity: 32 * GB,
+                cost: 1.0,
+            },
+            NandKind::Pslc => NandConfig {
+                kind,
+                tau_sense: 20e-6,
+                tau_prog: 150e-6,
+                page_bytes: 16 * 1024,
+                n_plane: 4,
+                die_capacity: 42 * GB,
+                cost: 1.0,
+            },
+            NandKind::Tlc => NandConfig {
+                kind,
+                tau_sense: 40e-6,
+                tau_prog: 1e-3,
+                page_bytes: 16 * 1024,
+                n_plane: 4,
+                die_capacity: 128 * GB,
+                cost: 1.0,
+            },
+        }
+    }
+}
+
+/// ECC/controller data-path architecture — the Storage-Next vs normal-SSD
+/// distinction (Sec VI): conventional 4KB LDPC codewords flatten sub-4KB
+/// IOPS; the two-layer BCH(512B)+LDPC(4KB) code unlocks fine-grained reads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EccArch {
+    /// Two-layer concatenated code: per-512B BCH inner + 4KB LDPC outer.
+    /// Sub-4KB reads decode only the touched BCH sectors.
+    FineGrained512,
+    /// Conventional 4KB codeword: every read costs a full 4KB transfer +
+    /// decode regardless of request size.
+    Coarse4k,
+}
+
+/// Complete SSD configuration (Fig 2 of the paper).
+#[derive(Clone, Debug)]
+pub struct SsdConfig {
+    pub name: String,
+    pub nand: NandConfig,
+    /// Channel count.
+    pub n_ch: u32,
+    /// Dies per channel.
+    pub n_nand: u32,
+    /// Channel bandwidth (B/s) — ONFI bus.
+    pub ch_bw: f64,
+    /// Per-command channel occupancy (s). ~1.2us on a shared 8-bit
+    /// command/data bus; 100-200ns with the JEDEC SCA protocol.
+    pub tau_cmd: f64,
+    /// FTL entry size (bytes per 512B-granule mapping entry).
+    pub ftl_entry_bytes: u64,
+    /// SSD-internal DRAM bandwidth (B/s) serving FTL lookups.
+    pub ssd_dram_bw: f64,
+    /// SSD-internal DRAM die capacity (bytes).
+    pub ssd_dram_die_capacity: u64,
+    /// Normalized cost per SSD-internal DRAM die.
+    pub ssd_dram_die_cost: f64,
+    /// Normalized controller cost (12-7nm node complexity).
+    pub ctrl_cost: f64,
+    /// Effective PCIe link bandwidth (B/s).
+    pub pcie_bw: f64,
+    /// Host root-complex packet rate limit (packets/s).
+    pub pcie_pps: f64,
+    /// ECC data-path architecture.
+    pub ecc: EccArch,
+}
+
+impl SsdConfig {
+    /// Storage-Next SSD built on the given NAND kind (Table I defaults:
+    /// 20 channels x 4 dies, 3.6GB/s ONFI, 150ns SCA commands, fine ECC).
+    pub fn storage_next(kind: NandKind) -> Self {
+        SsdConfig {
+            name: format!("SN-{}", kind.name()),
+            nand: NandConfig::preset(kind),
+            n_ch: 20,
+            n_nand: 4,
+            ch_bw: 3.6e9,
+            tau_cmd: 150e-9,
+            ftl_entry_bytes: 4,
+            ssd_dram_bw: 40e9,
+            ssd_dram_die_capacity: 3 << 30,
+            ssd_dram_die_cost: 1.0,
+            ctrl_cost: 15.0,
+            // PCIe Gen7 x4-class link; bandwidth and packet rate are
+            // provisioned non-limiting in the evaluated configurations.
+            pcie_bw: 64e9,
+            pcie_pps: 250e6,
+            ecc: EccArch::FineGrained512,
+        }
+    }
+
+    /// Conventional SSD: identical NAND subsystem but a 4KB-oriented
+    /// ECC/controller pipeline (flat IOPS below 4KB) and legacy command
+    /// timing (1.2us shared command/data bus, no SCA).
+    pub fn normal(kind: NandKind) -> Self {
+        let mut c = Self::storage_next(kind);
+        c.name = format!("NR-{}", kind.name());
+        c.tau_cmd = 1.2e-6;
+        c.ecc = EccArch::Coarse4k;
+        c
+    }
+
+    /// Raw capacity of the NAND subsystem (bytes).
+    pub fn raw_capacity(&self) -> u64 {
+        self.n_ch as u64 * self.n_nand as u64 * self.nand.die_capacity
+    }
+
+    /// Effective media access size for a host request of `l_blk`: the
+    /// coarse-ECC path reads a full 4KB codeword regardless of request size.
+    pub fn media_block(&self, l_blk: u64) -> u64 {
+        match self.ecc {
+            EccArch::FineGrained512 => l_blk,
+            EccArch::Coarse4k => l_blk.max(4096),
+        }
+    }
+}
+
+/// Host-side workload parameters threaded through the whole framework.
+#[derive(Clone, Copy, Debug)]
+pub struct IoMix {
+    /// Read-to-write ratio Γ_RW (reads per write; 90:10 => 9.0).
+    pub gamma_rw: f64,
+    /// Intra-SSD write amplification Φ_WA >= 1 from GC.
+    pub phi_wa: f64,
+}
+
+impl IoMix {
+    pub fn new(gamma_rw: f64, phi_wa: f64) -> Self {
+        assert!(gamma_rw >= 0.0, "gamma_rw must be >= 0");
+        assert!(phi_wa >= 1.0, "phi_wa must be >= 1");
+        IoMix { gamma_rw, phi_wa }
+    }
+
+    /// Paper default: 90:10 read-heavy AI mix, conservative Φ_WA = 3.
+    pub fn paper_default() -> Self {
+        IoMix::new(9.0, 3.0)
+    }
+
+    /// Read-only mix (no GC traffic).
+    pub fn read_only() -> Self {
+        IoMix { gamma_rw: f64::INFINITY, phi_wa: 1.0 }
+    }
+
+    /// From a percentage pair like (90, 10).
+    pub fn from_percent(read: f64, write: f64) -> Self {
+        assert!(read >= 0.0 && write >= 0.0 && read + write > 0.0);
+        if write == 0.0 {
+            Self::read_only()
+        } else {
+            IoMix::new(read / write, 3.0)
+        }
+    }
+
+    /// Media-level read/write fractions R_r, R_w (Sec III-B):
+    /// R_r = (Γ+Φ-1)/(Γ+2Φ-1), R_w = Φ/(Γ+2Φ-1).
+    pub fn media_fractions(&self) -> (f64, f64) {
+        if self.gamma_rw.is_infinite() {
+            return (1.0, 0.0);
+        }
+        let g = self.gamma_rw;
+        let p = self.phi_wa;
+        let denom = g + 2.0 * p - 1.0;
+        ((g + p - 1.0) / denom, p / denom)
+    }
+
+    /// Host-visible fraction of media operations: (Γ+1)/(Γ+2Φ-1).
+    pub fn host_fraction(&self) -> f64 {
+        if self.gamma_rw.is_infinite() {
+            return 1.0;
+        }
+        let g = self.gamma_rw;
+        let p = self.phi_wa;
+        (g + 1.0) / (g + 2.0 * p - 1.0)
+    }
+}
+
+/// Block sizes evaluated throughout the paper.
+pub const BLOCK_SIZES: [u64; 4] = [512, 1024, 2048, 4096];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table1() {
+        let slc = NandConfig::preset(NandKind::Slc);
+        assert_eq!(slc.tau_sense, 5e-6);
+        assert_eq!(slc.tau_prog, 50e-6);
+        assert_eq!(slc.n_plane, 6);
+        assert_eq!(slc.page_bytes, 4096);
+        let tlc = NandConfig::preset(NandKind::Tlc);
+        assert_eq!(tlc.tau_prog, 1e-3);
+        assert_eq!(tlc.page_bytes, 16 * 1024);
+    }
+
+    #[test]
+    fn storage_next_geometry() {
+        let c = SsdConfig::storage_next(NandKind::Slc);
+        assert_eq!(c.n_ch, 20);
+        assert_eq!(c.n_nand, 4);
+        assert_eq!(c.raw_capacity(), 80 * 32 * (1u64 << 30));
+        assert_eq!(c.media_block(512), 512);
+    }
+
+    #[test]
+    fn normal_ssd_is_coarse() {
+        let c = SsdConfig::normal(NandKind::Slc);
+        assert_eq!(c.ecc, EccArch::Coarse4k);
+        assert_eq!(c.media_block(512), 4096);
+        assert_eq!(c.media_block(8192), 8192);
+        assert!(c.tau_cmd > 1e-6);
+    }
+
+    #[test]
+    fn media_fractions_paper_example() {
+        // Γ=9, Φ=3: R_r = 11/14, R_w = 3/14, host fraction 10/14.
+        let m = IoMix::paper_default();
+        let (rr, rw) = m.media_fractions();
+        assert!((rr - 11.0 / 14.0).abs() < 1e-12);
+        assert!((rw - 3.0 / 14.0).abs() < 1e-12);
+        assert!((m.host_fraction() - 10.0 / 14.0).abs() < 1e-12);
+        assert!((rr + rw - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn read_only_mix() {
+        let m = IoMix::read_only();
+        assert_eq!(m.media_fractions(), (1.0, 0.0));
+        assert_eq!(m.host_fraction(), 1.0);
+        let m2 = IoMix::from_percent(100.0, 0.0);
+        assert_eq!(m2.media_fractions(), (1.0, 0.0));
+    }
+
+    #[test]
+    fn from_percent_ratios() {
+        let m = IoMix::from_percent(70.0, 30.0);
+        assert!((m.gamma_rw - 7.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn phi_below_one_rejected() {
+        IoMix::new(9.0, 0.5);
+    }
+}

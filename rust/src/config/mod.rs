@@ -1,0 +1,186 @@
+//! Configuration system: device presets (Table I), platform presets
+//! (Table III), workload descriptions, and JSON (de)serialization so every
+//! preset can be dumped, edited, and re-loaded by the CLI.
+
+pub mod device;
+pub mod platform;
+
+pub use device::{EccArch, IoMix, NandConfig, NandKind, SsdConfig, BLOCK_SIZES};
+pub use platform::{PlatformConfig, PlatformKind};
+
+use crate::util::json::Json;
+
+/// Dump an SSD config as JSON (round-trips through `ssd_from_json`).
+pub fn ssd_to_json(c: &SsdConfig) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(c.name.clone())),
+        ("nand_kind", Json::Str(c.nand.kind.name().to_string())),
+        ("tau_sense_s", Json::Num(c.nand.tau_sense)),
+        ("tau_prog_s", Json::Num(c.nand.tau_prog)),
+        ("page_bytes", Json::Num(c.nand.page_bytes as f64)),
+        ("n_plane", Json::Num(c.nand.n_plane as f64)),
+        ("die_capacity", Json::Num(c.nand.die_capacity as f64)),
+        ("nand_die_cost", Json::Num(c.nand.cost)),
+        ("n_ch", Json::Num(c.n_ch as f64)),
+        ("n_nand", Json::Num(c.n_nand as f64)),
+        ("ch_bw", Json::Num(c.ch_bw)),
+        ("tau_cmd_s", Json::Num(c.tau_cmd)),
+        ("ftl_entry_bytes", Json::Num(c.ftl_entry_bytes as f64)),
+        ("ssd_dram_bw", Json::Num(c.ssd_dram_bw)),
+        ("ssd_dram_die_capacity", Json::Num(c.ssd_dram_die_capacity as f64)),
+        ("ssd_dram_die_cost", Json::Num(c.ssd_dram_die_cost)),
+        ("ctrl_cost", Json::Num(c.ctrl_cost)),
+        ("pcie_bw", Json::Num(c.pcie_bw)),
+        ("pcie_pps", Json::Num(c.pcie_pps)),
+        (
+            "ecc",
+            Json::Str(
+                match c.ecc {
+                    EccArch::FineGrained512 => "fine512",
+                    EccArch::Coarse4k => "coarse4k",
+                }
+                .to_string(),
+            ),
+        ),
+    ])
+}
+
+fn kind_from_name(s: &str) -> Option<NandKind> {
+    match s {
+        "SLC" => Some(NandKind::Slc),
+        "pSLC" => Some(NandKind::Pslc),
+        "TLC" => Some(NandKind::Tlc),
+        _ => None,
+    }
+}
+
+/// Parse an SSD config from JSON; missing fields fall back to the
+/// Storage-Next preset for the named NAND kind.
+pub fn ssd_from_json(j: &Json) -> anyhow::Result<SsdConfig> {
+    let kind_name = j
+        .get(&["nand_kind"])
+        .and_then(|v| v.as_str())
+        .unwrap_or("SLC");
+    let kind = kind_from_name(kind_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown nand_kind {kind_name}"))?;
+    let mut c = SsdConfig::storage_next(kind);
+    let getf = |key: &str| j.get(&[key]).and_then(|v| v.as_f64());
+    if let Some(v) = j.get(&["name"]).and_then(|v| v.as_str()) {
+        c.name = v.to_string();
+    }
+    if let Some(v) = getf("tau_sense_s") {
+        c.nand.tau_sense = v;
+    }
+    if let Some(v) = getf("tau_prog_s") {
+        c.nand.tau_prog = v;
+    }
+    if let Some(v) = getf("page_bytes") {
+        c.nand.page_bytes = v as u64;
+    }
+    if let Some(v) = getf("n_plane") {
+        c.nand.n_plane = v as u32;
+    }
+    if let Some(v) = getf("die_capacity") {
+        c.nand.die_capacity = v as u64;
+    }
+    if let Some(v) = getf("nand_die_cost") {
+        c.nand.cost = v;
+    }
+    if let Some(v) = getf("n_ch") {
+        c.n_ch = v as u32;
+    }
+    if let Some(v) = getf("n_nand") {
+        c.n_nand = v as u32;
+    }
+    if let Some(v) = getf("ch_bw") {
+        c.ch_bw = v;
+    }
+    if let Some(v) = getf("tau_cmd_s") {
+        c.tau_cmd = v;
+    }
+    if let Some(v) = getf("ftl_entry_bytes") {
+        c.ftl_entry_bytes = v as u64;
+    }
+    if let Some(v) = getf("ssd_dram_bw") {
+        c.ssd_dram_bw = v;
+    }
+    if let Some(v) = getf("ssd_dram_die_capacity") {
+        c.ssd_dram_die_capacity = v as u64;
+    }
+    if let Some(v) = getf("ssd_dram_die_cost") {
+        c.ssd_dram_die_cost = v;
+    }
+    if let Some(v) = getf("ctrl_cost") {
+        c.ctrl_cost = v;
+    }
+    if let Some(v) = getf("pcie_bw") {
+        c.pcie_bw = v;
+    }
+    if let Some(v) = getf("pcie_pps") {
+        c.pcie_pps = v;
+    }
+    if let Some(v) = j.get(&["ecc"]).and_then(|v| v.as_str()) {
+        c.ecc = match v {
+            "fine512" => EccArch::FineGrained512,
+            "coarse4k" => EccArch::Coarse4k,
+            other => anyhow::bail!("unknown ecc arch {other}"),
+        };
+    }
+    Ok(c)
+}
+
+pub fn platform_to_json(p: &PlatformConfig) -> Json {
+    Json::obj(vec![
+        ("platform", Json::Str(p.name().to_string())),
+        ("dram_die_cost", Json::Num(p.dram_die_cost)),
+        ("dram_die_bw", Json::Num(p.dram_die_bw)),
+        ("dram_die_capacity", Json::Num(p.dram_die_capacity as f64)),
+        ("core_cost", Json::Num(p.core_cost)),
+        ("core_iops", Json::Num(p.core_iops)),
+        ("proc_iops_peak", Json::Num(p.proc_iops_peak)),
+        ("dram_bw_total", Json::Num(p.dram_bw_total)),
+        ("n_ssd", Json::Num(p.n_ssd as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ssd_json_roundtrip() {
+        for kind in NandKind::all() {
+            for c in [SsdConfig::storage_next(kind), SsdConfig::normal(kind)] {
+                let j = ssd_to_json(&c);
+                let c2 = ssd_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+                assert_eq!(c.name, c2.name);
+                assert_eq!(c.nand.tau_sense, c2.nand.tau_sense);
+                assert_eq!(c.n_ch, c2.n_ch);
+                assert_eq!(c.tau_cmd, c2.tau_cmd);
+                assert_eq!(c.ecc, c2.ecc);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_json_falls_back_to_preset() {
+        let j = Json::parse(r#"{"nand_kind": "TLC", "n_ch": 8}"#).unwrap();
+        let c = ssd_from_json(&j).unwrap();
+        assert_eq!(c.n_ch, 8);
+        assert_eq!(c.nand.kind, NandKind::Tlc);
+        assert_eq!(c.nand.tau_prog, 1e-3); // preset value retained
+    }
+
+    #[test]
+    fn bad_kind_rejected() {
+        let j = Json::parse(r#"{"nand_kind": "QLC"}"#).unwrap();
+        assert!(ssd_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn platform_json_has_table3_fields() {
+        let j = platform_to_json(&PlatformConfig::preset(PlatformKind::GpuGddr));
+        assert_eq!(j.get(&["core_iops"]).unwrap().as_f64(), Some(4e6));
+        assert_eq!(j.get(&["dram_bw_total"]).unwrap().as_f64(), Some(640e9));
+    }
+}

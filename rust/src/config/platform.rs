@@ -1,0 +1,137 @@
+//! Host platform configuration (Table III): normalized component costs and
+//! per-die DRAM bandwidth/capacity for CPU+DDR and GPU+GDDR hosts, plus the
+//! platform-level totals used by the workload-aware analysis (Sec V-B).
+
+/// Host platform preset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlatformKind {
+    CpuDdr,
+    GpuGddr,
+}
+
+impl PlatformKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlatformKind::CpuDdr => "CPU+DDR",
+            PlatformKind::GpuGddr => "GPU+GDDR",
+        }
+    }
+    pub fn all() -> [PlatformKind; 2] {
+        [PlatformKind::CpuDdr, PlatformKind::GpuGddr]
+    }
+}
+
+/// Table III row: all costs normalized to the NAND die cost.
+#[derive(Clone, Debug)]
+pub struct PlatformConfig {
+    pub kind: PlatformKind,
+    /// Cost per host-DRAM die (DDR 1.0, GDDR 2.0 for pin count/thermals).
+    pub dram_die_cost: f64,
+    /// Bandwidth contributed per host-DRAM die (B/s).
+    pub dram_die_bw: f64,
+    /// Capacity per host-DRAM die (bytes).
+    pub dram_die_capacity: u64,
+    /// Cost per host core (CPU core 4.0) or SM (GPU SM 3.0).
+    pub core_cost: f64,
+    /// Per-core/SM sustainable IOPS (CPU ~1M/core; GPU ~4M/SM via SCADA).
+    pub core_iops: f64,
+    /// Platform-total host IOPS capacity IOPS_proc^(peak) (Sec IV/V).
+    pub proc_iops_peak: f64,
+    /// Platform-total DRAM bandwidth (Sec V-B: 12ch DDR5-5600 = 540GB/s;
+    /// 8ch GDDR6-20 = 640GB/s).
+    pub dram_bw_total: f64,
+    /// SSDs attached to the host.
+    pub n_ssd: u32,
+}
+
+impl PlatformConfig {
+    pub fn preset(kind: PlatformKind) -> Self {
+        match kind {
+            PlatformKind::CpuDdr => PlatformConfig {
+                kind,
+                dram_die_cost: 1.0,
+                dram_die_bw: 3e9,
+                dram_die_capacity: 3 << 30,
+                core_cost: 4.0,
+                core_iops: 1e6,
+                proc_iops_peak: 100e6,
+                dram_bw_total: 540e9,
+                n_ssd: 4,
+            },
+            PlatformKind::GpuGddr => PlatformConfig {
+                kind,
+                dram_die_cost: 2.0,
+                dram_die_bw: 80e9,
+                dram_die_capacity: 2 << 30,
+                core_cost: 3.0,
+                core_iops: 4e6,
+                proc_iops_peak: 400e6,
+                dram_bw_total: 640e9,
+                n_ssd: 4,
+            },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    /// Amortized host-processor cost per I/O ($/IO): $_CORE / IOPS_CORE.
+    pub fn core_cost_per_io(&self) -> f64 {
+        self.core_cost / self.core_iops
+    }
+
+    /// Host-IOPS budget available to each SSD.
+    pub fn proc_iops_per_ssd(&self) -> f64 {
+        self.proc_iops_peak / self.n_ssd as f64
+    }
+
+    /// With a host budget override (Fig 5 sweeps).
+    pub fn with_proc_iops(mut self, iops: f64) -> Self {
+        self.proc_iops_peak = iops;
+        self
+    }
+
+    pub fn with_n_ssd(mut self, n: u32) -> Self {
+        self.n_ssd = n;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table3() {
+        let cpu = PlatformConfig::preset(PlatformKind::CpuDdr);
+        assert_eq!(cpu.dram_die_cost, 1.0);
+        assert_eq!(cpu.dram_die_bw, 3e9);
+        assert_eq!(cpu.core_cost, 4.0);
+        assert_eq!(cpu.core_iops, 1e6);
+        let gpu = PlatformConfig::preset(PlatformKind::GpuGddr);
+        assert_eq!(gpu.dram_die_cost, 2.0);
+        assert_eq!(gpu.dram_die_bw, 80e9);
+        assert_eq!(gpu.core_cost, 3.0);
+        assert_eq!(gpu.core_iops, 4e6);
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let cpu = PlatformConfig::preset(PlatformKind::CpuDdr);
+        assert!((cpu.core_cost_per_io() - 4e-6).abs() < 1e-18);
+        assert!((cpu.proc_iops_per_ssd() - 25e6).abs() < 1.0);
+        let gpu = PlatformConfig::preset(PlatformKind::GpuGddr);
+        assert!((gpu.core_cost_per_io() - 0.75e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn overrides() {
+        let p = PlatformConfig::preset(PlatformKind::CpuDdr)
+            .with_proc_iops(40e6)
+            .with_n_ssd(8);
+        assert_eq!(p.proc_iops_peak, 40e6);
+        assert_eq!(p.n_ssd, 8);
+        assert!((p.proc_iops_per_ssd() - 5e6).abs() < 1.0);
+    }
+}

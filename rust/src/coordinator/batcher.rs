@@ -1,0 +1,131 @@
+//! Dynamic batcher: collects queries into fixed-shape serving batches
+//! (SERVE.batch) under a latency budget — the vLLM-router-shaped core of
+//! the serving path. std-thread + channel based (tokio is unavailable in
+//! the offline build; see DESIGN.md §Substitutions).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One queued query with its response channel.
+pub struct Job<T, R> {
+    pub payload: T,
+    pub enqueued: Instant,
+    pub resp: mpsc::Sender<R>,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Target batch size (the AOT graph's fixed batch dimension).
+    pub max_batch: usize,
+    /// Max time the oldest query may wait before the batch is released.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: crate::runtime::SERVE.batch, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Collect the next batch from `rx` under the policy. Blocks for the first
+/// job (returns None when the channel closed and is empty), then fills
+/// until `max_batch` or the oldest job's deadline expires.
+pub fn collect_batch<T, R>(
+    rx: &mpsc::Receiver<Job<T, R>>,
+    policy: &BatchPolicy,
+) -> Option<Vec<Job<T, R>>> {
+    let first = rx.recv().ok()?;
+    let deadline = first.enqueued + policy.max_wait;
+    let mut batch = vec![first];
+    // Greedily drain the backlog first: under load, jobs queued while the
+    // previous batch executed are already past their deadline — they must
+    // ride THIS batch, not degenerate into batches of one.
+    while batch.len() < policy.max_batch {
+        match rx.try_recv() {
+            Ok(job) => batch.push(job),
+            Err(_) => break,
+        }
+    }
+    // Then wait out the oldest job's remaining latency budget for
+    // stragglers (no extra waiting if the budget is already spent).
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        let Some(remaining) = deadline.checked_duration_since(now) else {
+            break;
+        };
+        match rx.recv_timeout(remaining) {
+            Ok(job) => batch.push(job),
+            Err(mpsc::RecvTimeoutError::Timeout) => break,
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn job(payload: u32) -> (Job<u32, u32>, mpsc::Receiver<u32>) {
+        let (tx, rx) = mpsc::channel();
+        (Job { payload, enqueued: Instant::now(), resp: tx }, rx)
+    }
+
+    #[test]
+    fn fills_to_max_batch_without_waiting() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..8 {
+            let (j, _r) = job(i);
+            tx.send(j).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(1) };
+        let batch = collect_batch(&rx, &policy).unwrap();
+        assert_eq!(batch.len(), 8);
+        assert_eq!(batch[0].payload, 0);
+        assert_eq!(batch[7].payload, 7);
+    }
+
+    #[test]
+    fn releases_partial_batch_at_deadline() {
+        let (tx, rx) = mpsc::channel::<Job<u32, u32>>();
+        let (j, _r) = job(1);
+        tx.send(j).unwrap();
+        let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let batch = collect_batch(&rx, &policy).unwrap();
+        assert_eq!(batch.len(), 1);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(9), "waited {waited:?}");
+        assert!(waited < Duration::from_millis(500), "waited {waited:?}");
+    }
+
+    #[test]
+    fn late_arrivals_join_before_deadline() {
+        let (tx, rx) = mpsc::channel();
+        let (j, _r) = job(0);
+        tx.send(j).unwrap();
+        let sender = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            for i in 1..4 {
+                let (j, _r) = job(i);
+                tx.send(j).unwrap();
+            }
+            // keep tx alive past the deadline
+            thread::sleep(Duration::from_millis(50));
+            drop(tx);
+        });
+        let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(30) };
+        let batch = collect_batch(&rx, &policy).unwrap();
+        assert!(batch.len() >= 4, "late arrivals missed: {}", batch.len());
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn closed_empty_channel_returns_none() {
+        let (tx, rx) = mpsc::channel::<Job<u32, u32>>();
+        drop(tx);
+        assert!(collect_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+}

@@ -1,0 +1,101 @@
+//! Synthetic serving corpus: dual-form (reduced 512B + full 4KB) vectors
+//! matching the AOT serving shapes. Stands in for the paper's MRL-encoded
+//! corpora (MS MARCO / 20NG / DBpedia are not redistributable here); the
+//! reduced form is the MRL-style prefix of the full vector, so stage-1
+//! pruning quality mirrors the real setup (DESIGN.md §Substitutions).
+
+use crate::runtime::SERVE;
+use crate::util::rng::Rng;
+
+/// Flat row-major storage for the serving shapes.
+pub struct ServingCorpus {
+    /// Shards of reduced vectors, each `SERVE.shard x SERVE.reduced_dim`
+    /// (the DRAM-resident stage-1 scan unit).
+    pub reduced_shards: Vec<Vec<f32>>,
+    /// Full vectors, `n x SERVE.full_dim` (the "SSD-resident" tier).
+    pub full: Vec<f32>,
+    pub n: usize,
+}
+
+impl ServingCorpus {
+    /// `n_shards * SERVE.shard` vectors with decaying per-dim energy
+    /// (leading dims carry the signal, like MRL embeddings).
+    pub fn synthetic(n_shards: usize, seed: u64) -> Self {
+        let n = n_shards * SERVE.shard;
+        let fd = SERVE.full_dim;
+        let rd = SERVE.reduced_dim;
+        let mut rng = Rng::new(seed);
+        let mut full = vec![0f32; n * fd];
+        for v in 0..n {
+            let row = &mut full[v * fd..(v + 1) * fd];
+            let mut norm = 0f32;
+            for (i, x) in row.iter_mut().enumerate() {
+                let decay = 1.0 / (1.0 + i as f32 * 0.01);
+                *x = rng.gaussian() as f32 * decay;
+                norm += *x * *x;
+            }
+            let norm = norm.sqrt().max(1e-9);
+            for x in row.iter_mut() {
+                *x /= norm;
+            }
+        }
+        let mut reduced_shards = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let mut shard = vec![0f32; SERVE.shard * rd];
+            for i in 0..SERVE.shard {
+                let v = s * SERVE.shard + i;
+                shard[i * rd..(i + 1) * rd]
+                    .copy_from_slice(&full[v * fd..v * fd + rd]);
+            }
+            reduced_shards.push(shard);
+        }
+        ServingCorpus { reduced_shards, full, n }
+    }
+
+    pub fn full_vector(&self, id: usize) -> &[f32] {
+        &self.full[id * SERVE.full_dim..(id + 1) * SERVE.full_dim]
+    }
+
+    /// A query near corpus vector `id` (ground truth for recall checks).
+    pub fn query_near(&self, id: usize, noise: f32, rng: &mut Rng) -> Vec<f32> {
+        let mut q = self.full_vector(id).to_vec();
+        for x in q.iter_mut() {
+            *x += noise * rng.gaussian() as f32;
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_consistent() {
+        let c = ServingCorpus::synthetic(2, 7);
+        assert_eq!(c.n, 2 * SERVE.shard);
+        assert_eq!(c.reduced_shards.len(), 2);
+        assert_eq!(c.reduced_shards[0].len(), SERVE.shard * SERVE.reduced_dim);
+        assert_eq!(c.full.len(), c.n * SERVE.full_dim);
+    }
+
+    #[test]
+    fn reduced_is_prefix_of_full() {
+        let c = ServingCorpus::synthetic(1, 8);
+        for i in [0usize, 100, SERVE.shard - 1] {
+            let red = &c.reduced_shards[0]
+                [i * SERVE.reduced_dim..(i + 1) * SERVE.reduced_dim];
+            let full = c.full_vector(i);
+            assert_eq!(red, &full[..SERVE.reduced_dim]);
+        }
+    }
+
+    #[test]
+    fn vectors_normalized() {
+        let c = ServingCorpus::synthetic(1, 9);
+        for i in [0usize, 50, 1000] {
+            let n: f32 = c.full_vector(i).iter().map(|x| x * x).sum();
+            assert!((n - 1.0).abs() < 1e-3, "norm^2 {n}");
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! Serving coordinator (the L3 request path): router → dynamic batcher →
+//! PJRT worker executing the AOT two-stage ANN graphs.
+//!
+//! One worker thread owns the [`crate::runtime::Runtime`] (PJRT handles
+//! stay on their creating thread); queries arrive over an mpsc channel,
+//! are batched to the graph's fixed batch shape, executed in two stages
+//! around the (simulated) SSD fetch of promoted full vectors, and answered
+//! on per-query response channels. [`Router`] fans queries across several
+//! workers (shard-partitioned), completing the vLLM-router shape.
+
+pub mod batcher;
+pub mod corpus;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Runtime, SERVE};
+use crate::util::stats::LatencyHist;
+use batcher::{collect_batch, BatchPolicy, Job};
+pub use corpus::ServingCorpus;
+
+/// A top-k answer for one query.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    /// Global corpus ids, best-first.
+    pub ids: Vec<u32>,
+    pub scores: Vec<f32>,
+    /// End-to-end latency (enqueue → answer).
+    pub latency: Duration,
+    /// Batch this query rode in.
+    pub batch_size: usize,
+}
+
+/// Aggregated serving metrics.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub queries: u64,
+    pub batches: u64,
+    pub batch_fill: f64,
+    pub latency_ns: LatencyHist,
+    pub stage1_ns: LatencyHist,
+    pub stage2_ns: LatencyHist,
+    /// Modeled SSD reads issued for promoted candidates.
+    pub ssd_reads: u64,
+}
+
+impl ServeStats {
+    fn new() -> Self {
+        ServeStats {
+            queries: 0,
+            batches: 0,
+            batch_fill: 0.0,
+            latency_ns: LatencyHist::for_latency_ns(),
+            stage1_ns: LatencyHist::for_latency_ns(),
+            stage2_ns: LatencyHist::for_latency_ns(),
+            ssd_reads: 0,
+        }
+    }
+}
+
+/// One serving worker: a thread owning Runtime + corpus partition.
+pub struct Coordinator {
+    tx: Option<mpsc::Sender<Job<Vec<f32>, Result<QueryResult, String>>>>,
+    handle: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<ServeStats>>,
+}
+
+impl Coordinator {
+    /// Spawn a worker over `corpus` using artifacts in `artifacts_dir`.
+    pub fn start(
+        artifacts_dir: PathBuf,
+        corpus: Arc<ServingCorpus>,
+        policy: BatchPolicy,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Job<Vec<f32>, Result<QueryResult, String>>>();
+        let stats = Arc::new(Mutex::new(ServeStats::new()));
+        let stats2 = stats.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("fivemin-worker".into())
+            .spawn(move || {
+                // PJRT handles live and die on this thread.
+                let mut rt = match Runtime::open(&artifacts_dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                worker_loop(&mut rt, &corpus, &rx, &policy, &stats2);
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))?
+            .map_err(|e| anyhow!("worker startup: {e}"))?;
+        Ok(Coordinator { tx: Some(tx), handle: Some(handle), stats })
+    }
+
+    /// Submit a full-dimension query; returns the response receiver.
+    pub fn submit(&self, query_full: Vec<f32>) -> mpsc::Receiver<Result<QueryResult, String>> {
+        let (rtx, rrx) = mpsc::channel();
+        let job = Job { payload: query_full, enqueued: Instant::now(), resp: rtx };
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(job);
+        }
+        rrx
+    }
+
+    /// Blocking convenience wrapper.
+    pub fn query(&self, query_full: Vec<f32>) -> Result<QueryResult> {
+        self.submit(query_full)
+            .recv()
+            .map_err(|_| anyhow!("worker gone"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Graceful shutdown (drains the queue, joins the thread).
+    pub fn stop(&mut self) {
+        self.tx.take(); // closes the channel; worker drains and exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop(
+    rt: &mut Runtime,
+    corpus: &ServingCorpus,
+    rx: &mpsc::Receiver<Job<Vec<f32>, Result<QueryResult, String>>>,
+    policy: &BatchPolicy,
+    stats: &Arc<Mutex<ServeStats>>,
+) {
+    // §Perf: shard literals are immutable — build them once per worker
+    // instead of re-marshalling ~2MB per shard on every batch (this cut
+    // stage-1 latency ~2x; see EXPERIMENTS.md §Perf).
+    let shard_lits: Vec<xla::Literal> = corpus
+        .reduced_shards
+        .iter()
+        .map(|s| {
+            Runtime::literal_f32(s, &[SERVE.shard, SERVE.reduced_dim])
+                .expect("shard literal")
+        })
+        .collect();
+    while let Some(batch) = collect_batch(rx, policy) {
+        let n_real = batch.len();
+        match run_two_stage_batch(rt, corpus, &shard_lits, &batch) {
+            Ok((results, t1, t2)) => {
+                let mut st = stats.lock().unwrap();
+                st.batches += 1;
+                st.batch_fill += n_real as f64 / SERVE.batch as f64;
+                st.stage1_ns.push(t1.as_nanos() as f64);
+                st.stage2_ns.push(t2.as_nanos() as f64);
+                st.ssd_reads += (n_real * SERVE.topk) as u64;
+                for (job, mut res) in batch.into_iter().zip(results) {
+                    res.latency = job.enqueued.elapsed();
+                    res.batch_size = n_real;
+                    st.queries += 1;
+                    st.latency_ns.push(res.latency.as_nanos() as f64);
+                    let _ = job.resp.send(Ok(res));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for job in batch {
+                    let _ = job.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Execute one padded batch through the AOT graphs:
+/// stage 1 per shard (reduced_score) → merge → gather full vectors
+/// ("SSD fetch") → stage 2 (full_score) → per-query top-k.
+fn run_two_stage_batch(
+    rt: &mut Runtime,
+    corpus: &ServingCorpus,
+    shard_lits: &[xla::Literal],
+    batch: &[Job<Vec<f32>, Result<QueryResult, String>>],
+) -> Result<(Vec<QueryResult>, Duration, Duration)> {
+    let b = SERVE.batch;
+    let rd = SERVE.reduced_dim;
+    let fd = SERVE.full_dim;
+    let k = SERVE.topk;
+    let n_real = batch.len();
+
+    // pad to the fixed batch shape by repeating the first query
+    let mut q_red = vec![0f32; b * rd];
+    let mut q_full = vec![0f32; b * fd];
+    for i in 0..b {
+        let src = &batch[i.min(n_real - 1)].payload;
+        anyhow::ensure!(src.len() == fd, "query must be FULL_DIM={fd}, got {}", src.len());
+        q_full[i * fd..(i + 1) * fd].copy_from_slice(src);
+        q_red[i * rd..(i + 1) * rd].copy_from_slice(&src[..rd]);
+    }
+
+    // ---- stage 1: scan every DRAM shard, keep global top-k ---------------
+    let t1_start = Instant::now();
+    let q_red_lit = Runtime::literal_f32(&q_red, &[b, rd])?;
+    // (score, global_id) per query, merged across shards
+    let mut merged: Vec<Vec<(f32, u32)>> = vec![Vec::with_capacity(2 * k); b];
+    for (s, shard_lit) in shard_lits.iter().enumerate() {
+        let out = rt.execute("reduced_score", &[&q_red_lit, shard_lit])?;
+        let vals = Runtime::to_vec_f32(&out[0])?;
+        let idx = Runtime::to_vec_i32(&out[1])?;
+        let base = (s * SERVE.shard) as u32;
+        for qi in 0..b {
+            for j in 0..k {
+                merged[qi].push((vals[qi * k + j], base + idx[qi * k + j] as u32));
+            }
+        }
+    }
+    for m in merged.iter_mut() {
+        m.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        m.truncate(k);
+    }
+    let t1 = t1_start.elapsed();
+
+    // ---- SSD fetch of promoted candidates + stage 2 ----------------------
+    let t2_start = Instant::now();
+    let mut cand = vec![0f32; b * k * fd];
+    for qi in 0..b {
+        for (j, &(_, id)) in merged[qi].iter().enumerate() {
+            cand[(qi * k + j) * fd..(qi * k + j + 1) * fd]
+                .copy_from_slice(corpus.full_vector(id as usize));
+        }
+    }
+    let q_full_lit = Runtime::literal_f32(&q_full, &[b, fd])?;
+    let cand_lit = Runtime::literal_f32(&cand, &[b, k, fd])?;
+    let out = rt.execute("full_score", &[q_full_lit, cand_lit])?;
+    let scores = Runtime::to_vec_f32(&out[0])?;
+    let order = Runtime::to_vec_i32(&out[1])?;
+    let t2 = t2_start.elapsed();
+
+    let mut results = Vec::with_capacity(n_real);
+    for qi in 0..n_real {
+        let ids: Vec<u32> = (0..k)
+            .map(|j| merged[qi][order[qi * k + j] as usize].1)
+            .collect();
+        let sc: Vec<f32> = (0..k).map(|j| scores[qi * k + j]).collect();
+        results.push(QueryResult {
+            ids,
+            scores: sc,
+            latency: Duration::ZERO,
+            batch_size: 0,
+        });
+    }
+    Ok((results, t1, t2))
+}
+
+/// Round-robin router over multiple workers (each owns a corpus replica or
+/// partition). Demonstrates the scale-out path; single-worker deployments
+/// use [`Coordinator`] directly.
+pub struct Router {
+    workers: Vec<Coordinator>,
+    next: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(workers: Vec<Coordinator>) -> Self {
+        assert!(!workers.is_empty());
+        Router { workers, next: AtomicUsize::new(0) }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Route a query to the next worker (round-robin), non-blocking.
+    pub fn submit(&self, query_full: Vec<f32>) -> mpsc::Receiver<Result<QueryResult, String>> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+        self.workers[i].submit(query_full)
+    }
+
+    /// Route a query to the next worker (round-robin), blocking.
+    pub fn query(&self, query_full: Vec<f32>) -> Result<QueryResult> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+        self.workers[i].query(query_full)
+    }
+
+    pub fn stats(&self) -> Vec<ServeStats> {
+        self.workers.iter().map(|w| w.stats()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Routing invariants that need no PJRT (the serving integration test
+    // exercises the full path; see rust/tests/serving_integration.rs).
+
+    #[test]
+    fn batch_policy_default_matches_graph_shape() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.max_batch, SERVE.batch);
+    }
+
+    #[test]
+    fn router_round_robin_distribution() {
+        // Router with zero workers is rejected; distribution is checked in
+        // the integration test (workers need PJRT).
+        let next = AtomicUsize::new(0);
+        let n = 3;
+        let mut counts = [0usize; 3];
+        for _ in 0..99 {
+            counts[next.fetch_add(1, Ordering::Relaxed) % n] += 1;
+        }
+        assert_eq!(counts, [33, 33, 33]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Fig 8 (KV-store achievable throughput) and Fig 10 (ANN search
+//! throughput) across platforms, device classes, DRAM capacities, and
+//! workload mixes.
+
+use crate::ann::{ann_throughput, AnnScenario};
+use crate::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
+use crate::kvstore::{kv_throughput, KvScenario};
+use crate::util::table::Table;
+
+const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// DRAM capacity sweep used on the x-axis of both figures.
+pub const DRAM_POINTS_GB: [f64; 5] = [32.0, 64.0, 128.0, 256.0, 512.0];
+
+fn devices() -> Vec<(&'static str, SsdConfig)> {
+    // ANN/KV normal baseline keeps SCA command timing (isolates the
+    // 4KB-ECC effect; see DESIGN.md).
+    let mut nr = SsdConfig::normal(NandKind::Slc);
+    nr.tau_cmd = 150e-9;
+    vec![("SN", SsdConfig::storage_next(NandKind::Slc)), ("NR", nr)]
+}
+
+/// Fig 8: ops/s for GET:PUT mixes × locality regimes × platform/device.
+pub fn fig8() -> Table {
+    let mut t = Table::new(
+        "Fig 8 — SSD-resident blocked-Cuckoo KV store throughput (Mops/s), 5TB / 80G x 64B items",
+        &["mix", "locality", "platform", "device",
+          "32GB", "64GB", "128GB", "256GB", "512GB", "limiter@512GB"],
+    );
+    for (mix_label, get_frac) in
+        [("100:0", 1.0), ("90:10", 0.9), ("70:30", 0.7), ("50:50", 0.5)]
+    {
+        for (loc_label, sigma) in [("strong", 1.2), ("weak", 0.4)] {
+            for pk in PlatformKind::all() {
+                let plat = PlatformConfig::preset(pk);
+                for (dev_label, cfg) in devices() {
+                    let sc = KvScenario::paper_default(get_frac, sigma);
+                    let mut cells = vec![
+                        mix_label.to_string(),
+                        loc_label.to_string(),
+                        plat.name().to_string(),
+                        dev_label.to_string(),
+                    ];
+                    let mut last = None;
+                    for cap_gb in DRAM_POINTS_GB {
+                        let r = kv_throughput(&sc, &plat, &cfg, cap_gb * GB);
+                        cells.push(format!("{:.1}", r.achievable / 1e6));
+                        last = Some(r);
+                    }
+                    cells.push(last.unwrap().limiter.to_string());
+                    t.row(cells);
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Fig 10: ANN KQPS for the four full-vector configurations.
+pub fn fig10() -> Table {
+    let mut t = Table::new(
+        "Fig 10 — Two-stage progressive ANN throughput (KQPS), 8G embeddings, reduced=512B",
+        &["full-vec", "promote", "platform", "device",
+          "32GB", "64GB", "128GB", "256GB", "512GB", "limiter@512GB"],
+    );
+    for kb in [2u64, 4, 6, 8] {
+        let sc = AnnScenario::paper_default(kb);
+        for pk in PlatformKind::all() {
+            let plat = PlatformConfig::preset(pk);
+            for (dev_label, cfg) in devices() {
+                let mut cells = vec![
+                    format!("{kb}KB"),
+                    format!("{:.0}%", sc.promote_frac * 100.0),
+                    plat.name().to_string(),
+                    dev_label.to_string(),
+                ];
+                let mut last = None;
+                for cap_gb in DRAM_POINTS_GB {
+                    let r = ann_throughput(&sc, &plat, &cfg, cap_gb * GB);
+                    cells.push(format!("{:.1}", r.qps / 1e3));
+                    last = Some(r);
+                }
+                cells.push(last.unwrap().limiter.to_string());
+                t.row(cells);
+            }
+        }
+    }
+    t
+}
+
+/// Fig 8/10 chart helper for the CLI.
+pub fn fig8_chart() -> String {
+    let sc = KvScenario::paper_default(0.9, 1.2);
+    let mut items: Vec<(String, f64)> = Vec::new();
+    for pk in PlatformKind::all() {
+        let plat = PlatformConfig::preset(pk);
+        for (d, cfg) in devices() {
+            let r = kv_throughput(&sc, &plat, &cfg, 256.0 * GB);
+            items.push((format!("{}+{}", plat.name(), d), r.achievable / 1e6));
+        }
+    }
+    crate::util::table::bar_chart(
+        "Fig 8 slice — 90:10, strong locality, 256GB DRAM",
+        &items,
+        "Mops/s",
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(t: &str, pred: impl Fn(&&str) -> bool, col: usize) -> f64 {
+        let line = t.lines().find(pred).unwrap();
+        let c: Vec<&str> = line.split('|').map(|x| x.trim()).collect();
+        c[col].parse().unwrap()
+    }
+
+    #[test]
+    fn fig8_gpu_sn_leads() {
+        let s = fig8().render();
+        let gpu_sn = cell(
+            &s,
+            |l| l.contains("90:10") && l.contains("strong") && l.contains("GPU") && l.contains("SN"),
+            9, // 512GB column
+        );
+        let gpu_nr = cell(
+            &s,
+            |l| l.contains("90:10") && l.contains("strong") && l.contains("GPU") && l.contains("NR"),
+            9,
+        );
+        assert!(gpu_sn > 100.0, "GPU+SN {gpu_sn} Mops/s !> 100");
+        assert!(gpu_sn > 2.0 * gpu_nr, "SN {gpu_sn} !> 2x NR {gpu_nr}");
+    }
+
+    #[test]
+    fn fig10_in_paper_band() {
+        let s = fig10().render();
+        let small = cell(
+            &s,
+            |l| l.contains("2KB") && l.contains("GPU") && l.contains("SN"),
+            5, // 32GB column
+        );
+        let large = cell(
+            &s,
+            |l| l.contains("2KB") && l.contains("GPU") && l.contains("SN"),
+            9, // 512GB
+        );
+        assert!((4.0..14.0).contains(&small), "2KB small-DRAM {small} KQPS");
+        assert!(large > small, "caching must help");
+    }
+
+    #[test]
+    fn charts_render() {
+        assert!(fig8_chart().contains("Mops/s"));
+    }
+}

@@ -1,0 +1,149 @@
+//! Fig 7: MQSim-Next validation + sensitivity — (a) model vs simulator
+//! IOPS across block sizes, (b) read:write-ratio sweep, (c) channel-
+//! bandwidth sweep, (d) BCH decode-failure-rate sweep.
+//!
+//! Simulated windows are short (the trends stabilize within ~1-2ms of
+//! simulated time under deep queues); `quick` mode shortens further for
+//! the bench harness.
+
+use crate::config::{IoMix, NandKind, SsdConfig};
+use crate::model::ssd;
+use crate::sim::{run_uniform, SimParams};
+use crate::util::table::{fmt_si, Table};
+
+fn sim_prm(l_blk: u32, quick: bool) -> SimParams {
+    let mut p = SimParams::default_for(l_blk);
+    if quick {
+        p.blocks_per_plane = 16;
+        p.pages_per_block = 16;
+    }
+    p
+}
+
+fn windows(quick: bool) -> (u64, u64) {
+    if quick {
+        (200, 800)
+    } else {
+        (500, 2000)
+    }
+}
+
+/// Fig 7(a): analytic model vs MQSim-Next at 90:10 across block sizes.
+pub fn fig7a(quick: bool) -> Table {
+    let cfg = SsdConfig::storage_next(NandKind::Slc);
+    let (w, m) = windows(quick);
+    let mut t = Table::new(
+        "Fig 7(a) — Modeled vs simulated IOPS (SN-SLC, 90:10)",
+        &["blk", "model", "simulated", "sim/model"],
+    );
+    for &l in &[512u32, 1024, 2048, 4096] {
+        let model = ssd::ssd_peak_iops(&cfg, l as u64, IoMix::paper_default()).effective;
+        let s = run_uniform(&cfg, &sim_prm(l, quick), 0.9, w, m);
+        t.row(vec![
+            format!("{l}B"),
+            fmt_si(model),
+            fmt_si(s.iops()),
+            format!("{:.2}x", s.iops() / model),
+        ]);
+    }
+    t
+}
+
+/// Fig 7(b): simulated IOPS vs read:write ratio at 512B.
+pub fn fig7b(quick: bool) -> Table {
+    let cfg = SsdConfig::storage_next(NandKind::Slc);
+    let (w, m) = windows(quick);
+    let mut t = Table::new(
+        "Fig 7(b) — Simulated SLC IOPS vs read:write ratio (512B)",
+        &["mix", "IOPS", "measured WA"],
+    );
+    for (label, rf) in [("100:0", 1.0), ("90:10", 0.9), ("70:30", 0.7), ("50:50", 0.5)] {
+        let prm = sim_prm(512, quick);
+        let s = run_uniform(&cfg, &prm, rf, w, m);
+        let spp = (cfg.nand.page_bytes / 512) as u64;
+        t.row(vec![
+            label.to_string(),
+            fmt_si(s.iops()),
+            if rf < 1.0 {
+                format!("{:.2}", s.write_amplification(spp))
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    t
+}
+
+/// Fig 7(c): simulated IOPS vs NAND channel bandwidth (90:10, 512B).
+pub fn fig7c(quick: bool) -> Table {
+    let (w, m) = windows(quick);
+    let mut t = Table::new(
+        "Fig 7(c) — Simulated SLC IOPS vs channel bandwidth (512B, 90:10)",
+        &["B_CH", "IOPS"],
+    );
+    for bw in [3.6e9, 4.8e9, 5.6e9] {
+        let mut cfg = SsdConfig::storage_next(NandKind::Slc);
+        cfg.ch_bw = bw;
+        let s = run_uniform(&cfg, &sim_prm(512, quick), 0.9, w, m);
+        t.row(vec![format!("{:.1}GB/s", bw / 1e9), fmt_si(s.iops())]);
+    }
+    t
+}
+
+/// Fig 7(d): simulated IOPS vs BCH decode-failure probability.
+pub fn fig7d(quick: bool) -> Table {
+    let cfg = SsdConfig::storage_next(NandKind::Slc);
+    let (w, m) = windows(quick);
+    let mut t = Table::new(
+        "Fig 7(d) — Simulated SLC IOPS vs BCH failure rate (512B, read-only)",
+        &["p_BCH", "IOPS", "LDPC escalations"],
+    );
+    for p in [0.0, 0.001, 0.01, 0.05, 0.2] {
+        let mut prm = sim_prm(512, quick);
+        prm.p_bch = p;
+        let s = run_uniform(&cfg, &prm, 1.0, w, m);
+        t.row(vec![
+            format!("{:.1}%", p * 100.0),
+            fmt_si(s.iops()),
+            s.ldpc_escalations.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7b_decreasing_with_writes() {
+        let t = fig7b(true).render();
+        let vals: Vec<f64> = t
+            .lines()
+            .filter(|l| l.contains(':') && l.contains('M'))
+            .map(|l| {
+                let c: Vec<&str> = l.split('|').map(|x| x.trim()).collect();
+                c[2].trim_end_matches('M').parse::<f64>().unwrap()
+            })
+            .collect();
+        assert_eq!(vals.len(), 4, "{t}");
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] * 0.95, "IOPS should fall with writes: {vals:?}");
+        }
+    }
+
+    #[test]
+    fn fig7c_increasing_with_bandwidth() {
+        let t = fig7c(true).render();
+        let vals: Vec<f64> = t
+            .lines()
+            .filter(|l| l.contains("GB/s"))
+            .map(|l| {
+                let c: Vec<&str> = l.split('|').map(|x| x.trim()).collect();
+                c[2].trim_end_matches('M').parse::<f64>().unwrap()
+            })
+            .collect();
+        assert_eq!(vals.len(), 3);
+        assert!(vals[2] > vals[0], "wider channel must help: {vals:?}");
+    }
+}

@@ -1,0 +1,85 @@
+//! Fig 3 (peak SSD IOPS by NAND type × block size) and Table II
+//! (sensitivity of SLC peak IOPS to N_CH / N_NAND / τ_CMD).
+
+use crate::config::{IoMix, NandKind, SsdConfig, BLOCK_SIZES};
+use crate::model::ssd;
+use crate::util::table::{fmt_si, Table};
+
+/// Fig 3: Storage-Next peak IOPS for SLC/pSLC/TLC (+ the normal-SSD
+/// baseline) across 512B-4KB under the paper's 90:10 mix.
+pub fn fig3() -> Table {
+    let mix = IoMix::paper_default();
+    let mut t = Table::new(
+        "Fig 3 — Storage-Next SSD peak IOPS (read:write 90:10, Phi_WA=3)",
+        &["nand", "device", "512B", "1KB", "2KB", "4KB", "limiter@512B"],
+    );
+    for kind in NandKind::all() {
+        for (label, cfg) in [
+            ("Storage-Next", SsdConfig::storage_next(kind)),
+            ("Normal", SsdConfig::normal(kind)),
+        ] {
+            let mut cells = vec![kind.name().to_string(), label.to_string()];
+            for &l in &BLOCK_SIZES {
+                let b = ssd::ssd_peak_iops(&cfg, l, mix);
+                cells.push(fmt_si(b.effective));
+            }
+            cells.push(ssd::ssd_peak_iops(&cfg, 512, mix).limiter().to_string());
+            t.row(cells);
+        }
+    }
+    t
+}
+
+/// Table II: sensitivity sweep over the three architectural knobs.
+pub fn tab2() -> Table {
+    let mix = IoMix::paper_default();
+    let mut t = Table::new(
+        "Table II — Sensitivity of peak SSD IOPS (SLC) to architectural knobs",
+        &["setting", "N_CH", "N_NAND", "tau_CMD", "IOPS@512B", "IOPS@4KB"],
+    );
+    let rows = [
+        ("Pessimistic", 16u32, 3u32, 200e-9),
+        ("Baseline (Table I)", 20, 4, 150e-9),
+        ("Optimistic", 24, 5, 100e-9),
+    ];
+    for (name, n_ch, n_nand, tau_cmd) in rows {
+        let mut cfg = SsdConfig::storage_next(NandKind::Slc);
+        cfg.n_ch = n_ch;
+        cfg.n_nand = n_nand;
+        cfg.tau_cmd = tau_cmd;
+        t.row(vec![
+            name.to_string(),
+            n_ch.to_string(),
+            n_nand.to_string(),
+            format!("{:.0}ns", tau_cmd * 1e9),
+            fmt_si(ssd::ssd_peak_iops(&cfg, 512, mix).effective),
+            fmt_si(ssd::ssd_peak_iops(&cfg, 4096, mix).effective),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_has_all_rows() {
+        let t = fig3();
+        let s = t.render();
+        for label in ["SLC", "pSLC", "TLC", "Storage-Next", "Normal"] {
+            assert!(s.contains(label), "missing {label}\n{s}");
+        }
+        // paper headline numbers appear
+        assert!(s.contains("57.4M"), "SLC@512B should be 57.4M\n{s}");
+        assert!(s.contains("11.1M"), "SLC@4KB should be 11.1M\n{s}");
+    }
+
+    #[test]
+    fn tab2_matches_paper() {
+        let s = tab2().render();
+        for v in ["39.4M", "8.5M", "57.4M", "11.1M", "79.3M", "13.8M"] {
+            assert!(s.contains(v), "missing {v}\n{s}");
+        }
+    }
+}

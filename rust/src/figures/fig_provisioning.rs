@@ -1,0 +1,104 @@
+//! Fig 6: minimum DRAM capacity for viability / economics-optimality and
+//! the corresponding DRAM-bandwidth usage split (Sec V-B quantitative
+//! study: 1e9 blocks, 200GB/s aggregate, σ=1.2, 4 SSDs, ρ_max=0.9 tiers).
+
+use crate::config::{IoMix, NandKind, PlatformConfig, PlatformKind, SsdConfig, BLOCK_SIZES};
+use crate::model::platform as plat_model;
+use crate::model::queueing::LatencyTargets;
+use crate::util::table::{fmt_bytes, fmt_si, Table};
+use crate::workload::lognormal::LognormalProfile;
+
+/// The Sec V-B tail tiers giving ρ_max = 0.90 per block size.
+pub fn tier90(l_blk: u64) -> LatencyTargets {
+    let us = match l_blk {
+        512 => 13.0,
+        1024 => 17.0,
+        2048 => 26.0,
+        _ => 44.0,
+    };
+    LatencyTargets::p99(us * 1e-6)
+}
+
+pub fn fig6() -> Table {
+    let mix = IoMix::paper_default();
+    let mut t = Table::new(
+        "Fig 6 — Min DRAM for viability/optimality + bandwidth split (1e9 blocks, 200GB/s, sigma=1.2)",
+        &[
+            "platform", "device", "blk",
+            "T_B", "T_S", "tau_be",
+            "C_viable", "C_optimal",
+            "BW@opt cached", "BW@opt 2xDMA",
+        ],
+    );
+    for pk in PlatformKind::all() {
+        let plat = PlatformConfig::preset(pk);
+        for (label, cfg) in [
+            ("NR-SLC", SsdConfig::normal(NandKind::Slc)),
+            ("SN-SLC", SsdConfig::storage_next(NandKind::Slc)),
+        ] {
+            for &l in &BLOCK_SIZES {
+                let profile = LognormalProfile::calibrated(200e9, 1.2, 1e9, l);
+                let Some(pr) =
+                    plat_model::provision(&profile, &plat, &cfg, mix, tier90(l))
+                else {
+                    t.row(vec![
+                        plat.name().into(), label.into(), format!("{l}B"),
+                        "-".into(), "-".into(), "-".into(),
+                        "infeasible".into(), "infeasible".into(),
+                        "-".into(), "-".into(),
+                    ]);
+                    continue;
+                };
+                let (cached, dma) = pr.bw_at_optimal;
+                t.row(vec![
+                    plat.name().to_string(),
+                    label.to_string(),
+                    format!("{l}B"),
+                    format!("{:.2}s", pr.t_b),
+                    format!("{:.2}s", pr.t_s),
+                    format!("{:.2}s", pr.break_even.total),
+                    fmt_bytes(pr.cap_viable),
+                    fmt_bytes(pr.cap_optimal),
+                    format!("{}B/s", fmt_si(cached)),
+                    format!("{}B/s", fmt_si(dma)),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_renders_all_configs() {
+        let s = fig6().render();
+        assert_eq!(
+            s.lines().filter(|l| l.contains("SN-SLC") || l.contains("NR-SLC")).count(),
+            2 * 2 * 4,
+            "{s}"
+        );
+        // CPU 512B optimal caches ~the full 512GB dataset
+        let line = s
+            .lines()
+            .find(|l| l.contains("CPU+DDR") && l.contains("NR-SLC") && l.contains("512B"))
+            .unwrap();
+        assert!(
+            line.contains("GB"),
+            "expected GB-scale optimal capacity: {line}"
+        );
+    }
+
+    #[test]
+    fn gpu_sn_thresholds_below_5s() {
+        let s = fig6().render();
+        for line in s.lines().filter(|l| l.contains("GPU+GDDR") && l.contains("SN-SLC")) {
+            let cells: Vec<&str> = line.split('|').map(|c| c.trim()).collect();
+            let t_b: f64 = cells[4].trim_end_matches('s').parse().unwrap();
+            let t_s: f64 = cells[5].trim_end_matches('s').parse().unwrap();
+            assert!(t_b < 5.0 && t_s < 5.0, "{line}");
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Figure/table regeneration harness: every evaluation artifact of the
+//! paper as CSV (under `results/`) + ASCII rendering on stdout.
+//!
+//! `fivemin figures --all` regenerates everything; each bench target under
+//! `rust/benches/` wraps one figure with timing.
+
+pub mod fig_breakeven;
+pub mod fig_casestudies;
+pub mod fig_mqsim;
+pub mod fig_peak_iops;
+pub mod fig_provisioning;
+
+use std::path::Path;
+
+use crate::util::table::Table;
+
+/// (id, generator) pairs for the analytic artifacts (fast).
+pub fn analytic_figures() -> Vec<(&'static str, Box<dyn Fn() -> Table>)> {
+    vec![
+        ("fig3", Box::new(fig_peak_iops::fig3) as Box<dyn Fn() -> Table>),
+        ("tab2", Box::new(fig_peak_iops::tab2)),
+        ("fig4", Box::new(|| fig_breakeven::fig4().0)),
+        ("tab4", Box::new(fig_breakeven::tab4)),
+        ("fig5ab", Box::new(fig_breakeven::fig5_host_budget)),
+        ("fig5cd", Box::new(fig_breakeven::fig5_latency_tiers)),
+        ("fig6", Box::new(fig_provisioning::fig6)),
+        ("fig8", Box::new(fig_casestudies::fig8)),
+        ("fig10", Box::new(fig_casestudies::fig10)),
+    ]
+}
+
+/// Simulation-backed artifacts (Fig 7 panels).
+pub fn sim_figures(quick: bool) -> Vec<(&'static str, Table)> {
+    vec![
+        ("fig7a", fig_mqsim::fig7a(quick)),
+        ("fig7b", fig_mqsim::fig7b(quick)),
+        ("fig7c", fig_mqsim::fig7c(quick)),
+        ("fig7d", fig_mqsim::fig7d(quick)),
+    ]
+}
+
+/// Emit one table: print ASCII and write CSV under `out`.
+pub fn emit(out: &Path, id: &str, table: &Table) -> std::io::Result<()> {
+    println!("{}", table.render());
+    table.write_csv(&out.join(format!("{id}.csv")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_analytic_figures_render_and_write() {
+        let dir = std::env::temp_dir().join("fivemin_fig_test");
+        for (id, f) in analytic_figures() {
+            let t = f();
+            t.write_csv(&dir.join(format!("{id}.csv"))).unwrap();
+            assert!(!t.render().is_empty());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,349 @@
+//! Blocked Cuckoo hash table over an SSD-shaped block store (Sec VII-A).
+//!
+//! Each key maps to two candidate buckets (one SSD block each); a bucket
+//! holds B = l_blk / l_KV slot entries. Lookups read one or two blocks
+//! (expected 1.5); insertions displace residents along short cuckoo chains
+//! instead of discarding (CacheLib-style drops are not acceptable for a
+//! persistent store). For bucket size B ≥ 4 the critical load factor
+//! exceeds 0.95 [Kirsch/Mitzenmacher/Wieder]; operating below it keeps the
+//! expected displacement chain length ≈ α^{2B}/(1-α^B) ≪ 1.
+//!
+//! The table is generic over a [`BlockStore`] so the same logic runs over
+//! an in-memory array (unit tests), the analytic device model, or the
+//! MQSim-Next simulator (the engine in [`crate::kvstore::engine`]).
+
+use crate::util::rng::Rng;
+
+/// Fixed-size KV record stored in a bucket slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvPair {
+    pub key: u64,
+    pub value: u64,
+}
+
+const EMPTY_KEY: u64 = u64::MAX;
+
+/// Abstract block device: the cuckoo table only reads/writes whole buckets.
+pub trait BlockStore {
+    /// Number of buckets (blocks).
+    fn n_buckets(&self) -> u64;
+    fn read_bucket(&mut self, idx: u64) -> Vec<KvPair>;
+    fn write_bucket(&mut self, idx: u64, slots: &[KvPair]);
+}
+
+/// In-memory block store for tests and as the DRAM-resident reference.
+pub struct MemStore {
+    pub buckets: Vec<Vec<KvPair>>,
+    pub slots_per_bucket: usize,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl MemStore {
+    pub fn new(n_buckets: u64, slots_per_bucket: usize) -> Self {
+        MemStore {
+            buckets: vec![
+                vec![KvPair { key: EMPTY_KEY, value: 0 }; slots_per_bucket];
+                n_buckets as usize
+            ],
+            slots_per_bucket,
+            reads: 0,
+            writes: 0,
+        }
+    }
+}
+
+impl BlockStore for MemStore {
+    fn n_buckets(&self) -> u64 {
+        self.buckets.len() as u64
+    }
+    fn read_bucket(&mut self, idx: u64) -> Vec<KvPair> {
+        self.reads += 1;
+        self.buckets[idx as usize].clone()
+    }
+    fn write_bucket(&mut self, idx: u64, slots: &[KvPair]) {
+        self.writes += 1;
+        self.buckets[idx as usize] = slots.to_vec();
+    }
+}
+
+/// Stateless 2-choice hashing (the table itself holds NO DRAM-resident
+/// index or metadata — the paper's headline design property).
+#[derive(Clone, Copy, Debug)]
+pub struct CuckooParams {
+    pub n_buckets: u64,
+    pub slots_per_bucket: usize,
+    /// Displacement chain budget before declaring the table overfull.
+    pub max_kicks: usize,
+}
+
+impl CuckooParams {
+    /// Size a table for `n_items` at `load_factor` with bucket size B
+    /// derived from block/record sizes (512B blocks, 64B items => B=8).
+    pub fn for_capacity(n_items: u64, load_factor: f64, l_blk: u32, l_kv: u32) -> Self {
+        assert!((0.0..1.0).contains(&load_factor));
+        let b = (l_blk / l_kv).max(1) as usize;
+        let n_buckets = ((n_items as f64 / load_factor) / b as f64).ceil() as u64;
+        CuckooParams { n_buckets: n_buckets.max(2), slots_per_bucket: b, max_kicks: 64 }
+    }
+}
+
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    x ^ (x >> 33)
+}
+
+/// The two candidate buckets for a key.
+pub fn candidates(p: &CuckooParams, key: u64) -> (u64, u64) {
+    let h1 = mix64(key) % p.n_buckets;
+    let h2 = mix64(key ^ 0x5851_F42D_4C95_7F2D) % p.n_buckets;
+    // degenerate equal-bucket case: nudge to the next bucket
+    if h1 == h2 {
+        (h1, (h2 + 1) % p.n_buckets)
+    } else {
+        (h1, h2)
+    }
+}
+
+/// Lookup statistics (the I/O cost drivers for Fig 8).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpCost {
+    pub bucket_reads: u32,
+    pub bucket_writes: u32,
+    pub kicks: u32,
+}
+
+/// GET: probe bucket 1, then bucket 2. Expected 1.5 reads for present keys.
+pub fn get<S: BlockStore>(
+    p: &CuckooParams,
+    store: &mut S,
+    key: u64,
+) -> (Option<u64>, OpCost) {
+    let (b1, b2) = candidates(p, key);
+    let mut cost = OpCost::default();
+    for b in [b1, b2] {
+        cost.bucket_reads += 1;
+        let slots = store.read_bucket(b);
+        if let Some(kv) = slots.iter().find(|s| s.key == key) {
+            return (Some(kv.value), cost);
+        }
+    }
+    (None, cost)
+}
+
+/// PUT (insert or update) with cuckoo displacement. Returns Err(cost) if
+/// the chain budget is exhausted (table effectively over-full).
+pub fn put<S: BlockStore>(
+    p: &CuckooParams,
+    store: &mut S,
+    pair: KvPair,
+    rng: &mut Rng,
+) -> Result<OpCost, OpCost> {
+    assert_ne!(pair.key, EMPTY_KEY, "reserved key");
+    let mut cost = OpCost::default();
+    let (b1, b2) = candidates(p, pair.key);
+    // 1) update in place if present; 2) insert into a free slot
+    for b in [b1, b2] {
+        cost.bucket_reads += 1;
+        let mut slots = store.read_bucket(b);
+        if let Some(s) = slots.iter_mut().find(|s| s.key == pair.key) {
+            s.value = pair.value;
+            store.write_bucket(b, &slots);
+            cost.bucket_writes += 1;
+            return Ok(cost);
+        }
+        if let Some(s) = slots.iter_mut().find(|s| s.key == EMPTY_KEY) {
+            *s = pair;
+            store.write_bucket(b, &slots);
+            cost.bucket_writes += 1;
+            return Ok(cost);
+        }
+    }
+    // 3) displacement chain: evict a random resident of a random candidate
+    let mut carry = pair;
+    let mut bucket = if rng.bool(0.5) { b1 } else { b2 };
+    for _ in 0..p.max_kicks {
+        cost.kicks += 1;
+        cost.bucket_reads += 1;
+        let mut slots = store.read_bucket(bucket);
+        // swap carry with a random victim slot
+        let vi = rng.range(0, slots.len());
+        let victim = slots[vi];
+        slots[vi] = carry;
+        store.write_bucket(bucket, &slots);
+        cost.bucket_writes += 1;
+        carry = victim;
+        // try the victim's alternate bucket
+        let (c1, c2) = candidates(p, carry.key);
+        bucket = if bucket == c1 { c2 } else { c1 };
+        cost.bucket_reads += 1;
+        let mut alt = store.read_bucket(bucket);
+        if let Some(s) = alt.iter_mut().find(|s| s.key == EMPTY_KEY) {
+            *s = carry;
+            store.write_bucket(bucket, &alt);
+            cost.bucket_writes += 1;
+            return Ok(cost);
+        }
+    }
+    Err(cost)
+}
+
+/// Expected displacement-chain length at load α with bucket size B:
+/// α^{2B} / (1 - α^B) (Sec VII-A).
+pub fn expected_chain_len(alpha: f64, b: usize) -> f64 {
+    let ab = alpha.powi(b as i32);
+    ab * ab / (1.0 - ab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(n_items: u64) -> CuckooParams {
+        CuckooParams::for_capacity(n_items, 0.7, 512, 64)
+    }
+
+    #[test]
+    fn bucket_size_matches_paper() {
+        // 512B blocks / 64B items => B=8; 4KB => B=64.
+        assert_eq!(params(1000).slots_per_bucket, 8);
+        assert_eq!(
+            CuckooParams::for_capacity(1000, 0.7, 4096, 64).slots_per_bucket,
+            64
+        );
+    }
+
+    #[test]
+    fn insert_then_get_roundtrip() {
+        let p = params(10_000);
+        let mut s = MemStore::new(p.n_buckets, p.slots_per_bucket);
+        let mut rng = Rng::new(1);
+        for k in 1..=10_000u64 {
+            put(&p, &mut s, KvPair { key: k, value: k * 7 }, &mut rng).unwrap();
+        }
+        for k in 1..=10_000u64 {
+            let (v, cost) = get(&p, &mut s, k);
+            assert_eq!(v, Some(k * 7), "key {k}");
+            assert!(cost.bucket_reads <= 2);
+        }
+        let (missing, _) = get(&p, &mut s, 999_999_999);
+        assert_eq!(missing, None);
+    }
+
+    #[test]
+    fn update_in_place() {
+        let p = params(100);
+        let mut s = MemStore::new(p.n_buckets, p.slots_per_bucket);
+        let mut rng = Rng::new(2);
+        put(&p, &mut s, KvPair { key: 5, value: 1 }, &mut rng).unwrap();
+        put(&p, &mut s, KvPair { key: 5, value: 2 }, &mut rng).unwrap();
+        assert_eq!(get(&p, &mut s, 5).0, Some(2));
+        // no duplicate entries
+        let (b1, b2) = candidates(&p, 5);
+        let count: usize = [b1, b2]
+            .iter()
+            .map(|&b| s.buckets[b as usize].iter().filter(|kv| kv.key == 5).count())
+            .sum();
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    fn mean_reads_about_1_5() {
+        let p = params(50_000);
+        let mut s = MemStore::new(p.n_buckets, p.slots_per_bucket);
+        let mut rng = Rng::new(3);
+        for k in 1..=50_000u64 {
+            put(&p, &mut s, KvPair { key: k, value: k }, &mut rng).unwrap();
+        }
+        let mut total_reads = 0u32;
+        let n = 20_000;
+        for k in 1..=n as u64 {
+            let (_, c) = get(&p, &mut s, k);
+            total_reads += c.bucket_reads;
+        }
+        let mean = total_reads as f64 / n as f64;
+        // The paper budgets 1.5 reads/GET (key equally likely in either
+        // bucket). First-choice-first insertion concentrates keys in their
+        // primary bucket at moderate load, so the implementation *beats*
+        // the paper's cost model (~1.0-1.2); 1.5 remains the conservative
+        // figure used by the Fig 8 analysis.
+        assert!(
+            (1.0..1.6).contains(&mean),
+            "mean bucket reads {mean} (paper budget: 1.5)"
+        );
+    }
+
+    #[test]
+    fn load_07_insertions_rarely_kick() {
+        // E[L] = α^{2B}/(1-α^B) at α=0.7, B=8 is ~0.0034.
+        assert!(expected_chain_len(0.7, 8) < 0.01);
+        let p = params(100_000);
+        let mut s = MemStore::new(p.n_buckets, p.slots_per_bucket);
+        let mut rng = Rng::new(4);
+        let mut kicks = 0u64;
+        for k in 1..=100_000u64 {
+            let c = put(&p, &mut s, KvPair { key: k, value: k }, &mut rng).unwrap();
+            kicks += c.kicks as u64;
+        }
+        let rate = kicks as f64 / 100_000.0;
+        assert!(rate < 0.05, "kick rate {rate} too high at load 0.7");
+    }
+
+    #[test]
+    fn high_load_still_inserts_via_chains() {
+        // α=0.93 with B=8 is below α_critical (≈0.96+): chains keep it OK.
+        let p = CuckooParams::for_capacity(100_000, 0.93, 512, 64);
+        let mut s = MemStore::new(p.n_buckets, p.slots_per_bucket);
+        let mut rng = Rng::new(5);
+        let mut failed = 0;
+        for k in 1..=100_000u64 {
+            if put(&p, &mut s, KvPair { key: k, value: k }, &mut rng).is_err() {
+                failed += 1;
+            }
+        }
+        assert_eq!(failed, 0, "insertion failures below critical load");
+    }
+
+    #[test]
+    fn candidates_distinct_and_stable() {
+        let p = params(1000);
+        for k in 0..5000u64 {
+            let (a, b) = candidates(&p, k);
+            assert_ne!(a, b);
+            assert!(a < p.n_buckets && b < p.n_buckets);
+            assert_eq!((a, b), candidates(&p, k));
+        }
+    }
+
+    #[test]
+    fn prop_no_lost_keys_under_churn() {
+        use crate::util::proptest::Prop;
+        Prop::new("cuckoo-durability").cases(8).run(
+            |r| r.next_u64(),
+            |&seed| {
+                let p = params(2_000);
+                let mut s = MemStore::new(p.n_buckets, p.slots_per_bucket);
+                let mut rng = Rng::new(seed);
+                let mut model = std::collections::HashMap::new();
+                for i in 0..4_000u64 {
+                    let key = 1 + rng.below(1_500);
+                    let val = i;
+                    if put(&p, &mut s, KvPair { key, value: val }, &mut rng).is_err() {
+                        return Err(format!("insert failed for {key}"));
+                    }
+                    model.insert(key, val);
+                }
+                for (&k, &v) in &model {
+                    let (got, _) = get(&p, &mut s, k);
+                    if got != Some(v) {
+                        return Err(format!("key {k}: got {got:?}, want {v}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

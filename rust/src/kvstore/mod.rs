@@ -1,0 +1,20 @@
+//! Case study 1 (Sec VII-A): the SSD-resident blocked-Cuckoo KV store.
+//!
+//! * [`cuckoo`] — the 2-choice blocked hash table over an abstract block
+//!   store (no DRAM-resident index or metadata).
+//! * [`wal`] — SSD-resident write-ahead log with bucket-consolidated
+//!   commits.
+//! * [`cache`] — CLOCK cache of hot KV pairs (all DRAM goes here).
+//! * [`engine`] — the assembled functional engine (GET/PUT over any
+//!   [`cuckoo::BlockStore`]).
+//! * [`analysis`] — the paper-scale throughput model behind Fig 8.
+
+pub mod analysis;
+pub mod cache;
+pub mod cuckoo;
+pub mod engine;
+pub mod wal;
+
+pub use analysis::{kv_throughput, KvScenario, KvThroughput};
+pub use cuckoo::{BlockStore, CuckooParams, KvPair, MemStore};
+pub use engine::{IoCounted, KvEngine};

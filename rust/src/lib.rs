@@ -1,0 +1,38 @@
+//! # fivemin — "From Minutes to Seconds" reproduction
+//!
+//! A feasibility-aware re-derivation of the five-minute rule for AI-era
+//! memory hierarchies, together with the systems that validate it:
+//!
+//! * [`model`] — the paper's analytical framework (Secs III–V): the
+//!   first-principles SSD performance/cost model, the calibrated economic
+//!   break-even (Eq. 1), M/D/1 + Kingman feasibility calibration, and the
+//!   workload-aware platform viability / provisioning analysis.
+//! * [`sim`] — MQSim-Next (Sec VI): a discrete-event SSD simulator with
+//!   SCA command timing, independent multi-plane reads, transfer-sense
+//!   overlap, a two-layer BCH/LDPC ECC model, page-mapping FTL with GC,
+//!   and a multi-queue host interface.
+//! * [`kvstore`] / [`ann`] — the Sec VII case studies: an SSD-resident
+//!   blocked-Cuckoo KV store and two-stage progressive ANN search, each as
+//!   a functional engine plus the analytical throughput model behind
+//!   Figs 8 and 10.
+//! * [`runtime`] / [`coordinator`] — the serving stack: PJRT execution of
+//!   the AOT-lowered JAX/Pallas compute graphs and the thread-based
+//!   router/batcher that drives them.
+//! * [`figures`] — regenerates every table and figure of the paper's
+//!   evaluation as CSV + ASCII charts.
+//!
+//! Python (JAX + Pallas) appears only at build time: `make artifacts`
+//! lowers the Layer-1/Layer-2 compute graphs to HLO text that the Rust
+//! runtime loads via `PjRtClient`. Nothing on the request path imports
+//! Python.
+
+pub mod ann;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod kvstore;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

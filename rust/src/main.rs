@@ -1,0 +1,411 @@
+//! `fivemin` — CLI for the "From Minutes to Seconds" framework.
+//!
+//! Subcommands:
+//!   breakeven   — calibrated break-even interval for a configuration
+//!   viability   — workload-aware platform viability + upgrade advice
+//!   simulate    — run MQSim-Next on a synthetic workload
+//!   figures     — regenerate the paper's tables/figures (CSV + ASCII)
+//!   config      — dump the Table I / Table III presets as JSON
+//!   serve       — run the ANN serving stack on synthetic queries
+
+use std::path::PathBuf;
+
+use fivemin::config::{
+    platform_to_json, ssd_to_json, IoMix, NandKind, PlatformConfig, PlatformKind, SsdConfig,
+};
+use fivemin::model::{economics, queueing, upgrade};
+use fivemin::sim::{run_uniform, SimParams};
+use fivemin::util::cli::{ArgSpec, CliError};
+use fivemin::util::table::{fmt_bytes, fmt_secs, fmt_si};
+use fivemin::workload::LognormalProfile;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "breakeven" => cmd_breakeven(rest),
+        "viability" => cmd_viability(rest),
+        "simulate" => cmd_simulate(rest),
+        "figures" => cmd_figures(rest),
+        "config" => cmd_config(rest),
+        "serve" => cmd_serve(rest),
+        "--help" | "-h" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try --help)")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "fivemin — feasibility-aware five-minute-rule framework (Storage-Next reproduction)\n\n\
+         commands:\n\
+         \x20 breakeven  --platform cpu|gpu --nand slc|pslc|tlc --blk N [--normal] [--host-iops N] [--p99-us N]\n\
+         \x20 viability  --platform cpu|gpu --dram-gb N --blk N [--sigma S] [--throughput-gbps N]\n\
+         \x20 simulate   --blk N --read-pct N [--measure-us N] [--p-bch P] [--ch-bw GBps]\n\
+         \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10] [--out DIR] [--quick]\n\
+         \x20 config     --dump\n\
+         \x20 serve      [--shards N] [--queries N] [--artifacts DIR]"
+    );
+}
+
+fn cli_err(e: CliError, spec: &ArgSpec) -> String {
+    match e {
+        CliError::Help => spec.usage(),
+        other => format!("{other}\n\n{}", spec.usage()),
+    }
+}
+
+fn parse_platform(s: &str) -> Result<PlatformConfig, String> {
+    match s {
+        "cpu" => Ok(PlatformConfig::preset(PlatformKind::CpuDdr)),
+        "gpu" => Ok(PlatformConfig::preset(PlatformKind::GpuGddr)),
+        other => Err(format!("unknown platform '{other}' (cpu|gpu)")),
+    }
+}
+
+fn parse_nand(s: &str) -> Result<NandKind, String> {
+    match s {
+        "slc" => Ok(NandKind::Slc),
+        "pslc" => Ok(NandKind::Pslc),
+        "tlc" => Ok(NandKind::Tlc),
+        other => Err(format!("unknown nand '{other}' (slc|pslc|tlc)")),
+    }
+}
+
+fn cmd_breakeven(args: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("breakeven", "calibrated break-even interval (Eq. 1)")
+        .opt("platform", "cpu|gpu", Some("cpu"), "host platform preset")
+        .opt("nand", "slc|pslc|tlc", Some("slc"), "NAND technology")
+        .opt("blk", "BYTES", Some("512"), "access block size")
+        .flag("normal", "use the conventional (4KB-ECC) SSD baseline")
+        .opt("host-iops", "N", None, "host IOPS budget (enables Sec IV calibration)")
+        .opt("p99-us", "US", None, "p99 read-latency target in microseconds");
+    let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
+    let mut plat = parse_platform(p.str("platform").unwrap())?;
+    let kind = parse_nand(p.str("nand").unwrap())?;
+    let blk = p.u64("blk").map_err(|e| e.to_string())?.unwrap();
+    let cfg = if p.flag("normal") {
+        SsdConfig::normal(kind)
+    } else {
+        SsdConfig::storage_next(kind)
+    };
+    let mix = IoMix::paper_default();
+    if let Some(iops) = p.f64("host-iops").map_err(|e| e.to_string())? {
+        plat.proc_iops_peak = iops;
+    }
+    let targets = match p.f64("p99-us").map_err(|e| e.to_string())? {
+        Some(us) => queueing::LatencyTargets::p99(us * 1e-6),
+        None => queueing::LatencyTargets::none(),
+    };
+    let u = queueing::usable_iops(&cfg, &plat, blk, mix, targets);
+    let cost = fivemin::model::ssd::ssd_cost(&cfg);
+    let be = economics::break_even_with_iops(&plat, cost.total, u.usable.max(1.0), blk);
+    println!("platform        : {}", plat.name());
+    println!("device          : {} (${:.0} normalized)", cfg.name, cost.total);
+    println!("block size      : {blk}B");
+    println!("peak SSD IOPS   : {}", fmt_si(u.peak));
+    println!(
+        "usable SSD IOPS : {}  (rho_max={:.2}{})",
+        fmt_si(u.usable),
+        u.rho_max,
+        if u.host_limited { ", host-limited" } else { "" }
+    );
+    println!(
+        "break-even      : {} (host {} + dram {} + ssd {})",
+        fmt_secs(be.total),
+        fmt_secs(be.host),
+        fmt_secs(be.dram_bw),
+        fmt_secs(be.ssd)
+    );
+    println!(
+        "vs the classical five-minute rule (300s): the threshold collapsed {:.0}x",
+        300.0 / be.total
+    );
+    Ok(())
+}
+
+fn cmd_viability(args: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("viability", "workload-aware viability + upgrade advice (Sec V)")
+        .opt("platform", "cpu|gpu", Some("gpu"), "host platform preset")
+        .opt("dram-gb", "GB", Some("256"), "host DRAM capacity")
+        .opt("blk", "BYTES", Some("512"), "block size")
+        .opt("sigma", "S", Some("1.2"), "log-normal access-interval sigma")
+        .opt("throughput-gbps", "GBps", Some("200"), "aggregate workload throughput")
+        .opt("n-blocks", "N", Some("1G"), "working-set blocks")
+        .flag("normal", "use the conventional SSD baseline");
+    let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
+    let plat = parse_platform(p.str("platform").unwrap())?;
+    let blk = p.u64("blk").map_err(|e| e.to_string())?.unwrap();
+    let dram = p.f64("dram-gb").map_err(|e| e.to_string())?.unwrap() * 1e9;
+    let sigma = p.f64("sigma").map_err(|e| e.to_string())?.unwrap();
+    let tput = p.f64("throughput-gbps").map_err(|e| e.to_string())?.unwrap() * 1e9;
+    let n_blk = p.u64("n-blocks").map_err(|e| e.to_string())?.unwrap() as f64;
+    let cfg = if p.flag("normal") {
+        SsdConfig::normal(NandKind::Slc)
+    } else {
+        SsdConfig::storage_next(NandKind::Slc)
+    };
+    let profile = LognormalProfile::calibrated(tput, sigma, n_blk, blk);
+    let advice = upgrade::advise(
+        &profile,
+        &plat,
+        &cfg,
+        IoMix::paper_default(),
+        fivemin::figures::fig_provisioning::tier90(blk),
+        dram,
+    );
+    let v = &advice.verdict;
+    println!("platform   : {} + {}", plat.name(), cfg.name);
+    println!(
+        "workload   : {} blocks x {blk}B, {}B/s, sigma={sigma}",
+        fmt_si(n_blk),
+        fmt_si(tput)
+    );
+    println!(
+        "T_B        : {}",
+        v.t_b.map(fmt_secs).unwrap_or_else(|| "infeasible".into())
+    );
+    println!(
+        "T_S        : {}",
+        v.t_s.map(fmt_secs).unwrap_or_else(|| "infeasible".into())
+    );
+    println!("T_C        : {}", fmt_secs(v.t_c));
+    println!("tau_be     : {}", fmt_secs(v.break_even.total));
+    println!(
+        "viable     : {}   economics-optimal: {}",
+        v.viable, v.economics_optimal
+    );
+    for r in &advice.recommendations {
+        match r {
+            upgrade::Recommendation::Keep => println!("advice     : keep — already optimal"),
+            upgrade::Recommendation::ResizeDramTo(b) => {
+                println!("advice     : resize DRAM to {}", fmt_bytes(*b))
+            }
+            upgrade::Recommendation::IncreaseDramBandwidth(b) => {
+                println!("advice     : increase DRAM bandwidth to {}B/s", fmt_si(*b))
+            }
+            upgrade::Recommendation::IncreaseSsdThroughput { target_bps, host_is_sublimiter } => {
+                println!(
+                    "advice     : raise SSD throughput to {}B/s{}",
+                    fmt_si(*target_bps),
+                    if *host_is_sublimiter {
+                        " (host IOPS is the sub-limiter)"
+                    } else {
+                        ""
+                    }
+                )
+            }
+            upgrade::Recommendation::IncreaseDramCapacity(b) => {
+                println!("advice     : grow DRAM to {}", fmt_bytes(*b))
+            }
+            upgrade::Recommendation::BandwidthInfeasible { required_bps } => {
+                println!(
+                    "advice     : DRAM bandwidth below workload rate — need {}B/s",
+                    fmt_si(*required_bps)
+                )
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("simulate", "run MQSim-Next (Sec VI) on a synthetic workload")
+        .opt("blk", "BYTES", Some("512"), "block size")
+        .opt("read-pct", "PCT", Some("90"), "read percentage")
+        .opt("measure-us", "US", Some("2000"), "measured window (simulated us)")
+        .opt("p-bch", "P", Some("0"), "per-sector BCH failure probability")
+        .opt("ch-bw", "GBps", Some("3.6"), "NAND channel bandwidth")
+        .flag("normal", "conventional SSD (4KB ECC, 1.2us commands)");
+    let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
+    let blk = p.u64("blk").map_err(|e| e.to_string())?.unwrap() as u32;
+    let read_pct = p.f64("read-pct").map_err(|e| e.to_string())?.unwrap();
+    let measure = p.u64("measure-us").map_err(|e| e.to_string())?.unwrap();
+    let mut cfg = if p.flag("normal") {
+        SsdConfig::normal(NandKind::Slc)
+    } else {
+        SsdConfig::storage_next(NandKind::Slc)
+    };
+    cfg.ch_bw = p.f64("ch-bw").map_err(|e| e.to_string())?.unwrap() * 1e9;
+    let mut prm = SimParams::default_for(blk);
+    prm.p_bch = p.f64("p-bch").map_err(|e| e.to_string())?.unwrap();
+    let stats = run_uniform(&cfg, &prm, read_pct / 100.0, 400, measure);
+    let spp = (cfg.nand.page_bytes as u32 / blk).max(1) as u64;
+    println!("device          : {}", cfg.name);
+    println!("workload        : {blk}B, {read_pct:.0}% reads, QD {}", prm.qd);
+    println!("IOPS            : {}", fmt_si(stats.iops()));
+    println!(
+        "read p50/p99    : {} / {}",
+        fmt_secs(stats.read_lat.percentile(0.5) / 1e9),
+        fmt_secs(stats.read_lat.percentile(0.99) / 1e9)
+    );
+    println!(
+        "channel util    : {:.1}%",
+        stats.channel_utilization(cfg.n_ch) * 100.0
+    );
+    if stats.writes_done > 0 {
+        println!("measured WA     : {:.2}", stats.write_amplification(spp));
+        println!("GC erases       : {}", stats.erases);
+    }
+    if stats.ldpc_escalations > 0 {
+        println!("LDPC escalations: {}", stats.ldpc_escalations);
+    }
+    let model = fivemin::model::ssd::ssd_peak_iops(
+        &cfg,
+        blk as u64,
+        IoMix::from_percent(read_pct, 100.0 - read_pct),
+    );
+    println!(
+        "analytic model  : {} ({})",
+        fmt_si(model.effective),
+        model.limiter()
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("figures", "regenerate the paper's tables and figures")
+        .flag("all", "generate everything")
+        .flag("fig3", "peak IOPS")
+        .flag("tab2", "sensitivity")
+        .flag("fig4", "break-even stacks")
+        .flag("tab4", "tail tiers")
+        .flag("fig5", "constraint-aware break-even")
+        .flag("fig6", "provisioning")
+        .flag("fig7", "MQSim-Next validation (slow)")
+        .flag("fig8", "KV store")
+        .flag("fig10", "ANN search")
+        .flag("quick", "shorter Fig 7 simulation windows")
+        .opt("out", "DIR", Some("results"), "CSV output directory");
+    let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
+    let out = PathBuf::from(p.str("out").unwrap());
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+    let all = p.flag("all");
+    let mut emitted = 0;
+    for (id, f) in fivemin::figures::analytic_figures() {
+        let wanted = all
+            || match id {
+                "fig5ab" | "fig5cd" => p.flag("fig5"),
+                other => p.flag(other),
+            };
+        if wanted {
+            fivemin::figures::emit(&out, id, &f()).map_err(|e| e.to_string())?;
+            emitted += 1;
+        }
+    }
+    if all || p.flag("fig4") {
+        println!("{}", fivemin::figures::fig_breakeven::fig4().1);
+        println!("{}", fivemin::figures::fig_casestudies::fig8_chart());
+    }
+    if all || p.flag("fig7") {
+        for (id, t) in fivemin::figures::sim_figures(p.flag("quick")) {
+            fivemin::figures::emit(&out, id, &t).map_err(|e| e.to_string())?;
+            emitted += 1;
+        }
+    }
+    if emitted == 0 {
+        return Err(spec.usage());
+    }
+    println!("wrote {emitted} CSV file(s) under {}", out.display());
+    Ok(())
+}
+
+fn cmd_config(args: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("config", "dump Table I / Table III presets as JSON")
+        .flag("dump", "print all presets");
+    let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
+    if !p.flag("dump") {
+        return Err(spec.usage());
+    }
+    println!("// Table I devices (Storage-Next + conventional baselines)");
+    for kind in NandKind::all() {
+        println!("{}", ssd_to_json(&SsdConfig::storage_next(kind)));
+        println!("{}", ssd_to_json(&SsdConfig::normal(kind)));
+    }
+    println!("// Table III platforms");
+    for pk in PlatformKind::all() {
+        println!("{}", platform_to_json(&PlatformConfig::preset(pk)));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new("serve", "run the two-stage ANN serving stack (PJRT)")
+        .opt("shards", "N", Some("2"), "corpus shards (4096 vectors each)")
+        .opt("queries", "N", Some("256"), "queries to issue")
+        .opt("artifacts", "DIR", None, "artifacts directory");
+    let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
+    let shards = p.usize("shards").map_err(|e| e.to_string())?.unwrap();
+    let queries = p.usize("queries").map_err(|e| e.to_string())?.unwrap();
+    let dir = p
+        .str("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(fivemin::runtime::default_artifacts_dir);
+    serve_demo(dir, shards, queries).map_err(|e| e.to_string())
+}
+
+fn serve_demo(dir: PathBuf, shards: usize, queries: usize) -> anyhow::Result<()> {
+    use fivemin::coordinator::batcher::BatchPolicy;
+    use fivemin::coordinator::{Coordinator, ServingCorpus};
+    use fivemin::util::rng::Rng;
+    use std::sync::Arc;
+
+    let corpus = Arc::new(ServingCorpus::synthetic(shards, 42));
+    println!("corpus: {} vectors across {shards} shard(s)", corpus.n);
+    let co = Coordinator::start(dir, corpus.clone(), BatchPolicy::default())?;
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let recvs: Vec<_> = (0..queries)
+        .map(|_| {
+            let t = rng.below(corpus.n as u64) as usize;
+            (t, co.submit(corpus.query_near(t, 0.02, &mut rng)))
+        })
+        .collect();
+    let mut hits = 0;
+    for (target, r) in recvs {
+        let res = r.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+        if res.ids[0] as usize == target {
+            hits += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let st = co.stats();
+    println!(
+        "queries  : {queries} in {dt:.2}s ({:.0} QPS)",
+        queries as f64 / dt
+    );
+    println!("recall@1 : {:.1}%", 100.0 * hits as f64 / queries as f64);
+    println!(
+        "batches  : {} (mean fill {:.1}%)",
+        st.batches,
+        100.0 * st.batch_fill / st.batches.max(1) as f64
+    );
+    println!(
+        "latency  : p50 {} p99 {}",
+        fmt_secs(st.latency_ns.percentile(0.5) / 1e9),
+        fmt_secs(st.latency_ns.percentile(0.99) / 1e9)
+    );
+    println!(
+        "stage1 p50: {}  stage2 p50: {}",
+        fmt_secs(st.stage1_ns.percentile(0.5) / 1e9),
+        fmt_secs(st.stage2_ns.percentile(0.5) / 1e9)
+    );
+    Ok(())
+}

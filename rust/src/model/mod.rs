@@ -1,0 +1,9 @@
+//! The paper's analytical framework (Secs III–V): first-principles SSD
+//! model, calibrated economics, feasibility-aware queueing calibration, and
+//! workload-aware platform viability / provisioning.
+
+pub mod economics;
+pub mod platform;
+pub mod queueing;
+pub mod ssd;
+pub mod upgrade;

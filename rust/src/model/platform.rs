@@ -1,0 +1,371 @@
+//! Workload-aware platform viability and provisioning analysis (Sec V).
+//!
+//! Given a log-normal access-interval profile and a platform, compute the
+//! three thresholds that isolate each hardware resource:
+//!
+//!   T_B — smallest T with DRAM-bandwidth demand Ψ_c(T)+2Ψ_d(T) ≤ B_DRAM
+//!   T_S — smallest T with uncached throughput Ψ_d(T) ≤ B_SSD
+//!   T_C — largest T whose cached set fits C_DRAM
+//!
+//! Viability requires max(T_B, T_S) ≤ T_C; the economics-optimal operating
+//! point additionally places τ_break-even within [max(T_B,T_S), T_C].
+//! When DRAM capacity is the free variable (Fig 6), the minimum viable and
+//! economics-optimal capacities are C^(V) = |S(T_v)|·l_blk and
+//! C^(O) = |S(T_o)|·l_blk with T_v = max(T_B,T_S), T_o = max(τ_be, T_v).
+
+use crate::config::{IoMix, PlatformConfig, SsdConfig};
+use crate::model::economics::{self, BreakEven};
+use crate::model::queueing::{self, LatencyTargets};
+use crate::workload::lognormal::LognormalProfile;
+
+/// Why a platform/workload pairing fails or which resource governs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Limiter {
+    DramBandwidth,
+    SsdThroughput,
+    DramCapacity,
+    None,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Thresholds {
+    /// DRAM-bandwidth threshold T_B (s); None if B_DRAM < total rate
+    /// (unsatisfiable even with everything cached).
+    pub t_b: Option<f64>,
+    /// SSD-throughput threshold T_S (s); None if even full caching cannot
+    /// confine the uncached stream (never happens for finite T_S demands).
+    pub t_s: Option<f64>,
+    /// Usable aggregate SSD bytes/s that produced T_S.
+    pub b_ssd: f64,
+    /// Usable per-SSD IOPS after Sec IV calibration.
+    pub usable_iops_per_ssd: f64,
+}
+
+/// Compute T_B and T_S for a profile on a platform + SSD configuration.
+pub fn thresholds(
+    profile: &LognormalProfile,
+    platform: &PlatformConfig,
+    ssd: &SsdConfig,
+    mix: IoMix,
+    targets: LatencyTargets,
+) -> Thresholds {
+    // T_B: Ψc + 2Ψd ≤ B ⇔ Ψd ≤ B − total.
+    let total = profile.total_bps();
+    let t_b = if platform.dram_bw_total < total {
+        None
+    } else {
+        profile.t_for_uncached(platform.dram_bw_total - total)
+    };
+    // T_S from usable IOPS (latency + host-budget calibrated).
+    let u = queueing::usable_iops(ssd, platform, profile.l_blk, mix, targets);
+    let b_ssd = profile.l_blk as f64 * platform.n_ssd as f64 * u.usable;
+    let t_s = profile.t_for_uncached(b_ssd);
+    Thresholds { t_b, t_s, b_ssd, usable_iops_per_ssd: u.usable }
+}
+
+/// Full viability verdict at a fixed DRAM capacity.
+#[derive(Clone, Copy, Debug)]
+pub struct Viability {
+    pub t_b: Option<f64>,
+    pub t_s: Option<f64>,
+    pub t_c: f64,
+    pub viable: bool,
+    pub economics_optimal: bool,
+    pub break_even: BreakEven,
+    pub limiter: Limiter,
+}
+
+pub fn assess(
+    profile: &LognormalProfile,
+    platform: &PlatformConfig,
+    ssd: &SsdConfig,
+    mix: IoMix,
+    targets: LatencyTargets,
+    dram_capacity_bytes: f64,
+) -> Viability {
+    let th = thresholds(profile, platform, ssd, mix, targets);
+    let t_c = profile.t_for_capacity(dram_capacity_bytes);
+    let be = economics::break_even_with_iops(
+        platform,
+        crate::model::ssd::ssd_cost(ssd).total,
+        th.usable_iops_per_ssd.max(1.0),
+        profile.l_blk,
+    );
+    let (viable, limiter) = match (th.t_b, th.t_s) {
+        (Some(tb), Some(ts)) => {
+            let tv = tb.max(ts);
+            if tv <= t_c {
+                (true, Limiter::None)
+            } else if tb > t_c && ts > t_c {
+                (false, Limiter::DramCapacity)
+            } else if tb > t_c {
+                (false, Limiter::DramBandwidth)
+            } else {
+                (false, Limiter::SsdThroughput)
+            }
+        }
+        (None, _) => (false, Limiter::DramBandwidth),
+        (_, None) => (false, Limiter::SsdThroughput),
+    };
+    let economics_optimal = viable
+        && match (th.t_b, th.t_s) {
+            (Some(tb), Some(ts)) => {
+                let tv = tb.max(ts);
+                be.total >= tv && be.total <= t_c
+            }
+            _ => false,
+        };
+    Viability {
+        t_b: th.t_b,
+        t_s: th.t_s,
+        t_c,
+        viable,
+        economics_optimal,
+        break_even: be,
+        limiter,
+    }
+}
+
+/// Fig 6 provisioning: DRAM capacity is the free variable.
+#[derive(Clone, Copy, Debug)]
+pub struct Provisioning {
+    pub t_b: f64,
+    pub t_s: f64,
+    /// Viability threshold T_v = max(T_B, T_S).
+    pub t_viable: f64,
+    /// Economics threshold T_o = max(τ_be, T_v).
+    pub t_optimal: f64,
+    pub break_even: BreakEven,
+    /// Minimum viable DRAM capacity |S(T_v)|·l_blk (bytes).
+    pub cap_viable: f64,
+    /// Economics-optimal DRAM capacity |S(T_o)|·l_blk (bytes).
+    pub cap_optimal: f64,
+    /// DRAM bandwidth use at each point: (Ψ_c, 2Ψ_d).
+    pub bw_at_viable: (f64, f64),
+    pub bw_at_optimal: (f64, f64),
+}
+
+/// Provision the minimum DRAM for viability and for economics-optimality.
+/// Returns None when the platform cannot be made viable at any capacity
+/// (DRAM bandwidth below the aggregate workload rate).
+pub fn provision(
+    profile: &LognormalProfile,
+    platform: &PlatformConfig,
+    ssd: &SsdConfig,
+    mix: IoMix,
+    targets: LatencyTargets,
+) -> Option<Provisioning> {
+    let th = thresholds(profile, platform, ssd, mix, targets);
+    let (t_b, t_s) = (th.t_b?, th.t_s?);
+    let t_viable = t_b.max(t_s);
+    let be = economics::break_even_with_iops(
+        platform,
+        crate::model::ssd::ssd_cost(ssd).total,
+        th.usable_iops_per_ssd.max(1.0),
+        profile.l_blk,
+    );
+    let t_optimal = be.total.max(t_viable);
+    let cap = |t: f64| profile.cached_bytes(t);
+    let bw = |t: f64| (profile.psi_cached(t), 2.0 * profile.psi_uncached(t));
+    Some(Provisioning {
+        t_b,
+        t_s,
+        t_viable,
+        t_optimal,
+        break_even: be,
+        cap_viable: cap(t_viable),
+        cap_optimal: cap(t_optimal),
+        bw_at_viable: bw(t_viable),
+        bw_at_optimal: bw(t_optimal),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NandKind, PlatformKind};
+    use crate::util::proptest::Prop;
+
+    fn fig6_profile(l_blk: u64) -> LognormalProfile {
+        LognormalProfile::calibrated(200e9, 1.2, 1e9, l_blk)
+    }
+    fn cpu() -> PlatformConfig {
+        PlatformConfig::preset(PlatformKind::CpuDdr)
+    }
+    fn gpu() -> PlatformConfig {
+        PlatformConfig::preset(PlatformKind::GpuGddr)
+    }
+    /// Fig 6 tail tiers: ρ_max = 0.90 (13/17/26/44 µs by block size).
+    fn tier90(l_blk: u64) -> LatencyTargets {
+        let us = match l_blk {
+            512 => 13.0,
+            1024 => 17.0,
+            2048 => 26.0,
+            4096 => 44.0,
+            _ => 44.0,
+        };
+        LatencyTargets::p99(us * 1e-6)
+    }
+
+    #[test]
+    fn cpu_storage_next_is_ssd_limited_not_bw_limited() {
+        // Sec V-B: "Because DRAM bandwidth comfortably exceeds the workload
+        // bandwidth, we have T_v = T_S."
+        let l = 512;
+        let p = fig6_profile(l);
+        let th = thresholds(&p, &cpu(), &SsdConfig::storage_next(NandKind::Slc),
+                            IoMix::paper_default(), tier90(l));
+        let (tb, ts) = (th.t_b.unwrap(), th.t_s.unwrap());
+        assert!(ts > tb, "T_S {ts} should exceed T_B {tb} on CPU+DDR");
+    }
+
+    #[test]
+    fn gpu_thresholds_small() {
+        // Sec V-B: on GPU+GDDR with Storage-Next, both T_B and T_S < 5s.
+        for &l in &crate::config::BLOCK_SIZES {
+            let p = fig6_profile(l);
+            let th = thresholds(&p, &gpu(), &SsdConfig::storage_next(NandKind::Slc),
+                                IoMix::paper_default(), tier90(l));
+            assert!(th.t_b.unwrap() < 5.0, "l={l} T_B {:?}", th.t_b);
+            assert!(th.t_s.unwrap() < 5.0, "l={l} T_S {:?}", th.t_s);
+        }
+    }
+
+    #[test]
+    fn storage_next_needs_less_viable_dram_than_normal() {
+        // Sec V-B: higher IOPS reduce T_S and therefore the viable cache.
+        let l = 512;
+        let p = fig6_profile(l);
+        let mix = IoMix::paper_default();
+        let sn = provision(&p, &cpu(), &SsdConfig::storage_next(NandKind::Slc), mix, tier90(l)).unwrap();
+        let nr = provision(&p, &cpu(), &SsdConfig::normal(NandKind::Slc), mix, tier90(l)).unwrap();
+        assert!(
+            sn.cap_viable < nr.cap_viable,
+            "SN viable {:.0}GB !< NR viable {:.0}GB",
+            sn.cap_viable / 1e9,
+            nr.cap_viable / 1e9
+        );
+    }
+
+    #[test]
+    fn cpu_512b_optimal_caches_nearly_everything() {
+        // Sec V-B: at 512B on CPU+DDR, τ_be dominates and the economics
+        // optimum caches essentially the whole 512GB dataset.
+        let l = 512;
+        let p = fig6_profile(l);
+        let pr = provision(&p, &cpu(), &SsdConfig::storage_next(NandKind::Slc),
+                           IoMix::paper_default(), tier90(l)).unwrap();
+        let dataset = p.n_blk * l as f64;
+        assert!(
+            pr.cap_optimal > 0.9 * dataset,
+            "optimal {:.0}GB of {:.0}GB dataset",
+            pr.cap_optimal / 1e9,
+            dataset / 1e9
+        );
+        assert!(pr.t_optimal > pr.t_viable);
+    }
+
+    #[test]
+    fn gpu_viable_far_below_cpu() {
+        // Fig 6 headline: GPU+SN achieves viability with far less DRAM.
+        let l = 512;
+        let p = fig6_profile(l);
+        let mix = IoMix::paper_default();
+        let c = provision(&p, &cpu(), &SsdConfig::storage_next(NandKind::Slc), mix, tier90(l)).unwrap();
+        let g = provision(&p, &gpu(), &SsdConfig::storage_next(NandKind::Slc), mix, tier90(l)).unwrap();
+        assert!(
+            g.cap_viable < c.cap_viable,
+            "GPU viable {:.0}GB !< CPU viable {:.0}GB",
+            g.cap_viable / 1e9,
+            c.cap_viable / 1e9
+        );
+    }
+
+    #[test]
+    fn assess_verdicts() {
+        let l = 512;
+        let p = fig6_profile(l);
+        let mix = IoMix::paper_default();
+        let ssd = SsdConfig::storage_next(NandKind::Slc);
+        // generous DRAM: viable
+        let v = assess(&p, &gpu(), &ssd, mix, tier90(l), 400e9);
+        assert!(v.viable, "{v:?}");
+        // tiny DRAM: not viable, capacity/ssd limited
+        let v = assess(&p, &cpu(), &ssd, mix, tier90(l), 1e9);
+        assert!(!v.viable);
+        assert_ne!(v.limiter, Limiter::None);
+        // bandwidth-starved platform: unviable regardless of capacity
+        let mut weak = cpu();
+        weak.dram_bw_total = 100e9; // < 200GB/s workload
+        let v = assess(&p, &weak, &ssd, mix, tier90(l), 1e15);
+        assert!(!v.viable);
+        assert_eq!(v.limiter, Limiter::DramBandwidth);
+    }
+
+    #[test]
+    fn bw_split_at_full_cache_is_pure_dram() {
+        // When the optimal point caches the whole dataset the I/O term
+        // vanishes (the single-component bars in Fig 6(b)).
+        let l = 512;
+        let p = fig6_profile(l);
+        let pr = provision(&p, &cpu(), &SsdConfig::normal(NandKind::Slc),
+                           IoMix::paper_default(), tier90(l)).unwrap();
+        let dataset = p.n_blk * l as f64;
+        if pr.cap_optimal >= 0.999 * dataset {
+            let (_, dma) = pr.bw_at_optimal;
+            assert!(dma < 0.02 * p.total_bps(), "residual DMA {dma:.2e}");
+        }
+    }
+
+    #[test]
+    fn prop_viable_capacity_monotone_in_ssd_iops() {
+        // Raising usable SSD throughput can only lower the viable capacity.
+        Prop::new("viable-cap-monotone").cases(24).run(
+            |r| (1u32 + r.range(0, 8) as u32, 512u64 << r.range(0, 4)),
+            |&(n_ssd, l)| {
+                let p = fig6_profile(l);
+                let mix = IoMix::paper_default();
+                let mut plat = gpu();
+                plat.n_ssd = n_ssd;
+                plat.proc_iops_peak = f64::INFINITY;
+                let ssd = SsdConfig::storage_next(NandKind::Slc);
+                let a = provision(&p, &plat, &ssd, mix, LatencyTargets::none())
+                    .unwrap()
+                    .cap_viable;
+                plat.n_ssd = n_ssd * 2;
+                let b = provision(&p, &plat, &ssd, mix, LatencyTargets::none())
+                    .unwrap()
+                    .cap_viable;
+                if b <= a + 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!("more SSDs raised viable cap: {a} -> {b}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_optimal_at_least_viable() {
+        Prop::new("optimal>=viable").cases(24).run(
+            |r| {
+                let sigma = 0.3 + r.f64() * 1.5;
+                let l = 512u64 << r.range(0, 4);
+                (sigma, l)
+            },
+            |&(sigma, l)| {
+                let p = LognormalProfile::calibrated(200e9, sigma, 1e9, l);
+                let pr = provision(&p, &cpu(), &SsdConfig::storage_next(NandKind::Slc),
+                                   IoMix::paper_default(), LatencyTargets::none());
+                match pr {
+                    None => Ok(()),
+                    Some(pr) if pr.cap_optimal + 1.0 >= pr.cap_viable => Ok(()),
+                    Some(pr) => Err(format!(
+                        "optimal {} < viable {}",
+                        pr.cap_optimal, pr.cap_viable
+                    )),
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,188 @@
+//! Upgrade advisor (Sec V-A, final paragraph): diagnose the limiting
+//! resource for an unviable or off-optimum configuration and recommend the
+//! cheapest path to viability / economics-optimality.
+
+use crate::config::{IoMix, PlatformConfig, SsdConfig};
+use crate::model::platform::{assess, Limiter, Viability};
+use crate::model::queueing::LatencyTargets;
+use crate::workload::lognormal::LognormalProfile;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Recommendation {
+    /// Already viable and economics-optimal.
+    Keep,
+    /// Viable but off the economics optimum: adjust DRAM capacity toward
+    /// the break-even placement (bytes).
+    ResizeDramTo(f64),
+    /// Increase total host-DRAM bandwidth to at least this (B/s).
+    IncreaseDramBandwidth(f64),
+    /// Raise aggregate SSD throughput to at least this (B/s) — more/faster
+    /// SSDs, or lift the host-IOPS budget if that is the sub-limiter.
+    IncreaseSsdThroughput { target_bps: f64, host_is_sublimiter: bool },
+    /// Grow DRAM capacity to at least this (bytes).
+    IncreaseDramCapacity(f64),
+    /// DRAM bandwidth below the aggregate workload rate — no capacity can
+    /// help; upgrade memory technology.
+    BandwidthInfeasible { required_bps: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct Advice {
+    pub verdict: Viability,
+    pub recommendations: Vec<Recommendation>,
+}
+
+/// Analyze a fixed configuration and produce ordered upgrade advice.
+pub fn advise(
+    profile: &LognormalProfile,
+    platform: &PlatformConfig,
+    ssd: &SsdConfig,
+    mix: IoMix,
+    targets: LatencyTargets,
+    dram_capacity_bytes: f64,
+) -> Advice {
+    let v = assess(profile, platform, ssd, mix, targets, dram_capacity_bytes);
+    let mut recs = Vec::new();
+    let total = profile.total_bps();
+
+    match (v.viable, v.limiter) {
+        (true, _) => {
+            if v.economics_optimal {
+                recs.push(Recommendation::Keep);
+            } else {
+                // viable but off-optimum: move T_C toward τ_be (clamped to
+                // the viability window).
+                let t_target = v
+                    .break_even
+                    .total
+                    .max(v.t_b.unwrap_or(0.0).max(v.t_s.unwrap_or(0.0)));
+                recs.push(Recommendation::ResizeDramTo(
+                    profile.cached_bytes(t_target),
+                ));
+            }
+        }
+        (false, Limiter::DramBandwidth) => {
+            if platform.dram_bw_total < total {
+                recs.push(Recommendation::BandwidthInfeasible { required_bps: total });
+            } else {
+                // need B_DRAM ≥ Ψc(T_C) + 2Ψd(T_C) at the current capacity
+                let t_c = v.t_c;
+                recs.push(Recommendation::IncreaseDramBandwidth(
+                    profile.dram_bw_demand(t_c),
+                ));
+            }
+        }
+        (false, Limiter::SsdThroughput) => {
+            let need = profile.psi_uncached(v.t_c);
+            // was the host budget the sub-limiter for usable IOPS?
+            let u = crate::model::queueing::usable_iops(
+                ssd, platform, profile.l_blk, mix, targets,
+            );
+            recs.push(Recommendation::IncreaseSsdThroughput {
+                target_bps: need,
+                host_is_sublimiter: u.host_limited,
+            });
+        }
+        (false, Limiter::DramCapacity) => {
+            // both T_B and T_S exceed T_C: grow capacity to max(T_B, T_S)
+            // (or trade against bandwidth upgrades; we report capacity).
+            let tv = v.t_b.unwrap_or(f64::INFINITY).max(v.t_s.unwrap_or(f64::INFINITY));
+            if tv.is_finite() {
+                recs.push(Recommendation::IncreaseDramCapacity(
+                    profile.cached_bytes(tv),
+                ));
+            } else {
+                recs.push(Recommendation::BandwidthInfeasible { required_bps: total });
+            }
+        }
+        (false, Limiter::None) => unreachable!("unviable with no limiter"),
+    }
+
+    Advice { verdict: v, recommendations: recs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NandKind, PlatformKind};
+
+    fn profile() -> LognormalProfile {
+        LognormalProfile::calibrated(200e9, 1.2, 1e9, 512)
+    }
+
+    #[test]
+    fn optimal_config_keeps() {
+        // GPU + Storage-Next with the economics-optimal capacity.
+        let p = profile();
+        let plat = PlatformConfig::preset(PlatformKind::GpuGddr);
+        let ssd = SsdConfig::storage_next(NandKind::Slc);
+        let mix = IoMix::paper_default();
+        let pr = crate::model::platform::provision(&p, &plat, &ssd, mix, LatencyTargets::none()).unwrap();
+        let advice = advise(&p, &plat, &ssd, mix, LatencyTargets::none(), pr.cap_optimal * 1.02);
+        assert!(advice.verdict.viable);
+        assert_eq!(advice.recommendations[0], Recommendation::Keep);
+    }
+
+    #[test]
+    fn tiny_dram_recommends_growth() {
+        let p = profile();
+        let plat = PlatformConfig::preset(PlatformKind::CpuDdr);
+        let ssd = SsdConfig::storage_next(NandKind::Slc);
+        let advice = advise(&p, &plat, &ssd, IoMix::paper_default(),
+                            LatencyTargets::none(), 1e9);
+        assert!(!advice.verdict.viable);
+        match &advice.recommendations[0] {
+            Recommendation::IncreaseDramCapacity(b) => assert!(*b > 1e9),
+            Recommendation::IncreaseSsdThroughput { .. } => {}
+            other => panic!("unexpected advice {other:?}"),
+        }
+    }
+
+    #[test]
+    fn starved_bandwidth_is_infeasible() {
+        let p = profile();
+        let mut plat = PlatformConfig::preset(PlatformKind::CpuDdr);
+        plat.dram_bw_total = 150e9; // < 200GB/s workload rate
+        let ssd = SsdConfig::storage_next(NandKind::Slc);
+        let advice = advise(&p, &plat, &ssd, IoMix::paper_default(),
+                            LatencyTargets::none(), 1e15);
+        assert!(matches!(
+            advice.recommendations[0],
+            Recommendation::BandwidthInfeasible { .. }
+        ));
+    }
+
+    #[test]
+    fn viable_but_suboptimal_resizes() {
+        // Capacity well above viable but below the optimum (CPU 512B has a
+        // huge τ_be) => ResizeDramTo larger.
+        let p = profile();
+        let plat = PlatformConfig::preset(PlatformKind::CpuDdr);
+        let ssd = SsdConfig::storage_next(NandKind::Slc);
+        let mix = IoMix::paper_default();
+        let pr = crate::model::platform::provision(&p, &plat, &ssd, mix, LatencyTargets::none()).unwrap();
+        let cap = (pr.cap_viable * 1.5).min(pr.cap_optimal * 0.5);
+        let advice = advise(&p, &plat, &ssd, mix, LatencyTargets::none(), cap);
+        assert!(advice.verdict.viable);
+        match advice.recommendations[0] {
+            Recommendation::ResizeDramTo(target) => assert!(target > cap),
+            ref other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn host_sublimiter_reported() {
+        // Weak host budget makes the SSD path host-limited.
+        let p = profile();
+        let mut plat = PlatformConfig::preset(PlatformKind::CpuDdr);
+        plat.proc_iops_peak = 4e6; // 1M per SSD
+        let ssd = SsdConfig::storage_next(NandKind::Slc);
+        let advice = advise(&p, &plat, &ssd, IoMix::paper_default(),
+                            LatencyTargets::none(), 30e9);
+        if let Recommendation::IncreaseSsdThroughput { host_is_sublimiter, .. } =
+            advice.recommendations[0]
+        {
+            assert!(host_is_sublimiter);
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Artifact manifest schema + the serving-shape contract shared with
+//! `python/compile/model.py` (SERVE_* constants). Change both sides
+//! together; `python/tests/test_aot.py::test_serving_shape_constants`
+//! pins the Python half.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Shapes baked into the serving artifacts.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeShapes {
+    /// Queries per coordinator batch (SERVE_BATCH).
+    pub batch: usize,
+    /// Reduced-dim vectors per DRAM shard scan (SERVE_SHARD).
+    pub shard: usize,
+    /// Candidates promoted to full re-rank (SERVE_TOPK).
+    pub topk: usize,
+    /// 512B / f32 (REDUCED_DIM).
+    pub reduced_dim: usize,
+    /// 4KB / f32 (FULL_DIM).
+    pub full_dim: usize,
+    /// Break-even sweep grid points (SWEEP_GRID).
+    pub sweep_grid: usize,
+}
+
+pub const SERVE: ServeShapes = ServeShapes {
+    batch: 32,
+    shard: 4096,
+    topk: 64,
+    reduced_dim: 128,
+    full_dim: 1024,
+    sweep_grid: 64,
+};
+
+/// One manifest entry: file + input shapes/dtypes.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub input_dtypes: Vec<String>,
+}
+
+impl EntrySpec {
+    pub fn from_json(name: &str, j: &Json) -> Result<Self> {
+        let file = j
+            .get(&["file"])
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("entry '{name}' missing file"))?
+            .to_string();
+        let inputs = j
+            .get(&["inputs"])
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("entry '{name}' missing inputs"))?;
+        let mut input_shapes = Vec::new();
+        let mut input_dtypes = Vec::new();
+        for inp in inputs {
+            let shape = inp
+                .get(&["shape"])
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("entry '{name}' input missing shape"))?
+                .iter()
+                .map(|d| d.as_f64().map(|x| x as usize))
+                .collect::<Option<Vec<usize>>>()
+                .ok_or_else(|| anyhow!("entry '{name}' bad shape"))?;
+            input_shapes.push(shape);
+            input_dtypes.push(
+                inp.get(&["dtype"])
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("float32")
+                    .to_string(),
+            );
+        }
+        Ok(EntrySpec { name: name.to_string(), file, input_shapes, input_dtypes })
+    }
+}
+
+/// `artifacts/` at the repo root (honours FIVEMIN_ARTIFACTS override).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("FIVEMIN_ARTIFACTS") {
+        return dir.into();
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_shapes_match_python_contract() {
+        // Mirrors python/compile/model.py SERVE_* — the reduced vector is
+        // 512B and the full vector 4KB in f32, the paper's block sizes.
+        assert_eq!(SERVE.reduced_dim * 4, 512);
+        assert_eq!(SERVE.full_dim * 4, 4096);
+        assert_eq!(SERVE.batch, 32);
+        assert_eq!(SERVE.shard, 4096);
+        assert_eq!(SERVE.topk, 64);
+    }
+
+    #[test]
+    fn entry_spec_parses() {
+        let j = Json::parse(
+            r#"{"file": "x.hlo.txt",
+                "inputs": [{"shape": [32, 128], "dtype": "float32"},
+                           {"shape": [4096, 128], "dtype": "float32"}]}"#,
+        )
+        .unwrap();
+        let e = EntrySpec::from_json("x", &j).unwrap();
+        assert_eq!(e.file, "x.hlo.txt");
+        assert_eq!(e.input_shapes, vec![vec![32, 128], vec![4096, 128]]);
+        assert_eq!(e.input_dtypes[0], "float32");
+    }
+
+    #[test]
+    fn entry_spec_rejects_malformed() {
+        let j = Json::parse(r#"{"inputs": []}"#).unwrap();
+        assert!(EntrySpec::from_json("x", &j).is_err());
+        let j = Json::parse(r#"{"file": "x", "inputs": [{"shape": ["a"]}]}"#).unwrap();
+        assert!(EntrySpec::from_json("x", &j).is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! This is the only place the `xla` crate is touched. Python never runs at
+//! serving time: `make artifacts` lowers the Layer-2 JAX graphs (with the
+//! Layer-1 Pallas kernels inlined) to HLO *text*, and this module compiles
+//! them once via `PjRtClient` and caches the loaded executables.
+//!
+//! HLO text — not serialized `HloModuleProto` — is the interchange format:
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see DESIGN.md and the aot.py docstring).
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+pub use artifacts::{default_artifacts_dir, EntrySpec, ServeShapes, SERVE};
+
+/// A loaded artifact registry + PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    entries: HashMap<String, EntrySpec>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (parse manifest.json; compile lazily on first use).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        if manifest.get(&["format"]).and_then(|v| v.as_str()) != Some("hlo-text") {
+            bail!("unsupported artifact format (want hlo-text)");
+        }
+        let mut entries = HashMap::new();
+        let obj = manifest
+            .get(&["entries"])
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        for (name, e) in obj {
+            entries.insert(name.clone(), EntrySpec::from_json(name, e)?);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), entries, executables: HashMap::new() })
+    }
+
+    /// Entry names available in the registry.
+    pub fn entry_names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntrySpec> {
+        self.entries.get(name)
+    }
+
+    /// Compile (once) and return the executable for `name`.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let spec = self
+                .entries
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact entry '{name}'"))?;
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling '{name}': {e}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute an entry; inputs are validated against the manifest arity.
+    /// All entries were lowered with return_tuple=True, so the result is a
+    /// tuple literal flattened into a Vec. Accepts owned literals or
+    /// references (avoid cloning multi-MB buffers on the hot path).
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &mut self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let n_inputs = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact entry '{name}'"))?
+            .input_shapes
+            .len();
+        if inputs.len() != n_inputs {
+            bail!("'{name}' expects {n_inputs} inputs, got {}", inputs.len());
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<L>(inputs)
+            .map_err(|e| anyhow!("executing '{name}': {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching '{name}' result: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling '{name}': {e}"))
+    }
+
+    /// f32 literal of the given shape from a flat row-major slice.
+    pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e}"))
+    }
+
+    pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))
+    }
+
+    pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+        lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_entries_loaded() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::open(&default_artifacts_dir()).unwrap();
+        for name in ["reduced_score", "full_score", "two_stage", "breakeven_sweep", "model"] {
+            assert!(rt.entry(name).is_some(), "missing entry {name}");
+        }
+        let spec = rt.entry("reduced_score").unwrap();
+        assert_eq!(spec.input_shapes[0], vec![SERVE.batch, SERVE.reduced_dim]);
+        assert_eq!(spec.input_shapes[1], vec![SERVE.shard, SERVE.reduced_dim]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Runtime::literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(Runtime::to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(Runtime::literal_f32(&[1.0], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn breakeven_sweep_matches_rust_model() {
+        // The XLA-lowered Eq. 1 agrees with the native Rust implementation
+        // — an end-to-end cross-check of the analytical framework through
+        // an independent lowering path (jax -> HLO -> PJRT).
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::open(&default_artifacts_dir()).unwrap();
+        let g = SERVE.sweep_grid;
+        let fill = |v: f64| Runtime::literal_f32(&vec![v as f32; g], &[g]).unwrap();
+        let out = rt
+            .execute(
+                "breakeven_sweep",
+                &[
+                    fill(57.4e6), // iops_ssd
+                    fill(102.0),  // cost_ssd
+                    fill(4.0),    // cost_core
+                    fill(1e6),    // iops_core
+                    fill(1.0),                  // cost_dram_die
+                    fill(3e9),                  // bw_dram_die
+                    fill((3u64 << 30) as f64),  // cap_dram_die (3 GiB, as in Table III preset)
+                    fill(512.0),  // blk_bytes
+                ],
+            )
+            .unwrap();
+        let tau = Runtime::to_vec_f32(&out[0]).unwrap();
+        let p = crate::config::PlatformConfig::preset(crate::config::PlatformKind::CpuDdr);
+        let want = crate::model::economics::break_even_with_iops(&p, 102.0, 57.4e6, 512).total;
+        for &t in &tau {
+            assert!(
+                ((t as f64) - want).abs() / want < 1e-3,
+                "XLA {t} vs rust {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn two_stage_executes_with_manifest_shapes() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::open(&default_artifacts_dir()).unwrap();
+        let spec = rt.entry("two_stage").unwrap().clone();
+        let inputs: Vec<xla::Literal> = spec
+            .input_shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                let data: Vec<f32> = (0..n).map(|i| ((i % 17) as f32) * 0.1).collect();
+                Runtime::literal_f32(&data, s).unwrap()
+            })
+            .collect();
+        let out = rt.execute("two_stage", &inputs).unwrap();
+        assert_eq!(out.len(), 2, "scores + indices");
+        let scores = Runtime::to_vec_f32(&out[0]).unwrap();
+        let idx = Runtime::to_vec_i32(&out[1]).unwrap();
+        assert_eq!(scores.len(), idx.len());
+        assert!(scores.iter().all(|s| s.is_finite()));
+    }
+}

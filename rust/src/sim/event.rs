@@ -1,0 +1,131 @@
+//! Discrete-event core: a time-ordered event queue with stable FIFO
+//! ordering for simultaneous events.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Simulation time in nanoseconds.
+pub type Ns = u64;
+
+/// Priority queue of (time, seq, event) with deterministic tie-breaking.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<(Ns, u64, EventSlot<E>)>>,
+    seq: u64,
+    now: Ns,
+}
+
+// Wrapper so E needs no Ord; ordering uses only (time, seq).
+struct EventSlot<E>(E);
+
+impl<E> PartialEq for EventSlot<E> {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl<E> Eq for EventSlot<E> {}
+impl<E> PartialOrd for EventSlot<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for EventSlot<E> {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0 }
+    }
+
+    /// Current simulation time (time of the last popped event).
+    #[inline]
+    pub fn now(&self) -> Ns {
+        self.now
+    }
+
+    /// Schedule `ev` at absolute time `at` (clamped to now).
+    #[inline]
+    pub fn at(&mut self, at: Ns, ev: E) {
+        let t = at.max(self.now);
+        self.heap.push(Reverse((t, self.seq, EventSlot(ev))));
+        self.seq += 1;
+    }
+
+    /// Schedule `ev` after `delay` from now.
+    #[inline]
+    pub fn after(&mut self, delay: Ns, ev: E) {
+        self.at(self.now + delay, ev);
+    }
+
+    /// Pop the next event, advancing the clock.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(Ns, E)> {
+        let Reverse((t, _, slot)) = self.heap.pop()?;
+        debug_assert!(t >= self.now, "time went backwards");
+        self.now = t;
+        Some((t, slot.0))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.at(30, "c");
+        q.at(10, "a");
+        q.at(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_for_ties() {
+        let mut q = EventQueue::new();
+        q.at(5, 1);
+        q.at(5, 2);
+        q.at(5, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn clock_advances_and_clamps() {
+        let mut q = EventQueue::new();
+        q.at(100, "x");
+        assert_eq!(q.pop().unwrap().0, 100);
+        assert_eq!(q.now(), 100);
+        // scheduling in the past clamps to now
+        q.at(50, "late");
+        assert_eq!(q.pop().unwrap().0, 100);
+    }
+
+    #[test]
+    fn after_is_relative() {
+        let mut q = EventQueue::new();
+        q.at(10, "a");
+        q.pop();
+        q.after(5, "b");
+        assert_eq!(q.pop(), Some((15, "b")));
+    }
+}

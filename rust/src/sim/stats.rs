@@ -1,0 +1,121 @@
+//! Simulation metrics: per-class latency, throughput, utilization, and
+//! write-amplification accounting.
+
+use crate::util::stats::LatencyHist;
+
+#[derive(Clone, Debug)]
+pub struct SimStats {
+    /// Completed host reads / writes.
+    pub reads_done: u64,
+    pub writes_done: u64,
+    /// Host-read latency (ns) distribution.
+    pub read_lat: LatencyHist,
+    /// Host-write (buffered-ack) latency (ns).
+    pub write_lat: LatencyHist,
+    /// Media page programs issued for host data vs GC relocation.
+    pub host_programs: u64,
+    pub gc_programs: u64,
+    /// Media sense operations (host reads vs GC reads).
+    pub host_senses: u64,
+    pub gc_senses: u64,
+    /// Block erases.
+    pub erases: u64,
+    /// Total busy ns accumulated across channels (for utilization).
+    pub channel_busy_ns: u64,
+    /// ECC escalations (BCH sector failure -> full-page LDPC decode).
+    pub ldpc_escalations: u64,
+    /// Host blocks written (for WA = media pages * slots / host blocks).
+    pub host_blocks_written: u64,
+    /// Wall-clock of the measured window (ns), set by the driver.
+    pub window_ns: u64,
+}
+
+impl SimStats {
+    pub fn new() -> Self {
+        SimStats {
+            reads_done: 0,
+            writes_done: 0,
+            read_lat: LatencyHist::for_latency_ns(),
+            write_lat: LatencyHist::for_latency_ns(),
+            host_programs: 0,
+            gc_programs: 0,
+            host_senses: 0,
+            gc_senses: 0,
+            erases: 0,
+            channel_busy_ns: 0,
+            ldpc_escalations: 0,
+            host_blocks_written: 0,
+            window_ns: 0,
+        }
+    }
+
+    pub fn iops(&self) -> f64 {
+        if self.window_ns == 0 {
+            return 0.0;
+        }
+        (self.reads_done + self.writes_done) as f64 * 1e9 / self.window_ns as f64
+    }
+
+    pub fn read_iops(&self) -> f64 {
+        if self.window_ns == 0 {
+            return 0.0;
+        }
+        self.reads_done as f64 * 1e9 / self.window_ns as f64
+    }
+
+    /// Measured write amplification: media programs (in host-block units)
+    /// over host blocks written.
+    pub fn write_amplification(&self, slots_per_page: u64) -> f64 {
+        if self.host_blocks_written == 0 {
+            return 1.0;
+        }
+        ((self.host_programs + self.gc_programs) * slots_per_page) as f64
+            / self.host_blocks_written as f64
+    }
+
+    /// Mean channel utilization over `n_ch` channels.
+    pub fn channel_utilization(&self, n_ch: u32) -> f64 {
+        if self.window_ns == 0 {
+            return 0.0;
+        }
+        self.channel_busy_ns as f64 / (self.window_ns as f64 * n_ch as f64)
+    }
+}
+
+impl Default for SimStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iops_math() {
+        let mut s = SimStats::new();
+        s.reads_done = 900;
+        s.writes_done = 100;
+        s.window_ns = 1_000_000; // 1ms
+        assert!((s.iops() - 1e6).abs() < 1e-6); // 1000 ops / 1ms = 1M IOPS
+        assert!((s.read_iops() - 0.9e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wa_accounting() {
+        let mut s = SimStats::new();
+        s.host_blocks_written = 800;
+        s.host_programs = 100; // 100 pages * 8 slots = 800 blocks
+        s.gc_programs = 50; // +400 blocks relocated
+        assert!((s.write_amplification(8) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization() {
+        let mut s = SimStats::new();
+        s.window_ns = 1000;
+        s.channel_busy_ns = 500 * 4;
+        assert!((s.channel_utilization(4) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,245 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generated `--help`. Each subcommand in `main.rs` declares an `ArgSpec`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptDef>,
+}
+
+#[derive(Clone, Debug)]
+struct OptDef {
+    key: &'static str,
+    value_name: Option<&'static str>, // None => boolean flag
+    default: Option<&'static str>,
+    help: &'static str,
+}
+
+#[derive(Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value} ({why})")]
+    InvalidValue { key: String, value: String, why: String },
+    #[error("help requested")]
+    Help,
+}
+
+impl ArgSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        ArgSpec { name, about, opts: Vec::new() }
+    }
+
+    pub fn flag(mut self, key: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptDef { key, value_name: None, default: None, help });
+        self
+    }
+
+    pub fn opt(
+        mut self,
+        key: &'static str,
+        value_name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptDef { key, value_name: Some(value_name), default, help });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\noptions:");
+        for o in &self.opts {
+            let lhs = match o.value_name {
+                Some(v) => format!("--{} <{}>", o.key, v),
+                None => format!("--{}", o.key),
+            };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {lhs:<28} {}{def}", o.help);
+        }
+        s
+    }
+
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut out = Parsed::default();
+        for o in &self.opts {
+            if let (Some(_), Some(d)) = (o.value_name, o.default) {
+                out.values.insert(o.key.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let def = self
+                    .opts
+                    .iter()
+                    .find(|o| o.key == key)
+                    .ok_or_else(|| CliError::UnknownOption(key.clone()))?;
+                if def.value_name.is_some() {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    out.values.insert(key, v);
+                } else {
+                    out.flags.insert(key, true);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Parsed {
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).copied().unwrap_or(false)
+    }
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+    pub fn f64(&self, key: &str) -> Result<Option<f64>, CliError> {
+        self.parse_with(key, |s| s.parse::<f64>().map_err(|e| e.to_string()))
+    }
+    pub fn u64(&self, key: &str) -> Result<Option<u64>, CliError> {
+        self.parse_with(key, |s| {
+            parse_scaled_u64(s).ok_or_else(|| "expected integer (K/M/G suffix ok)".into())
+        })
+    }
+    pub fn usize(&self, key: &str) -> Result<Option<usize>, CliError> {
+        Ok(self.u64(key)?.map(|v| v as usize))
+    }
+    fn parse_with<T>(
+        &self,
+        key: &str,
+        f: impl Fn(&str) -> Result<T, String>,
+    ) -> Result<Option<T>, CliError> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(s) => f(s).map(Some).map_err(|why| CliError::InvalidValue {
+                key: key.to_string(),
+                value: s.clone(),
+                why,
+            }),
+        }
+    }
+}
+
+/// Parse "4096", "64K", "50M", "2G" (binary for B-suffixed via caller).
+pub fn parse_scaled_u64(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1_000u64),
+        'm' | 'M' => (&s[..s.len() - 1], 1_000_000),
+        'g' | 'G' => (&s[..s.len() - 1], 1_000_000_000),
+        _ => (s, 1),
+    };
+    let base: f64 = num.parse().ok()?;
+    if base < 0.0 {
+        return None;
+    }
+    Some((base * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "a test command")
+            .flag("verbose", "be loud")
+            .opt("out", "DIR", Some("results"), "output dir")
+            .opt("iops", "N", None, "host iops")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse(&args(&[])).unwrap();
+        assert_eq!(p.str("out"), Some("results"));
+        assert!(!p.flag("verbose"));
+        assert_eq!(p.u64("iops").unwrap(), None);
+    }
+
+    #[test]
+    fn parses_forms() {
+        let p = spec()
+            .parse(&args(&["--verbose", "--out=/tmp/x", "--iops", "50M", "pos"]))
+            .unwrap();
+        assert!(p.flag("verbose"));
+        assert_eq!(p.str("out"), Some("/tmp/x"));
+        assert_eq!(p.u64("iops").unwrap(), Some(50_000_000));
+        assert_eq!(p.positional, vec!["pos".to_string()]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(
+            spec().parse(&args(&["--nope"])),
+            Err(CliError::UnknownOption(_))
+        ));
+        assert!(matches!(
+            spec().parse(&args(&["--iops"])),
+            Err(CliError::MissingValue(_))
+        ));
+        assert!(matches!(
+            spec().parse(&args(&["--help"])),
+            Err(CliError::Help)
+        ));
+        let p = spec().parse(&args(&["--iops", "abc"])).unwrap();
+        assert!(p.u64("iops").is_err());
+    }
+
+    #[test]
+    fn scaled_numbers() {
+        assert_eq!(parse_scaled_u64("4096"), Some(4096));
+        assert_eq!(parse_scaled_u64("1.5K"), Some(1500));
+        assert_eq!(parse_scaled_u64("400M"), Some(400_000_000));
+        assert_eq!(parse_scaled_u64("-3"), None);
+        assert_eq!(parse_scaled_u64("x"), None);
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = spec().usage();
+        assert!(u.contains("--out <DIR>"));
+        assert!(u.contains("default: results"));
+    }
+}

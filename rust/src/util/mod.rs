@@ -1,0 +1,44 @@
+//! Utility substrate: PRNG + distributions, statistics, JSON, ASCII
+//! tables/charts, CLI parsing, and a mini property-test harness.
+//!
+//! These exist because the offline build environment provides no `rand`,
+//! `serde`, `clap`, `criterion`, or `proptest`; see DESIGN.md §Substitutions.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Simple wall-clock timer for the bench harness.
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(std::time::Instant::now())
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ns(&self) -> f64 {
+        self.0.elapsed().as_nanos() as f64
+    }
+}
+
+/// Measure `f` with warmups + repeated timed runs; returns (mean_s, min_s).
+pub fn bench_time<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut total = 0.0;
+    let mut best = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        let dt = t.elapsed_s();
+        total += dt;
+        best = best.min(dt);
+    }
+    (total / iters.max(1) as f64, best)
+}

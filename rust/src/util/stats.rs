@@ -1,0 +1,288 @@
+//! Summary statistics: online accumulators, percentile estimation,
+//! histograms. Used by MQSim-Next latency reporting and the bench harness.
+
+/// Online mean/variance/min/max (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Accum {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Accum { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Accum) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n as f64;
+        self.mean = mean;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact percentile over a retained sample (sorts on query).
+/// For simulator-scale runs use [`LatencyHist`] instead.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples { xs: Vec::new(), sorted: true }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+    /// p in [0,1]; linear interpolation between order statistics.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&p));
+        self.ensure_sorted();
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let h = p * (self.xs.len() - 1) as f64;
+        let lo = h.floor() as usize;
+        let hi = h.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            self.xs[lo] + (h - lo as f64) * (self.xs[hi] - self.xs[lo])
+        }
+    }
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            f64::NAN
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+}
+
+/// Log-bucketed latency histogram: O(1) insert, ~1% relative error
+/// percentiles. Buckets are geometric with ratio 1.02 from `min_ns`.
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    min_v: f64,
+    log_ratio: f64,
+    counts: Vec<u64>,
+    total: u64,
+    accum: Accum,
+}
+
+impl LatencyHist {
+    /// Covers [min_v, max_v] with geometric buckets (ratio 1.02).
+    pub fn new(min_v: f64, max_v: f64) -> Self {
+        assert!(min_v > 0.0 && max_v > min_v);
+        let ratio: f64 = 1.02;
+        let log_ratio = ratio.ln();
+        let n = ((max_v / min_v).ln() / log_ratio).ceil() as usize + 2;
+        LatencyHist { min_v, log_ratio, counts: vec![0; n], total: 0, accum: Accum::new() }
+    }
+
+    /// Default window for nanosecond latencies: 100ns .. 100s.
+    pub fn for_latency_ns() -> Self {
+        Self::new(100.0, 100e9)
+    }
+
+    #[inline]
+    fn bucket(&self, x: f64) -> usize {
+        if x <= self.min_v {
+            return 0;
+        }
+        let b = ((x / self.min_v).ln() / self.log_ratio) as usize + 1;
+        b.min(self.counts.len() - 1)
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        let b = self.bucket(x);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.accum.push(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+    pub fn mean(&self) -> f64 {
+        self.accum.mean()
+    }
+    pub fn max(&self) -> f64 {
+        self.accum.max()
+    }
+
+    /// Upper edge of the bucket containing the p-quantile.
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&p));
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (p * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.min_v * ((i as f64) * self.log_ratio).exp();
+            }
+        }
+        self.accum.max()
+    }
+
+    pub fn merge(&mut self, other: &LatencyHist) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.accum.merge(&other.accum);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn accum_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut a = Accum::new();
+        for &x in &xs {
+            a.push(x);
+        }
+        assert_eq!(a.count(), 5);
+        assert!((a.mean() - 4.0).abs() < 1e-12);
+        assert!((a.min() - 1.0).abs() < 1e-12);
+        assert!((a.max() - 10.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((a.var() - var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accum_merge_equals_combined() {
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..1000).map(|_| r.f64() * 10.0).collect();
+        let mut whole = Accum::new();
+        let mut a = Accum::new();
+        let mut b = Accum::new();
+        for (i, &x) in xs.iter().enumerate() {
+            whole.push(x);
+            if i % 2 == 0 { a.push(x) } else { b.push(x) }
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.var() - whole.var()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn samples_percentiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(1.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(0.5) - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.99) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hist_percentile_within_bucket_error() {
+        let mut h = LatencyHist::for_latency_ns();
+        let mut r = Rng::new(3);
+        let mut s = Samples::new();
+        for _ in 0..100_000 {
+            let x = r.lognormal(10.0, 0.8); // ~22us median
+            h.push(x);
+            s.push(x);
+        }
+        for p in [0.5, 0.9, 0.99] {
+            let exact = s.percentile(p);
+            let approx = h.percentile(p);
+            assert!(
+                (approx - exact).abs() / exact < 0.03,
+                "p={p}: approx {approx} exact {exact}"
+            );
+        }
+        assert!((h.mean() - s.mean()).abs() / s.mean() < 1e-9);
+    }
+
+    #[test]
+    fn hist_merge() {
+        let mut a = LatencyHist::new(1.0, 1e6);
+        let mut b = LatencyHist::new(1.0, 1e6);
+        for i in 1..=500 {
+            a.push(i as f64);
+        }
+        for i in 501..=1000 {
+            b.push(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 1000);
+        let med = a.percentile(0.5);
+        assert!((med - 500.0).abs() / 500.0 < 0.03, "med {med}");
+    }
+}

@@ -1,0 +1,274 @@
+//! ASCII tables, bar charts, and CSV output for the figure harness.
+//!
+//! Every paper table/figure is emitted twice: a CSV under `results/` (for
+//! external plotting) and an ASCII rendering on stdout so `fivemin figures`
+//! and the benches are self-contained.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Column-aligned ASCII table.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let total: usize = w.iter().sum::<usize>() + 3 * ncol + 1;
+        let _ = writeln!(out, "{}", self.title);
+        let _ = writeln!(out, "{}", "=".repeat(total.min(120)));
+        let mut line = String::from("|");
+        for (i, h) in self.header.iter().enumerate() {
+            let _ = write!(line, " {:>width$} |", h, width = w[i]);
+        }
+        let _ = writeln!(out, "{line}");
+        let _ = writeln!(out, "{}", "-".repeat(total.min(120)));
+        for r in &self.rows {
+            let mut line = String::from("|");
+            for (i, c) in r.iter().enumerate() {
+                let _ = write!(line, " {:>width$} |", c, width = w[i]);
+            }
+            let _ = writeln!(out, "{line}");
+        }
+        out
+    }
+
+    /// Write `title` + header + rows as CSV.
+    pub fn write_csv(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "# {}", self.title);
+        let _ = writeln!(s, "{}", csv_row(&self.header));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", csv_row(r));
+        }
+        fs::write(path, s)
+    }
+}
+
+fn csv_row(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Horizontal ASCII bar chart (one bar per labelled value).
+pub fn bar_chart(title: &str, items: &[(String, f64)], unit: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let maxv = items.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max);
+    let maxl = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    const WIDTH: usize = 50;
+    for (label, v) in items {
+        let n = if maxv > 0.0 {
+            ((v / maxv) * WIDTH as f64).round() as usize
+        } else {
+            0
+        };
+        let _ = writeln!(
+            out,
+            "  {:<width$} |{:<bw$}| {:.4} {}",
+            label,
+            "#".repeat(n),
+            v,
+            unit,
+            width = maxl,
+            bw = WIDTH
+        );
+    }
+    out
+}
+
+/// Stacked bar chart: each item carries per-component values; components
+/// share a legend (used for the Fig 4 break-even decompositions).
+pub fn stacked_bar_chart(
+    title: &str,
+    components: &[&str],
+    items: &[(String, Vec<f64>)],
+    unit: &str,
+) -> String {
+    const GLYPHS: [char; 6] = ['#', '=', '.', '%', '+', '*'];
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let legend = components
+        .iter()
+        .enumerate()
+        .map(|(i, c)| format!("{}={}", GLYPHS[i % GLYPHS.len()], c))
+        .collect::<Vec<_>>()
+        .join("  ");
+    let _ = writeln!(out, "  legend: {legend}");
+    let maxv = items
+        .iter()
+        .map(|(_, vs)| vs.iter().sum::<f64>())
+        .fold(f64::MIN, f64::max);
+    let maxl = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    const WIDTH: usize = 50;
+    for (label, vs) in items {
+        let total: f64 = vs.iter().sum();
+        let mut bar = String::new();
+        for (i, v) in vs.iter().enumerate() {
+            let n = if maxv > 0.0 {
+                ((v / maxv) * WIDTH as f64).round() as usize
+            } else {
+                0
+            };
+            bar.push_str(&GLYPHS[i % GLYPHS.len()].to_string().repeat(n));
+        }
+        let _ = writeln!(
+            out,
+            "  {:<width$} |{:<bw$}| {:.3} {}",
+            label,
+            bar,
+            total,
+            unit,
+            width = maxl,
+            bw = WIDTH
+        );
+    }
+    out
+}
+
+/// Human formatting helpers used across the figure harness.
+pub fn fmt_si(v: f64) -> String {
+    let av = v.abs();
+    if av >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if av >= 1e6 {
+        format!("{:.1}M", v / 1e6)
+    } else if av >= 1e3 {
+        format!("{:.1}K", v / 1e3)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+pub fn fmt_bytes(v: f64) -> String {
+    let av = v.abs();
+    if av >= 1024.0 * 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2}TB", v / (1024f64.powi(4)))
+    } else if av >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.1}GB", v / (1024f64.powi(3)))
+    } else if av >= 1024.0 * 1024.0 {
+        format!("{:.1}MB", v / (1024f64.powi(2)))
+    } else if av >= 1024.0 {
+        format!("{:.1}KB", v / 1024.0)
+    } else {
+        format!("{v:.0}B")
+    }
+}
+
+pub fn fmt_secs(v: f64) -> String {
+    if v >= 60.0 {
+        format!("{:.1}min", v / 60.0)
+    } else if v >= 1.0 {
+        format!("{v:.1}s")
+    } else if v >= 1e-3 {
+        format!("{:.1}ms", v * 1e3)
+    } else if v >= 1e-6 {
+        format!("{:.1}us", v * 1e6)
+    } else {
+        format!("{:.0}ns", v * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "22".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("T\n"));
+        assert!(s.contains("| 333 |"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        assert_eq!(csv_row(&["a,b".to_string()]), "\"a,b\"");
+        assert_eq!(csv_row(&["x\"y".to_string()]), "\"x\"\"y\"");
+    }
+
+    #[test]
+    fn csv_written_to_disk() {
+        let mut t = Table::new("T", &["x", "y"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let p = std::env::temp_dir().join("fivemin_test_table.csv");
+        t.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("x,y"));
+        assert!(s.contains("1,2"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn charts_do_not_panic() {
+        let s = bar_chart("b", &[("a".into(), 1.0), ("b".into(), 2.0)], "s");
+        assert!(s.contains('#'));
+        let s = stacked_bar_chart(
+            "sb",
+            &["host", "dram", "ssd"],
+            &[("a".into(), vec![1.0, 2.0, 3.0])],
+            "s",
+        );
+        assert!(s.contains("legend"));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_si(57.4e6), "57.4M");
+        assert_eq!(fmt_secs(35.0), "35.0s");
+        assert_eq!(fmt_secs(5e-6), "5.0us");
+        assert_eq!(fmt_bytes(512.0), "512B");
+        assert_eq!(fmt_bytes(3.0 * 1024f64.powi(3)), "3.0GB");
+    }
+}

@@ -1,0 +1,269 @@
+//! Log-normal access-interval workload profile (Sec V-B).
+//!
+//! Block i has mean reuse interval τ_i; the paper models {τ_i} as
+//! log-normal. With ln τ ~ N(μ, σ²) and N_blk blocks of l_blk bytes:
+//!
+//!   |S(T)|   = N_blk · Φ((ln T - μ)/σ)
+//!   Σ 1/τ    = N_blk · exp(-μ + σ²/2)
+//!   Ψ_c(T)   = l_blk · N_blk · exp(-μ + σ²/2) · Φ((ln T - μ + σ²)/σ)
+//!   Ψ_d(T)   = total throughput − Ψ_c(T)
+//!
+//! (the Ψ_c identity is the log-normal partial expectation
+//! E[τ⁻¹·1{τ≤T}] = exp(-μ+σ²/2)·Φ((ln T - (μ - σ²))/σ)).
+//!
+//! Closed forms make the Sec V threshold solvers exact; `sample()` draws a
+//! discrete profile for property-based cross-validation and for driving
+//! the case-study engines.
+
+use crate::util::rng::{phi, phi_inv, Rng};
+
+#[derive(Clone, Copy, Debug)]
+pub struct LognormalProfile {
+    /// μ of ln τ (τ in seconds).
+    pub mu: f64,
+    /// σ of ln τ. Paper locality regimes: strong σ=1.2, weak σ=0.4.
+    pub sigma: f64,
+    /// Number of blocks in the working set.
+    pub n_blk: f64,
+    /// Block size (bytes).
+    pub l_blk: u64,
+}
+
+impl LognormalProfile {
+    pub fn new(mu: f64, sigma: f64, n_blk: f64, l_blk: u64) -> Self {
+        assert!(sigma > 0.0 && n_blk > 0.0 && l_blk > 0);
+        LognormalProfile { mu, sigma, n_blk, l_blk }
+    }
+
+    /// Calibrate μ so the aggregate throughput l_blk·Σ1/τ equals
+    /// `total_bps` (the paper fixes 200GB/s against ~1e9 blocks).
+    pub fn calibrated(total_bps: f64, sigma: f64, n_blk: f64, l_blk: u64) -> Self {
+        assert!(total_bps > 0.0);
+        // total = l·N·exp(-μ+σ²/2)  =>  μ = σ²/2 − ln(total/(l·N))
+        let mu = sigma * sigma / 2.0 - (total_bps / (l_blk as f64 * n_blk)).ln();
+        Self::new(mu, sigma, n_blk, l_blk)
+    }
+
+    /// Fraction of blocks with τ_i ≤ T.
+    pub fn frac_blocks_le(&self, t: f64) -> f64 {
+        if t <= 0.0 {
+            return 0.0;
+        }
+        phi((t.ln() - self.mu) / self.sigma)
+    }
+
+    /// |S(T)| in blocks.
+    pub fn blocks_le(&self, t: f64) -> f64 {
+        self.n_blk * self.frac_blocks_le(t)
+    }
+
+    /// Bytes of the cached set S(T).
+    pub fn cached_bytes(&self, t: f64) -> f64 {
+        self.blocks_le(t) * self.l_blk as f64
+    }
+
+    /// Aggregate throughput l_blk·Σ1/τ (B/s) — independent of T.
+    pub fn total_bps(&self) -> f64 {
+        self.l_blk as f64
+            * self.n_blk
+            * (-self.mu + self.sigma * self.sigma / 2.0).exp()
+    }
+
+    /// Ψ_c(T): bytes/s served from DRAM when caching S(T).
+    pub fn psi_cached(&self, t: f64) -> f64 {
+        if t <= 0.0 {
+            return 0.0;
+        }
+        let z = (t.ln() - self.mu + self.sigma * self.sigma) / self.sigma;
+        self.total_bps() * phi(z)
+    }
+
+    /// Ψ_d(T): bytes/s served from SSD.
+    pub fn psi_uncached(&self, t: f64) -> f64 {
+        (self.total_bps() - self.psi_cached(t)).max(0.0)
+    }
+
+    /// Host-DRAM bandwidth demand (Eq. 4): Ψ_c + 2Ψ_d (zero-copy miss =
+    /// one SSD→DRAM DMA + one processor read).
+    pub fn dram_bw_demand(&self, t: f64) -> f64 {
+        self.psi_cached(t) + 2.0 * self.psi_uncached(t)
+    }
+
+    /// Inverse of `psi_uncached`: smallest T with Ψ_d(T) ≤ target.
+    /// Returns None when even T→∞ cannot satisfy a negative target.
+    pub fn t_for_uncached(&self, target_bps: f64) -> Option<f64> {
+        let total = self.total_bps();
+        if target_bps >= total {
+            return Some(0.0); // satisfied with no caching at all
+        }
+        if target_bps < 0.0 {
+            return None;
+        }
+        // Φ(z) = Ψc/total = 1 − target/total
+        let frac = 1.0 - target_bps / total;
+        if frac >= 1.0 {
+            return None; // needs the entire tail cached: T = ∞
+        }
+        let z = phi_inv(frac);
+        Some((self.mu - self.sigma * self.sigma + self.sigma * z).exp())
+    }
+
+    /// Interval T at which exactly `bytes` of blocks are cached
+    /// (the K-th smallest τ, Eq. 7).
+    pub fn t_for_capacity(&self, bytes: f64) -> f64 {
+        let frac = (bytes / (self.n_blk * self.l_blk as f64)).clamp(0.0, 1.0);
+        if frac <= 0.0 {
+            return 0.0;
+        }
+        if frac >= 1.0 {
+            return f64::INFINITY;
+        }
+        (self.mu + self.sigma * phi_inv(frac)).exp()
+    }
+
+    /// Draw a discrete profile of `n` per-block intervals (for the
+    /// case-study engines and property cross-checks).
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..n).map(|_| rng.lognormal(self.mu, self.sigma)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{close, Prop};
+
+    fn paper_profile(l_blk: u64) -> LognormalProfile {
+        // Fig 6 workload: 1e9 blocks, 200GB/s aggregate.
+        LognormalProfile::calibrated(200e9, 1.2, 1e9, l_blk)
+    }
+
+    #[test]
+    fn calibration_hits_total() {
+        for &l in &crate::config::BLOCK_SIZES {
+            let p = paper_profile(l);
+            assert!(
+                (p.total_bps() - 200e9).abs() / 200e9 < 1e-12,
+                "l={l}: {}",
+                p.total_bps()
+            );
+        }
+    }
+
+    #[test]
+    fn psi_monotone_and_complementary() {
+        let p = paper_profile(512);
+        let mut prev_c = 0.0;
+        for &t in &[1e-3, 0.1, 1.0, 10.0, 100.0, 1e4] {
+            let c = p.psi_cached(t);
+            let d = p.psi_uncached(t);
+            assert!(c >= prev_c, "Ψc must grow with T");
+            assert!((c + d - p.total_bps()).abs() / p.total_bps() < 1e-9);
+            prev_c = c;
+        }
+    }
+
+    #[test]
+    fn dram_demand_decreases_with_t() {
+        let p = paper_profile(512);
+        let mut prev = f64::INFINITY;
+        for &t in &[0.01, 0.1, 1.0, 10.0, 100.0] {
+            let b = p.dram_bw_demand(t);
+            assert!(b <= prev);
+            prev = b;
+        }
+        // limits: T→0 ⇒ 2·total; T→∞ ⇒ total
+        assert!((p.dram_bw_demand(1e-12) - 2.0 * p.total_bps()).abs() / p.total_bps() < 1e-3);
+        assert!((p.dram_bw_demand(1e12) - p.total_bps()).abs() / p.total_bps() < 1e-3);
+    }
+
+    #[test]
+    fn t_for_uncached_inverts() {
+        let p = paper_profile(1024);
+        for frac in [0.9, 0.5, 0.1, 0.01] {
+            let target = frac * p.total_bps();
+            let t = p.t_for_uncached(target).unwrap();
+            let back = p.psi_uncached(t);
+            // tolerance bounded by the erf approximation (|err|<1.5e-7 in Φ,
+            // amplified by tail inversion)
+            assert!(
+                (back - target).abs() / target < 1e-4,
+                "frac={frac}: Ψd({t})={back} target={target}"
+            );
+        }
+        assert_eq!(p.t_for_uncached(p.total_bps() * 1.1), Some(0.0));
+    }
+
+    #[test]
+    fn t_for_capacity_inverts() {
+        let p = paper_profile(512);
+        let total_bytes = p.n_blk * 512.0;
+        for frac in [0.001, 0.1, 0.5, 0.9] {
+            let t = p.t_for_capacity(frac * total_bytes);
+            let back = p.cached_bytes(t) / total_bytes;
+            assert!((back - frac).abs() < 1e-6, "frac={frac} back={back}");
+        }
+        assert_eq!(p.t_for_capacity(0.0), 0.0);
+        assert!(p.t_for_capacity(2.0 * total_bytes).is_infinite());
+    }
+
+    #[test]
+    fn sampled_profile_matches_closed_form() {
+        // Empirical Ψ_c / |S(T)| from 200k samples within a few percent of
+        // the analytic values (cross-validation of the closed forms).
+        let p = LognormalProfile::calibrated(200e9, 1.2, 1e9, 512);
+        let mut rng = crate::util::rng::Rng::new(42);
+        let n = 200_000;
+        let taus = p.sample(n, &mut rng);
+        let t_probe = p.t_for_capacity(0.3 * p.n_blk * 512.0); // 30% point
+        let frac_le = taus.iter().filter(|&&x| x <= t_probe).count() as f64 / n as f64;
+        assert!(
+            (frac_le - p.frac_blocks_le(t_probe)).abs() < 0.01,
+            "|S(T)| sampled {frac_le} vs {}",
+            p.frac_blocks_le(t_probe)
+        );
+        let rate_le: f64 = taus
+            .iter()
+            .filter(|&&x| x <= t_probe)
+            .map(|&x| 1.0 / x)
+            .sum::<f64>()
+            / n as f64;
+        let psi_sampled = rate_le * p.n_blk * 512.0;
+        let psi_analytic = p.psi_cached(t_probe);
+        assert!(
+            (psi_sampled - psi_analytic).abs() / psi_analytic < 0.05,
+            "Ψc sampled {psi_sampled:.3e} vs analytic {psi_analytic:.3e}"
+        );
+    }
+
+    #[test]
+    fn prop_roundtrip_capacity_quantile() {
+        Prop::new("capacity-quantile-roundtrip").cases(48).run(
+            |r| {
+                let sigma = 0.2 + r.f64() * 2.0;
+                let frac = 0.01 + r.f64() * 0.98;
+                (sigma, frac)
+            },
+            |&(sigma, frac)| {
+                let p = LognormalProfile::calibrated(100e9, sigma, 1e8, 4096);
+                let t = p.t_for_capacity(frac * p.n_blk * 4096.0);
+                close(p.frac_blocks_le(t), frac, 1e-6, "roundtrip")
+            },
+        );
+    }
+
+    #[test]
+    fn stronger_locality_concentrates_rate() {
+        // At equal total throughput, larger σ (stronger skew) serves more
+        // of the byte-rate from a small cached fraction.
+        let weak = LognormalProfile::calibrated(200e9, 0.4, 1e9, 512);
+        let strong = LognormalProfile::calibrated(200e9, 1.2, 1e9, 512);
+        let cache = 0.05 * 1e9 * 512.0; // cache 5% of blocks
+        let hit_w = weak.psi_cached(weak.t_for_capacity(cache)) / weak.total_bps();
+        let hit_s = strong.psi_cached(strong.t_for_capacity(cache)) / strong.total_bps();
+        assert!(
+            hit_s > hit_w,
+            "strong locality hit {hit_s:.3} !> weak {hit_w:.3}"
+        );
+    }
+}

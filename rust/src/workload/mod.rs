@@ -1,0 +1,7 @@
+//! Workload models and trace generators: log-normal access-interval
+//! profiles (Sec V), Poisson arrivals, and the case-study mixes (Sec VII).
+
+pub mod lognormal;
+pub mod trace;
+
+pub use lognormal::LognormalProfile;

@@ -1,0 +1,180 @@
+//! I/O trace generation: open-loop Poisson and closed-loop queue-depth
+//! request streams over configurable address/popularity distributions.
+//! Drives MQSim-Next (Fig 7) and the case-study engines (Figs 8, 10).
+
+use crate::util::rng::{Rng, Zipf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Read,
+    Write,
+}
+
+/// One host I/O request.
+#[derive(Clone, Copy, Debug)]
+pub struct IoReq {
+    /// Issue time (ns) for open-loop traces; 0 for closed-loop.
+    pub at_ns: u64,
+    pub kind: OpKind,
+    /// Logical block address in units of the trace's block size.
+    pub lba: u64,
+    /// Request size (bytes).
+    pub bytes: u32,
+}
+
+/// Address-popularity models.
+#[derive(Clone, Debug)]
+pub enum AddressDist {
+    /// Uniform over [0, n_blocks).
+    Uniform,
+    /// Zipf-skewed popularity with shuffled rank→address mapping.
+    Zipf { theta: f64 },
+}
+
+/// Trace generator configuration.
+#[derive(Clone, Debug)]
+pub struct TraceCfg {
+    pub n_blocks: u64,
+    pub block_bytes: u32,
+    /// Fraction of reads in [0,1].
+    pub read_frac: f64,
+    pub addr: AddressDist,
+    pub seed: u64,
+}
+
+pub struct TraceGen {
+    cfg: TraceCfg,
+    rng: Rng,
+    zipf: Option<Zipf>,
+    perm_mul: u64,
+}
+
+impl TraceGen {
+    pub fn new(cfg: TraceCfg) -> Self {
+        assert!(cfg.n_blocks > 0);
+        assert!((0.0..=1.0).contains(&cfg.read_frac));
+        let rng = Rng::new(cfg.seed);
+        let zipf = match cfg.addr {
+            AddressDist::Zipf { theta } => {
+                // Rank table capped for memory; ranks beyond the table are
+                // folded uniformly (the tail is near-uniform anyway).
+                let n = cfg.n_blocks.min(1_000_000) as usize;
+                Some(Zipf::new(n, theta))
+            }
+            AddressDist::Uniform => None,
+        };
+        // odd multiplier => bijective rank->lba scatter within u64 space
+        let perm_mul = 0x9E37_79B9_7F4A_7C15 | 1;
+        TraceGen { cfg, rng, zipf, perm_mul }
+    }
+
+    fn next_lba(&mut self) -> u64 {
+        match (&self.cfg.addr, &self.zipf) {
+            (AddressDist::Uniform, _) => self.rng.below(self.cfg.n_blocks),
+            (AddressDist::Zipf { .. }, Some(z)) => {
+                let rank = z.sample(&mut self.rng) as u64;
+                // scatter ranks across the address space deterministically
+                rank.wrapping_mul(self.perm_mul) % self.cfg.n_blocks
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn next_req(&mut self, at_ns: u64) -> IoReq {
+        let kind = if self.rng.bool(self.cfg.read_frac) {
+            OpKind::Read
+        } else {
+            OpKind::Write
+        };
+        IoReq { at_ns, kind, lba: self.next_lba(), bytes: self.cfg.block_bytes }
+    }
+
+    /// Closed-loop batch: `n` requests with no timestamps (the driver keeps
+    /// a fixed queue depth).
+    pub fn closed_loop(&mut self, n: usize) -> Vec<IoReq> {
+        (0..n).map(|_| self.next_req(0)).collect()
+    }
+
+    /// Open-loop Poisson arrivals at `rate_iops` for `duration_ns`.
+    pub fn poisson(&mut self, rate_iops: f64, duration_ns: u64) -> Vec<IoReq> {
+        assert!(rate_iops > 0.0);
+        let mut out = Vec::new();
+        let mut t = 0.0f64;
+        let rate_per_ns = rate_iops / 1e9;
+        loop {
+            t += self.rng.exponential(rate_per_ns);
+            if t >= duration_ns as f64 {
+                break;
+            }
+            let at = t as u64;
+            out.push(self.next_req(at));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(read_frac: f64, addr: AddressDist) -> TraceCfg {
+        TraceCfg { n_blocks: 1 << 20, block_bytes: 512, read_frac, addr, seed: 7 }
+    }
+
+    #[test]
+    fn closed_loop_counts_and_mix() {
+        let mut g = TraceGen::new(cfg(0.9, AddressDist::Uniform));
+        let reqs = g.closed_loop(100_000);
+        assert_eq!(reqs.len(), 100_000);
+        let reads = reqs.iter().filter(|r| r.kind == OpKind::Read).count();
+        let frac = reads as f64 / reqs.len() as f64;
+        assert!((frac - 0.9).abs() < 0.01, "read frac {frac}");
+        assert!(reqs.iter().all(|r| r.lba < 1 << 20));
+    }
+
+    #[test]
+    fn poisson_rate() {
+        let mut g = TraceGen::new(cfg(1.0, AddressDist::Uniform));
+        let dur = 100_000_000; // 100ms
+        let reqs = g.poisson(1_000_000.0, dur); // 1M IOPS
+        let expected = 1_000_000.0 * dur as f64 / 1e9;
+        assert!(
+            (reqs.len() as f64 - expected).abs() < expected * 0.05,
+            "{} vs {expected}",
+            reqs.len()
+        );
+        // timestamps sorted
+        assert!(reqs.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+    }
+
+    #[test]
+    fn zipf_concentrates_accesses() {
+        let mut g = TraceGen::new(cfg(1.0, AddressDist::Zipf { theta: 1.1 }));
+        let reqs = g.closed_loop(50_000);
+        use std::collections::HashMap;
+        let mut counts: HashMap<u64, u32> = HashMap::new();
+        for r in &reqs {
+            *counts.entry(r.lba).or_default() += 1;
+        }
+        let mut freqs: Vec<u32> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: u32 = freqs.iter().take(10).sum();
+        assert!(
+            top10 as f64 / reqs.len() as f64 > 0.2,
+            "top-10 addresses carry {}%",
+            100.0 * top10 as f64 / reqs.len() as f64
+        );
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = TraceGen::new(cfg(0.5, AddressDist::Uniform));
+        let mut b = TraceGen::new(cfg(0.5, AddressDist::Uniform));
+        let ra = a.closed_loop(100);
+        let rb = b.closed_loop(100);
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.lba, y.lba);
+            assert_eq!(x.kind, y.kind);
+        }
+    }
+}

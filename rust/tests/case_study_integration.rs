@@ -1,0 +1,129 @@
+//! Case-study integration: functional engines driven by the workload
+//! generators, cross-checked against the analytical throughput models.
+
+use fivemin::ann::{ann_throughput, AnnScenario, ProgressiveIndex};
+use fivemin::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
+use fivemin::kvstore::{kv_throughput, CuckooParams, KvEngine, KvScenario, MemStore};
+use fivemin::util::rng::{Rng, Zipf};
+
+#[test]
+fn kv_engine_cost_matches_fig8_assumptions() {
+    // The Fig 8 model charges 1.5 reads per uncached GET and an amortized
+    // RMW per PUT; the functional engine must not exceed those budgets.
+    let n_items = 100_000u64;
+    let params = CuckooParams::for_capacity(n_items, 0.7, 512, 64);
+    let store = MemStore::new(params.n_buckets, params.slots_per_bucket);
+    let mut engine = KvEngine::new(params, store, 0 /* no cache */, 256);
+    for k in 1..=n_items {
+        engine.put(k, k);
+    }
+    engine.flush();
+    let r0 = engine.stats.ssd_reads;
+    let mut rng = Rng::new(1);
+    let gets = 50_000;
+    for _ in 0..gets {
+        engine.get(1 + rng.below(n_items));
+    }
+    let reads_per_get = (engine.stats.ssd_reads - r0) as f64 / gets as f64;
+    assert!(
+        reads_per_get <= 1.55,
+        "engine reads/GET {reads_per_get} exceeds the model's 1.5 budget"
+    );
+}
+
+#[test]
+fn kv_no_data_loss_under_mixed_churn() {
+    let n_items = 30_000u64;
+    let params = CuckooParams::for_capacity(n_items, 0.7, 512, 64);
+    let store = MemStore::new(params.n_buckets, params.slots_per_bucket);
+    let mut engine = KvEngine::new(params, store, 2_000, 128);
+    let mut model = std::collections::HashMap::new();
+    let zipf = Zipf::new(n_items as usize, 1.1);
+    let mut rng = Rng::new(9);
+    for i in 0..120_000u64 {
+        let key = 1 + zipf.sample(&mut rng) as u64;
+        if rng.bool(0.5) {
+            engine.put(key, i);
+            model.insert(key, i);
+        } else if let Some(&want) = model.get(&key) {
+            assert_eq!(engine.get(key), Some(want), "key {key} wrong value");
+        }
+    }
+    engine.flush();
+    engine.cache = fivemin::kvstore::cache::KvCache::new(0);
+    for (&k, &v) in model.iter().take(5_000) {
+        assert_eq!(engine.get(k), Some(v), "post-flush key {k}");
+    }
+    assert_eq!(engine.stats.failed_inserts, 0);
+}
+
+#[test]
+fn ann_engine_promotion_economics_match_fig10_direction() {
+    // Functional engine: more promotion => more full reads => better
+    // recall; the Fig 10 model: more promotion => lower QPS. Together they
+    // are the paper's quality/throughput trade-off.
+    let mut rng = Rng::new(11);
+    let d_full = 64;
+    let data: Vec<Vec<f32>> = (0..3000)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..d_full)
+                .map(|i| rng.gaussian() as f32 / (1.0 + i as f32 * 0.1))
+                .collect();
+            let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            v.iter_mut().for_each(|x| *x /= n);
+            v
+        })
+        .collect();
+    let idx = ProgressiveIndex::build(data.clone(), 12, 8, 64, 12);
+    let brute = |q: &[f32]| -> u32 {
+        let mut best = (f32::MIN, 0u32);
+        for (i, v) in data.iter().enumerate() {
+            let s: f32 = q.iter().zip(v).map(|(a, b)| a * b).sum();
+            if s > best.0 {
+                best = (s, i as u32);
+            }
+        }
+        best.1
+    };
+    let mut hits = [0u32; 2];
+    let trials = 60;
+    for _ in 0..trials {
+        let mut q = data[rng.below(3000) as usize].clone();
+        q.iter_mut().for_each(|x| *x += 0.05 * rng.gaussian() as f32);
+        let truth = brute(&q);
+        for (i, promote) in [4usize, 48].iter().enumerate() {
+            let (res, cost) = idx.search(&q, 1, 96, *promote);
+            assert_eq!(cost.full_reads as usize, *promote);
+            if res[0].1 == truth {
+                hits[i] += 1;
+            }
+        }
+    }
+    assert!(hits[1] >= hits[0], "more promotion must not hurt recall");
+
+    // model side: heavier promotion costs QPS
+    let gpu = PlatformConfig::preset(PlatformKind::GpuGddr);
+    let sn = SsdConfig::storage_next(NandKind::Slc);
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    let light = ann_throughput(&AnnScenario::paper_default(2), &gpu, &sn, 128.0 * GB);
+    let heavy = ann_throughput(&AnnScenario::paper_default(8), &gpu, &sn, 128.0 * GB);
+    assert!(light.qps > heavy.qps);
+}
+
+#[test]
+fn fig8_fig10_tables_consistent_with_models() {
+    // The figure harness reports exactly what the models compute.
+    let gpu = PlatformConfig::preset(PlatformKind::GpuGddr);
+    let sn = SsdConfig::storage_next(NandKind::Slc);
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    let sc = KvScenario::paper_default(0.9, 1.2);
+    let direct = kv_throughput(&sc, &gpu, &sn, 256.0 * GB).achievable / 1e6;
+    let table = fivemin::figures::fig_casestudies::fig8().render();
+    let line = table
+        .lines()
+        .find(|l| l.contains("90:10") && l.contains("strong") && l.contains("GPU") && l.contains("SN"))
+        .unwrap();
+    let cells: Vec<&str> = line.split('|').map(|c| c.trim()).collect();
+    let reported: f64 = cells[8].parse().unwrap(); // 256GB column
+    assert!((reported - direct).abs() < 0.1, "table {reported} vs model {direct}");
+}

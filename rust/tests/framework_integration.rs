@@ -1,0 +1,121 @@
+//! Cross-module integration: the analytical pipeline end to end
+//! (device model -> usable IOPS -> break-even -> viability -> advice),
+//! plus sampled-vs-closed-form workload cross-validation.
+
+use fivemin::config::{IoMix, NandKind, PlatformConfig, PlatformKind, SsdConfig};
+use fivemin::model::{economics, platform, queueing, upgrade};
+use fivemin::util::rng::Rng;
+use fivemin::workload::LognormalProfile;
+
+#[test]
+fn pipeline_cpu_vs_gpu_headline() {
+    // The full RQ1->RQ3 pipeline produces the paper's ordering everywhere.
+    let mix = IoMix::paper_default();
+    let ssd = SsdConfig::storage_next(NandKind::Slc);
+    let cpu = PlatformConfig::preset(PlatformKind::CpuDdr);
+    let gpu = PlatformConfig::preset(PlatformKind::GpuGddr);
+    for &l in &fivemin::config::BLOCK_SIZES {
+        let u_cpu = queueing::usable_iops(&ssd, &cpu, l, mix, queueing::LatencyTargets::none());
+        let u_gpu = queueing::usable_iops(&ssd, &gpu, l, mix, queueing::LatencyTargets::none());
+        assert!(u_gpu.usable >= u_cpu.usable);
+        let cost = fivemin::model::ssd::ssd_cost(&ssd).total;
+        let be_cpu = economics::break_even_with_iops(&cpu, cost, u_cpu.usable, l);
+        let be_gpu = economics::break_even_with_iops(&gpu, cost, u_gpu.usable, l);
+        assert!(
+            be_gpu.total < be_cpu.total,
+            "l={l}: GPU {:.1}s !< CPU {:.1}s",
+            be_gpu.total,
+            be_cpu.total
+        );
+        assert!(be_gpu.total < 10.0, "GPU always in the seconds regime");
+    }
+}
+
+#[test]
+fn advice_converges_to_optimal() {
+    // Iteratively applying the advisor's recommendation reaches Keep.
+    let mix = IoMix::paper_default();
+    let ssd = SsdConfig::storage_next(NandKind::Slc);
+    let plat = PlatformConfig::preset(PlatformKind::GpuGddr);
+    let profile = LognormalProfile::calibrated(200e9, 1.2, 1e9, 512);
+    let mut dram = 4e9; // start tiny
+    for _round in 0..8 {
+        let advice = upgrade::advise(&profile, &plat, &ssd, mix,
+            queueing::LatencyTargets::none(), dram);
+        match &advice.recommendations[0] {
+            upgrade::Recommendation::Keep => {
+                assert!(advice.verdict.viable && advice.verdict.economics_optimal);
+                return;
+            }
+            upgrade::Recommendation::ResizeDramTo(b)
+            | upgrade::Recommendation::IncreaseDramCapacity(b) => {
+                dram = *b * 1.02; // apply with 2% headroom
+            }
+            upgrade::Recommendation::IncreaseSsdThroughput { .. } => {
+                // at very small DRAM the uncached stream exceeds the SSD
+                // array — the alternative fix is caching more: grow DRAM
+                // to the framework's viable capacity.
+                let pr = platform::provision(&profile, &plat, &ssd, mix,
+                    queueing::LatencyTargets::none()).unwrap();
+                dram = pr.cap_viable * 1.02;
+            }
+            other => panic!("unexpected advice on GPU+SN: {other:?}"),
+        }
+    }
+    panic!("advisor failed to converge in 8 rounds");
+}
+
+#[test]
+fn sampled_workload_agrees_with_assessment() {
+    // assess() on the closed-form profile matches a brute-force check on a
+    // sampled instance of the same workload.
+    let profile = LognormalProfile::calibrated(50e9, 1.0, 1e7, 4096);
+    let plat = PlatformConfig::preset(PlatformKind::GpuGddr);
+    let ssd = SsdConfig::storage_next(NandKind::Slc);
+    let mix = IoMix::paper_default();
+    let dram = 8e9;
+    let v = platform::assess(&profile, &plat, &ssd, mix,
+        queueing::LatencyTargets::none(), dram);
+
+    // brute force on 200k sampled intervals
+    let mut rng = Rng::new(77);
+    let n = 200_000usize;
+    let mut taus = profile.sample(n, &mut rng);
+    taus.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let scale = profile.n_blk / n as f64;
+    // T_C: capacity quantile
+    let k = ((dram / 4096.0) / scale) as usize;
+    let t_c_sampled = taus[k.min(n - 1)];
+    assert!(
+        (t_c_sampled - v.t_c).abs() / v.t_c < 0.1,
+        "T_C sampled {t_c_sampled} vs analytic {}",
+        v.t_c
+    );
+    // uncached throughput at T_C
+    let psi_d: f64 = taus.iter().filter(|&&t| t > t_c_sampled).map(|t| 1.0 / t).sum::<f64>()
+        * scale * 4096.0;
+    let analytic = profile.psi_uncached(v.t_c);
+    assert!(
+        (psi_d - analytic).abs() / analytic < 0.1,
+        "Psi_d sampled {psi_d:.3e} vs analytic {analytic:.3e}"
+    );
+}
+
+#[test]
+fn normal_vs_storage_next_crossover_at_4kb() {
+    // At 4KB the two device classes converge (same media block); below
+    // 4KB Storage-Next wins increasingly — the Fig 3/4 crossover shape.
+    let mix = IoMix::paper_default();
+    let cpu = PlatformConfig::preset(PlatformKind::CpuDdr);
+    let mut prev_ratio = f64::INFINITY;
+    for &l in &[512u64, 1024, 2048, 4096] {
+        let sn = economics::break_even(&cpu, &SsdConfig::storage_next(NandKind::Slc), l, mix);
+        let mut nr_cfg = SsdConfig::normal(NandKind::Slc);
+        nr_cfg.tau_cmd = 150e-9; // isolate the ECC effect
+        let nr = economics::break_even(&cpu, &nr_cfg, l, mix);
+        let ratio = nr.total / sn.total;
+        assert!(ratio <= prev_ratio + 1e-9, "advantage should shrink with block size");
+        prev_ratio = ratio;
+    }
+    assert!((prev_ratio - 1.0).abs() < 0.05, "at 4KB both classes coincide");
+}

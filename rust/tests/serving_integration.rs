@@ -1,0 +1,107 @@
+//! End-to-end serving path: coordinator → batcher → PJRT execution of the
+//! AOT two-stage graphs (the Layer-1 Pallas kernels inlined in the HLO).
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fivemin::coordinator::batcher::BatchPolicy;
+use fivemin::coordinator::{Coordinator, Router, ServingCorpus};
+use fivemin::runtime::{default_artifacts_dir, SERVE};
+use fivemin::util::rng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = default_artifacts_dir();
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn coordinator_answers_with_high_recall() {
+    let Some(dir) = artifacts() else { return };
+    let corpus = Arc::new(ServingCorpus::synthetic(2, 11));
+    let mut co = Coordinator::start(dir, corpus.clone(), BatchPolicy::default()).unwrap();
+    let mut rng = Rng::new(3);
+    let trials = 64;
+    let mut top1_hits = 0;
+    for _ in 0..trials {
+        let target = rng.below(corpus.n as u64) as usize;
+        let q = corpus.query_near(target, 0.02, &mut rng);
+        let res = co.query(q).unwrap();
+        assert_eq!(res.ids.len(), SERVE.topk);
+        // scores sorted best-first
+        assert!(res.scores.windows(2).all(|w| w[0] >= w[1] - 1e-5));
+        if res.ids[0] as usize == target {
+            top1_hits += 1;
+        }
+    }
+    let recall = top1_hits as f64 / trials as f64;
+    assert!(recall >= 0.95, "top-1 recall {recall}");
+    let st = co.stats();
+    assert_eq!(st.queries, trials);
+    assert!(st.batches >= 1);
+    co.stop();
+}
+
+#[test]
+fn batching_amortizes_latency() {
+    let Some(dir) = artifacts() else { return };
+    let corpus = Arc::new(ServingCorpus::synthetic(1, 13));
+    let policy = BatchPolicy { max_batch: SERVE.batch, max_wait: Duration::from_millis(5) };
+    let co = Coordinator::start(dir, corpus.clone(), policy).unwrap();
+    let mut rng = Rng::new(5);
+    // fire a burst of concurrent queries; they should ride shared batches
+    let receivers: Vec<_> = (0..SERVE.batch)
+        .map(|_| {
+            let q = corpus.query_near(rng.below(corpus.n as u64) as usize, 0.02, &mut rng);
+            co.submit(q)
+        })
+        .collect();
+    let mut max_batch_seen = 0;
+    for r in receivers {
+        let res = r.recv().unwrap().unwrap();
+        max_batch_seen = max_batch_seen.max(res.batch_size);
+    }
+    assert!(
+        max_batch_seen > 1,
+        "burst should batch together, saw max batch {max_batch_seen}"
+    );
+    let st = co.stats();
+    assert!(st.batches < SERVE.batch as u64, "batches {} queries {}", st.batches, st.queries);
+}
+
+#[test]
+fn router_spreads_load_across_workers() {
+    let Some(dir) = artifacts() else { return };
+    let corpus = Arc::new(ServingCorpus::synthetic(1, 17));
+    let w1 = Coordinator::start(dir.clone(), corpus.clone(), BatchPolicy::default()).unwrap();
+    let w2 = Coordinator::start(dir, corpus.clone(), BatchPolicy::default()).unwrap();
+    let router = Router::new(vec![w1, w2]);
+    let mut rng = Rng::new(7);
+    for _ in 0..16 {
+        let q = corpus.query_near(rng.below(corpus.n as u64) as usize, 0.02, &mut rng);
+        router.query(q).unwrap();
+    }
+    let stats = router.stats();
+    assert_eq!(stats.len(), 2);
+    assert_eq!(stats.iter().map(|s| s.queries).sum::<u64>(), 16);
+    assert!(stats.iter().all(|s| s.queries == 8), "round-robin must halve");
+}
+
+#[test]
+fn malformed_query_rejected_not_fatal() {
+    let Some(dir) = artifacts() else { return };
+    let corpus = Arc::new(ServingCorpus::synthetic(1, 19));
+    let co = Coordinator::start(dir, corpus.clone(), BatchPolicy::default()).unwrap();
+    let err = co.query(vec![1.0; 7]); // wrong dimension
+    assert!(err.is_err());
+    // worker survives and serves the next query
+    let mut rng = Rng::new(23);
+    let q = corpus.query_near(0, 0.02, &mut rng);
+    assert!(co.query(q).is_ok());
+}

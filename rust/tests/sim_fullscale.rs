@@ -1,0 +1,48 @@
+//! Full-scale MQSim-Next validation against the analytic model (Fig 7a/7b
+//! trends). Ignored by default in quick runs — the figure bench regenerates
+//! the full sweep; this integration test pins the headline points.
+
+use fivemin::config::{IoMix, NandKind, SsdConfig};
+use fivemin::model::ssd;
+use fivemin::sim::{run_uniform, SimParams};
+
+#[test]
+fn fig7a_sim_tracks_model_at_512b_and_4kb() {
+    let cfg = SsdConfig::storage_next(NandKind::Slc);
+    for (l_blk, lo, hi) in [(512u32, 50e6, 110e6), (4096, 9e6, 25e6)] {
+        let prm = SimParams::default_for(l_blk);
+        let s = run_uniform(&cfg, &prm, 0.9, 300, 1500);
+        let model = ssd::ssd_peak_iops(&cfg, l_blk as u64, IoMix::paper_default()).effective;
+        let iops = s.iops();
+        // Fig 7a: simulator aligns with the model, slightly above it
+        // (conservative Φ_WA in the model, SCA command/data overlap in sim).
+        assert!(
+            iops > lo && iops < hi,
+            "l={l_blk}: sim {:.1}M outside [{:.0}M,{:.0}M] (model {:.1}M)",
+            iops / 1e6, lo / 1e6, hi / 1e6, model / 1e6
+        );
+        assert!(
+            iops > 0.8 * model,
+            "l={l_blk}: sim {:.1}M below 0.8x model {:.1}M",
+            iops / 1e6, model / 1e6
+        );
+    }
+}
+
+#[test]
+fn fig7b_read_write_ratio_ordering() {
+    let cfg = SsdConfig::storage_next(NandKind::Slc);
+    let prm = SimParams::default_for(512);
+    let mut prev = f64::INFINITY;
+    // Fig 7b: 82M (read-only) > 68M (90:10) > 52M (70:30) > 34M (50:50)
+    for rf in [1.0, 0.9, 0.7, 0.5] {
+        let s = run_uniform(&cfg, &prm, rf, 300, 1200);
+        let iops = s.iops();
+        assert!(
+            iops < prev * 1.02,
+            "IOPS must fall as writes grow: rf={rf} {:.1}M prev {:.1}M",
+            iops / 1e6, prev / 1e6
+        );
+        prev = iops;
+    }
+}

@@ -1,0 +1,20 @@
+# Build/verify entry points. `make artifacts` needs jax installed;
+# everything else is pure cargo.
+
+.PHONY: artifacts verify pytest clean
+
+# Lower the JAX/Pallas serving graphs to HLO-text artifacts + manifest
+# (a prerequisite only for --features pjrt builds; the native engine
+# needs nothing).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+# Tier-1 verification.
+verify:
+	cargo build --release && cargo test -q
+
+pytest:
+	python -m pytest python/tests -q
+
+clean:
+	rm -rf target results

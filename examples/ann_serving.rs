@@ -1,16 +1,21 @@
 //! END-TO-END DRIVER: two-stage progressive ANN serving through all three
-//! layers (Sec VII-B / Fig 9).
+//! layers (Sec VII-B / Fig 9), with the promoted-vector fetches served by
+//! a pluggable storage backend.
 //!
 //!   L1  Pallas distance kernels  ──┐ lowered once by `make artifacts`
-//!   L2  JAX two-stage graphs     ──┘ into artifacts/*.hlo.txt
-//!   L3  this binary: router → dynamic batcher → PJRT execution,
-//!       with the SSD cost of every promoted fetch accounted through the
-//!       analytical device model.
+//!   L2  JAX two-stage graphs     ──┘ (native Rust engine runs the same
+//!                                     math when artifacts are absent)
+//!   L3  this binary: router → dynamic batcher → graph execution, with
+//!       every promoted fetch charged to a `storage::StorageBackend`.
 //!
-//! Run (after `make artifacts && cargo build --release`):
-//!     cargo run --release --example ann_serving
+//! Run:
+//!     cargo run --release --example ann_serving -- --backend mem
+//!     cargo run --release --example ann_serving -- --backend model
+//!     cargo run --release --example ann_serving -- --backend sim
 //!
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//! `mem` reproduces the DRAM-resident baseline; `model` charges the
+//! analytic Eq. 2 + queueing cost; `sim` replays the fetch traffic on
+//! MQSim-Next in virtual time and reports device-level stats.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -20,33 +25,55 @@ use fivemin::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
 use fivemin::coordinator::batcher::BatchPolicy;
 use fivemin::coordinator::{Coordinator, Router, ServingCorpus};
 use fivemin::runtime::{default_artifacts_dir, SERVE};
+use fivemin::storage::BackendSpec;
+use fivemin::util::cli::ArgSpec;
 use fivemin::util::rng::Rng;
 use fivemin::util::table::fmt_secs;
 
 fn main() -> anyhow::Result<()> {
-    let dir = default_artifacts_dir();
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
+    let spec = ArgSpec::new("ann_serving", "two-stage ANN serving demo")
+        .opt(
+            "backend",
+            "mem|model|sim",
+            Some("mem"),
+            "storage backend for promoted-vector fetches",
+        )
+        .opt("queries", "N", Some("256"), "queries to issue");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = match spec.parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}\n\n{}", spec.usage());
+            std::process::exit(2);
+        }
+    };
+    // Full ANN vectors are 4KB blocks on the device tier.
+    let backend = BackendSpec::parse(p.str("backend").unwrap(), 4096)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let n_queries: usize = p.usize("queries").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
 
     // ---- corpus + serving stack ------------------------------------------
+    let dir = default_artifacts_dir();
     let n_shards = 4;
     let corpus = Arc::new(ServingCorpus::synthetic(n_shards, 42));
     println!(
-        "corpus: {} embeddings ({} reduced + {} full per vector), {} shards",
-        corpus.n,
-        512,
-        4096,
-        n_shards
+        "corpus: {} embeddings ({} reduced + {} full bytes per vector), {} shards",
+        corpus.n, 512, 4096, n_shards
     );
-    println!("starting 2 workers (router round-robins across them)…");
-    let w1 = Coordinator::start(dir.clone(), corpus.clone(), BatchPolicy::default())?;
-    let w2 = Coordinator::start(dir, corpus.clone(), BatchPolicy::default())?;
+    println!(
+        "starting 2 workers on the '{}' storage backend (router round-robins)…",
+        backend.kind().name()
+    );
+    let w1 = Coordinator::start(
+        dir.clone(),
+        corpus.clone(),
+        BatchPolicy::default(),
+        backend.clone(),
+    )?;
+    let w2 = Coordinator::start(dir, corpus.clone(), BatchPolicy::default(), backend)?;
     let router = Router::new(vec![w1, w2]);
 
     // ---- serve a batched query stream (concurrent submission) -------------
-    let n_queries = 256;
     let mut rng = Rng::new(9);
     let t0 = Instant::now();
     let pending: Vec<_> = (0..n_queries)
@@ -72,7 +99,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== end-to-end serving results ===");
     println!("queries    : {served} in {dt:.2}s  ->  {:.0} QPS", served as f64 / dt);
     println!("recall@1   : {:.1}%", 100.0 * hits as f64 / served as f64);
-    println!("batches    : {batches} ({:.1} queries/batch avg)", queries as f64 / batches as f64);
+    println!("batches    : {batches} ({:.1} queries/batch avg)", queries as f64 / batches.max(1) as f64);
     for (i, s) in stats.iter().enumerate() {
         println!(
             "worker {i}   : {} queries, latency p50 {} p99 {}, stage1 p50 {}, stage2 p50 {}",
@@ -82,6 +109,29 @@ fn main() -> anyhow::Result<()> {
             fmt_secs(s.stage1_ns.percentile(0.5) / 1e9),
             fmt_secs(s.stage2_ns.percentile(0.5) / 1e9),
         );
+        println!(
+            "  storage  : burst stall p50 {} p99 {}",
+            fmt_secs(s.storage_stall_ns.percentile(0.5) / 1e9),
+            fmt_secs(s.storage_stall_ns.percentile(0.99) / 1e9),
+        );
+        if let Some(snap) = &s.storage {
+            println!(
+                "  backend  : {} — {} reads, device read p50 {} p99 {}",
+                snap.kind.name(),
+                snap.stats.reads,
+                fmt_secs(snap.stats.read_device_ns.percentile(0.5) / 1e9),
+                fmt_secs(snap.stats.read_device_ns.percentile(0.99) / 1e9),
+            );
+            if let Some(dev) = &snap.device {
+                println!(
+                    "  device   : {:.2}M IOPS in device time, read p99 {} (MQSim-Next), \
+                     {} senses",
+                    dev.read_iops() / 1e6,
+                    fmt_secs(dev.read_lat.percentile(0.99) / 1e9),
+                    dev.host_senses,
+                );
+            }
+        }
     }
     let ssd_reads: u64 = stats.iter().map(|s| s.ssd_reads).sum();
     println!("SSD fetches: {ssd_reads} promoted full vectors ({} per query)", SERVE.topk);

@@ -119,17 +119,16 @@ fn bench_hnsw_search() {
     );
 }
 
-fn bench_pjrt_two_stage() {
+fn bench_serving_two_stage() {
     use fivemin::coordinator::batcher::BatchPolicy;
     use fivemin::coordinator::{Coordinator, ServingCorpus};
+    use fivemin::storage::BackendSpec;
     use std::sync::Arc;
     let dir = fivemin::runtime::default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("bench pjrt_two_stage: skipped (run `make artifacts`)");
-        return;
-    }
     let corpus = Arc::new(ServingCorpus::synthetic(1, 42));
-    let co = Coordinator::start(dir, corpus.clone(), BatchPolicy::default()).unwrap();
+    let co =
+        Coordinator::start(dir, corpus.clone(), BatchPolicy::default(), BackendSpec::Mem)
+            .unwrap();
     let mut rng = Rng::new(7);
     let n = 128;
     let t = Timer::start();
@@ -142,7 +141,7 @@ fn bench_pjrt_two_stage() {
     let dt = t.elapsed_s();
     let st = co.stats();
     println!(
-        "bench pjrt_two_stage: {:.0} QPS ({} batches, stage1 p50 {:.1}ms, stage2 p50 {:.1}ms)",
+        "bench serving_two_stage: {:.0} QPS ({} batches, stage1 p50 {:.1}ms, stage2 p50 {:.1}ms)",
         n as f64 / dt,
         st.batches,
         st.stage1_ns.percentile(0.5) / 1e6,
@@ -155,5 +154,5 @@ fn main() {
     bench_sim_event_rate();
     bench_kv_engine();
     bench_hnsw_search();
-    bench_pjrt_two_stage();
+    bench_serving_two_stage();
 }

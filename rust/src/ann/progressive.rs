@@ -72,7 +72,52 @@ impl ProgressiveIndex {
             upper_reads: cost1.upper_visits,
             full_reads: 0,
         };
-        // stage 2: exact re-rank of the promoted candidates
+        let rescored = self.rerank(query_full, &stage1, k, promote, &mut cost);
+        (rescored, cost)
+    }
+
+    /// [`ProgressiveIndex::search`] with the stage-2 promotion fetches
+    /// replayed through a [`crate::storage::StorageBackend`] as one
+    /// block-read burst (vector id = logical block address). Results are
+    /// identical to `search`; the extra return value is the device-time
+    /// stall of the burst (ns) — the slowest promoted read.
+    pub fn search_backed(
+        &self,
+        query_full: &[f32],
+        k: usize,
+        ef: usize,
+        promote: usize,
+        backend: &mut dyn crate::storage::StorageBackend,
+    ) -> (Vec<(f32, u32)>, QueryCost, u64) {
+        assert_eq!(query_full.len(), self.full_dim);
+        let q_red = &query_full[..self.reduced_dim];
+        let (stage1, cost1): (Vec<(f32, u32)>, SearchCost) =
+            self.graph.search(q_red, promote.max(k), ef);
+        let mut cost = QueryCost {
+            reduced_reads: cost1.visited,
+            upper_reads: cost1.upper_visits,
+            full_reads: 0,
+        };
+        let lbas: Vec<u64> = stage1
+            .iter()
+            .take(promote)
+            .map(|&(_, id)| id as u64)
+            .collect();
+        let done = crate::storage::read_blocks(backend, &lbas);
+        let stall = done.iter().map(|c| c.device_ns).max().unwrap_or(0);
+        let rescored = self.rerank(query_full, &stage1, k, promote, &mut cost);
+        (rescored, cost, stall)
+    }
+
+    /// Stage 2: exact re-rank of the promoted candidates.
+    fn rerank(
+        &self,
+        query_full: &[f32],
+        stage1: &[(f32, u32)],
+        k: usize,
+        promote: usize,
+        cost: &mut QueryCost,
+    ) -> Vec<(f32, u32)> {
         let mut rescored: Vec<(f32, u32)> = stage1
             .iter()
             .take(promote)
@@ -83,7 +128,7 @@ impl ProgressiveIndex {
             .collect();
         rescored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
         rescored.truncate(k);
-        (rescored, cost)
+        rescored
     }
 
     /// Single-stage baseline (reduced-only, no re-rank) for the recall
@@ -194,6 +239,23 @@ mod tests {
         assert_eq!(cost.full_reads, 20, "promotion count drives full reads");
         assert!(cost.reduced_reads > 20, "stage 1 visits dominate");
         assert!(cost.upper_reads < cost.reduced_reads);
+    }
+
+    #[test]
+    fn backed_search_matches_plain_and_reports_stall() {
+        use crate::storage::{BackendKind, MemBackend, StorageBackend};
+        let data = corpus(1000, 32, 61);
+        let idx = ProgressiveIndex::build(data, 8, 8, 48, 62);
+        let mut rng = Rng::new(63);
+        let q: Vec<f32> = (0..32).map(|_| rng.gaussian() as f32).collect();
+        let mut backend = MemBackend::new();
+        let (plain, plain_cost) = idx.search(&q, 5, 64, 20);
+        let (backed, backed_cost, stall) = idx.search_backed(&q, 5, 64, 20, &mut backend);
+        assert_eq!(plain, backed, "results identical across the backend seam");
+        assert_eq!(plain_cost.full_reads, backed_cost.full_reads);
+        assert!(stall > 0, "mem backend still charges DRAM-class time");
+        assert_eq!(backend.kind(), BackendKind::Mem);
+        assert_eq!(backend.stats().reads, 20, "one read per promotion");
     }
 
     #[test]

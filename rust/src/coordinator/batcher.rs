@@ -2,6 +2,31 @@
 //! (SERVE.batch) under a latency budget — the vLLM-router-shaped core of
 //! the serving path. std-thread + channel based (tokio is unavailable in
 //! the offline build; see DESIGN.md §Substitutions).
+//!
+//! # Policy
+//!
+//! [`collect_batch`] blocks for the first job, then fills in two phases:
+//!
+//! 1. **Backlog drain** — greedily `try_recv` everything already queued.
+//!    Under load, jobs that arrived while the previous batch executed are
+//!    past their deadline; they must ride *this* batch or batching
+//!    degenerates to size one and throughput collapses.
+//! 2. **Straggler wait** — block up to the *oldest* job's remaining
+//!    `max_wait` budget for late arrivals. Anchoring the deadline to the
+//!    oldest job (not the newest) bounds worst-case queueing delay at
+//!    `max_wait` regardless of arrival pattern.
+//!
+//! The batch is released at `max_batch` (the AOT graph's fixed batch
+//! dimension — partial batches are padded by the worker, never reshaped),
+//! at deadline, or when the channel closes. A closed, empty channel yields
+//! `None`, which is the worker's shutdown signal.
+//!
+//! # Why a fixed shape
+//!
+//! The stage-1/stage-2 graphs are compiled once for `(SERVE.batch, …)`;
+//! recompiling per batch size would dwarf the work itself. The fill rate
+//! therefore shows up in [`crate::coordinator::ServeStats::batch_fill`]
+//! rather than in execution shape.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};

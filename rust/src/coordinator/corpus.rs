@@ -3,6 +3,23 @@
 //! corpora (MS MARCO / 20NG / DBpedia are not redistributable here); the
 //! reduced form is the MRL-style prefix of the full vector, so stage-1
 //! pruning quality mirrors the real setup (DESIGN.md §Substitutions).
+//!
+//! # Tier mapping
+//!
+//! The two forms model the paper's two storage tiers:
+//!
+//! * `reduced_shards` — the DRAM-resident tier: 512B-class vectors laid
+//!   out shard-contiguous (`SERVE.shard × SERVE.reduced_dim`) for the
+//!   stage-1 scan graph. Always served from memory.
+//! * `full` — the flash-resident tier: 4KB-class vectors addressed by
+//!   global id. The coordinator charges every stage-2 promotion as a
+//!   block read against its [`crate::storage::StorageBackend`] (the
+//!   vector id doubles as the logical block address), while the payload
+//!   itself is gathered from this array — backends model *time*, the
+//!   corpus holds *contents* (see the [`crate::storage`] module docs).
+//!
+//! Per-dimension energy decays like MRL embeddings, so the reduced prefix
+//! preserves ranking signal and stage-1 pruning recall is realistic.
 
 use crate::runtime::SERVE;
 use crate::util::rng::Rng;

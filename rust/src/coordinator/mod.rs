@@ -1,12 +1,22 @@
 //! Serving coordinator (the L3 request path): router → dynamic batcher →
-//! PJRT worker executing the AOT two-stage ANN graphs.
+//! graph-execution worker → storage backend.
 //!
-//! One worker thread owns the [`crate::runtime::Runtime`] (PJRT handles
-//! stay on their creating thread); queries arrive over an mpsc channel,
-//! are batched to the graph's fixed batch shape, executed in two stages
-//! around the (simulated) SSD fetch of promoted full vectors, and answered
+//! One worker thread owns the [`crate::runtime::Runtime`] (execution
+//! handles stay on their creating thread) *and* its
+//! [`crate::storage::StorageBackend`]; queries arrive over an mpsc
+//! channel, are batched to the graph's fixed batch shape, executed in two
+//! stages around the storage fetch of promoted full vectors, and answered
 //! on per-query response channels. [`Router`] fans queries across several
 //! workers (shard-partitioned), completing the vLLM-router shape.
+//!
+//! The stage-2 fetch is the paper's "SSD read of promoted candidates":
+//! each promoted global id is submitted to the worker's backend as a
+//! block read, and the batch stalls for the burst to complete. With
+//! [`BackendSpec::Mem`] that stall is DRAM-class (the pre-storage-layer
+//! behavior); with `Model`/`Sim` the reported stall and per-read
+//! latencies come from the analytic device model or MQSim-Next, while
+//! query *results* stay bit-identical across backends (see
+//! `rust/tests/backend_equivalence.rs`).
 
 pub mod batcher;
 pub mod corpus;
@@ -19,7 +29,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{Runtime, SERVE};
+use crate::runtime::{Runtime, Tensor, SERVE};
+use crate::storage::{self, BackendSpec, StorageBackend, StorageSnapshot};
 use crate::util::stats::LatencyHist;
 use batcher::{collect_batch, BatchPolicy, Job};
 pub use corpus::ServingCorpus;
@@ -45,8 +56,14 @@ pub struct ServeStats {
     pub latency_ns: LatencyHist,
     pub stage1_ns: LatencyHist,
     pub stage2_ns: LatencyHist,
-    /// Modeled SSD reads issued for promoted candidates.
+    /// Storage reads issued for promoted candidates.
     pub ssd_reads: u64,
+    /// Per-batch storage stall: device time of the slowest read in each
+    /// stage-2 fetch burst (virtual ns for model/sim backends).
+    pub storage_stall_ns: LatencyHist,
+    /// Rolling snapshot of the worker's backend (traffic histograms plus
+    /// device-level stats when MQSim-Next serves the reads).
+    pub storage: Option<StorageSnapshot>,
 }
 
 impl ServeStats {
@@ -59,11 +76,14 @@ impl ServeStats {
             stage1_ns: LatencyHist::for_latency_ns(),
             stage2_ns: LatencyHist::for_latency_ns(),
             ssd_reads: 0,
+            storage_stall_ns: LatencyHist::for_latency_ns(),
+            storage: None,
         }
     }
 }
 
-/// One serving worker: a thread owning Runtime + corpus partition.
+/// One serving worker: a thread owning Runtime + corpus partition +
+/// storage backend.
 pub struct Coordinator {
     tx: Option<mpsc::Sender<Job<Vec<f32>, Result<QueryResult, String>>>>,
     handle: Option<JoinHandle<()>>,
@@ -71,11 +91,14 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spawn a worker over `corpus` using artifacts in `artifacts_dir`.
+    /// Spawn a worker over `corpus` using artifacts in `artifacts_dir`
+    /// (native-engine fallback when absent), fetching promoted vectors
+    /// through a backend built from `backend`.
     pub fn start(
         artifacts_dir: PathBuf,
         corpus: Arc<ServingCorpus>,
         policy: BatchPolicy,
+        backend: BackendSpec,
     ) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Job<Vec<f32>, Result<QueryResult, String>>>();
         let stats = Arc::new(Mutex::new(ServeStats::new()));
@@ -84,7 +107,7 @@ impl Coordinator {
         let handle = std::thread::Builder::new()
             .name("fivemin-worker".into())
             .spawn(move || {
-                // PJRT handles live and die on this thread.
+                // Execution handles live and die on this thread.
                 let mut rt = match Runtime::open(&artifacts_dir) {
                     Ok(rt) => {
                         let _ = ready_tx.send(Ok(()));
@@ -95,7 +118,8 @@ impl Coordinator {
                         return;
                     }
                 };
-                worker_loop(&mut rt, &corpus, &rx, &policy, &stats2);
+                let mut store = backend.build();
+                worker_loop(&mut rt, &corpus, &mut *store, &rx, &policy, &stats2);
             })?;
         ready_rx
             .recv()
@@ -144,38 +168,47 @@ impl Drop for Coordinator {
 fn worker_loop(
     rt: &mut Runtime,
     corpus: &ServingCorpus,
+    store: &mut dyn StorageBackend,
     rx: &mpsc::Receiver<Job<Vec<f32>, Result<QueryResult, String>>>,
     policy: &BatchPolicy,
     stats: &Arc<Mutex<ServeStats>>,
 ) {
-    // §Perf: shard literals are immutable — build them once per worker
+    // §Perf: shard tensors are immutable — build them once per worker
     // instead of re-marshalling ~2MB per shard on every batch (this cut
     // stage-1 latency ~2x; see EXPERIMENTS.md §Perf).
-    let shard_lits: Vec<xla::Literal> = corpus
+    let shard_tensors: Vec<Tensor> = corpus
         .reduced_shards
         .iter()
         .map(|s| {
             Runtime::literal_f32(s, &[SERVE.shard, SERVE.reduced_dim])
-                .expect("shard literal")
+                .expect("shard tensor")
         })
         .collect();
     while let Some(batch) = collect_batch(rx, policy) {
         let n_real = batch.len();
-        match run_two_stage_batch(rt, corpus, &shard_lits, &batch) {
-            Ok((results, t1, t2)) => {
-                let mut st = stats.lock().unwrap();
-                st.batches += 1;
-                st.batch_fill += n_real as f64 / SERVE.batch as f64;
-                st.stage1_ns.push(t1.as_nanos() as f64);
-                st.stage2_ns.push(t2.as_nanos() as f64);
-                st.ssd_reads += (n_real * SERVE.topk) as u64;
-                for (job, mut res) in batch.into_iter().zip(results) {
-                    res.latency = job.enqueued.elapsed();
-                    res.batch_size = n_real;
-                    st.queries += 1;
-                    st.latency_ns.push(res.latency.as_nanos() as f64);
-                    let _ = job.resp.send(Ok(res));
+        match run_two_stage_batch(rt, corpus, store, &shard_tensors, &batch) {
+            Ok((results, t1, t2, stall_ns)) => {
+                {
+                    let mut st = stats.lock().unwrap();
+                    st.batches += 1;
+                    st.batch_fill += n_real as f64 / SERVE.batch as f64;
+                    st.stage1_ns.push(t1.as_nanos() as f64);
+                    st.stage2_ns.push(t2.as_nanos() as f64);
+                    st.ssd_reads += (n_real * SERVE.topk) as u64;
+                    st.storage_stall_ns.push(stall_ns as f64);
+                    for (job, mut res) in batch.into_iter().zip(results) {
+                        res.latency = job.enqueued.elapsed();
+                        res.batch_size = n_real;
+                        st.queries += 1;
+                        st.latency_ns.push(res.latency.as_nanos() as f64);
+                        let _ = job.resp.send(Ok(res));
+                    }
                 }
+                // Snapshot after answering: for the sim backend this does
+                // blocking round-trips to the device thread, which must not
+                // sit between queries and their responses.
+                let snapshot = StorageSnapshot::capture(store);
+                stats.lock().unwrap().storage = Some(snapshot);
             }
             Err(e) => {
                 let msg = e.to_string();
@@ -187,22 +220,26 @@ fn worker_loop(
     }
 }
 
-/// Execute one padded batch through the AOT graphs:
-/// stage 1 per shard (reduced_score) → merge → gather full vectors
-/// ("SSD fetch") → stage 2 (full_score) → per-query top-k.
+/// Execute one padded batch through the graphs:
+/// stage 1 per shard (reduced_score) → merge → storage fetch of promoted
+/// full vectors → stage 2 (full_score) → per-query top-k.
+///
+/// Returns the per-query results, the two stage wall times, and the
+/// storage stall (device time of the slowest read in the fetch burst).
 fn run_two_stage_batch(
     rt: &mut Runtime,
     corpus: &ServingCorpus,
-    shard_lits: &[xla::Literal],
+    store: &mut dyn StorageBackend,
+    shard_tensors: &[Tensor],
     batch: &[Job<Vec<f32>, Result<QueryResult, String>>],
-) -> Result<(Vec<QueryResult>, Duration, Duration)> {
+) -> Result<(Vec<QueryResult>, Duration, Duration, u64)> {
     let b = SERVE.batch;
     let rd = SERVE.reduced_dim;
     let fd = SERVE.full_dim;
     let k = SERVE.topk;
     let n_real = batch.len();
 
-    // pad to the fixed batch shape by repeating the first query
+    // pad to the fixed batch shape by repeating the last real query
     let mut q_red = vec![0f32; b * rd];
     let mut q_full = vec![0f32; b * fd];
     for i in 0..b {
@@ -214,11 +251,11 @@ fn run_two_stage_batch(
 
     // ---- stage 1: scan every DRAM shard, keep global top-k ---------------
     let t1_start = Instant::now();
-    let q_red_lit = Runtime::literal_f32(&q_red, &[b, rd])?;
+    let q_red_t = Runtime::literal_f32(&q_red, &[b, rd])?;
     // (score, global_id) per query, merged across shards
     let mut merged: Vec<Vec<(f32, u32)>> = vec![Vec::with_capacity(2 * k); b];
-    for (s, shard_lit) in shard_lits.iter().enumerate() {
-        let out = rt.execute("reduced_score", &[&q_red_lit, shard_lit])?;
+    for (s, shard_t) in shard_tensors.iter().enumerate() {
+        let out = rt.execute("reduced_score", &[&q_red_t, shard_t])?;
         let vals = Runtime::to_vec_f32(&out[0])?;
         let idx = Runtime::to_vec_i32(&out[1])?;
         let base = (s * SERVE.shard) as u32;
@@ -234,18 +271,29 @@ fn run_two_stage_batch(
     }
     let t1 = t1_start.elapsed();
 
-    // ---- SSD fetch of promoted candidates + stage 2 ----------------------
+    // ---- storage fetch of promoted candidates + stage 2 ------------------
     let t2_start = Instant::now();
+    // Only the n_real live queries fetch; padding rows reuse the last real
+    // query's promotions in the gather below (their scores are discarded)
+    // without charging extra device reads.
+    let lbas: Vec<u64> = merged[..n_real]
+        .iter()
+        .flat_map(|m| m.iter().map(|&(_, id)| id as u64))
+        .collect();
+    let fetched = storage::read_blocks(store, &lbas);
+    let stall_ns = fetched.iter().map(|c| c.device_ns).max().unwrap_or(0);
+
     let mut cand = vec![0f32; b * k * fd];
     for qi in 0..b {
-        for (j, &(_, id)) in merged[qi].iter().enumerate() {
+        let src_q = qi.min(n_real - 1);
+        for (j, &(_, id)) in merged[src_q].iter().enumerate() {
             cand[(qi * k + j) * fd..(qi * k + j + 1) * fd]
                 .copy_from_slice(corpus.full_vector(id as usize));
         }
     }
-    let q_full_lit = Runtime::literal_f32(&q_full, &[b, fd])?;
-    let cand_lit = Runtime::literal_f32(&cand, &[b, k, fd])?;
-    let out = rt.execute("full_score", &[q_full_lit, cand_lit])?;
+    let q_full_t = Runtime::literal_f32(&q_full, &[b, fd])?;
+    let cand_t = Runtime::literal_f32(&cand, &[b, k, fd])?;
+    let out = rt.execute("full_score", &[&q_full_t, &cand_t])?;
     let scores = Runtime::to_vec_f32(&out[0])?;
     let order = Runtime::to_vec_i32(&out[1])?;
     let t2 = t2_start.elapsed();
@@ -263,12 +311,12 @@ fn run_two_stage_batch(
             batch_size: 0,
         });
     }
-    Ok((results, t1, t2))
+    Ok((results, t1, t2, stall_ns))
 }
 
 /// Round-robin router over multiple workers (each owns a corpus replica or
-/// partition). Demonstrates the scale-out path; single-worker deployments
-/// use [`Coordinator`] directly.
+/// partition plus its own storage backend). Demonstrates the scale-out
+/// path; single-worker deployments use [`Coordinator`] directly.
 pub struct Router {
     workers: Vec<Coordinator>,
     next: AtomicUsize,
@@ -305,7 +353,7 @@ impl Router {
 mod tests {
     use super::*;
 
-    // Routing invariants that need no PJRT (the serving integration test
+    // Routing invariants that need no runtime (the serving integration test
     // exercises the full path; see rust/tests/serving_integration.rs).
 
     #[test]
@@ -317,7 +365,7 @@ mod tests {
     #[test]
     fn router_round_robin_distribution() {
         // Router with zero workers is rejected; distribution is checked in
-        // the integration test (workers need PJRT).
+        // the integration test (workers need a runtime).
         let next = AtomicUsize::new(0);
         let n = 3;
         let mut counts = [0usize; 3];

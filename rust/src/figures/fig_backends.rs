@@ -1,0 +1,81 @@
+//! Backend-comparison table (new in this reproduction; emitted as
+//! `fig11`): the same stage-2-shaped fetch workload replayed through every
+//! [`crate::storage::StorageBackend`], reporting served read-latency
+//! percentiles and device-time throughput per backend.
+//!
+//! This is the storage-layer analogue of Fig 7's model-vs-simulator
+//! validation: `model` should sit near `sim` for uniform bursts (both are
+//! calibrated to the same Eq. 2 peak), while `mem` shows the
+//! DRAM-resident baseline the break-even analysis trades against.
+
+use crate::storage::{read_blocks, BackendSpec};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// Burst-replay comparison across `mem` / `model` / `sim`.
+///
+/// Each burst mimics one serving batch's promoted-candidate fetch:
+/// `depth` random 512B block reads submitted simultaneously.
+pub fn fig11(quick: bool) -> Table {
+    let bursts = if quick { 32 } else { 128 };
+    let depth = 64usize;
+    let n_blocks = 100_000u64;
+    let mut t = Table::new(
+        "fig11: stage-2 fetch-burst read latency by storage backend \
+         (64-deep uniform bursts, 512B blocks)",
+        &[
+            "backend",
+            "reads",
+            "p50_us",
+            "p95_us",
+            "p99_us",
+            "mean_us",
+            "dev_read_kiops",
+            "device_detail",
+        ],
+    );
+    for name in ["mem", "model", "sim"] {
+        let spec = BackendSpec::parse(name, 512).expect("builtin backend");
+        let mut backend = spec.build();
+        let mut rng = Rng::new(0xF16_11);
+        for _ in 0..bursts {
+            let lbas: Vec<u64> = (0..depth).map(|_| rng.below(n_blocks)).collect();
+            read_blocks(&mut *backend, &lbas);
+        }
+        let st = backend.stats();
+        let h = &st.read_device_ns;
+        let device = match backend.device_stats() {
+            Some(d) => format!(
+                "sim: {} senses, p99.9 {:.0}us",
+                d.host_senses,
+                d.read_lat.percentile(0.999) / 1e3
+            ),
+            None => "-".to_string(),
+        };
+        t.row(vec![
+            name.to_string(),
+            format!("{}", st.reads),
+            format!("{:.2}", h.percentile(0.5) / 1e3),
+            format!("{:.2}", h.percentile(0.95) / 1e3),
+            format!("{:.2}", h.percentile(0.99) / 1e3),
+            format!("{:.2}", h.mean() / 1e3),
+            format!("{:.0}", st.read_iops() / 1e3),
+            device,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_orders_backends_by_fidelity() {
+        let t = fig11(true);
+        let rendered = t.render();
+        assert!(rendered.contains("mem"));
+        assert!(rendered.contains("model"));
+        assert!(rendered.contains("sim"));
+    }
+}

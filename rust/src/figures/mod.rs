@@ -4,6 +4,7 @@
 //! `fivemin figures --all` regenerates everything; each bench target under
 //! `rust/benches/` wraps one figure with timing.
 
+pub mod fig_backends;
 pub mod fig_breakeven;
 pub mod fig_casestudies;
 pub mod fig_mqsim;
@@ -37,6 +38,11 @@ pub fn sim_figures(quick: bool) -> Vec<(&'static str, Table)> {
         ("fig7c", fig_mqsim::fig7c(quick)),
         ("fig7d", fig_mqsim::fig7d(quick)),
     ]
+}
+
+/// Storage-backend comparison (serving-path tail latency per backend).
+pub fn backend_figures(quick: bool) -> Vec<(&'static str, Table)> {
+    vec![("fig11", fig_backends::fig11(quick))]
 }
 
 /// Emit one table: print ASCII and write CSV under `out`.

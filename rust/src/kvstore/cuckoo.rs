@@ -24,11 +24,21 @@ pub struct KvPair {
 const EMPTY_KEY: u64 = u64::MAX;
 
 /// Abstract block device: the cuckoo table only reads/writes whole buckets.
+///
+/// Implementations decide what an access *costs*: [`MemStore`] is free
+/// (DRAM reference), [`crate::kvstore::BackedStore`] charges every bucket
+/// access — and every WAL log append — to a
+/// [`crate::storage::StorageBackend`].
 pub trait BlockStore {
     /// Number of buckets (blocks).
     fn n_buckets(&self) -> u64;
     fn read_bucket(&mut self, idx: u64) -> Vec<KvPair>;
     fn write_bucket(&mut self, idx: u64, slots: &[KvPair]);
+    /// Append `bytes` to the device-resident WAL region. Timing/accounting
+    /// hook with a no-op default: purely in-memory stores persist nothing,
+    /// device-backed stores issue a log-block write each time a block's
+    /// worth of entries has accumulated.
+    fn append_log(&mut self, _bytes: u32) {}
 }
 
 /// In-memory block store for tests and as the DRAM-resident reference.

@@ -4,8 +4,12 @@
 //! to hashed bucket locations.
 //!
 //! The engine is generic over [`BlockStore`]; tests run it over `MemStore`
-//! with I/O accounting, and `examples/kv_store_demo.rs` runs it with
-//! MQSim-Next timing to report end-to-end latency/throughput.
+//! with I/O accounting, and `examples/kv_store_demo.rs` runs it over
+//! [`crate::kvstore::BackedStore`] so the same traffic can be charged to
+//! any [`crate::storage::StorageBackend`] (`--backend mem|model|sim`) and
+//! reported with device-level timing. Every WAL append also charges the
+//! store's log region ([`BlockStore::append_log`]), so write persistence
+//! is paid for, not just modeled.
 
 use crate::kvstore::cache::KvCache;
 use crate::kvstore::cuckoo::{self, BlockStore, CuckooParams, KvPair};
@@ -81,12 +85,17 @@ impl<S: BlockStore + IoCounted> KvEngine<S> {
     }
 
     /// PUT: append to the WAL (persistence point), update the cache, and
-    /// commit consolidated batches when the log fills.
+    /// commit consolidated batches when the log fills. The append is
+    /// charged to the store's device-resident log region — one block
+    /// write per [`Wal::ENTRY_BYTES`]-sized entry accumulated to a block.
     pub fn put(&mut self, key: u64, value: u64) {
         self.stats.puts += 1;
         self.stats.wal_appends += 1;
         let (b1, _) = cuckoo::candidates(&self.params, key);
         let due = self.wal.append(WalEntry { bucket_hint: b1, pair: KvPair { key, value } });
+        let before_w = self.io_writes();
+        self.store.append_log(Wal::ENTRY_BYTES);
+        self.stats.ssd_writes += self.io_writes() - before_w;
         // cache reflects the newest value immediately (read-your-writes)
         self.cache.put(key, value);
         if due {

@@ -7,14 +7,19 @@
 //! * [`cache`] — CLOCK cache of hot KV pairs (all DRAM goes here).
 //! * [`engine`] — the assembled functional engine (GET/PUT over any
 //!   [`cuckoo::BlockStore`]).
+//! * [`backed`] — a block store that charges every bucket access and WAL
+//!   append to a [`crate::storage::StorageBackend`], putting the engine's
+//!   traffic on the analytic-model or MQSim-Next device path.
 //! * [`analysis`] — the paper-scale throughput model behind Fig 8.
 
 pub mod analysis;
+pub mod backed;
 pub mod cache;
 pub mod cuckoo;
 pub mod engine;
 pub mod wal;
 
 pub use analysis::{kv_throughput, KvScenario, KvThroughput};
+pub use backed::BackedStore;
 pub use cuckoo::{BlockStore, CuckooParams, KvPair, MemStore};
 pub use engine::{IoCounted, KvEngine};

@@ -31,6 +31,13 @@ pub struct Wal {
 }
 
 impl Wal {
+    /// On-device size of one log entry: 8B key + 8B value + 8B bucket
+    /// hint. [`crate::kvstore::KvEngine::put`] charges this many bytes to
+    /// the store's log region per append
+    /// ([`crate::kvstore::cuckoo::BlockStore::append_log`]), so a 512B log
+    /// block absorbs 21 appends before costing a device write.
+    pub const ENTRY_BYTES: u32 = 24;
+
     pub fn new(flush_threshold: usize) -> Self {
         assert!(flush_threshold > 0);
         Wal {

@@ -15,15 +15,21 @@
 //!   blocked-Cuckoo KV store and two-stage progressive ANN search, each as
 //!   a functional engine plus the analytical throughput model behind
 //!   Figs 8 and 10.
-//! * [`runtime`] / [`coordinator`] — the serving stack: PJRT execution of
-//!   the AOT-lowered JAX/Pallas compute graphs and the thread-based
-//!   router/batcher that drives them.
+//! * [`storage`] — the pluggable storage-backend layer: one
+//!   [`storage::StorageBackend`] trait with in-memory, analytic-model, and
+//!   MQSim-Next-simulated implementations, so the same KV/ANN traffic can
+//!   be replayed against any device tier and report per-backend latency.
+//! * [`runtime`] / [`coordinator`] — the serving stack: execution of the
+//!   two-stage compute graphs (native Rust engine by default, PJRT with
+//!   `--features pjrt`) and the thread-based router/batcher that drives
+//!   them, fetching promoted vectors through a [`storage`] backend.
 //! * [`figures`] — regenerates every table and figure of the paper's
-//!   evaluation as CSV + ASCII charts.
+//!   evaluation as CSV + ASCII charts, plus the backend-comparison table.
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts`
 //! lowers the Layer-1/Layer-2 compute graphs to HLO text that the Rust
-//! runtime loads via `PjRtClient`. Nothing on the request path imports
+//! runtime can execute via PJRT (`--features pjrt`); without artifacts the
+//! native engine runs the same math. Nothing on the request path imports
 //! Python.
 
 pub mod ann;
@@ -34,5 +40,6 @@ pub mod kvstore;
 pub mod model;
 pub mod runtime;
 pub mod sim;
+pub mod storage;
 pub mod util;
 pub mod workload;

@@ -59,9 +59,9 @@ fn print_help() {
          \x20 breakeven  --platform cpu|gpu --nand slc|pslc|tlc --blk N [--normal] [--host-iops N] [--p99-us N]\n\
          \x20 viability  --platform cpu|gpu --dram-gb N --blk N [--sigma S] [--throughput-gbps N]\n\
          \x20 simulate   --blk N --read-pct N [--measure-us N] [--p-bch P] [--ch-bw GBps]\n\
-         \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10] [--out DIR] [--quick]\n\
+         \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11] [--out DIR] [--quick]\n\
          \x20 config     --dump\n\
-         \x20 serve      [--shards N] [--queries N] [--artifacts DIR]"
+         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim]"
     );
 }
 
@@ -292,6 +292,7 @@ fn cmd_figures(args: &[String]) -> Result<(), String> {
         .flag("fig7", "MQSim-Next validation (slow)")
         .flag("fig8", "KV store")
         .flag("fig10", "ANN search")
+        .flag("fig11", "storage-backend tail-latency comparison")
         .flag("quick", "shorter Fig 7 simulation windows")
         .opt("out", "DIR", Some("results"), "CSV output directory");
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
@@ -316,6 +317,12 @@ fn cmd_figures(args: &[String]) -> Result<(), String> {
     }
     if all || p.flag("fig7") {
         for (id, t) in fivemin::figures::sim_figures(p.flag("quick")) {
+            fivemin::figures::emit(&out, id, &t).map_err(|e| e.to_string())?;
+            emitted += 1;
+        }
+    }
+    if all || p.flag("fig11") {
+        for (id, t) in fivemin::figures::backend_figures(p.flag("quick")) {
             fivemin::figures::emit(&out, id, &t).map_err(|e| e.to_string())?;
             emitted += 1;
         }
@@ -347,29 +354,46 @@ fn cmd_config(args: &[String]) -> Result<(), String> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<(), String> {
-    let spec = ArgSpec::new("serve", "run the two-stage ANN serving stack (PJRT)")
+    let spec = ArgSpec::new("serve", "run the two-stage ANN serving stack")
         .opt("shards", "N", Some("2"), "corpus shards (4096 vectors each)")
         .opt("queries", "N", Some("256"), "queries to issue")
-        .opt("artifacts", "DIR", None, "artifacts directory");
+        .opt("artifacts", "DIR", None, "artifacts directory")
+        .opt(
+            "backend",
+            "mem|model|sim",
+            Some("mem"),
+            "storage backend for promoted-vector fetches",
+        );
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
     let shards = p.usize("shards").map_err(|e| e.to_string())?.unwrap();
     let queries = p.usize("queries").map_err(|e| e.to_string())?.unwrap();
+    let backend = fivemin::storage::BackendSpec::parse(p.str("backend").unwrap(), 4096)
+        .map_err(|e| e.to_string())?;
     let dir = p
         .str("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(fivemin::runtime::default_artifacts_dir);
-    serve_demo(dir, shards, queries).map_err(|e| e.to_string())
+    serve_demo(dir, shards, queries, backend).map_err(|e| e.to_string())
 }
 
-fn serve_demo(dir: PathBuf, shards: usize, queries: usize) -> anyhow::Result<()> {
+fn serve_demo(
+    dir: PathBuf,
+    shards: usize,
+    queries: usize,
+    backend: fivemin::storage::BackendSpec,
+) -> anyhow::Result<()> {
     use fivemin::coordinator::batcher::BatchPolicy;
     use fivemin::coordinator::{Coordinator, ServingCorpus};
     use fivemin::util::rng::Rng;
     use std::sync::Arc;
 
     let corpus = Arc::new(ServingCorpus::synthetic(shards, 42));
-    println!("corpus: {} vectors across {shards} shard(s)", corpus.n);
-    let co = Coordinator::start(dir, corpus.clone(), BatchPolicy::default())?;
+    println!(
+        "corpus: {} vectors across {shards} shard(s); storage backend: {}",
+        corpus.n,
+        backend.kind().name()
+    );
+    let co = Coordinator::start(dir, corpus.clone(), BatchPolicy::default(), backend)?;
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
     let recvs: Vec<_> = (0..queries)
@@ -407,5 +431,27 @@ fn serve_demo(dir: PathBuf, shards: usize, queries: usize) -> anyhow::Result<()>
         fmt_secs(st.stage1_ns.percentile(0.5) / 1e9),
         fmt_secs(st.stage2_ns.percentile(0.5) / 1e9)
     );
+    println!(
+        "storage  : stall p50 {} p99 {} (device time per fetch burst)",
+        fmt_secs(st.storage_stall_ns.percentile(0.5) / 1e9),
+        fmt_secs(st.storage_stall_ns.percentile(0.99) / 1e9)
+    );
+    if let Some(snap) = &st.storage {
+        println!(
+            "backend  : {} — {} reads, device read p50 {} p99 {}",
+            snap.kind.name(),
+            snap.stats.reads,
+            fmt_secs(snap.stats.read_device_ns.percentile(0.5) / 1e9),
+            fmt_secs(snap.stats.read_device_ns.percentile(0.99) / 1e9)
+        );
+        if let Some(dev) = &snap.device {
+            println!(
+                "device   : {} IOPS (device time), {} host senses, {} LDPC escalations",
+                fmt_si(dev.read_iops()),
+                dev.host_senses,
+                dev.ldpc_escalations
+            );
+        }
+    }
     Ok(())
 }

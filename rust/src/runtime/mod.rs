@@ -1,39 +1,111 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the request path.
+//! Graph-execution runtime for the serving path.
 //!
-//! This is the only place the `xla` crate is touched. Python never runs at
-//! serving time: `make artifacts` lowers the Layer-2 JAX graphs (with the
-//! Layer-1 Pallas kernels inlined) to HLO *text*, and this module compiles
-//! them once via `PjRtClient` and caches the loaded executables.
+//! Two interchangeable engines execute the Layer-2 compute graphs behind
+//! one [`Runtime`] facade:
 //!
-//! HLO text — not serialized `HloModuleProto` — is the interchange format:
-//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids (see DESIGN.md and the aot.py docstring).
+//! * **native** (default) — [`native`]: pure-Rust reference
+//!   implementations of the graph entries, mirroring
+//!   `python/compile/model.py` op for op. Needs no artifacts and no
+//!   external runtime; this is what offline builds and CI run.
+//! * **pjrt** (`--features pjrt`) — loads the AOT-compiled HLO-text
+//!   artifacts produced by `python/compile/aot.py` and executes them via
+//!   `PjRtClient`. HLO text — not serialized `HloModuleProto` — is the
+//!   interchange format: jax ≥ 0.5 emits 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Callers see only [`Tensor`] values; nothing outside this module names
+//! an XLA type, which is what lets the whole serving stack (coordinator,
+//! examples, integration tests) run in environments without PJRT.
 
 pub mod artifacts;
+pub mod native;
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 pub use artifacts::{default_artifacts_dir, EntrySpec, ServeShapes, SERVE};
 
-/// A loaded artifact registry + PJRT CPU client.
+/// Host-side tensor passed to and returned from [`Runtime::execute`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    data: TensorData,
+    shape: Vec<usize>,
+}
+
+/// Element storage for [`Tensor`] (the graphs use only f32 and i32).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    /// f32 tensor of `shape` from a flat row-major vector.
+    pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { data: TensorData::F32(data), shape: shape.to_vec() })
+    }
+
+    /// i32 tensor of `shape` from a flat row-major vector.
+    pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { data: TensorData::I32(data), shape: shape.to_vec() })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor holds i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor holds f32, expected i32"),
+        }
+    }
+}
+
+enum Engine {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtEngine),
+}
+
+/// Entry registry + execution engine.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
+    engine: Engine,
     entries: HashMap<String, EntrySpec>,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
-    /// Open `artifacts/` (parse manifest.json; compile lazily on first use).
+    /// Open the runtime over `dir`.
+    ///
+    /// With `artifacts/manifest.json` present the manifest defines the
+    /// entry registry (and, under the `pjrt` feature, the executables);
+    /// without it the runtime falls back to the native engine with the
+    /// default serving entries, so the serving stack works out of the box.
     pub fn open(dir: &Path) -> Result<Self> {
         let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            return Self::open_native();
+        }
         let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+            .with_context(|| format!("reading {manifest_path:?}"))?;
         let manifest = Json::parse(&text).context("parsing manifest.json")?;
         if manifest.get(&["format"]).and_then(|v| v.as_str()) != Some("hlo-text") {
             bail!("unsupported artifact format (want hlo-text)");
@@ -46,8 +118,39 @@ impl Runtime {
         for (name, e) in obj {
             entries.insert(name.clone(), EntrySpec::from_json(name, e)?);
         }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Runtime { client, dir: dir.to_path_buf(), entries, executables: HashMap::new() })
+        Self::with_entries(dir, entries)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn with_entries(dir: &Path, entries: HashMap<String, EntrySpec>) -> Result<Self> {
+        let mut engine = pjrt::PjrtEngine::open(dir)?;
+        for e in entries.values() {
+            engine.register(&e.name, &e.file);
+        }
+        Ok(Runtime { engine: Engine::Pjrt(engine), entries })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn with_entries(_dir: &Path, entries: HashMap<String, EntrySpec>) -> Result<Self> {
+        Ok(Runtime { engine: Engine::Native, entries })
+    }
+
+    /// Native engine with the built-in entry registry (no artifacts).
+    pub fn open_native() -> Result<Self> {
+        let entries = native::default_entries()
+            .into_iter()
+            .map(|e| (e.name.clone(), e))
+            .collect();
+        Ok(Runtime { engine: Engine::Native, entries })
+    }
+
+    /// Which engine executes graphs: `"native"` or `"pjrt"`.
+    pub fn engine_name(&self) -> &'static str {
+        match self.engine {
+            Engine::Native => "native",
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(_) => "pjrt",
+        }
     }
 
     /// Entry names available in the registry.
@@ -59,72 +162,142 @@ impl Runtime {
         self.entries.get(name)
     }
 
-    /// Compile (once) and return the executable for `name`.
-    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.executables.contains_key(name) {
-            let spec = self
-                .entries
-                .get(name)
-                .ok_or_else(|| anyhow!("unknown artifact entry '{name}'"))?;
-            let path = self.dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("loading {path:?}: {e}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling '{name}': {e}"))?;
-            self.executables.insert(name.to_string(), exe);
-        }
-        Ok(&self.executables[name])
-    }
-
-    /// Execute an entry; inputs are validated against the manifest arity.
-    /// All entries were lowered with return_tuple=True, so the result is a
-    /// tuple literal flattened into a Vec. Accepts owned literals or
-    /// references (avoid cloning multi-MB buffers on the hot path).
-    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
-        &mut self,
-        name: &str,
-        inputs: &[L],
-    ) -> Result<Vec<xla::Literal>> {
-        let n_inputs = self
+    /// Execute an entry; inputs are validated against the registry arity.
+    pub fn execute(&mut self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
             .entries
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact entry '{name}'"))?
-            .input_shapes
-            .len();
-        if inputs.len() != n_inputs {
-            bail!("'{name}' expects {n_inputs} inputs, got {}", inputs.len());
+            .ok_or_else(|| anyhow!("unknown artifact entry '{name}'"))?;
+        if inputs.len() != spec.input_shapes.len() {
+            bail!(
+                "'{name}' expects {} inputs, got {}",
+                spec.input_shapes.len(),
+                inputs.len()
+            );
         }
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<L>(inputs)
-            .map_err(|e| anyhow!("executing '{name}': {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching '{name}' result: {e}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("untupling '{name}': {e}"))
+        match &mut self.engine {
+            Engine::Native => native::execute(name, inputs),
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(p) => p.execute(name, inputs),
+        }
     }
 
-    /// f32 literal of the given shape from a flat row-major slice.
-    pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-        let n: usize = shape.iter().product();
-        if n != data.len() {
-            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+    /// f32 tensor of the given shape from a flat row-major slice.
+    /// (Name kept from the XLA-literal era; callers did not change.)
+    pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Tensor> {
+        Tensor::from_f32(data.to_vec(), shape)
+    }
+
+    pub fn to_vec_f32(t: &Tensor) -> Result<Vec<f32>> {
+        Ok(t.as_f32()?.to_vec())
+    }
+
+    pub fn to_vec_i32(t: &Tensor) -> Result<Vec<i32>> {
+        Ok(t.as_i32()?.to_vec())
+    }
+}
+
+/// PJRT execution of the AOT artifacts (compiled only with `-F pjrt`).
+///
+/// Caveats vs the native engine: inputs must be f32; output dtype follows
+/// the registry convention (tuple slot 1 is the i32 index tensor, every
+/// other slot f32) rather than querying the literal; and output shapes are
+/// reported flat (`[n]`) since the hot-path callers consume flat vectors.
+/// A graph that breaks the slot convention needs this decoder extended.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{anyhow, bail, Result};
+
+    use super::Tensor;
+
+    pub struct PjrtEngine {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+        files: HashMap<String, String>,
+    }
+
+    impl PjrtEngine {
+        pub fn open(dir: &Path) -> Result<Self> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+            Ok(PjrtEngine {
+                client,
+                dir: dir.to_path_buf(),
+                executables: HashMap::new(),
+                files: HashMap::new(),
+            })
         }
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        xla::Literal::vec1(data)
+
+        /// Register the artifact file backing `name` (from the manifest).
+        pub fn register(&mut self, name: &str, file: &str) {
+            self.files.insert(name.to_string(), file.to_string());
+        }
+
+        fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.executables.contains_key(name) {
+                let file = self
+                    .files
+                    .get(name)
+                    .cloned()
+                    .unwrap_or_else(|| format!("{name}.hlo.txt"));
+                let path = self.dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("loading {path:?}: {e}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling '{name}': {e}"))?;
+                self.executables.insert(name.to_string(), exe);
+            }
+            Ok(&self.executables[name])
+        }
+
+        pub fn execute(&mut self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+            let lits = inputs
+                .iter()
+                .map(|t| to_literal(t))
+                .collect::<Result<Vec<_>>>()?;
+            let exe = self.executable(name)?;
+            let result = exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow!("executing '{name}': {e}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching '{name}' result: {e}"))?;
+            let parts = lit
+                .to_tuple()
+                .map_err(|e| anyhow!("untupling '{name}': {e}"))?;
+            // Entry outputs are (f32 scores, i32 indices) or (f32,) — dtype
+            // is positional across every graph in the registry.
+            let mut out = Vec::with_capacity(parts.len());
+            for (i, p) in parts.iter().enumerate() {
+                if i == 1 {
+                    let v = p.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?;
+                    let n = v.len();
+                    out.push(Tensor::from_i32(v, &[n])?);
+                } else {
+                    let v = p.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?;
+                    let n = v.len();
+                    out.push(Tensor::from_f32(v, &[n])?);
+                }
+            }
+            if out.is_empty() {
+                bail!("'{name}' returned no outputs");
+            }
+            Ok(out)
+        }
+    }
+
+    fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(t.as_f32()?)
             .reshape(&dims)
             .map_err(|e| anyhow!("reshape: {e}"))
-    }
-
-    pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))
-    }
-
-    pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
-        lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))
     }
 }
 
@@ -132,79 +305,79 @@ impl Runtime {
 mod tests {
     use super::*;
 
-    fn have_artifacts() -> bool {
-        default_artifacts_dir().join("manifest.json").exists()
-    }
-
     #[test]
-    fn manifest_entries_loaded() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let rt = Runtime::open(&default_artifacts_dir()).unwrap();
+    fn native_runtime_has_all_entries() {
+        let rt = Runtime::open_native().unwrap();
+        // Same registry aot.py emits, incl. the "model" two_stage alias.
         for name in ["reduced_score", "full_score", "two_stage", "breakeven_sweep", "model"] {
             assert!(rt.entry(name).is_some(), "missing entry {name}");
         }
         let spec = rt.entry("reduced_score").unwrap();
         assert_eq!(spec.input_shapes[0], vec![SERVE.batch, SERVE.reduced_dim]);
         assert_eq!(spec.input_shapes[1], vec![SERVE.shard, SERVE.reduced_dim]);
+        assert_eq!(rt.engine_name(), "native");
     }
 
     #[test]
-    fn literal_roundtrip() {
-        let l = Runtime::literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
-        assert_eq!(Runtime::to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    fn open_falls_back_to_native_without_artifacts() {
+        let rt = Runtime::open(Path::new("/nonexistent/artifacts")).unwrap();
+        assert_eq!(rt.engine_name(), "native");
+        assert!(rt.entry("full_score").is_some());
+    }
+
+    #[test]
+    fn tensor_roundtrip_and_shape_check() {
+        let t = Runtime::literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(Runtime::to_vec_f32(&t).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         assert!(Runtime::literal_f32(&[1.0], &[2, 3]).is_err());
+        assert!(Runtime::to_vec_i32(&t).is_err());
+    }
+
+    #[test]
+    fn execute_validates_arity() {
+        let mut rt = Runtime::open_native().unwrap();
+        let t = Runtime::literal_f32(&[0.0; 4], &[2, 2]).unwrap();
+        assert!(rt.execute("reduced_score", &[&t]).is_err());
+        assert!(rt.execute("nope", &[&t]).is_err());
     }
 
     #[test]
     fn breakeven_sweep_matches_rust_model() {
-        // The XLA-lowered Eq. 1 agrees with the native Rust implementation
-        // — an end-to-end cross-check of the analytical framework through
-        // an independent lowering path (jax -> HLO -> PJRT).
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let mut rt = Runtime::open(&default_artifacts_dir()).unwrap();
+        // The graph-lowered Eq. 1 agrees with the native Rust analytical
+        // implementation — a cross-check of the framework through an
+        // independent evaluation path.
+        let mut rt = Runtime::open_native().unwrap();
         let g = SERVE.sweep_grid;
         let fill = |v: f64| Runtime::literal_f32(&vec![v as f32; g], &[g]).unwrap();
-        let out = rt
-            .execute(
-                "breakeven_sweep",
-                &[
-                    fill(57.4e6), // iops_ssd
-                    fill(102.0),  // cost_ssd
-                    fill(4.0),    // cost_core
-                    fill(1e6),    // iops_core
-                    fill(1.0),                  // cost_dram_die
-                    fill(3e9),                  // bw_dram_die
-                    fill((3u64 << 30) as f64),  // cap_dram_die (3 GiB, as in Table III preset)
-                    fill(512.0),  // blk_bytes
-                ],
-            )
-            .unwrap();
+        let inputs = [
+            fill(57.4e6),              // iops_ssd
+            fill(102.0),               // cost_ssd
+            fill(4.0),                 // cost_core
+            fill(1e6),                 // iops_core
+            fill(1.0),                 // cost_dram_die
+            fill(3e9),                 // bw_dram_die
+            fill((3u64 << 30) as f64), // cap_dram_die (3 GiB, Table III)
+            fill(512.0),               // blk_bytes
+        ];
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let out = rt.execute("breakeven_sweep", &refs).unwrap();
         let tau = Runtime::to_vec_f32(&out[0]).unwrap();
         let p = crate::config::PlatformConfig::preset(crate::config::PlatformKind::CpuDdr);
-        let want = crate::model::economics::break_even_with_iops(&p, 102.0, 57.4e6, 512).total;
+        let want =
+            crate::model::economics::break_even_with_iops(&p, 102.0, 57.4e6, 512).total;
         for &t in &tau {
             assert!(
                 ((t as f64) - want).abs() / want < 1e-3,
-                "XLA {t} vs rust {want}"
+                "graph {t} vs rust {want}"
             );
         }
     }
 
     #[test]
-    fn two_stage_executes_with_manifest_shapes() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let mut rt = Runtime::open(&default_artifacts_dir()).unwrap();
+    fn two_stage_executes_with_registry_shapes() {
+        let mut rt = Runtime::open_native().unwrap();
         let spec = rt.entry("two_stage").unwrap().clone();
-        let inputs: Vec<xla::Literal> = spec
+        let inputs: Vec<Tensor> = spec
             .input_shapes
             .iter()
             .map(|s| {
@@ -213,7 +386,8 @@ mod tests {
                 Runtime::literal_f32(&data, s).unwrap()
             })
             .collect();
-        let out = rt.execute("two_stage", &inputs).unwrap();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let out = rt.execute("two_stage", &refs).unwrap();
         assert_eq!(out.len(), 2, "scores + indices");
         let scores = Runtime::to_vec_f32(&out[0]).unwrap();
         let idx = Runtime::to_vec_i32(&out[1]).unwrap();

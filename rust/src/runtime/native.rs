@@ -1,0 +1,309 @@
+//! Native Rust reference implementations of the AOT graph entries.
+//!
+//! Mirrors `python/compile/model.py` exactly — same operations, same f32
+//! arithmetic, same stable descending top-k tie-breaking as the argsort
+//! lowering — so the serving stack runs end-to-end without PJRT or the
+//! `artifacts/` directory. When the `pjrt` feature is enabled and the
+//! artifacts exist, the PJRT path executes the same math through the
+//! AOT-lowered HLO and this module serves as its cross-check.
+
+use anyhow::{bail, ensure, Result};
+
+use super::{EntrySpec, Tensor, SERVE};
+
+/// Entry registry used when no `artifacts/manifest.json` is present: the
+/// same names and pinned shapes `python/compile/aot.py` would emit.
+pub fn default_entries() -> Vec<EntrySpec> {
+    let f = |shapes: &[&[usize]]| -> (Vec<Vec<usize>>, Vec<String>) {
+        (
+            shapes.iter().map(|s| s.to_vec()).collect(),
+            shapes.iter().map(|_| "float32".to_string()).collect(),
+        )
+    };
+    let mut out = Vec::new();
+    let (shapes, dtypes) = f(&[
+        &[SERVE.batch, SERVE.reduced_dim],
+        &[SERVE.shard, SERVE.reduced_dim],
+    ]);
+    out.push(EntrySpec {
+        name: "reduced_score".into(),
+        file: String::new(),
+        input_shapes: shapes,
+        input_dtypes: dtypes,
+    });
+    let (shapes, dtypes) = f(&[
+        &[SERVE.batch, SERVE.full_dim],
+        &[SERVE.batch, SERVE.topk, SERVE.full_dim],
+    ]);
+    out.push(EntrySpec {
+        name: "full_score".into(),
+        file: String::new(),
+        input_shapes: shapes,
+        input_dtypes: dtypes,
+    });
+    // two_stage is pinned at the reduced test shapes aot.py uses; "model"
+    // is aot.py's canonical alias for the same fused graph.
+    let (shapes, dtypes) = f(&[&[8, 64], &[1024, 64], &[8, 256], &[1024, 256]]);
+    out.push(EntrySpec {
+        name: "two_stage".into(),
+        file: String::new(),
+        input_shapes: shapes.clone(),
+        input_dtypes: dtypes.clone(),
+    });
+    out.push(EntrySpec {
+        name: "model".into(),
+        file: String::new(),
+        input_shapes: shapes,
+        input_dtypes: dtypes,
+    });
+    let (shapes, dtypes) = f(&[&[SERVE.sweep_grid]; 8]);
+    out.push(EntrySpec {
+        name: "breakeven_sweep".into(),
+        file: String::new(),
+        input_shapes: shapes,
+        input_dtypes: dtypes,
+    });
+    out
+}
+
+/// Execute a named entry on the native engine.
+pub fn execute(name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    match name {
+        "reduced_score" => reduced_score(inputs),
+        "full_score" => full_score(inputs),
+        "two_stage" | "model" => two_stage(inputs),
+        "breakeven_sweep" => breakeven_sweep(inputs),
+        other => bail!("native engine has no entry '{other}'"),
+    }
+}
+
+/// Stable descending top-k of one score row: ties break toward the lower
+/// index, matching `jnp.argsort(-scores)`.
+fn topk_desc(scores: &[f32], k: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b as usize]
+            .total_cmp(&scores[a as usize])
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    let vals = idx.iter().map(|&i| scores[i as usize]).collect();
+    (vals, idx.into_iter().map(|i| i as i32).collect())
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Stage 1: inner-product scores of a query batch against one shard,
+/// returning the per-query top-K (scores desc, shard-local indices).
+fn reduced_score(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 2, "reduced_score expects 2 inputs");
+    let q = inputs[0];
+    let shard = inputs[1];
+    let (b, d) = (q.shape()[0], q.shape()[1]);
+    let n = shard.shape()[0];
+    ensure!(shard.shape()[1] == d, "query/shard dim mismatch");
+    let k = SERVE.topk.min(n);
+    let qd = q.as_f32()?;
+    let sd = shard.as_f32()?;
+    let mut vals = Vec::with_capacity(b * k);
+    let mut idx = Vec::with_capacity(b * k);
+    let mut scores = vec![0f32; n];
+    for qi in 0..b {
+        let qrow = &qd[qi * d..(qi + 1) * d];
+        for (j, s) in scores.iter_mut().enumerate() {
+            *s = dot(qrow, &sd[j * d..(j + 1) * d]);
+        }
+        let (v, i) = topk_desc(&scores, k);
+        vals.extend_from_slice(&v);
+        idx.extend_from_slice(&i);
+    }
+    Ok(vec![Tensor::from_f32(vals, &[b, k])?, Tensor::from_i32(idx, &[b, k])?])
+}
+
+/// Stage 2: re-rank each query's promoted candidates by full-dim score.
+/// Returns (scores desc, candidate-slot order).
+fn full_score(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 2, "full_score expects 2 inputs");
+    let q = inputs[0];
+    let cand = inputs[1];
+    let (b, d) = (q.shape()[0], q.shape()[1]);
+    ensure!(cand.shape()[0] == b && cand.shape()[2] == d, "candidate shape mismatch");
+    let k = cand.shape()[1];
+    let qd = q.as_f32()?;
+    let cd = cand.as_f32()?;
+    let mut vals = Vec::with_capacity(b * k);
+    let mut order = Vec::with_capacity(b * k);
+    let mut scores = vec![0f32; k];
+    for qi in 0..b {
+        let qrow = &qd[qi * d..(qi + 1) * d];
+        for (j, s) in scores.iter_mut().enumerate() {
+            let off = (qi * k + j) * d;
+            *s = dot(qrow, &cd[off..off + d]);
+        }
+        let (v, i) = topk_desc(&scores, k);
+        vals.extend_from_slice(&v);
+        order.extend_from_slice(&i);
+    }
+    Ok(vec![Tensor::from_f32(vals, &[b, k])?, Tensor::from_i32(order, &[b, k])?])
+}
+
+/// Fused two-stage search over an in-memory full corpus shard: reduced
+/// prune → gather → full re-rank, returning corpus indices.
+fn two_stage(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 4, "two_stage expects 4 inputs");
+    let (q_red, shard_red, q_full, shard_full) =
+        (inputs[0], inputs[1], inputs[2], inputs[3]);
+    let stage1 = reduced_score(&[q_red, shard_red])?;
+    let idx = stage1[1].as_i32()?;
+    let b = q_full.shape()[0];
+    let fd = q_full.shape()[1];
+    let k = stage1[1].shape()[1];
+    let sf = shard_full.as_f32()?;
+    let mut cand = vec![0f32; b * k * fd];
+    for qi in 0..b {
+        for j in 0..k {
+            let src = idx[qi * k + j] as usize * fd;
+            let dst = (qi * k + j) * fd;
+            cand[dst..dst + fd].copy_from_slice(&sf[src..src + fd]);
+        }
+    }
+    let cand_t = Tensor::from_f32(cand, &[b, k, fd])?;
+    let stage2 = full_score(&[q_full, &cand_t])?;
+    let order = stage2[1].as_i32()?;
+    let mut final_idx = Vec::with_capacity(b * k);
+    for qi in 0..b {
+        for j in 0..k {
+            final_idx.push(idx[qi * k + order[qi * k + j] as usize]);
+        }
+    }
+    Ok(vec![stage2[0].clone(), Tensor::from_i32(final_idx, &[b, k])?])
+}
+
+/// Vectorized Eq. 1 over a parameter grid (f32, like the XLA lowering):
+/// tau = (core + dram-bandwidth + ssd per-IO costs) / dram rent rate.
+fn breakeven_sweep(inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(inputs.len() == 8, "breakeven_sweep expects 8 inputs");
+    let g = inputs[0].shape()[0];
+    let mut cols = Vec::with_capacity(8);
+    for t in inputs {
+        ensure!(
+            t.shape().len() == 1 && t.shape()[0] == g,
+            "sweep inputs must share the grid shape"
+        );
+        cols.push(t.as_f32()?);
+    }
+    let (iops_ssd, cost_ssd, cost_core, iops_core) =
+        (cols[0], cols[1], cols[2], cols[3]);
+    let (cost_dram_die, bw_dram_die, cap_dram_die, blk_bytes) =
+        (cols[4], cols[5], cols[6], cols[7]);
+    let mut tau = Vec::with_capacity(g);
+    for i in 0..g {
+        let per_io = cost_core[i] / iops_core[i]
+            + blk_bytes[i] * cost_dram_die[i] / bw_dram_die[i]
+            + cost_ssd[i] / iops_ssd[i];
+        let rent_rate = blk_bytes[i] * cost_dram_die[i] / cap_dram_die[i];
+        tau.push(per_io / rent_rate);
+    }
+    Ok(vec![Tensor::from_f32(tau, &[g])?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_sorted_desc_with_stable_ties() {
+        let (v, i) = topk_desc(&[1.0, 3.0, 3.0, 2.0], 3);
+        assert_eq!(i, vec![1, 2, 3], "ties break toward the lower index");
+        assert_eq!(v, vec![3.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn two_stage_agrees_with_split_stages() {
+        // The fused graph must equal reduced_score → gather → full_score,
+        // which is exactly what the coordinator does around the SSD fetch.
+        let (b, n, rd, fd) = (8usize, 1024usize, 64usize, 256usize);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let gen = |len: usize, rng: &mut crate::util::rng::Rng| -> Vec<f32> {
+            (0..len).map(|_| rng.gaussian() as f32).collect()
+        };
+        let mut full = vec![0f32; n * fd];
+        for x in full.iter_mut() {
+            *x = rng.gaussian() as f32;
+        }
+        let mut red = vec![0f32; n * rd];
+        for v in 0..n {
+            red[v * rd..(v + 1) * rd].copy_from_slice(&full[v * fd..v * fd + rd]);
+        }
+        let qf = gen(b * fd, &mut rng);
+        let mut qr = vec![0f32; b * rd];
+        for qi in 0..b {
+            qr[qi * rd..(qi + 1) * rd].copy_from_slice(&qf[qi * fd..qi * fd + rd]);
+        }
+        let t_qr = Tensor::from_f32(qr, &[b, rd]).unwrap();
+        let t_red = Tensor::from_f32(red, &[n, rd]).unwrap();
+        let t_qf = Tensor::from_f32(qf, &[b, fd]).unwrap();
+        let t_full = Tensor::from_f32(full, &[n, fd]).unwrap();
+        let fused = execute("two_stage", &[&t_qr, &t_red, &t_qf, &t_full]).unwrap();
+
+        let s1 = execute("reduced_score", &[&t_qr, &t_red]).unwrap();
+        let idx = s1[1].as_i32().unwrap();
+        let k = s1[1].shape()[1];
+        let sf = t_full.as_f32().unwrap();
+        let mut cand = vec![0f32; b * k * fd];
+        for qi in 0..b {
+            for j in 0..k {
+                let src = idx[qi * k + j] as usize * fd;
+                let dst = (qi * k + j) * fd;
+                cand[dst..dst + fd].copy_from_slice(&sf[src..src + fd]);
+            }
+        }
+        let t_cand = Tensor::from_f32(cand, &[b, k, fd]).unwrap();
+        let s2 = execute("full_score", &[&t_qf, &t_cand]).unwrap();
+        let order = s2[1].as_i32().unwrap();
+        let split_idx: Vec<i32> = (0..b * k)
+            .map(|p| idx[(p / k) * k + order[p] as usize])
+            .collect();
+        assert_eq!(fused[1].as_i32().unwrap(), &split_idx[..]);
+        assert_eq!(fused[0].as_f32().unwrap(), s2[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn reduced_score_finds_planted_neighbor() {
+        // Plant an exact duplicate of each query in the shard; it must win.
+        let d = SERVE.reduced_dim;
+        let n = SERVE.shard;
+        let b = SERVE.batch;
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut shard = vec![0f32; n * d];
+        for x in shard.iter_mut() {
+            *x = rng.gaussian() as f32 * 0.1;
+        }
+        // Plant unit-scale duplicates in a low-energy shard: the self
+        // inner product (~d) towers over any cross product (~sqrt(d)).
+        let mut q = vec![0f32; b * d];
+        for qi in 0..b {
+            let target = qi * 17 + 3;
+            for i in 0..d {
+                let v = rng.gaussian() as f32;
+                shard[target * d + i] = v;
+                q[qi * d + i] = v;
+            }
+        }
+        let t_q = Tensor::from_f32(q, &[b, d]).unwrap();
+        let t_s = Tensor::from_f32(shard, &[n, d]).unwrap();
+        let out = execute("reduced_score", &[&t_q, &t_s]).unwrap();
+        let idx = out[1].as_i32().unwrap();
+        let k = out[1].shape()[1];
+        for qi in 0..b {
+            assert_eq!(idx[qi * k] as usize, qi * 17 + 3, "query {qi}");
+        }
+    }
+}

@@ -176,7 +176,7 @@ enum Ev {
     XferDone(u32, u32),
     ProgDone(u32, u32),
     EraseDone(u32, u32),
-    WriteAck(u32),        // host write id acked after buffer latency
+    WriteAck(u32, Ns),    // host write id acked after buffer latency (id, submit_ns)
     HostDone(u32, Ns),    // host read id completes (after ECC/host fixed lat)
 }
 
@@ -212,6 +212,8 @@ pub struct SsdSim {
     stalled_writes: VecDeque<(u32, Ns)>,
     next_host_id: u32,
     measuring: bool,
+    /// Virtual time at which the current measurement window began.
+    measure_start: Ns,
     /// round-robin plane cursor for write striping
     write_rr: u64,
 }
@@ -250,6 +252,7 @@ impl SsdSim {
             stalled_writes: VecDeque::new(),
             next_host_id: 0,
             measuring: false,
+            measure_start: 0,
             write_rr: 0,
         }
     }
@@ -347,7 +350,7 @@ impl SsdSim {
             }
             // buffered ack
             let lat = self.q.now().saturating_sub(at) + ns(self.prm.t_wbuf);
-            self.q.after(ns(self.prm.t_wbuf), Ev::WriteAck(id));
+            self.q.after(ns(self.prm.t_wbuf), Ev::WriteAck(id, at));
             if self.measuring {
                 self.stats.write_lat.push(lat as f64);
             }
@@ -674,8 +677,8 @@ impl SsdSim {
                 self.maybe_start_gc(ch, pic);
                 self.arbitrate(ch);
             }
-            Ev::WriteAck(id) => {
-                done.push((id, 0));
+            Ev::WriteAck(id, submit_ns) => {
+                done.push((id, self.q.now().saturating_sub(submit_ns)));
                 if self.measuring {
                     self.stats.writes_done += 1;
                 }
@@ -691,6 +694,52 @@ impl SsdSim {
             }
         }
         done
+    }
+
+    // -- open-loop driving (the storage::SimBackend interface) ---------------
+
+    /// Submit one host op open-loop; returns the host id that
+    /// [`SsdSim::drain_inflight`] completions refer to. The caller owns
+    /// pacing: submit a burst, then drain.
+    pub fn open_loop_submit(&mut self, req: IoReq) -> u32 {
+        let id = self.next_host_id;
+        self.submit(req, true);
+        id
+    }
+
+    /// Process events until every in-flight host op has completed. Returns
+    /// `(host id, device latency ns)` pairs in completion order — read
+    /// latency is the full submit→transfer-done path, write latency the
+    /// buffered-ack path.
+    pub fn drain_inflight(&mut self) -> Vec<(u32, Ns)> {
+        let mut done = Vec::new();
+        while self.in_flight > 0 {
+            let Some((_, ev)) = self.q.pop() else { break };
+            let completed = self.handle(ev);
+            self.in_flight -= completed.len() as u32;
+            done.extend(completed);
+        }
+        done
+    }
+
+    /// Current virtual time (ns since simulation start).
+    pub fn now_ns(&self) -> Ns {
+        self.q.now()
+    }
+
+    /// Start (or restart) stats accumulation at the current virtual time.
+    pub fn begin_measurement(&mut self) {
+        self.measuring = true;
+        self.measure_start = self.q.now();
+        self.stats = SimStats::new();
+    }
+
+    /// Stats snapshot with `window_ns` set to the measured virtual span
+    /// (so `iops()` etc. report device-time rates).
+    pub fn stats_snapshot(&self) -> SimStats {
+        let mut s = self.stats.clone();
+        s.window_ns = self.q.now().saturating_sub(self.measure_start).max(1);
+        s
     }
 
     /// Run closed-loop: keep `qd` ops outstanding from `src`, warm up for
@@ -873,6 +922,43 @@ mod tests {
             fast / 1e6,
             slow / 1e6
         );
+    }
+
+    #[test]
+    fn open_loop_burst_completes_all() {
+        let cfg = mini_slc();
+        let mut prm = SimParams::default_for(512);
+        prm.blocks_per_plane = 12;
+        prm.pages_per_block = 8;
+        let mut sim = SsdSim::new(cfg, prm);
+        let mut gen = TraceGen::new(TraceCfg {
+            n_blocks: sim.logical_blocks(),
+            block_bytes: 512,
+            read_frac: 0.9,
+            addr: AddressDist::Uniform,
+            seed: 11,
+        });
+        sim.begin_measurement();
+        let mut ids = Vec::new();
+        for req in gen.closed_loop(256) {
+            ids.push(sim.open_loop_submit(req));
+        }
+        let done = sim.drain_inflight();
+        assert_eq!(done.len(), 256, "every submitted op completes");
+        let mut seen: Vec<u32> = done.iter().map(|d| d.0).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, ids, "completions cover exactly the submitted ids");
+        assert!(done.iter().all(|&(_, lat)| lat > 0), "latencies populated");
+        let s = sim.stats_snapshot();
+        assert_eq!(s.reads_done + s.writes_done, 256);
+        assert!(s.window_ns > 0 && sim.now_ns() > 5_000);
+        // a second burst continues on the same (monotonic) virtual clock
+        let t1 = sim.now_ns();
+        for req in gen.closed_loop(32) {
+            sim.open_loop_submit(req);
+        }
+        assert_eq!(sim.drain_inflight().len(), 32);
+        assert!(sim.now_ns() > t1);
     }
 
     #[test]

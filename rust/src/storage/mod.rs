@@ -1,0 +1,333 @@
+//! Pluggable storage-backend layer: the seam between the serving engines
+//! and the flash tier.
+//!
+//! The paper's break-even collapse (minutes → seconds) only matters if
+//! NAND flash can sit on the *request path* as an active data tier. This
+//! module is that path: every block the KV engine or the ANN coordinator
+//! touches is submitted to a [`StorageBackend`], which decides what the
+//! I/O *costs* — instantly (DRAM-resident baseline), analytically (Eq. 2
+//! peak-IOPS service + burst queueing), or via the full MQSim-Next
+//! discrete-event simulator running in virtual time.
+//!
+//! Design: the backend is a **timing and accounting plane**, not a data
+//! plane. Payloads stay in the in-memory structures that already hold them
+//! (`kvstore::cuckoo::MemStore` buckets, `coordinator::ServingCorpus`
+//! vectors); backends receive block addresses and return per-request
+//! device latencies. That split is what makes the backend-equivalence
+//! guarantee trivial to uphold — the same workload returns *identical
+//! results* on every backend and differs only in reported timing — and it
+//! mirrors how MQSim-class simulators model devices (requests carry
+//! addresses and sizes, never contents).
+//!
+//! Submission is async-style: [`StorageBackend::submit`] queues a batch
+//! that arrives simultaneously (burst semantics — exactly what a batched
+//! stage-2 fetch or a WAL commit issues), [`StorageBackend::poll`] drains
+//! completions non-blocking, [`StorageBackend::wait_all`] barriers. Use
+//! [`submit_with`] for per-request completion callbacks.
+//!
+//! Three implementations ship today:
+//!
+//! * [`MemBackend`] — completes every request at DRAM-class latency;
+//!   today's (pre-PR) behavior, and the control arm of equivalence tests.
+//! * [`ModelBackend`] — the Sec III/IV analytic path: deterministic
+//!   per-channel service time `S = N_CH / IOPS_peak` from
+//!   [`crate::model::ssd::ssd_peak_iops`], per-burst M/D/1-style queueing,
+//!   `τ_sense` floor.
+//! * [`SimBackend`] — a worker thread driving [`crate::sim::SsdSim`] in
+//!   virtual time (as fast as possible, or paced to wall clock), with the
+//!   full device-level [`SimStats`] exposed.
+//!
+//! Future backends (io_uring against a real device, sharded multi-device
+//! fan-out) plug in at this trait; see ROADMAP.md.
+
+pub mod mem;
+pub mod model;
+pub mod sim;
+
+use std::ops::Range;
+
+use anyhow::{bail, Result};
+
+use crate::config::{IoMix, NandKind, SsdConfig};
+use crate::sim::{SimParams, SimStats};
+use crate::util::stats::LatencyHist;
+
+pub use mem::MemBackend;
+pub use model::ModelBackend;
+pub use sim::{Pace, SimBackend};
+
+/// Block-level operation kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoOp {
+    Read,
+    Write,
+}
+
+/// One block-granular request. `lba` is in units of the backend's block
+/// size (KV bucket index, ANN vector id, WAL log block, …).
+#[derive(Clone, Copy, Debug)]
+pub struct IoRequest {
+    pub op: IoOp,
+    pub lba: u64,
+}
+
+impl IoRequest {
+    pub fn read(lba: u64) -> Self {
+        IoRequest { op: IoOp::Read, lba }
+    }
+    pub fn write(lba: u64) -> Self {
+        IoRequest { op: IoOp::Write, lba }
+    }
+}
+
+/// Completion record for one submitted request.
+#[derive(Clone, Copy, Debug)]
+pub struct IoCompletion {
+    /// Id assigned by [`StorageBackend::submit`] (monotonic per backend).
+    pub id: u64,
+    pub op: IoOp,
+    pub lba: u64,
+    /// Device-time latency in (virtual) nanoseconds from submission to
+    /// completion: queueing + service for reads, buffered-ack for writes.
+    pub device_ns: u64,
+}
+
+/// Cumulative per-backend traffic statistics.
+#[derive(Clone, Debug)]
+pub struct BackendStats {
+    pub reads: u64,
+    pub writes: u64,
+    /// Per-read device latency distribution (ns).
+    pub read_device_ns: LatencyHist,
+    /// Per-write (ack) device latency distribution (ns).
+    pub write_device_ns: LatencyHist,
+    /// Virtual device time spanned by the traffic so far (ns).
+    pub virtual_ns: u64,
+}
+
+impl BackendStats {
+    pub fn new() -> Self {
+        BackendStats {
+            reads: 0,
+            writes: 0,
+            read_device_ns: LatencyHist::for_latency_ns(),
+            write_device_ns: LatencyHist::for_latency_ns(),
+            virtual_ns: 0,
+        }
+    }
+
+    pub fn record(&mut self, c: &IoCompletion) {
+        match c.op {
+            IoOp::Read => {
+                self.reads += 1;
+                self.read_device_ns.push(c.device_ns as f64);
+            }
+            IoOp::Write => {
+                self.writes += 1;
+                self.write_device_ns.push(c.device_ns as f64);
+            }
+        }
+    }
+
+    /// Read throughput over the virtual span (device-time IOPS).
+    pub fn read_iops(&self) -> f64 {
+        if self.virtual_ns == 0 {
+            return 0.0;
+        }
+        self.reads as f64 * 1e9 / self.virtual_ns as f64
+    }
+}
+
+impl Default for BackendStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The pluggable device interface: batched submit, non-blocking poll,
+/// barrier wait. Implementations are `Send` so a serving worker can own
+/// one on its thread.
+pub trait StorageBackend: Send {
+    fn kind(&self) -> BackendKind;
+
+    /// Queue a batch of requests; all requests in one call arrive at the
+    /// same (virtual) instant. Returns the assigned completion ids, in
+    /// request order.
+    fn submit(&mut self, reqs: &[IoRequest]) -> Range<u64>;
+
+    /// Completions that are ready now, without blocking.
+    fn poll(&mut self) -> Vec<IoCompletion>;
+
+    /// Block until every outstanding request has completed; returns all
+    /// completions not yet drained by [`StorageBackend::poll`].
+    fn wait_all(&mut self) -> Vec<IoCompletion>;
+
+    /// Cumulative traffic statistics.
+    fn stats(&self) -> BackendStats;
+
+    /// Device-level statistics, for backends with a device model behind
+    /// them ([`SimBackend`] reports full MQSim-Next counters).
+    fn device_stats(&self) -> Option<SimStats> {
+        None
+    }
+}
+
+/// Submit `reqs` and invoke `cb` once per completion (after all previously
+/// outstanding requests, if any, have also completed).
+pub fn submit_with<F: FnMut(IoCompletion)>(
+    backend: &mut dyn StorageBackend,
+    reqs: &[IoRequest],
+    mut cb: F,
+) {
+    backend.submit(reqs);
+    for c in backend.wait_all() {
+        cb(c);
+    }
+}
+
+/// Convenience: submit reads for `lbas` and wait for the batch.
+pub fn read_blocks(backend: &mut dyn StorageBackend, lbas: &[u64]) -> Vec<IoCompletion> {
+    let reqs: Vec<IoRequest> = lbas.iter().map(|&l| IoRequest::read(l)).collect();
+    backend.submit(&reqs);
+    backend.wait_all()
+}
+
+/// Which backend implementation serves the traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Mem,
+    Model,
+    Sim,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Mem => "mem",
+            BackendKind::Model => "model",
+            BackendKind::Sim => "sim",
+        }
+    }
+}
+
+/// Buildable description of a backend — `Clone + Send`, so a router can
+/// hand each serving worker its own instance.
+#[derive(Clone, Debug)]
+pub enum BackendSpec {
+    Mem,
+    Model {
+        cfg: SsdConfig,
+        l_blk: u32,
+        mix: IoMix,
+    },
+    Sim {
+        cfg: SsdConfig,
+        prm: SimParams,
+        pace: Pace,
+    },
+}
+
+impl BackendSpec {
+    /// Parse a `--backend` CLI value (`mem` | `model` | `sim`) with the
+    /// paper-default Storage-Next SLC device. `l_blk` is the block size
+    /// the caller serves (512 for KV buckets, 4096 for full ANN vectors).
+    pub fn parse(name: &str, l_blk: u32) -> Result<Self> {
+        match name {
+            "mem" => Ok(BackendSpec::Mem),
+            "model" => Ok(BackendSpec::Model {
+                cfg: SsdConfig::storage_next(NandKind::Slc),
+                l_blk,
+                mix: IoMix::paper_default(),
+            }),
+            "sim" => {
+                // Scaled-down channel count keeps FTL preconditioning fast
+                // while preserving per-channel contention behavior.
+                let mut cfg = SsdConfig::storage_next(NandKind::Slc);
+                cfg.n_ch = 4;
+                Ok(BackendSpec::Sim {
+                    cfg,
+                    prm: SimParams::default_for(l_blk),
+                    pace: Pace::Afap,
+                })
+            }
+            other => bail!("unknown storage backend '{other}' (want mem|model|sim)"),
+        }
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            BackendSpec::Mem => BackendKind::Mem,
+            BackendSpec::Model { .. } => BackendKind::Model,
+            BackendSpec::Sim { .. } => BackendKind::Sim,
+        }
+    }
+
+    /// Instantiate the backend (spawns the device worker for `sim`).
+    pub fn build(&self) -> Box<dyn StorageBackend> {
+        match self {
+            BackendSpec::Mem => Box::new(MemBackend::new()),
+            BackendSpec::Model { cfg, l_blk, mix } => {
+                Box::new(ModelBackend::new(cfg.clone(), *l_blk, *mix))
+            }
+            BackendSpec::Sim { cfg, prm, pace } => {
+                Box::new(SimBackend::spawn(cfg.clone(), prm.clone(), *pace))
+            }
+        }
+    }
+}
+
+/// Snapshot of a backend's state, cheap enough to publish per batch into
+/// serving stats ([`crate::coordinator::ServeStats`]).
+#[derive(Clone, Debug)]
+pub struct StorageSnapshot {
+    pub kind: BackendKind,
+    pub stats: BackendStats,
+    pub device: Option<SimStats>,
+}
+
+impl StorageSnapshot {
+    pub fn capture(backend: &dyn StorageBackend) -> Self {
+        StorageSnapshot {
+            kind: backend.kind(),
+            stats: backend.stats(),
+            device: backend.device_stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_builds_all_kinds() {
+        for name in ["mem", "model"] {
+            let spec = BackendSpec::parse(name, 512).unwrap();
+            let b = spec.build();
+            assert_eq!(b.kind().name(), name);
+        }
+        assert!(BackendSpec::parse("disk", 512).is_err());
+    }
+
+    #[test]
+    fn callback_helper_fires_per_request() {
+        let mut b = MemBackend::new();
+        let reqs = [IoRequest::read(1), IoRequest::write(2), IoRequest::read(3)];
+        let mut seen = Vec::new();
+        submit_with(&mut b, &reqs, |c| seen.push((c.id, c.op, c.lba)));
+        assert_eq!(seen.len(), 3);
+        assert_eq!(seen[0], (0, IoOp::Read, 1));
+        assert_eq!(seen[1], (1, IoOp::Write, 2));
+        assert_eq!(seen[2], (2, IoOp::Read, 3));
+    }
+
+    #[test]
+    fn read_blocks_helper_counts() {
+        let mut b = MemBackend::new();
+        let done = read_blocks(&mut b, &[5, 6, 7, 8]);
+        assert_eq!(done.len(), 4);
+        let st = b.stats();
+        assert_eq!(st.reads, 4);
+        assert_eq!(st.writes, 0);
+    }
+}

@@ -4,7 +4,7 @@
 //! generated `--help`. Each subcommand in `main.rs` declares an `ArgSpec`.
 
 use std::collections::BTreeMap;
-use std::fmt::Write as _;
+use std::fmt::{self, Write as _};
 
 #[derive(Clone, Debug)]
 pub struct ArgSpec {
@@ -28,17 +28,28 @@ pub struct Parsed {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     UnknownOption(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value} ({why})")]
     InvalidValue { key: String, value: String, why: String },
-    #[error("help requested")]
     Help,
 }
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::UnknownOption(key) => write!(f, "unknown option --{key}"),
+            CliError::MissingValue(key) => write!(f, "option --{key} requires a value"),
+            CliError::InvalidValue { key, value, why } => {
+                write!(f, "invalid value for --{key}: {value} ({why})")
+            }
+            CliError::Help => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl ArgSpec {
     pub fn new(name: &'static str, about: &'static str) -> Self {

@@ -1,0 +1,146 @@
+//! Backend-equivalence guarantee: the same KV and ANN workloads replayed
+//! through every storage backend return *identical results* (keys, values,
+//! ids, scores) and differ only in reported timing. This is the contract
+//! that makes the storage layer a pure timing/accounting plane — see the
+//! `fivemin::storage` module docs.
+
+use std::sync::Arc;
+
+use fivemin::config::{NandKind, SsdConfig};
+use fivemin::coordinator::batcher::BatchPolicy;
+use fivemin::coordinator::{Coordinator, ServingCorpus};
+use fivemin::kvstore::{BackedStore, CuckooParams, KvEngine, MemStore};
+use fivemin::runtime::default_artifacts_dir;
+use fivemin::sim::SimParams;
+use fivemin::storage::{BackendSpec, Pace};
+use fivemin::util::rng::Rng;
+
+/// Sim backend with a small device geometry so tests run in seconds.
+fn small_sim_spec(l_blk: u32) -> BackendSpec {
+    let mut cfg = SsdConfig::storage_next(NandKind::Slc);
+    cfg.n_ch = 2;
+    let mut prm = SimParams::default_for(l_blk);
+    prm.blocks_per_plane = 8;
+    prm.pages_per_block = 8;
+    BackendSpec::Sim { cfg, prm, pace: Pace::Afap }
+}
+
+fn backends(l_blk: u32) -> Vec<BackendSpec> {
+    vec![
+        BackendSpec::Mem,
+        BackendSpec::parse("model", l_blk).unwrap(),
+        small_sim_spec(l_blk),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// KV engine: GET results must match across backends; timing must not.
+// ---------------------------------------------------------------------------
+
+fn run_kv_workload(spec: &BackendSpec) -> (Vec<Option<u64>>, u64, f64) {
+    let n_items = 3_000u64;
+    let p = CuckooParams::for_capacity(n_items, 0.7, 512, 64);
+    let store = BackedStore::new(
+        MemStore::new(p.n_buckets, p.slots_per_bucket),
+        spec.build(),
+    );
+    // tiny cache so most GETs reach the block store
+    let mut e = KvEngine::new(p, store, 64, 128);
+    for k in 1..=n_items {
+        e.put(k, k.wrapping_mul(0x9E37_79B9));
+    }
+    e.flush();
+    let mut rng = Rng::new(1234);
+    let mut results = Vec::new();
+    for _ in 0..2_000 {
+        let key = 1 + rng.below(n_items + 500); // some misses
+        results.push(e.get(key));
+    }
+    let snap = e.store.snapshot();
+    let reads = snap.stats.reads;
+    let read_p50 = snap.stats.read_device_ns.percentile(0.5);
+    (results, reads, read_p50)
+}
+
+#[test]
+fn kv_results_identical_across_backends_timing_differs() {
+    let runs: Vec<_> = backends(512).iter().map(run_kv_workload).collect();
+    let (mem_res, mem_reads, mem_p50) = &runs[0];
+    for (i, (res, reads, _)) in runs.iter().enumerate().skip(1) {
+        assert_eq!(res, mem_res, "backend #{i} returned different values");
+        assert_eq!(reads, mem_reads, "same workload => same I/O count");
+    }
+    // timing differs: device backends are orders of magnitude slower than
+    // the DRAM-class mem backend (SLC sensing alone is 5us vs 100ns)
+    let (_, _, model_p50) = &runs[1];
+    let (_, _, sim_p50) = &runs[2];
+    assert!(
+        *model_p50 > 10.0 * mem_p50,
+        "model p50 {model_p50}ns vs mem {mem_p50}ns"
+    );
+    assert!(
+        *sim_p50 > 10.0 * mem_p50,
+        "sim p50 {sim_p50}ns vs mem {mem_p50}ns"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// ANN serving: per-query ids/scores must match across backends.
+// ---------------------------------------------------------------------------
+
+fn run_ann_workload(spec: BackendSpec, corpus: &Arc<ServingCorpus>) -> Vec<(Vec<u32>, Vec<f32>)> {
+    let co = Coordinator::start(
+        default_artifacts_dir(),
+        corpus.clone(),
+        BatchPolicy::default(),
+        spec,
+    )
+    .unwrap();
+    let mut rng = Rng::new(77);
+    let mut out = Vec::new();
+    // sequential queries: each batch holds exactly one query, so results
+    // are independent of batch-timing nondeterminism
+    for _ in 0..6 {
+        let q = corpus.query_near(rng.below(corpus.n as u64) as usize, 0.02, &mut rng);
+        let res = co.query(q).unwrap();
+        out.push((res.ids, res.scores));
+    }
+    out
+}
+
+#[test]
+fn ann_results_identical_across_backends() {
+    let corpus = Arc::new(ServingCorpus::synthetic(1, 55));
+    let mut all = Vec::new();
+    for spec in backends(4096) {
+        all.push(run_ann_workload(spec, &corpus));
+    }
+    assert_eq!(all[0], all[1], "model backend changed ANN answers");
+    assert_eq!(all[0], all[2], "sim backend changed ANN answers");
+}
+
+#[test]
+fn sim_backend_reports_device_stats_for_serving() {
+    let corpus = Arc::new(ServingCorpus::synthetic(1, 56));
+    let co = Coordinator::start(
+        default_artifacts_dir(),
+        corpus.clone(),
+        BatchPolicy::default(),
+        small_sim_spec(4096),
+    )
+    .unwrap();
+    let mut rng = Rng::new(57);
+    for _ in 0..3 {
+        let q = corpus.query_near(rng.below(corpus.n as u64) as usize, 0.02, &mut rng);
+        co.query(q).unwrap();
+    }
+    let st = co.stats();
+    let snap = st.storage.expect("snapshot");
+    let dev = snap.device.expect("sim backend exposes device stats");
+    assert_eq!(dev.reads_done, snap.stats.reads, "device saw every fetch");
+    assert!(dev.read_lat.percentile(0.5) >= 5_000.0, "SLC sense floor");
+    assert!(
+        st.storage_stall_ns.percentile(0.5) >= 5_000.0,
+        "serving stats surface the device stall"
+    );
+}

@@ -1,6 +1,9 @@
-//! End-to-end serving path: coordinator → batcher → PJRT execution of the
-//! AOT two-stage graphs (the Layer-1 Pallas kernels inlined in the HLO).
-//! Requires `make artifacts`.
+//! End-to-end serving path: coordinator → batcher → two-stage graph
+//! execution → storage backend.
+//!
+//! Runs on the native graph engine (no artifacts needed); when
+//! `artifacts/manifest.json` exists and the crate is built with
+//! `--features pjrt`, the same tests exercise the PJRT path.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -9,30 +12,34 @@ use std::time::Duration;
 use fivemin::coordinator::batcher::BatchPolicy;
 use fivemin::coordinator::{Coordinator, Router, ServingCorpus};
 use fivemin::runtime::{default_artifacts_dir, SERVE};
+use fivemin::storage::BackendSpec;
 use fivemin::util::rng::Rng;
 
-fn artifacts() -> Option<PathBuf> {
-    let d = default_artifacts_dir();
-    if d.join("manifest.json").exists() {
-        Some(d)
-    } else {
-        eprintln!("skipping: run `make artifacts` first");
-        None
-    }
+fn artifacts() -> PathBuf {
+    // Missing artifacts fall back to the native engine inside Runtime.
+    default_artifacts_dir()
+}
+
+fn start(corpus: &Arc<ServingCorpus>, policy: BatchPolicy) -> Coordinator {
+    Coordinator::start(artifacts(), corpus.clone(), policy, BackendSpec::Mem).unwrap()
 }
 
 #[test]
 fn coordinator_answers_with_high_recall() {
-    let Some(dir) = artifacts() else { return };
     let corpus = Arc::new(ServingCorpus::synthetic(2, 11));
-    let mut co = Coordinator::start(dir, corpus.clone(), BatchPolicy::default()).unwrap();
+    let mut co = start(&corpus, BatchPolicy::default());
     let mut rng = Rng::new(3);
     let trials = 64;
+    // concurrent submission: queries share batches, amortizing the scan
+    let pending: Vec<_> = (0..trials)
+        .map(|_| {
+            let target = rng.below(corpus.n as u64) as usize;
+            (target, co.submit(corpus.query_near(target, 0.02, &mut rng)))
+        })
+        .collect();
     let mut top1_hits = 0;
-    for _ in 0..trials {
-        let target = rng.below(corpus.n as u64) as usize;
-        let q = corpus.query_near(target, 0.02, &mut rng);
-        let res = co.query(q).unwrap();
+    for (target, rx) in pending {
+        let res = rx.recv().unwrap().unwrap();
         assert_eq!(res.ids.len(), SERVE.topk);
         // scores sorted best-first
         assert!(res.scores.windows(2).all(|w| w[0] >= w[1] - 1e-5));
@@ -45,15 +52,15 @@ fn coordinator_answers_with_high_recall() {
     let st = co.stats();
     assert_eq!(st.queries, trials);
     assert!(st.batches >= 1);
+    assert!(st.storage.is_some(), "backend snapshot published");
     co.stop();
 }
 
 #[test]
 fn batching_amortizes_latency() {
-    let Some(dir) = artifacts() else { return };
     let corpus = Arc::new(ServingCorpus::synthetic(1, 13));
     let policy = BatchPolicy { max_batch: SERVE.batch, max_wait: Duration::from_millis(5) };
-    let co = Coordinator::start(dir, corpus.clone(), policy).unwrap();
+    let co = start(&corpus, policy);
     let mut rng = Rng::new(5);
     // fire a burst of concurrent queries; they should ride shared batches
     let receivers: Vec<_> = (0..SERVE.batch)
@@ -77,10 +84,9 @@ fn batching_amortizes_latency() {
 
 #[test]
 fn router_spreads_load_across_workers() {
-    let Some(dir) = artifacts() else { return };
     let corpus = Arc::new(ServingCorpus::synthetic(1, 17));
-    let w1 = Coordinator::start(dir.clone(), corpus.clone(), BatchPolicy::default()).unwrap();
-    let w2 = Coordinator::start(dir, corpus.clone(), BatchPolicy::default()).unwrap();
+    let w1 = start(&corpus, BatchPolicy::default());
+    let w2 = start(&corpus, BatchPolicy::default());
     let router = Router::new(vec![w1, w2]);
     let mut rng = Rng::new(7);
     for _ in 0..16 {
@@ -95,13 +101,31 @@ fn router_spreads_load_across_workers() {
 
 #[test]
 fn malformed_query_rejected_not_fatal() {
-    let Some(dir) = artifacts() else { return };
     let corpus = Arc::new(ServingCorpus::synthetic(1, 19));
-    let co = Coordinator::start(dir, corpus.clone(), BatchPolicy::default()).unwrap();
+    let co = start(&corpus, BatchPolicy::default());
     let err = co.query(vec![1.0; 7]); // wrong dimension
     assert!(err.is_err());
     // worker survives and serves the next query
     let mut rng = Rng::new(23);
     let q = corpus.query_near(0, 0.02, &mut rng);
     assert!(co.query(q).is_ok());
+}
+
+#[test]
+fn serving_charges_storage_reads() {
+    let corpus = Arc::new(ServingCorpus::synthetic(1, 29));
+    let co = start(&corpus, BatchPolicy::default());
+    let mut rng = Rng::new(31);
+    for _ in 0..4 {
+        co.query(corpus.query_near(rng.below(corpus.n as u64) as usize, 0.02, &mut rng))
+            .unwrap();
+    }
+    let st = co.stats();
+    let snap = st.storage.expect("snapshot");
+    assert_eq!(
+        snap.stats.reads,
+        4 * SERVE.topk as u64,
+        "one backend read per promoted candidate"
+    );
+    assert!(st.storage_stall_ns.count() >= 1, "per-batch stall recorded");
 }

@@ -1,7 +1,7 @@
 # Build/verify entry points. `make artifacts` needs jax installed;
 # everything else is pure cargo.
 
-.PHONY: artifacts verify pytest clean
+.PHONY: artifacts verify lint pytest clean figures fig11 fig12
 
 # Lower the JAX/Pallas serving graphs to HLO-text artifacts + manifest
 # (a prerequisite only for --features pjrt builds; the native engine
@@ -13,8 +13,22 @@ artifacts:
 verify:
 	cargo build --release && cargo test -q
 
+# Lint gate (mirrors CI).
+lint:
+	cargo clippy --all-targets -- -D warnings
+
 pytest:
 	python -m pytest python/tests -q
+
+# Figure regeneration (CSV under results/ + ASCII on stdout).
+figures:
+	cargo run --release -- figures --all
+
+fig11:
+	cargo run --release -- figures --fig11
+
+fig12:
+	cargo run --release -- figures --fig12
 
 clean:
 	rm -rf target results

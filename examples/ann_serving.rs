@@ -1,21 +1,28 @@
 //! END-TO-END DRIVER: two-stage progressive ANN serving through all three
-//! layers (Sec VII-B / Fig 9), with the promoted-vector fetches served by
-//! a pluggable storage backend.
+//! layers (Sec VII-B / Fig 9), with the corpus *partitioned* across
+//! workers — each owns a disjoint slice of the shards on its own storage
+//! device — and a scatter/gather router merging per-partition top-k into
+//! the global answer.
 //!
 //!   L1  Pallas distance kernels  ──┐ lowered once by `make artifacts`
 //!   L2  JAX two-stage graphs     ──┘ (native Rust engine runs the same
 //!                                     math when artifacts are absent)
-//!   L3  this binary: router → dynamic batcher → graph execution, with
-//!       every promoted fetch charged to a `storage::StorageBackend`.
+//!   L3  this binary: scatter/gather router → per-partition dynamic
+//!       batcher → graph execution, with every promoted fetch charged to
+//!       the owning shard's `storage::StorageBackend`.
 //!
 //! Run:
 //!     cargo run --release --example ann_serving -- --backend mem
 //!     cargo run --release --example ann_serving -- --backend model
 //!     cargo run --release --example ann_serving -- --backend sim
+//!     cargo run --release --example ann_serving -- --backend sim --workers 2
+//!     cargo run --release --example ann_serving -- --backend sim --pace wall:50
 //!
 //! `mem` reproduces the DRAM-resident baseline; `model` charges the
 //! analytic Eq. 2 + queueing cost; `sim` replays the fetch traffic on
 //! MQSim-Next in virtual time and reports device-level stats.
+//! `--pace wall:S` slows the simulator to S virtual seconds per wall
+//! second so you can watch the device be the bottleneck in real time.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -25,20 +32,32 @@ use fivemin::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
 use fivemin::coordinator::batcher::BatchPolicy;
 use fivemin::coordinator::{Coordinator, Router, ServingCorpus};
 use fivemin::runtime::{default_artifacts_dir, SERVE};
-use fivemin::storage::BackendSpec;
+use fivemin::storage::{BackendSpec, Pace};
 use fivemin::util::cli::ArgSpec;
 use fivemin::util::rng::Rng;
 use fivemin::util::table::fmt_secs;
 
 fn main() -> anyhow::Result<()> {
-    let spec = ArgSpec::new("ann_serving", "two-stage ANN serving demo")
+    let spec = ArgSpec::new("ann_serving", "two-stage partitioned ANN serving demo")
         .opt(
             "backend",
-            "mem|model|sim",
+            "SPEC",
             Some("mem"),
-            "storage backend for promoted-vector fetches",
+            "per-partition storage backend: mem|model|sim[:shards=N]",
         )
-        .opt("queries", "N", Some("256"), "queries to issue");
+        .opt("queries", "N", Some("256"), "queries to issue")
+        .opt(
+            "workers",
+            "N",
+            Some("4"),
+            "partition workers (must divide the 4 corpus shards)",
+        )
+        .opt(
+            "pace",
+            "afap|wall:S",
+            Some("afap"),
+            "sim pacing: as fast as possible, or S virtual seconds per wall second",
+        );
     let args: Vec<String> = std::env::args().skip(1).collect();
     let p = match spec.parse(&args) {
         Ok(p) => p,
@@ -47,10 +66,13 @@ fn main() -> anyhow::Result<()> {
             std::process::exit(2);
         }
     };
+    let pace = Pace::parse(p.str("pace").unwrap())?;
     // Full ANN vectors are 4KB blocks on the device tier.
     let backend = BackendSpec::parse(p.str("backend").unwrap(), 4096)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .with_pace(pace);
     let n_queries: usize = p.usize("queries").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let n_workers: usize = p.usize("workers").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
 
     // ---- corpus + serving stack ------------------------------------------
     let dir = default_artifacts_dir();
@@ -61,17 +83,20 @@ fn main() -> anyhow::Result<()> {
         corpus.n, 512, 4096, n_shards
     );
     println!(
-        "starting 2 workers on the '{}' storage backend (router round-robins)…",
+        "starting {n_workers} partition workers on the '{}' storage backend \
+         (scatter/gather router)…",
         backend.kind().name()
     );
-    let w1 = Coordinator::start(
-        dir.clone(),
-        corpus.clone(),
-        BatchPolicy::default(),
-        backend.clone(),
-    )?;
-    let w2 = Coordinator::start(dir, corpus.clone(), BatchPolicy::default(), backend)?;
-    let router = Router::new(vec![w1, w2]);
+    let workers = corpus
+        .partitions(n_workers)?
+        .into_iter()
+        .map(|part| {
+            // each partition's device holds exactly its slice of vectors
+            let spec = backend.clone().for_capacity(part.n as u64);
+            Coordinator::start(dir.clone(), Arc::new(part), BatchPolicy::default(), spec)
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let router = Router::partitioned(workers)?;
 
     // ---- serve a batched query stream (concurrent submission) -------------
     let mut rng = Rng::new(9);
@@ -94,15 +119,18 @@ fn main() -> anyhow::Result<()> {
     let dt = t0.elapsed().as_secs_f64();
 
     let stats = router.stats();
-    let queries: u64 = stats.iter().map(|s| s.queries).sum();
-    let batches: u64 = stats.iter().map(|s| s.batches).sum();
+    let merged = router.merged_stats();
     println!("\n=== end-to-end serving results ===");
     println!("queries    : {served} in {dt:.2}s  ->  {:.0} QPS", served as f64 / dt);
     println!("recall@1   : {:.1}%", 100.0 * hits as f64 / served as f64);
-    println!("batches    : {batches} ({:.1} queries/batch avg)", queries as f64 / batches.max(1) as f64);
+    println!(
+        "batches    : {} across partitions ({:.1} queries/batch avg)",
+        merged.batches,
+        merged.queries as f64 / merged.batches.max(1) as f64
+    );
     for (i, s) in stats.iter().enumerate() {
         println!(
-            "worker {i}   : {} queries, latency p50 {} p99 {}, stage1 p50 {}, stage2 p50 {}",
+            "partition {i}: {} queries, latency p50 {} p99 {}, stage1 p50 {}, stage2 p50 {}",
             s.queries,
             fmt_secs(s.latency_ns.percentile(0.5) / 1e9),
             fmt_secs(s.latency_ns.percentile(0.99) / 1e9),
@@ -133,8 +161,28 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
-    let ssd_reads: u64 = stats.iter().map(|s| s.ssd_reads).sum();
-    println!("SSD fetches: {ssd_reads} promoted full vectors ({} per query)", SERVE.topk);
+    if let Some(snap) = &merged.storage {
+        // a partition worker's backend may itself be sharded over several
+        // devices — count the actual device fleet, not the workers
+        let n_devices: usize = snap.shards.iter().map(|s| s.shards.len().max(1)).sum();
+        println!(
+            "aggregate  : {} device reads across {} devices ({} partitions), read p99 {}",
+            snap.stats.reads,
+            n_devices,
+            snap.shards.len(),
+            fmt_secs(snap.stats.read_device_ns.percentile(0.99) / 1e9),
+        );
+        if let Some(dev) = &snap.device {
+            println!(
+                "             {:.2}M aggregate device IOPS (capacity and IOPS scale together)",
+                dev.read_iops() / 1e6,
+            );
+        }
+    }
+    println!(
+        "SSD fetches: {} promoted full vectors ({} per query per partition)",
+        merged.ssd_reads, SERVE.topk
+    );
 
     // ---- what this workload costs at paper scale --------------------------
     println!("\n=== Fig 10 projection at paper scale (8G embeddings) ===");

@@ -47,12 +47,17 @@ fn main() {
 
     // ---- functional engine at demo scale --------------------------------
     // The simulator backend pays a full discrete-event pass per block I/O,
-    // so scale the op count down while keeping the workload shape.
-    let (n_items, ops) = match backend.kind() {
+    // so scale the op count down while keeping the workload shape
+    // (device_kind sees through a ':shards=N' wrapper: sharded-over-mem
+    // stays at full scale, sharded-over-sim scales down).
+    let (n_items, ops) = match backend.device_kind() {
         BackendKind::Sim => (20_000u64, 50_000u64),
         _ => (200_000u64, 500_000u64),
     };
     let params = CuckooParams::for_capacity(n_items, 0.7, 512, 64);
+    // Fit a ':shards=N' spec's lba→device map to this store's address
+    // space (buckets + WAL region) so the traffic actually spreads.
+    let backend = backend.for_capacity(2 * params.n_buckets);
     let store = BackedStore::new(
         MemStore::new(params.n_buckets, params.slots_per_bucket),
         backend.build(),

@@ -1,0 +1,8 @@
+//! Bench E13: regenerate Fig 12 (sharded multi-device scaling — read
+//! tail and aggregate IOPS vs shard count at matched per-device config).
+mod common;
+use fivemin::figures::fig_shards;
+
+fn main() {
+    common::bench_figure("fig12", 3, || fig_shards::fig12(false));
+}

@@ -2,6 +2,10 @@
 //! sections with mean/min reporting, plus the figure-regeneration wrapper
 //! used by every per-figure bench target.
 
+// Each bench binary compiles its own copy of this module and typically
+// uses only one of the two helpers.
+#![allow(dead_code)]
+
 use std::path::Path;
 
 use fivemin::util::table::Table;

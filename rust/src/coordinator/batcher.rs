@@ -38,6 +38,15 @@ pub struct Job<T, R> {
     pub resp: mpsc::Sender<R>,
 }
 
+impl<T, R> Job<T, R> {
+    /// Pair a payload with a fresh response channel, stamping the enqueue
+    /// time now (the latency clock starts here).
+    pub fn with_channel(payload: T) -> (Self, mpsc::Receiver<R>) {
+        let (tx, rx) = mpsc::channel();
+        (Job { payload, enqueued: Instant::now(), resp: tx }, rx)
+    }
+}
+
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
@@ -94,8 +103,7 @@ mod tests {
     use std::thread;
 
     fn job(payload: u32) -> (Job<u32, u32>, mpsc::Receiver<u32>) {
-        let (tx, rx) = mpsc::channel();
-        (Job { payload, enqueued: Instant::now(), resp: tx }, rx)
+        Job::with_channel(payload)
     }
 
     #[test]

@@ -21,17 +21,28 @@
 //! Per-dimension energy decays like MRL embeddings, so the reduced prefix
 //! preserves ranking signal and stage-1 pruning recall is realistic.
 
+use anyhow::{ensure, Result};
+
 use crate::runtime::SERVE;
 use crate::util::rng::Rng;
 
-/// Flat row-major storage for the serving shapes.
+/// Flat row-major storage for the serving shapes. A corpus value is
+/// either the whole collection (`base == 0`) or one worker's *partition*
+/// of it (a contiguous slice of shards produced by
+/// [`ServingCorpus::partitions`], with `base` recording the global id of
+/// its first vector) — ownership, not replication, so each partition can
+/// live on its own device.
 pub struct ServingCorpus {
     /// Shards of reduced vectors, each `SERVE.shard x SERVE.reduced_dim`
     /// (the DRAM-resident stage-1 scan unit).
     pub reduced_shards: Vec<Vec<f32>>,
-    /// Full vectors, `n x SERVE.full_dim` (the "SSD-resident" tier).
+    /// Full vectors, `n x SERVE.full_dim` (the "SSD-resident" tier),
+    /// indexed by *local* id (`global id - base`).
     pub full: Vec<f32>,
+    /// Vectors held by this corpus slice.
     pub n: usize,
+    /// Global id of this slice's first vector (0 for the full corpus).
+    pub base: usize,
 }
 
 impl ServingCorpus {
@@ -66,11 +77,50 @@ impl ServingCorpus {
             }
             reduced_shards.push(shard);
         }
-        ServingCorpus { reduced_shards, full, n }
+        ServingCorpus { reduced_shards, full, n, base: 0 }
     }
 
+    /// Split into `n_parts` contiguous partitions (ownership, not
+    /// replicas): partition `p` holds shards `[p*spp, (p+1)*spp)` and the
+    /// matching full vectors, with `base` recording its global-id offset.
+    /// A router over one worker per partition serves the same corpus as a
+    /// single worker over `self`, with capacity and device IOPS now
+    /// scaling together.
+    pub fn partitions(&self, n_parts: usize) -> Result<Vec<ServingCorpus>> {
+        ensure!(n_parts >= 1, "need at least one partition");
+        let n_shards = self.reduced_shards.len();
+        ensure!(
+            n_shards % n_parts == 0,
+            "cannot split {n_shards} shard(s) into {n_parts} partition(s)"
+        );
+        let spp = n_shards / n_parts;
+        let vecs_pp = spp * SERVE.shard;
+        let fd = SERVE.full_dim;
+        let mut out = Vec::with_capacity(n_parts);
+        for p in 0..n_parts {
+            let s0 = p * spp;
+            let v0 = p * vecs_pp;
+            out.push(ServingCorpus {
+                reduced_shards: self.reduced_shards[s0..s0 + spp].to_vec(),
+                full: self.full[v0 * fd..(v0 + vecs_pp) * fd].to_vec(),
+                n: vecs_pp,
+                base: self.base + v0,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Full vector by *global* id (callers never see local indices).
     pub fn full_vector(&self, id: usize) -> &[f32] {
-        &self.full[id * SERVE.full_dim..(id + 1) * SERVE.full_dim]
+        let local = id - self.base;
+        &self.full[local * SERVE.full_dim..(local + 1) * SERVE.full_dim]
+    }
+
+    /// Device-local block address of a vector: partition workers address
+    /// their own shard's device from 0, so device capacity is the
+    /// partition's, not the whole corpus's.
+    pub fn local_lba(&self, id: usize) -> u64 {
+        (id - self.base) as u64
     }
 
     /// A query near corpus vector `id` (ground truth for recall checks).
@@ -105,6 +155,27 @@ mod tests {
             let full = c.full_vector(i);
             assert_eq!(red, &full[..SERVE.reduced_dim]);
         }
+    }
+
+    #[test]
+    fn partitions_slice_ownership_with_base_offsets() {
+        let c = ServingCorpus::synthetic(4, 21);
+        let parts = c.partitions(2).unwrap();
+        assert_eq!(parts.len(), 2);
+        for (p, part) in parts.iter().enumerate() {
+            assert_eq!(part.reduced_shards.len(), 2);
+            assert_eq!(part.n, 2 * SERVE.shard);
+            assert_eq!(part.base, p * 2 * SERVE.shard);
+            // global-id addressing returns the same vector as the parent
+            for probe in [part.base, part.base + 1, part.base + part.n - 1] {
+                assert_eq!(part.full_vector(probe), c.full_vector(probe));
+                assert_eq!(part.local_lba(probe), (probe - part.base) as u64);
+            }
+        }
+        // partitions tile the corpus exactly
+        assert_eq!(parts.iter().map(|p| p.n).sum::<usize>(), c.n);
+        assert!(c.partitions(3).is_err(), "4 shards cannot split 3 ways");
+        assert!(c.partitions(0).is_err());
     }
 
     #[test]

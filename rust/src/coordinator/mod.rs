@@ -6,8 +6,14 @@
 //! [`crate::storage::StorageBackend`]; queries arrive over an mpsc
 //! channel, are batched to the graph's fixed batch shape, executed in two
 //! stages around the storage fetch of promoted full vectors, and answered
-//! on per-query response channels. [`Router`] fans queries across several
-//! workers (shard-partitioned), completing the vLLM-router shape.
+//! on per-query response channels. [`Router`] completes the vLLM-router
+//! shape in one of two modes: round-robin over *replica* workers (each
+//! holds the full corpus), or scatter/gather over *partition* workers —
+//! each owns a disjoint [`ServingCorpus::partitions`] slice on its own
+//! storage device, every query fans out to all of them, and the
+//! per-partition top-k merge reproduces the single-worker answer
+//! bit-for-bit (see `rust/tests/backend_equivalence.rs`) while capacity
+//! and device IOPS scale together.
 //!
 //! The stage-2 fetch is the paper's "SSD read of promoted candidates":
 //! each promoted global id is submitted to the worker's backend as a
@@ -27,7 +33,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::runtime::{Runtime, Tensor, SERVE};
 use crate::storage::{self, BackendSpec, StorageBackend, StorageSnapshot};
@@ -40,7 +46,12 @@ pub use corpus::ServingCorpus;
 pub struct QueryResult {
     /// Global corpus ids, best-first.
     pub ids: Vec<u32>,
+    /// Full-dim (stage-2) scores, aligned with `ids`.
     pub scores: Vec<f32>,
+    /// Reduced-dim (stage-1) scores, aligned with `ids`. The scatter/
+    /// gather merge needs them to promote exactly the candidates a
+    /// single worker over the union corpus would have promoted.
+    pub reduced: Vec<f32>,
     /// End-to-end latency (enqueue → answer).
     pub latency: Duration,
     /// Batch this query rode in.
@@ -130,8 +141,7 @@ impl Coordinator {
 
     /// Submit a full-dimension query; returns the response receiver.
     pub fn submit(&self, query_full: Vec<f32>) -> mpsc::Receiver<Result<QueryResult, String>> {
-        let (rtx, rrx) = mpsc::channel();
-        let job = Job { payload: query_full, enqueued: Instant::now(), resp: rtx };
+        let (job, rrx) = Job::with_channel(query_full);
         if let Some(tx) = &self.tx {
             let _ = tx.send(job);
         }
@@ -258,7 +268,8 @@ fn run_two_stage_batch(
         let out = rt.execute("reduced_score", &[&q_red_t, shard_t])?;
         let vals = Runtime::to_vec_f32(&out[0])?;
         let idx = Runtime::to_vec_i32(&out[1])?;
-        let base = (s * SERVE.shard) as u32;
+        // Global ids: partition workers carry their slice's base offset.
+        let base = (corpus.base + s * SERVE.shard) as u32;
         for qi in 0..b {
             for j in 0..k {
                 merged[qi].push((vals[qi * k + j], base + idx[qi * k + j] as u32));
@@ -275,10 +286,11 @@ fn run_two_stage_batch(
     let t2_start = Instant::now();
     // Only the n_real live queries fetch; padding rows reuse the last real
     // query's promotions in the gather below (their scores are discarded)
-    // without charging extra device reads.
+    // without charging extra device reads. Addresses are device-local:
+    // each partition worker's device holds exactly its slice.
     let lbas: Vec<u64> = merged[..n_real]
         .iter()
-        .flat_map(|m| m.iter().map(|&(_, id)| id as u64))
+        .flat_map(|m| m.iter().map(|&(_, id)| corpus.local_lba(id as usize)))
         .collect();
     let fetched = storage::read_blocks(store, &lbas);
     let stall_ns = fetched.iter().map(|c| c.device_ns).max().unwrap_or(0);
@@ -300,13 +312,18 @@ fn run_two_stage_batch(
 
     let mut results = Vec::with_capacity(n_real);
     for qi in 0..n_real {
-        let ids: Vec<u32> = (0..k)
-            .map(|j| merged[qi][order[qi * k + j] as usize].1)
-            .collect();
+        let mut ids = Vec::with_capacity(k);
+        let mut reduced = Vec::with_capacity(k);
+        for j in 0..k {
+            let (red, id) = merged[qi][order[qi * k + j] as usize];
+            ids.push(id);
+            reduced.push(red);
+        }
         let sc: Vec<f32> = (0..k).map(|j| scores[qi * k + j]).collect();
         results.push(QueryResult {
             ids,
             scores: sc,
+            reduced,
             latency: Duration::ZERO,
             batch_size: 0,
         });
@@ -314,39 +331,219 @@ fn run_two_stage_batch(
     Ok((results, t1, t2, stall_ns))
 }
 
-/// Round-robin router over multiple workers (each owns a corpus replica or
-/// partition plus its own storage backend). Demonstrates the scale-out
-/// path; single-worker deployments use [`Coordinator`] directly.
+/// How a [`Router`] maps queries onto its workers.
+enum RouteMode {
+    /// Each worker holds a full corpus replica; queries round-robin.
+    Replicate,
+    /// Each worker owns a disjoint corpus partition; every query fans out
+    /// to all workers and the per-partition top-k merge to a global top-k.
+    Partition,
+}
+
+/// One scatter/gather merge awaiting its partition answers.
+struct MergeJob {
+    parts: Vec<mpsc::Receiver<Result<QueryResult, String>>>,
+    resp: mpsc::Sender<Result<QueryResult, String>>,
+}
+
+/// Router over multiple workers, in replica (round-robin) or partition
+/// (scatter/gather) mode. Single-worker deployments can use
+/// [`Coordinator`] directly.
 pub struct Router {
     workers: Vec<Coordinator>,
     next: AtomicUsize,
+    mode: RouteMode,
+    merge_tx: Option<mpsc::Sender<MergeJob>>,
+    merger: Option<JoinHandle<()>>,
 }
 
 impl Router {
-    pub fn new(workers: Vec<Coordinator>) -> Self {
-        assert!(!workers.is_empty());
-        Router { workers, next: AtomicUsize::new(0) }
+    /// Replica router: every worker holds the full corpus and queries
+    /// round-robin across them. Errors on an empty worker set.
+    pub fn new(workers: Vec<Coordinator>) -> Result<Self> {
+        ensure!(!workers.is_empty(), "router needs at least one worker");
+        Ok(Router {
+            workers,
+            next: AtomicUsize::new(0),
+            mode: RouteMode::Replicate,
+            merge_tx: None,
+            merger: None,
+        })
+    }
+
+    /// Scatter/gather router: worker `p` owns partition `p` of the corpus
+    /// (see [`ServingCorpus::partitions`]) on its own storage device.
+    /// Every query fans out to all workers; a merger thread gathers the
+    /// per-partition top-k (in submission order — worker responses are
+    /// FIFO) and merges them into the answer a single worker over the
+    /// union corpus would return, bit for bit.
+    ///
+    /// Trade-off: each partition speculatively promotes and re-ranks its
+    /// *local* top-k before the merge, so a query costs `N×k` device
+    /// reads instead of the `k` a fetch-after-merge protocol would issue
+    /// — the price of a single round-trip to the workers. `ssd_reads`
+    /// and device stats report the traffic actually issued. Selective
+    /// fetch (merge reduced scores first, then read only the global
+    /// winners from their owners) is a tracked ROADMAP item.
+    pub fn partitioned(workers: Vec<Coordinator>) -> Result<Self> {
+        ensure!(!workers.is_empty(), "router needs at least one worker");
+        let (merge_tx, merge_rx) = mpsc::channel::<MergeJob>();
+        let merger = std::thread::Builder::new()
+            .name("fivemin-gather".into())
+            .spawn(move || {
+                while let Ok(job) = merge_rx.recv() {
+                    let _ = job.resp.send(gather(job.parts));
+                }
+            })?;
+        Ok(Router {
+            workers,
+            next: AtomicUsize::new(0),
+            mode: RouteMode::Partition,
+            merge_tx: Some(merge_tx),
+            merger: Some(merger),
+        })
     }
 
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }
 
-    /// Route a query to the next worker (round-robin), non-blocking.
+    /// Route a query, non-blocking: to the next worker (replica mode) or
+    /// to every partition worker with the merge pending (partition mode).
     pub fn submit(&self, query_full: Vec<f32>) -> mpsc::Receiver<Result<QueryResult, String>> {
-        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
-        self.workers[i].submit(query_full)
+        match self.mode {
+            RouteMode::Replicate => {
+                let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+                self.workers[i].submit(query_full)
+            }
+            RouteMode::Partition => {
+                let parts: Vec<_> = self
+                    .workers
+                    .iter()
+                    .map(|w| w.submit(query_full.clone()))
+                    .collect();
+                let (rtx, rrx) = mpsc::channel();
+                if let Some(tx) = &self.merge_tx {
+                    let _ = tx.send(MergeJob { parts, resp: rtx });
+                }
+                rrx
+            }
+        }
     }
 
-    /// Route a query to the next worker (round-robin), blocking.
+    /// Route a query, blocking until the (merged) answer is ready.
     pub fn query(&self, query_full: Vec<f32>) -> Result<QueryResult> {
-        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
-        self.workers[i].query(query_full)
+        self.submit(query_full)
+            .recv()
+            .map_err(|_| anyhow!("worker gone"))?
+            .map_err(|e| anyhow!(e))
     }
 
+    /// Per-worker serving stats (partition p / replica i at index p/i).
     pub fn stats(&self) -> Vec<ServeStats> {
         self.workers.iter().map(|w| w.stats()).collect()
     }
+
+    /// Aggregate the per-worker [`ServeStats`]: counters add, histograms
+    /// merge, and the storage snapshots fold into one aggregate whose
+    /// `shards` holds the per-worker snapshots. In partition mode every
+    /// query is counted once per worker (each partition really served
+    /// it).
+    pub fn merged_stats(&self) -> ServeStats {
+        let mut out = ServeStats::new();
+        let mut storage: Option<StorageSnapshot> = None;
+        for w in &self.workers {
+            let s = w.stats();
+            out.queries += s.queries;
+            out.batches += s.batches;
+            out.batch_fill += s.batch_fill;
+            out.latency_ns.merge(&s.latency_ns);
+            out.stage1_ns.merge(&s.stage1_ns);
+            out.stage2_ns.merge(&s.stage2_ns);
+            out.ssd_reads += s.ssd_reads;
+            out.storage_stall_ns.merge(&s.storage_stall_ns);
+            if let Some(snap) = s.storage {
+                match &mut storage {
+                    Some(agg) => {
+                        agg.merge(&snap);
+                        agg.shards.push(snap);
+                    }
+                    None => {
+                        let mut agg = snap.clone();
+                        agg.shards = vec![snap];
+                        storage = Some(agg);
+                    }
+                }
+            }
+        }
+        out.storage = storage;
+        out
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        // Close the merge queue and drain pending gathers while the
+        // workers (dropped after this) are still alive to answer them.
+        self.merge_tx.take();
+        if let Some(h) = self.merger.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Await every partition's answer for one query, then merge.
+fn gather(parts: Vec<mpsc::Receiver<Result<QueryResult, String>>>) -> Result<QueryResult, String> {
+    let mut partials = Vec::with_capacity(parts.len());
+    for rx in parts {
+        match rx.recv() {
+            Ok(Ok(r)) => partials.push(r),
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err("partition worker gone".into()),
+        }
+    }
+    merge_partials(partials)
+}
+
+/// Merge per-partition top-k answers into the global answer a single
+/// worker over the union corpus would return — bit-identical, which the
+/// equivalence test enforces. Two stages mirror the worker exactly:
+///
+/// 1. **Promotion**: global top-k by *reduced* (stage-1) score. The
+///    worker's merged candidate list is sorted by reduced score with ties
+///    in push order, which is ascending global id; `(score desc, id
+///    asc)` reproduces it. Every globally-promoted candidate is in some
+///    partition's top-k, so the union of partials always covers it.
+/// 2. **Final order**: stable sort by *full* (stage-2) score descending —
+///    the native engine's argsort keeps promotion order on ties, and so
+///    does a stable sort starting from promotion order.
+fn merge_partials(parts: Vec<QueryResult>) -> Result<QueryResult, String> {
+    let k = SERVE.topk;
+    // (reduced, full, id) from every partition
+    let mut cand: Vec<(f32, f32, u32)> = Vec::with_capacity(parts.len() * k);
+    let mut latency = Duration::ZERO;
+    let mut batch_size = 0usize;
+    for p in &parts {
+        if p.ids.len() != p.scores.len() || p.ids.len() != p.reduced.len() {
+            return Err("malformed partial result".into());
+        }
+        for j in 0..p.ids.len() {
+            cand.push((p.reduced[j], p.scores[j], p.ids[j]));
+        }
+        // the query is answered when its slowest partition is
+        latency = latency.max(p.latency);
+        batch_size = batch_size.max(p.batch_size);
+    }
+    cand.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.2.cmp(&b.2)));
+    cand.truncate(k);
+    cand.sort_by(|a, b| b.1.total_cmp(&a.1));
+    Ok(QueryResult {
+        ids: cand.iter().map(|c| c.2).collect(),
+        scores: cand.iter().map(|c| c.1).collect(),
+        reduced: cand.iter().map(|c| c.0).collect(),
+        latency,
+        batch_size,
+    })
 }
 
 #[cfg(test)]
@@ -373,5 +570,57 @@ mod tests {
             counts[next.fetch_add(1, Ordering::Relaxed) % n] += 1;
         }
         assert_eq!(counts, [33, 33, 33]);
+    }
+
+    #[test]
+    fn empty_router_is_an_error_not_a_panic() {
+        assert!(Router::new(Vec::new()).is_err());
+        assert!(Router::partitioned(Vec::new()).is_err());
+    }
+
+    fn partial(ids: &[u32], reduced: &[f32], full: &[f32]) -> QueryResult {
+        QueryResult {
+            ids: ids.to_vec(),
+            scores: full.to_vec(),
+            reduced: reduced.to_vec(),
+            latency: Duration::from_millis(1),
+            batch_size: 1,
+        }
+    }
+
+    #[test]
+    fn merge_orders_promoted_candidates_by_full_score() {
+        // partition A owns low ids, B owns high ids; 3 candidates total
+        // (well under k), so all promote and the full score decides.
+        let a = partial(&[1, 2], &[0.9, 0.5], &[0.1, 0.8]);
+        let b = partial(&[5000], &[0.7], &[0.9]);
+        let m = merge_partials(vec![a, b]).unwrap();
+        assert_eq!(m.ids, vec![5000, 2, 1]);
+        assert_eq!(m.scores, vec![0.9, 0.8, 0.1]);
+        assert_eq!(m.reduced, vec![0.7, 0.5, 0.9]);
+        assert_eq!(m.latency, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn merge_promotes_by_reduced_score_before_reranking() {
+        // More candidates than k: promotion is by REDUCED score (what a
+        // single worker would have fetched), so partition B's candidates
+        // are dropped despite their high full scores.
+        let k = SERVE.topk;
+        let a_ids: Vec<u32> = (0..k as u32).collect();
+        let a_red: Vec<f32> = (0..k).map(|j| 200.0 - j as f32).collect();
+        let a_full = vec![1.0f32; k];
+        let b_ids: Vec<u32> = (0..k as u32).map(|j| 5000 + j).collect();
+        let b_red: Vec<f32> = (0..k).map(|j| 50.0 - j as f32).collect();
+        let b_full = vec![999.0f32; k];
+        let m = merge_partials(vec![
+            partial(&a_ids, &a_red, &a_full),
+            partial(&b_ids, &b_red, &b_full),
+        ])
+        .unwrap();
+        assert_eq!(m.ids.len(), k);
+        // equal full scores: stable sort keeps promotion (reduced) order
+        assert_eq!(m.ids, a_ids);
+        assert!(!m.ids.contains(&5000));
     }
 }

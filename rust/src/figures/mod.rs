@@ -10,6 +10,7 @@ pub mod fig_casestudies;
 pub mod fig_mqsim;
 pub mod fig_peak_iops;
 pub mod fig_provisioning;
+pub mod fig_shards;
 
 use std::path::Path;
 
@@ -43,6 +44,11 @@ pub fn sim_figures(quick: bool) -> Vec<(&'static str, Table)> {
 /// Storage-backend comparison (serving-path tail latency per backend).
 pub fn backend_figures(quick: bool) -> Vec<(&'static str, Table)> {
     vec![("fig11", fig_backends::fig11(quick))]
+}
+
+/// Sharded multi-device scaling (read tail + aggregate IOPS vs shards).
+pub fn shard_figures(quick: bool) -> Vec<(&'static str, Table)> {
+    vec![("fig12", fig_shards::fig12(quick))]
 }
 
 /// Emit one table: print ASCII and write CSV under `out`.

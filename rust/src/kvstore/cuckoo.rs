@@ -39,6 +39,17 @@ pub trait BlockStore {
     /// device-backed stores issue a log-block write each time a block's
     /// worth of entries has accumulated.
     fn append_log(&mut self, _bytes: u32) {}
+
+    /// Open an I/O batching window: accesses until the matching
+    /// [`BlockStore::end_io_batch`] MAY be submitted to the device as one
+    /// burst instead of waiting per access. The KV engine brackets each
+    /// consolidated WAL flush group with these, turning O(group) device
+    /// round-trips into one submit/wait. Contents semantics are
+    /// unchanged — only the timing plane batches. No-op by default.
+    fn begin_io_batch(&mut self) {}
+
+    /// Close an I/O batching window (see [`BlockStore::begin_io_batch`]).
+    fn end_io_batch(&mut self) {}
 }
 
 /// In-memory block store for tests and as the DRAM-resident reference.

@@ -103,20 +103,26 @@ impl<S: BlockStore + IoCounted> KvEngine<S> {
         }
     }
 
-    /// Commit the consolidated WAL into cuckoo blocks.
+    /// Commit the consolidated WAL into cuckoo blocks. Each consolidated
+    /// bucket group's reads/writes are bracketed with
+    /// [`BlockStore::begin_io_batch`]/[`BlockStore::end_io_batch`] so a
+    /// device-backed store issues them as one burst (one submit/wait
+    /// round-trip) instead of waiting per bucket access.
     pub fn flush(&mut self) {
         self.stats.flushes += 1;
         let groups = self.wal.drain_consolidated();
         for (_bucket, pairs) in groups {
+            let before_r = self.io_reads();
+            let before_w = self.io_writes();
+            self.store.begin_io_batch();
             for pair in pairs {
-                let before_r = self.io_reads();
-                let before_w = self.io_writes();
                 if cuckoo::put(&self.params, &mut self.store, pair, &mut self.rng).is_err() {
                     self.stats.failed_inserts += 1;
                 }
-                self.stats.ssd_reads += self.io_reads() - before_r;
-                self.stats.ssd_writes += self.io_writes() - before_w;
             }
+            self.store.end_io_batch();
+            self.stats.ssd_reads += self.io_reads() - before_r;
+            self.stats.ssd_writes += self.io_writes() - before_w;
         }
     }
 

@@ -8,6 +8,9 @@
 //!   config      — dump the Table I / Table III presets as JSON
 //!   serve       — run the ANN serving stack on synthetic queries
 
+// Same style trade-offs as the library crate (see rust/src/lib.rs).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use std::path::PathBuf;
 
 use fivemin::config::{
@@ -59,9 +62,9 @@ fn print_help() {
          \x20 breakeven  --platform cpu|gpu --nand slc|pslc|tlc --blk N [--normal] [--host-iops N] [--p99-us N]\n\
          \x20 viability  --platform cpu|gpu --dram-gb N --blk N [--sigma S] [--throughput-gbps N]\n\
          \x20 simulate   --blk N --read-pct N [--measure-us N] [--p-bch P] [--ch-bw GBps]\n\
-         \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11] [--out DIR] [--quick]\n\
+         \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11 --fig12] [--out DIR] [--quick]\n\
          \x20 config     --dump\n\
-         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim]"
+         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N]] [--pace afap|wall:S]"
     );
 }
 
@@ -293,6 +296,7 @@ fn cmd_figures(args: &[String]) -> Result<(), String> {
         .flag("fig8", "KV store")
         .flag("fig10", "ANN search")
         .flag("fig11", "storage-backend tail-latency comparison")
+        .flag("fig12", "sharded multi-device scaling")
         .flag("quick", "shorter Fig 7 simulation windows")
         .opt("out", "DIR", Some("results"), "CSV output directory");
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
@@ -327,6 +331,12 @@ fn cmd_figures(args: &[String]) -> Result<(), String> {
             emitted += 1;
         }
     }
+    if all || p.flag("fig12") {
+        for (id, t) in fivemin::figures::shard_figures(p.flag("quick")) {
+            fivemin::figures::emit(&out, id, &t).map_err(|e| e.to_string())?;
+            emitted += 1;
+        }
+    }
     if emitted == 0 {
         return Err(spec.usage());
     }
@@ -354,21 +364,41 @@ fn cmd_config(args: &[String]) -> Result<(), String> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<(), String> {
-    let spec = ArgSpec::new("serve", "run the two-stage ANN serving stack")
-        .opt("shards", "N", Some("2"), "corpus shards (4096 vectors each)")
-        .opt("queries", "N", Some("256"), "queries to issue")
-        .opt("artifacts", "DIR", None, "artifacts directory")
-        .opt(
-            "backend",
-            "mem|model|sim",
-            Some("mem"),
-            "storage backend for promoted-vector fetches",
-        );
+    let spec = ArgSpec::new(
+        "serve",
+        "run the two-stage ANN serving stack (one partition worker per corpus shard)",
+    )
+    .opt(
+        "shards",
+        "N",
+        Some("2"),
+        "corpus shards (4096 vectors each) = partition workers, each on its own device",
+    )
+    .opt("queries", "N", Some("256"), "queries to issue")
+    .opt("artifacts", "DIR", None, "artifacts directory")
+    .opt(
+        "backend",
+        "SPEC",
+        Some("mem"),
+        "per-worker storage backend: mem|model|sim, ':shards=N' fans each worker's device out",
+    )
+    .opt(
+        "pace",
+        "afap|wall:S",
+        Some("afap"),
+        "sim pacing: as fast as possible, or S virtual seconds per wall second",
+    );
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
     let shards = p.usize("shards").map_err(|e| e.to_string())?.unwrap();
-    let queries = p.usize("queries").map_err(|e| e.to_string())?.unwrap();
-    let backend = fivemin::storage::BackendSpec::parse(p.str("backend").unwrap(), 4096)
+    if shards == 0 {
+        return Err("--shards must be >= 1".into());
+    }
+    let pace = fivemin::storage::Pace::parse(p.str("pace").unwrap())
         .map_err(|e| e.to_string())?;
+    let backend = fivemin::storage::BackendSpec::parse(p.str("backend").unwrap(), 4096)
+        .map_err(|e| e.to_string())?
+        .with_pace(pace);
+    let queries = p.usize("queries").map_err(|e| e.to_string())?.unwrap();
     let dir = p
         .str("artifacts")
         .map(PathBuf::from)
@@ -383,23 +413,33 @@ fn serve_demo(
     backend: fivemin::storage::BackendSpec,
 ) -> anyhow::Result<()> {
     use fivemin::coordinator::batcher::BatchPolicy;
-    use fivemin::coordinator::{Coordinator, ServingCorpus};
+    use fivemin::coordinator::{Coordinator, Router, ServingCorpus};
     use fivemin::util::rng::Rng;
     use std::sync::Arc;
 
     let corpus = Arc::new(ServingCorpus::synthetic(shards, 42));
     println!(
-        "corpus: {} vectors across {shards} shard(s); storage backend: {}",
+        "corpus: {} vectors across {shards} shard(s); one partition worker per shard, \
+         '{}' backend per worker",
         corpus.n,
         backend.kind().name()
     );
-    let co = Coordinator::start(dir, corpus.clone(), BatchPolicy::default(), backend)?;
+    let workers = corpus
+        .partitions(shards)?
+        .into_iter()
+        .map(|part| {
+            // each worker's device holds exactly its slice of vectors
+            let spec = backend.clone().for_capacity(part.n as u64);
+            Coordinator::start(dir.clone(), Arc::new(part), BatchPolicy::default(), spec)
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let router = Router::partitioned(workers)?;
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
     let recvs: Vec<_> = (0..queries)
         .map(|_| {
             let t = rng.below(corpus.n as u64) as usize;
-            (t, co.submit(corpus.query_near(t, 0.02, &mut rng)))
+            (t, router.submit(corpus.query_near(t, 0.02, &mut rng)))
         })
         .collect();
     let mut hits = 0;
@@ -410,19 +450,20 @@ fn serve_demo(
         }
     }
     let dt = t0.elapsed().as_secs_f64();
-    let st = co.stats();
+    let st = router.merged_stats();
     println!(
-        "queries  : {queries} in {dt:.2}s ({:.0} QPS)",
-        queries as f64 / dt
+        "queries  : {queries} in {dt:.2}s ({:.0} QPS), scatter/gathered over {} partitions",
+        queries as f64 / dt,
+        router.n_workers()
     );
     println!("recall@1 : {:.1}%", 100.0 * hits as f64 / queries as f64);
     println!(
-        "batches  : {} (mean fill {:.1}%)",
+        "batches  : {} across workers (mean fill {:.1}%)",
         st.batches,
         100.0 * st.batch_fill / st.batches.max(1) as f64
     );
     println!(
-        "latency  : p50 {} p99 {}",
+        "latency  : p50 {} p99 {} (per-partition leg)",
         fmt_secs(st.latency_ns.percentile(0.5) / 1e9),
         fmt_secs(st.latency_ns.percentile(0.99) / 1e9)
     );
@@ -438,15 +479,23 @@ fn serve_demo(
     );
     if let Some(snap) = &st.storage {
         println!(
-            "backend  : {} — {} reads, device read p50 {} p99 {}",
+            "backends : {} x {} — {} reads total, device read p50 {} p99 {}",
+            snap.shards.len(),
             snap.kind.name(),
             snap.stats.reads,
             fmt_secs(snap.stats.read_device_ns.percentile(0.5) / 1e9),
             fmt_secs(snap.stats.read_device_ns.percentile(0.99) / 1e9)
         );
+        for (i, shard) in snap.shards.iter().enumerate() {
+            println!(
+                "  shard {i}: {} reads, read p99 {}",
+                shard.stats.reads,
+                fmt_secs(shard.stats.read_device_ns.percentile(0.99) / 1e9)
+            );
+        }
         if let Some(dev) = &snap.device {
             println!(
-                "device   : {} IOPS (device time), {} host senses, {} LDPC escalations",
+                "devices  : {} aggregate IOPS (device time), {} host senses, {} LDPC escalations",
                 fmt_si(dev.read_iops()),
                 dev.host_senses,
                 dev.ldpc_escalations

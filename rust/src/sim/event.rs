@@ -34,6 +34,12 @@ impl<E> Ord for EventSlot<E> {
     }
 }
 
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
         EventQueue { heap: BinaryHeap::new(), seq: 0, now: 0 }

@@ -80,6 +80,27 @@ impl SimStats {
         }
         self.channel_busy_ns as f64 / (self.window_ns as f64 * n_ch as f64)
     }
+
+    /// Fold another device's counters into this one (multi-device
+    /// aggregation for [`crate::storage::ShardedBackend`]): counts add,
+    /// latency histograms merge, and the window is the busiest device's
+    /// span — devices run in parallel, so aggregate IOPS over that window
+    /// reflects true multi-device throughput.
+    pub fn merge(&mut self, other: &SimStats) {
+        self.reads_done += other.reads_done;
+        self.writes_done += other.writes_done;
+        self.read_lat.merge(&other.read_lat);
+        self.write_lat.merge(&other.write_lat);
+        self.host_programs += other.host_programs;
+        self.gc_programs += other.gc_programs;
+        self.host_senses += other.host_senses;
+        self.gc_senses += other.gc_senses;
+        self.erases += other.erases;
+        self.channel_busy_ns += other.channel_busy_ns;
+        self.ldpc_escalations += other.ldpc_escalations;
+        self.host_blocks_written += other.host_blocks_written;
+        self.window_ns = self.window_ns.max(other.window_ns);
+    }
 }
 
 impl Default for SimStats {
@@ -109,6 +130,24 @@ mod tests {
         s.host_programs = 100; // 100 pages * 8 slots = 800 blocks
         s.gc_programs = 50; // +400 blocks relocated
         assert!((s.write_amplification(8) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_counts_and_keeps_busiest_window() {
+        let mut a = SimStats::new();
+        a.reads_done = 100;
+        a.read_lat.push(5_000.0);
+        a.window_ns = 1_000_000;
+        let mut b = SimStats::new();
+        b.reads_done = 300;
+        b.read_lat.push(7_000.0);
+        b.erases = 2;
+        b.window_ns = 250_000;
+        a.merge(&b);
+        assert_eq!(a.reads_done, 400);
+        assert_eq!(a.erases, 2);
+        assert_eq!(a.read_lat.count(), 2);
+        assert_eq!(a.window_ns, 1_000_000, "parallel devices: span is the max");
     }
 
     #[test]

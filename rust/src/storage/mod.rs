@@ -25,7 +25,7 @@
 //! completions non-blocking, [`StorageBackend::wait_all`] barriers. Use
 //! [`submit_with`] for per-request completion callbacks.
 //!
-//! Three implementations ship today:
+//! Four implementations ship today:
 //!
 //! * [`MemBackend`] — completes every request at DRAM-class latency;
 //!   today's (pre-PR) behavior, and the control arm of equivalence tests.
@@ -36,17 +36,21 @@
 //! * [`SimBackend`] — a worker thread driving [`crate::sim::SsdSim`] in
 //!   virtual time (as fast as possible, or paced to wall clock), with the
 //!   full device-level [`SimStats`] exposed.
+//! * [`ShardedBackend`] — N inner backends (one device per shard) behind
+//!   an explicit lba→device map ([`ShardMap`]), so capacity and IOPS
+//!   scale together; spec strings like `sim:shards=4` build one.
 //!
-//! Future backends (io_uring against a real device, sharded multi-device
-//! fan-out) plug in at this trait; see ROADMAP.md.
+//! Future backends (io_uring against a real device) plug in at this
+//! trait; see ROADMAP.md.
 
 pub mod mem;
 pub mod model;
+pub mod sharded;
 pub mod sim;
 
 use std::ops::Range;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::config::{IoMix, NandKind, SsdConfig};
 use crate::sim::{SimParams, SimStats};
@@ -54,6 +58,7 @@ use crate::util::stats::LatencyHist;
 
 pub use mem::MemBackend;
 pub use model::ModelBackend;
+pub use sharded::{ShardMap, ShardedBackend};
 pub use sim::{Pace, SimBackend};
 
 /// Block-level operation kind.
@@ -136,6 +141,17 @@ impl BackendStats {
         }
         self.reads as f64 * 1e9 / self.virtual_ns as f64
     }
+
+    /// Fold another backend's traffic into this one (multi-device /
+    /// multi-worker aggregation): counts add, histograms merge, and the
+    /// span is the busiest contributor's (parallel devices).
+    pub fn merge(&mut self, other: &BackendStats) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.read_device_ns.merge(&other.read_device_ns);
+        self.write_device_ns.merge(&other.write_device_ns);
+        self.virtual_ns = self.virtual_ns.max(other.virtual_ns);
+    }
 }
 
 impl Default for BackendStats {
@@ -166,9 +182,16 @@ pub trait StorageBackend: Send {
     fn stats(&self) -> BackendStats;
 
     /// Device-level statistics, for backends with a device model behind
-    /// them ([`SimBackend`] reports full MQSim-Next counters).
+    /// them ([`SimBackend`] reports full MQSim-Next counters;
+    /// [`ShardedBackend`] reports the merged counters of its devices).
     fn device_stats(&self) -> Option<SimStats> {
         None
+    }
+
+    /// Per-shard snapshots for multi-device backends
+    /// ([`ShardedBackend`]); empty for single-device backends.
+    fn shard_snapshots(&self) -> Vec<StorageSnapshot> {
+        Vec::new()
     }
 }
 
@@ -198,6 +221,7 @@ pub enum BackendKind {
     Mem,
     Model,
     Sim,
+    Sharded,
 }
 
 impl BackendKind {
@@ -206,9 +230,15 @@ impl BackendKind {
             BackendKind::Mem => "mem",
             BackendKind::Model => "model",
             BackendKind::Sim => "sim",
+            BackendKind::Sharded => "sharded",
         }
     }
 }
+
+/// Default shard span for specs parsed from the CLI (callers that know
+/// their address-space size should override it via
+/// [`BackendSpec::for_capacity`] so traffic actually spreads).
+pub const DEFAULT_LBAS_PER_SHARD: u64 = 1 << 20;
 
 /// Buildable description of a backend — `Clone + Send`, so a router can
 /// hand each serving worker its own instance.
@@ -225,33 +255,80 @@ pub enum BackendSpec {
         prm: SimParams,
         pace: Pace,
     },
+    /// N devices built from one inner spec, routed by a contiguous
+    /// [`ShardMap`].
+    Sharded {
+        inner: Box<BackendSpec>,
+        n_shards: usize,
+        lbas_per_shard: u64,
+    },
 }
 
 impl BackendSpec {
-    /// Parse a `--backend` CLI value (`mem` | `model` | `sim`) with the
-    /// paper-default Storage-Next SLC device. `l_blk` is the block size
-    /// the caller serves (512 for KV buckets, 4096 for full ANN vectors).
+    /// Parse a `--backend` CLI value — `mem` | `model` | `sim`, optionally
+    /// suffixed `:shards=N` for a multi-device fan-out (`sim:shards=4`) —
+    /// with the paper-default Storage-Next SLC device. `l_blk` is the
+    /// block size the caller serves (512 for KV buckets, 4096 for full
+    /// ANN vectors).
     pub fn parse(name: &str, l_blk: u32) -> Result<Self> {
-        match name {
-            "mem" => Ok(BackendSpec::Mem),
-            "model" => Ok(BackendSpec::Model {
+        let (base, opts) = crate::util::cli::split_spec(name);
+        let mut shards: Option<usize> = None;
+        for (k, v) in &opts {
+            match *k {
+                "shards" => {
+                    let n: usize = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("invalid shard count '{v}'"))?;
+                    ensure!(n >= 1, "shard count must be >= 1, got {n}");
+                    shards = Some(n);
+                }
+                other => bail!("unknown backend option '{other}' (want shards=N)"),
+            }
+        }
+        let inner = match base {
+            "mem" => BackendSpec::Mem,
+            "model" => BackendSpec::Model {
                 cfg: SsdConfig::storage_next(NandKind::Slc),
                 l_blk,
                 mix: IoMix::paper_default(),
-            }),
+            },
             "sim" => {
                 // Scaled-down channel count keeps FTL preconditioning fast
                 // while preserving per-channel contention behavior.
                 let mut cfg = SsdConfig::storage_next(NandKind::Slc);
                 cfg.n_ch = 4;
-                Ok(BackendSpec::Sim {
+                BackendSpec::Sim {
                     cfg,
                     prm: SimParams::default_for(l_blk),
                     pace: Pace::Afap,
-                })
+                }
             }
-            other => bail!("unknown storage backend '{other}' (want mem|model|sim)"),
-        }
+            other => {
+                bail!("unknown storage backend '{other}' (want mem|model|sim[:shards=N])")
+            }
+        };
+        Ok(match shards {
+            Some(n) => BackendSpec::Sharded {
+                inner: Box::new(inner),
+                n_shards: n,
+                lbas_per_shard: DEFAULT_LBAS_PER_SHARD,
+            },
+            None => inner,
+        })
+    }
+
+    /// Scaled-down simulator spec (2 channels, 8×8 blocks/pages per
+    /// plane): full discrete-event timing on a geometry that
+    /// preconditions in milliseconds. The shared device for tests,
+    /// benches, and figures — one definition, so they all measure the
+    /// same device.
+    pub fn small_sim(l_blk: u32) -> Self {
+        let mut cfg = SsdConfig::storage_next(NandKind::Slc);
+        cfg.n_ch = 2;
+        let mut prm = SimParams::default_for(l_blk);
+        prm.blocks_per_plane = 8;
+        prm.pages_per_block = 8;
+        BackendSpec::Sim { cfg, prm, pace: Pace::Afap }
     }
 
     pub fn kind(&self) -> BackendKind {
@@ -259,10 +336,54 @@ impl BackendSpec {
             BackendSpec::Mem => BackendKind::Mem,
             BackendSpec::Model { .. } => BackendKind::Model,
             BackendSpec::Sim { .. } => BackendKind::Sim,
+            BackendSpec::Sharded { .. } => BackendKind::Sharded,
         }
     }
 
-    /// Instantiate the backend (spawns the device worker for `sim`).
+    /// The innermost device kind: what actually serves each I/O
+    /// (`Sharded` recurses into its per-shard spec). Callers sizing a
+    /// workload to device cost should key on this, not [`Self::kind`].
+    pub fn device_kind(&self) -> BackendKind {
+        match self {
+            BackendSpec::Sharded { inner, .. } => inner.device_kind(),
+            other => other.kind(),
+        }
+    }
+
+    /// Route a pacing choice into every simulator backend in the spec
+    /// (no-op for `mem`/`model`).
+    pub fn with_pace(self, pace: Pace) -> Self {
+        match self {
+            BackendSpec::Sim { cfg, prm, .. } => BackendSpec::Sim { cfg, prm, pace },
+            BackendSpec::Sharded { inner, n_shards, lbas_per_shard } => BackendSpec::Sharded {
+                inner: Box::new((*inner).with_pace(pace)),
+                n_shards,
+                lbas_per_shard,
+            },
+            other => other,
+        }
+    }
+
+    /// Fit a sharded spec's lba→device map to a known address-space size,
+    /// splitting `total_lbas` evenly across the shards (no-op for
+    /// single-device specs).
+    pub fn for_capacity(self, total_lbas: u64) -> Self {
+        match self {
+            BackendSpec::Sharded { inner, n_shards, .. } => {
+                let n = n_shards as u64;
+                // round up so n_shards * lbas_per_shard covers total_lbas
+                let mut per = total_lbas / n;
+                if total_lbas % n != 0 {
+                    per += 1;
+                }
+                BackendSpec::Sharded { inner, n_shards, lbas_per_shard: per.max(1) }
+            }
+            other => other,
+        }
+    }
+
+    /// Instantiate the backend (spawns the device worker for `sim`, one
+    /// inner backend per shard for `sharded`).
     pub fn build(&self) -> Box<dyn StorageBackend> {
         match self {
             BackendSpec::Mem => Box::new(MemBackend::new()),
@@ -271,6 +392,12 @@ impl BackendSpec {
             }
             BackendSpec::Sim { cfg, prm, pace } => {
                 Box::new(SimBackend::spawn(cfg.clone(), prm.clone(), *pace))
+            }
+            BackendSpec::Sharded { inner, n_shards, lbas_per_shard } => {
+                let map = ShardMap::new(*n_shards, *lbas_per_shard)
+                    .expect("shard shape validated at construction");
+                let devices = (0..*n_shards).map(|_| inner.build()).collect();
+                Box::new(ShardedBackend::new(map, devices))
             }
         }
     }
@@ -281,8 +408,14 @@ impl BackendSpec {
 #[derive(Clone, Debug)]
 pub struct StorageSnapshot {
     pub kind: BackendKind,
+    /// Aggregate traffic (across all shards for sharded backends).
     pub stats: BackendStats,
+    /// Device-level counters (merged across shards for sharded backends).
     pub device: Option<SimStats>,
+    /// Per-shard snapshots when a [`ShardedBackend`] serves the traffic —
+    /// or, in [`crate::coordinator::Router::merged_stats`], the per-worker
+    /// snapshots behind the aggregate. Empty for single-device backends.
+    pub shards: Vec<StorageSnapshot>,
 }
 
 impl StorageSnapshot {
@@ -291,6 +424,19 @@ impl StorageSnapshot {
             kind: backend.kind(),
             stats: backend.stats(),
             device: backend.device_stats(),
+            shards: backend.shard_snapshots(),
+        }
+    }
+
+    /// Fold another snapshot's aggregate counters into this one (traffic
+    /// adds, device counters merge; `shards` is left to the caller, which
+    /// knows whether the other snapshot is a peer or a child).
+    pub fn merge(&mut self, other: &StorageSnapshot) {
+        self.stats.merge(&other.stats);
+        match (&mut self.device, &other.device) {
+            (Some(m), Some(o)) => m.merge(o),
+            (None, Some(o)) => self.device = Some(o.clone()),
+            _ => {}
         }
     }
 }
@@ -307,6 +453,38 @@ mod tests {
             assert_eq!(b.kind().name(), name);
         }
         assert!(BackendSpec::parse("disk", 512).is_err());
+    }
+
+    #[test]
+    fn spec_parses_shard_suffix() {
+        let spec = BackendSpec::parse("mem:shards=4", 512).unwrap().for_capacity(1000);
+        assert_eq!(spec.kind(), BackendKind::Sharded);
+        match &spec {
+            BackendSpec::Sharded { inner, n_shards, lbas_per_shard } => {
+                assert_eq!(inner.kind(), BackendKind::Mem);
+                assert_eq!(*n_shards, 4);
+                assert_eq!(*lbas_per_shard, 250);
+            }
+            other => panic!("expected sharded spec, got {other:?}"),
+        }
+        let b = spec.build();
+        assert_eq!(b.kind(), BackendKind::Sharded);
+        assert!(BackendSpec::parse("mem:shards=0", 512).is_err());
+        assert!(BackendSpec::parse("mem:shards=abc", 512).is_err());
+        assert!(BackendSpec::parse("mem:replicas=2", 512).is_err());
+    }
+
+    #[test]
+    fn snapshot_of_sharded_backend_reports_per_shard_stats() {
+        let spec = BackendSpec::parse("mem:shards=2", 512).unwrap().for_capacity(8);
+        let mut b = spec.build();
+        read_blocks(&mut *b, &[0, 1, 2, 3, 4, 5]); // 4 on shard 0, 2 on shard 1
+        let snap = StorageSnapshot::capture(b.as_ref());
+        assert_eq!(snap.kind, BackendKind::Sharded);
+        assert_eq!(snap.stats.reads, 6);
+        assert_eq!(snap.shards.len(), 2);
+        assert_eq!(snap.shards[0].stats.reads, 4);
+        assert_eq!(snap.shards[1].stats.reads, 2);
     }
 
     #[test]

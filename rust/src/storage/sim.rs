@@ -41,6 +41,31 @@ pub enum Pace {
     WallClock { speedup: f64 },
 }
 
+impl Pace {
+    /// Parse a `--pace` CLI value: `afap`, `wall` (real time), or
+    /// `wall:<speedup>` (e.g. `wall:10` replays 10 virtual seconds per
+    /// wall second).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if s == "afap" {
+            return Ok(Pace::Afap);
+        }
+        if s == "wall" {
+            return Ok(Pace::WallClock { speedup: 1.0 });
+        }
+        if let Some(v) = s.strip_prefix("wall:") {
+            let speedup: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid pace speedup '{v}'"))?;
+            anyhow::ensure!(
+                speedup.is_finite() && speedup > 0.0,
+                "pace speedup must be a positive number, got {speedup}"
+            );
+            return Ok(Pace::WallClock { speedup });
+        }
+        anyhow::bail!("unknown pace '{s}' (want afap|wall|wall:<speedup>)")
+    }
+}
+
 enum Cmd {
     Submit(Vec<(u64, IoRequest)>),
     Stats(mpsc::Sender<SimStats>),
@@ -217,6 +242,22 @@ mod tests {
         prm.blocks_per_plane = 8;
         prm.pages_per_block = 8;
         (cfg, prm)
+    }
+
+    #[test]
+    fn pace_parses_cli_forms() {
+        assert!(matches!(Pace::parse("afap").unwrap(), Pace::Afap));
+        match Pace::parse("wall").unwrap() {
+            Pace::WallClock { speedup } => assert_eq!(speedup, 1.0),
+            other => panic!("expected wall pace, got {other:?}"),
+        }
+        match Pace::parse("wall:25").unwrap() {
+            Pace::WallClock { speedup } => assert_eq!(speedup, 25.0),
+            other => panic!("expected wall pace, got {other:?}"),
+        }
+        assert!(Pace::parse("wall:0").is_err());
+        assert!(Pace::parse("wall:x").is_err());
+        assert!(Pace::parse("slow").is_err());
     }
 
     #[test]

@@ -170,6 +170,25 @@ impl Parsed {
     }
 }
 
+/// Split a `name[:key=value[,key=value...]]` spec string — the grammar of
+/// composite CLI values like `--backend sim:shards=4`. Returns the base
+/// name and the (key, value) pairs; a bare `name` yields no pairs, and a
+/// key without `=` yields an empty value (callers reject what they don't
+/// understand).
+pub fn split_spec(s: &str) -> (&str, Vec<(&str, &str)>) {
+    match s.split_once(':') {
+        None => (s, Vec::new()),
+        Some((base, rest)) => {
+            let opts = rest
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| p.split_once('=').unwrap_or((p, "")))
+                .collect();
+            (base, opts)
+        }
+    }
+}
+
 /// Parse "4096", "64K", "50M", "2G" (binary for B-suffixed via caller).
 pub fn parse_scaled_u64(s: &str) -> Option<u64> {
     let s = s.trim();
@@ -245,6 +264,17 @@ mod tests {
         assert_eq!(parse_scaled_u64("400M"), Some(400_000_000));
         assert_eq!(parse_scaled_u64("-3"), None);
         assert_eq!(parse_scaled_u64("x"), None);
+    }
+
+    #[test]
+    fn spec_strings_split() {
+        assert_eq!(split_spec("sim"), ("sim", vec![]));
+        assert_eq!(split_spec("sim:shards=4"), ("sim", vec![("shards", "4")]));
+        assert_eq!(
+            split_spec("sim:shards=4,trace=on"),
+            ("sim", vec![("shards", "4"), ("trace", "on")])
+        );
+        assert_eq!(split_spec("mem:bare"), ("mem", vec![("bare", "")]));
     }
 
     #[test]

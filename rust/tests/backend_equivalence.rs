@@ -6,23 +6,16 @@
 
 use std::sync::Arc;
 
-use fivemin::config::{NandKind, SsdConfig};
 use fivemin::coordinator::batcher::BatchPolicy;
-use fivemin::coordinator::{Coordinator, ServingCorpus};
+use fivemin::coordinator::{Coordinator, Router, ServingCorpus};
 use fivemin::kvstore::{BackedStore, CuckooParams, KvEngine, MemStore};
 use fivemin::runtime::default_artifacts_dir;
-use fivemin::sim::SimParams;
-use fivemin::storage::{BackendSpec, Pace};
+use fivemin::storage::BackendSpec;
 use fivemin::util::rng::Rng;
 
 /// Sim backend with a small device geometry so tests run in seconds.
 fn small_sim_spec(l_blk: u32) -> BackendSpec {
-    let mut cfg = SsdConfig::storage_next(NandKind::Slc);
-    cfg.n_ch = 2;
-    let mut prm = SimParams::default_for(l_blk);
-    prm.blocks_per_plane = 8;
-    prm.pages_per_block = 8;
-    BackendSpec::Sim { cfg, prm, pace: Pace::Afap }
+    BackendSpec::small_sim(l_blk)
 }
 
 fn backends(l_blk: u32) -> Vec<BackendSpec> {
@@ -117,6 +110,77 @@ fn ann_results_identical_across_backends() {
     }
     assert_eq!(all[0], all[1], "model backend changed ANN answers");
     assert_eq!(all[0], all[2], "sim backend changed ANN answers");
+}
+
+// ---------------------------------------------------------------------------
+// Sharded / partitioned serving: the scale-out path must return the exact
+// answers of the single-replica path, only timing may differ.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kv_results_identical_on_sharded_backend() {
+    let (mem_res, mem_reads, _) = run_kv_workload(&BackendSpec::Mem);
+    let p = CuckooParams::for_capacity(3_000, 0.7, 512, 64);
+    // 4 mem devices covering buckets + WAL slack, then 4 sim devices
+    let sharded_mem = BackendSpec::parse("mem:shards=4", 512)
+        .unwrap()
+        .for_capacity(2 * p.n_buckets);
+    let sharded_sim = BackendSpec::Sharded {
+        inner: Box::new(small_sim_spec(512)),
+        n_shards: 4,
+        lbas_per_shard: (2 * p.n_buckets).div_euclid(4).max(1),
+    };
+    for (name, spec) in [("mem", sharded_mem), ("sim", sharded_sim)] {
+        let (res, reads, _) = run_kv_workload(&spec);
+        assert_eq!(res, mem_res, "sharded {name} backend changed GET results");
+        assert_eq!(reads, mem_reads, "sharded {name} backend changed I/O count");
+    }
+}
+
+#[test]
+fn partitioned_router_matches_single_replica_worker() {
+    let corpus = Arc::new(ServingCorpus::synthetic(4, 91));
+    // control arm: one replica worker over the whole corpus, mem backend
+    let single = Coordinator::start(
+        default_artifacts_dir(),
+        corpus.clone(),
+        BatchPolicy::default(),
+        BackendSpec::Mem,
+    )
+    .unwrap();
+    // treatment arm: 4 partition workers, each owning one shard on its
+    // own simulated device
+    let workers: Vec<_> = corpus
+        .partitions(4)
+        .unwrap()
+        .into_iter()
+        .map(|part| {
+            Coordinator::start(
+                default_artifacts_dir(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                small_sim_spec(4096),
+            )
+            .unwrap()
+        })
+        .collect();
+    let router = Router::partitioned(workers).unwrap();
+    let mut rng = Rng::new(177);
+    for i in 0..6 {
+        let q = corpus.query_near(rng.below(corpus.n as u64) as usize, 0.02, &mut rng);
+        let a = single.query(q.clone()).unwrap();
+        let b = router.query(q).unwrap();
+        assert_eq!(a.ids, b.ids, "query {i}: partitioned ids differ");
+        assert_eq!(a.scores, b.scores, "query {i}: partitioned scores differ");
+        assert_eq!(a.reduced, b.reduced, "query {i}: partitioned reduced scores differ");
+    }
+    // partitioned fetches went to the partition devices, not one replica
+    let stats = router.stats();
+    assert_eq!(stats.len(), 4);
+    for (p, s) in stats.iter().enumerate() {
+        let snap = s.storage.as_ref().expect("partition snapshot");
+        assert!(snap.stats.reads > 0, "partition {p} never touched its device");
+    }
 }
 
 #[test]

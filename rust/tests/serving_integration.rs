@@ -87,7 +87,7 @@ fn router_spreads_load_across_workers() {
     let corpus = Arc::new(ServingCorpus::synthetic(1, 17));
     let w1 = start(&corpus, BatchPolicy::default());
     let w2 = start(&corpus, BatchPolicy::default());
-    let router = Router::new(vec![w1, w2]);
+    let router = Router::new(vec![w1, w2]).unwrap();
     let mut rng = Rng::new(7);
     for _ in 0..16 {
         let q = corpus.query_near(rng.below(corpus.n as u64) as usize, 0.02, &mut rng);
@@ -97,6 +97,58 @@ fn router_spreads_load_across_workers() {
     assert_eq!(stats.len(), 2);
     assert_eq!(stats.iter().map(|s| s.queries).sum::<u64>(), 16);
     assert!(stats.iter().all(|s| s.queries == 8), "round-robin must halve");
+    // satellite: callers get the aggregate without re-implementing the merge
+    let merged = router.merged_stats();
+    assert_eq!(merged.queries, 16);
+    assert_eq!(merged.latency_ns.count(), 16);
+    assert!(merged.storage.is_some(), "aggregate snapshot published");
+}
+
+// (empty-router rejection is covered by the unit test in coordinator/mod.rs)
+
+#[test]
+fn partitioned_router_scatter_gathers_with_high_recall() {
+    let corpus = Arc::new(ServingCorpus::synthetic(2, 21));
+    let workers: Vec<_> = corpus
+        .partitions(2)
+        .unwrap()
+        .into_iter()
+        .map(|part| {
+            Coordinator::start(
+                artifacts(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                BackendSpec::Mem,
+            )
+            .unwrap()
+        })
+        .collect();
+    let router = Router::partitioned(workers).unwrap();
+    let mut rng = Rng::new(23);
+    let trials = 24u64;
+    let mut top1_hits = 0;
+    for _ in 0..trials {
+        let target = rng.below(corpus.n as u64) as usize;
+        let res = router
+            .query(corpus.query_near(target, 0.02, &mut rng))
+            .unwrap();
+        assert_eq!(res.ids.len(), SERVE.topk);
+        assert_eq!(res.reduced.len(), SERVE.topk);
+        assert!(res.scores.windows(2).all(|w| w[0] >= w[1] - 1e-5));
+        if res.ids[0] as usize == target {
+            top1_hits += 1;
+        }
+    }
+    let recall = top1_hits as f64 / trials as f64;
+    assert!(recall >= 0.9, "top-1 recall {recall}");
+    // scatter: every partition served every query
+    let stats = router.stats();
+    assert_eq!(stats.len(), 2);
+    assert!(stats.iter().all(|s| s.queries == trials));
+    let merged = router.merged_stats();
+    assert_eq!(merged.queries, 2 * trials);
+    let snap = merged.storage.expect("aggregate snapshot");
+    assert_eq!(snap.shards.len(), 2, "per-partition snapshots preserved");
 }
 
 #[test]

@@ -1,7 +1,7 @@
 # Build/verify entry points. `make artifacts` needs jax installed;
 # everything else is pure cargo.
 
-.PHONY: artifacts verify lint pytest clean figures fig11 fig12
+.PHONY: artifacts verify verify-release lint pytest clean figures fig11 fig12 fig13
 
 # Lower the JAX/Pallas serving graphs to HLO-text artifacts + manifest
 # (a prerequisite only for --features pjrt builds; the native engine
@@ -12,6 +12,11 @@ artifacts:
 # Tier-1 verification.
 verify:
 	cargo build --release && cargo test -q
+
+# Release-profile test pass (CI runs both; the sim's virtual-time paths
+# have release-only overflow/ordering risk).
+verify-release:
+	cargo test --release -q
 
 # Lint gate (mirrors CI).
 lint:
@@ -29,6 +34,9 @@ fig11:
 
 fig12:
 	cargo run --release -- figures --fig12
+
+fig13:
+	cargo run --release -- figures --fig13
 
 clean:
 	rm -rf target results

@@ -17,12 +17,17 @@
 //!     cargo run --release --example ann_serving -- --backend sim
 //!     cargo run --release --example ann_serving -- --backend sim --workers 2
 //!     cargo run --release --example ann_serving -- --backend sim --pace wall:50
+//!     cargo run --release --example ann_serving -- --backend sim --fetch merge
 //!
 //! `mem` reproduces the DRAM-resident baseline; `model` charges the
 //! analytic Eq. 2 + queueing cost; `sim` replays the fetch traffic on
 //! MQSim-Next in virtual time and reports device-level stats.
 //! `--pace wall:S` slows the simulator to S virtual seconds per wall
 //! second so you can watch the device be the bottleneck in real time.
+//! `--fetch merge` switches the router to the two-phase fetch-after-merge
+//! protocol: stage-1 reduced scores merge first, then only the global
+//! top-k is fetched from its owning shards — k device reads per query
+//! instead of workers×k, at the cost of a second round-trip.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -30,7 +35,7 @@ use std::time::Instant;
 use fivemin::ann::{ann_throughput, AnnScenario};
 use fivemin::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
 use fivemin::coordinator::batcher::BatchPolicy;
-use fivemin::coordinator::{Coordinator, Router, ServingCorpus};
+use fivemin::coordinator::{Coordinator, FetchMode, Router, ServingCorpus};
 use fivemin::runtime::{default_artifacts_dir, SERVE};
 use fivemin::storage::{BackendSpec, Pace};
 use fivemin::util::cli::ArgSpec;
@@ -57,6 +62,12 @@ fn main() -> anyhow::Result<()> {
             "afap|wall:S",
             Some("afap"),
             "sim pacing: as fast as possible, or S virtual seconds per wall second",
+        )
+        .opt(
+            "fetch",
+            "spec|merge",
+            Some("spec"),
+            "stage-2 fetch protocol: speculative (1 round-trip) or after-merge (2 round-trips, ~Nx fewer reads)",
         );
     let args: Vec<String> = std::env::args().skip(1).collect();
     let p = match spec.parse(&args) {
@@ -71,6 +82,7 @@ fn main() -> anyhow::Result<()> {
     let backend = BackendSpec::parse(p.str("backend").unwrap(), 4096)
         .map_err(|e| anyhow::anyhow!("{e}"))?
         .with_pace(pace);
+    let fetch = FetchMode::parse(p.str("fetch").unwrap())?;
     let n_queries: usize = p.usize("queries").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
     let n_workers: usize = p.usize("workers").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
 
@@ -84,8 +96,9 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "starting {n_workers} partition workers on the '{}' storage backend \
-         (scatter/gather router)…",
-        backend.kind().name()
+         (scatter/gather router, '{}' stage-2 fetch)…",
+        backend.kind().name(),
+        fetch.name()
     );
     let workers = corpus
         .partitions(n_workers)?
@@ -96,7 +109,7 @@ fn main() -> anyhow::Result<()> {
             Coordinator::start(dir.clone(), Arc::new(part), BatchPolicy::default(), spec)
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
-    let router = Router::partitioned(workers)?;
+    let router = Router::partitioned_with(workers, fetch)?;
 
     // ---- serve a batched query stream (concurrent submission) -------------
     let mut rng = Rng::new(9);
@@ -124,19 +137,37 @@ fn main() -> anyhow::Result<()> {
     println!("queries    : {served} in {dt:.2}s  ->  {:.0} QPS", served as f64 / dt);
     println!("recall@1   : {:.1}%", 100.0 * hits as f64 / served as f64);
     println!(
-        "batches    : {} across partitions ({:.1} queries/batch avg)",
+        "batches    : {} across partitions ({:.1} requests/batch avg)",
         merged.batches,
-        merged.queries as f64 / merged.batches.max(1) as f64
+        (merged.queries + merged.reduce_legs + merged.fetch_legs) as f64
+            / merged.batches.max(1) as f64
+    );
+    let e2e = router.gather_latency();
+    println!(
+        "end-to-end : merged-answer latency p50 {} p99 {}",
+        fmt_secs(e2e.percentile(0.5) / 1e9),
+        fmt_secs(e2e.percentile(0.99) / 1e9),
     );
     for (i, s) in stats.iter().enumerate() {
-        println!(
-            "partition {i}: {} queries, latency p50 {} p99 {}, stage1 p50 {}, stage2 p50 {}",
-            s.queries,
-            fmt_secs(s.latency_ns.percentile(0.5) / 1e9),
-            fmt_secs(s.latency_ns.percentile(0.99) / 1e9),
-            fmt_secs(s.stage1_ns.percentile(0.5) / 1e9),
-            fmt_secs(s.stage2_ns.percentile(0.5) / 1e9),
-        );
+        if s.queries > 0 {
+            println!(
+                "partition {i}: {} queries, latency p50 {} p99 {}, stage1 p50 {}, stage2 p50 {}",
+                s.queries,
+                fmt_secs(s.latency_ns.percentile(0.5) / 1e9),
+                fmt_secs(s.latency_ns.percentile(0.99) / 1e9),
+                fmt_secs(s.stage1_ns.percentile(0.5) / 1e9),
+                fmt_secs(s.stage2_ns.percentile(0.5) / 1e9),
+            );
+        } else {
+            // two-phase mode: the worker served reduce/fetch legs instead
+            println!(
+                "partition {i}: {} reduce + {} fetch legs, stage1 p50 {}, stage2 p50 {}",
+                s.reduce_legs,
+                s.fetch_legs,
+                fmt_secs(s.stage1_ns.percentile(0.5) / 1e9),
+                fmt_secs(s.stage2_ns.percentile(0.5) / 1e9),
+            );
+        }
         println!(
             "  storage  : burst stall p50 {} p99 {}",
             fmt_secs(s.storage_stall_ns.percentile(0.5) / 1e9),
@@ -180,8 +211,12 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!(
-        "SSD fetches: {} promoted full vectors ({} per query per partition)",
-        merged.ssd_reads, SERVE.topk
+        "SSD fetches: {} promoted full vectors ({:.1} per query; speculative \
+         costs workers x {}, after-merge exactly {})",
+        merged.ssd_reads,
+        merged.ssd_reads as f64 / served.max(1) as f64,
+        SERVE.topk,
+        SERVE.topk
     );
 
     // ---- what this workload costs at paper scale --------------------------

@@ -110,6 +110,13 @@ impl ServingCorpus {
         Ok(out)
     }
 
+    /// Does this corpus slice own global id `id`? Partition workers use
+    /// this to validate fetch-after-merge phase-2 requests: the router may
+    /// only ask a worker to fetch candidates on the worker's own device.
+    pub fn owns(&self, id: usize) -> bool {
+        id >= self.base && id < self.base + self.n
+    }
+
     /// Full vector by *global* id (callers never see local indices).
     pub fn full_vector(&self, id: usize) -> &[f32] {
         let local = id - self.base;
@@ -168,9 +175,15 @@ mod tests {
             assert_eq!(part.base, p * 2 * SERVE.shard);
             // global-id addressing returns the same vector as the parent
             for probe in [part.base, part.base + 1, part.base + part.n - 1] {
+                assert!(part.owns(probe));
                 assert_eq!(part.full_vector(probe), c.full_vector(probe));
                 assert_eq!(part.local_lba(probe), (probe - part.base) as u64);
             }
+            // ownership is exclusive: the neighbours' ids are foreign
+            if part.base > 0 {
+                assert!(!part.owns(part.base - 1));
+            }
+            assert!(!part.owns(part.base + part.n));
         }
         // partitions tile the corpus exactly
         assert_eq!(parts.iter().map(|p| p.n).sum::<usize>(), c.n);

@@ -3,21 +3,38 @@
 //!
 //! One worker thread owns the [`crate::runtime::Runtime`] (execution
 //! handles stay on their creating thread) *and* its
-//! [`crate::storage::StorageBackend`]; queries arrive over an mpsc
-//! channel, are batched to the graph's fixed batch shape, executed in two
-//! stages around the storage fetch of promoted full vectors, and answered
-//! on per-query response channels. [`Router`] completes the vLLM-router
-//! shape in one of two modes: round-robin over *replica* workers (each
-//! holds the full corpus), or scatter/gather over *partition* workers —
-//! each owns a disjoint [`ServingCorpus::partitions`] slice on its own
-//! storage device, every query fans out to all of them, and the
-//! per-partition top-k merge reproduces the single-worker answer
-//! bit-for-bit (see `rust/tests/backend_equivalence.rs`) while capacity
-//! and device IOPS scale together.
+//! [`crate::storage::StorageBackend`]; requests arrive over an mpsc
+//! channel, are batched to the graph's fixed batch shape, executed around
+//! the storage fetch of promoted full vectors, and answered on per-request
+//! response channels. [`Router`] completes the vLLM-router shape in one of
+//! two modes: round-robin over *replica* workers (each holds the full
+//! corpus), or scatter/gather over *partition* workers — each owns a
+//! disjoint [`ServingCorpus::partitions`] slice on its own storage device,
+//! every query fans out to all of them, and the per-partition top-k merge
+//! reproduces the single-worker answer bit-for-bit (see
+//! `rust/tests/backend_equivalence.rs` and
+//! `rust/tests/router_equivalence_prop.rs`) while capacity and device
+//! IOPS scale together.
+//!
+//! Partition mode fetches stage-2 candidates one of two ways
+//! ([`FetchMode`]):
+//!
+//! * **Speculative** (default) — one round-trip: every partition fetches
+//!   and re-ranks its *local* top-k before the merge, so a query costs
+//!   `N×k` device reads.
+//! * **After-merge** — two round-trips: phase 1 gathers only stage-1
+//!   *reduced* scores ([`WorkerRequest::Reduce`]), the router merges them
+//!   into the global promote set, and phase 2 fetches + full-scores only
+//!   the global top-k from their *owning* shards
+//!   ([`WorkerRequest::Fetch`]) — `k` device reads per query, the
+//!   DiskANN-style two-round refinement. The saving is measurable, not
+//!   asserted: stage-2 reads are tagged
+//!   [`IoClass::Stage2`](crate::storage::IoClass) and split out in
+//!   `BackendStats`/`SimStats` snapshots.
 //!
 //! The stage-2 fetch is the paper's "SSD read of promoted candidates":
-//! each promoted global id is submitted to the worker's backend as a
-//! block read, and the batch stalls for the burst to complete. With
+//! each promoted global id is submitted to the owning worker's backend as
+//! a block read, and the batch stalls for the burst to complete. With
 //! [`BackendSpec::Mem`] that stall is DRAM-class (the pre-storage-layer
 //! behavior); with `Model`/`Sim` the reported stall and per-read
 //! latencies come from the analytic device model or MQSim-Next, while
@@ -27,6 +44,8 @@
 pub mod batcher;
 pub mod corpus;
 
+use std::collections::HashMap;
+use std::ops::Range;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -41,33 +60,92 @@ use crate::util::stats::LatencyHist;
 use batcher::{collect_batch, BatchPolicy, Job};
 pub use corpus::ServingCorpus;
 
-/// A top-k answer for one query.
+/// A top-k answer for one query (or one leg of a two-phase query).
 #[derive(Clone, Debug)]
 pub struct QueryResult {
     /// Global corpus ids, best-first.
     pub ids: Vec<u32>,
-    /// Full-dim (stage-2) scores, aligned with `ids`.
+    /// Full-dim (stage-2) scores, aligned with `ids`. Empty on a phase-1
+    /// reduce leg (no stage-2 ran there).
     pub scores: Vec<f32>,
     /// Reduced-dim (stage-1) scores, aligned with `ids`. The scatter/
     /// gather merge needs them to promote exactly the candidates a
-    /// single worker over the union corpus would have promoted.
+    /// single worker over the union corpus would have promoted. Empty on
+    /// a phase-2 fetch leg (promotion already happened at the router).
     pub reduced: Vec<f32>,
-    /// End-to-end latency (enqueue → answer).
+    /// End-to-end latency: enqueue → answer for worker legs; router
+    /// submit → merged answer for partition-mode results (measured by the
+    /// gather/finish threads, so merger queue time is included).
     pub latency: Duration,
-    /// Batch this query rode in.
+    /// Batch this request rode in.
     pub batch_size: usize,
+}
+
+/// One request on a worker channel. [`Coordinator::submit`] wraps plain
+/// queries in `Search`; the two-phase partitioned router sends
+/// `Reduce`/`Fetch` legs (see [`FetchMode::AfterMerge`]).
+pub enum WorkerRequest {
+    /// Full two-stage query: stage-1 scan, fetch of the local top-k,
+    /// stage-2 re-rank (replica workers and speculative partitions).
+    Search(Vec<f32>),
+    /// Phase 1 of fetch-after-merge: stage-1 scan only. Answers with the
+    /// local top-k ids + reduced scores and issues no device reads.
+    Reduce(Vec<f32>),
+    /// Phase 2 of fetch-after-merge: fetch + full-score the given
+    /// candidates, all of which must live in this worker's partition
+    /// (see [`ServingCorpus::owns`]).
+    Fetch { query: Vec<f32>, ids: Vec<u32> },
+}
+
+/// How a partitioned [`Router`] fetches stage-2 candidates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FetchMode {
+    /// One round-trip: every partition speculatively fetches + re-ranks
+    /// its local top-k before the merge — `N×k` stage-2 device reads per
+    /// query, lowest latency.
+    #[default]
+    Speculative,
+    /// Two round-trips: merge stage-1 reduced scores at the router first,
+    /// then fetch only the global top-k from their owning shards — `k`
+    /// stage-2 device reads per query, one extra worker round-trip.
+    AfterMerge,
+}
+
+impl FetchMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FetchMode::Speculative => "spec",
+            FetchMode::AfterMerge => "merge",
+        }
+    }
+
+    /// Parse a `--fetch` CLI value (`spec` | `merge`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "spec" | "speculative" => Ok(FetchMode::Speculative),
+            "merge" | "after-merge" => Ok(FetchMode::AfterMerge),
+            other => anyhow::bail!("unknown fetch mode '{other}' (want spec|merge)"),
+        }
+    }
 }
 
 /// Aggregated serving metrics.
 #[derive(Clone, Debug)]
 pub struct ServeStats {
+    /// Full two-stage queries answered (search legs).
     pub queries: u64,
     pub batches: u64,
     pub batch_fill: f64,
     pub latency_ns: LatencyHist,
     pub stage1_ns: LatencyHist,
     pub stage2_ns: LatencyHist,
-    /// Storage reads issued for promoted candidates.
+    /// Phase-1 (stage-1-only) reduce legs served (after-merge mode).
+    pub reduce_legs: u64,
+    /// Phase-2 fetch legs served (after-merge mode).
+    pub fetch_legs: u64,
+    /// Storage reads issued for promoted candidates (stage-2 fetches in
+    /// every mode; the backend snapshot's `stage2_reads` reports the same
+    /// traffic from the device side).
     pub ssd_reads: u64,
     /// Per-batch storage stall: device time of the slowest read in each
     /// stage-2 fetch burst (virtual ns for model/sim backends).
@@ -86,6 +164,8 @@ impl ServeStats {
             latency_ns: LatencyHist::for_latency_ns(),
             stage1_ns: LatencyHist::for_latency_ns(),
             stage2_ns: LatencyHist::for_latency_ns(),
+            reduce_legs: 0,
+            fetch_legs: 0,
             ssd_reads: 0,
             storage_stall_ns: LatencyHist::for_latency_ns(),
             storage: None,
@@ -93,12 +173,18 @@ impl ServeStats {
     }
 }
 
+/// Worker response payload (per-request channel).
+type Resp = Result<QueryResult, String>;
+
 /// One serving worker: a thread owning Runtime + corpus partition +
 /// storage backend.
 pub struct Coordinator {
-    tx: Option<mpsc::Sender<Job<Vec<f32>, Result<QueryResult, String>>>>,
+    tx: Option<mpsc::Sender<Job<WorkerRequest, Resp>>>,
     handle: Option<JoinHandle<()>>,
     stats: Arc<Mutex<ServeStats>>,
+    /// Global ids this worker's corpus slice owns (the full corpus for
+    /// replica workers) — the router's fetch-after-merge ownership lookup.
+    owned: Range<u32>,
 }
 
 impl Coordinator {
@@ -111,9 +197,10 @@ impl Coordinator {
         policy: BatchPolicy,
         backend: BackendSpec,
     ) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Job<Vec<f32>, Result<QueryResult, String>>>();
+        let (tx, rx) = mpsc::channel::<Job<WorkerRequest, Resp>>();
         let stats = Arc::new(Mutex::new(ServeStats::new()));
         let stats2 = stats.clone();
+        let owned = corpus.base as u32..(corpus.base + corpus.n) as u32;
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let handle = std::thread::Builder::new()
             .name("fivemin-worker".into())
@@ -136,12 +223,21 @@ impl Coordinator {
             .recv()
             .map_err(|_| anyhow!("worker died during startup"))?
             .map_err(|e| anyhow!("worker startup: {e}"))?;
-        Ok(Coordinator { tx: Some(tx), handle: Some(handle), stats })
+        Ok(Coordinator { tx: Some(tx), handle: Some(handle), stats, owned })
     }
 
     /// Submit a full-dimension query; returns the response receiver.
     pub fn submit(&self, query_full: Vec<f32>) -> mpsc::Receiver<Result<QueryResult, String>> {
-        let (job, rrx) = Job::with_channel(query_full);
+        self.submit_request(WorkerRequest::Search(query_full))
+    }
+
+    /// Submit a raw worker request (the two-phase router's reduce/fetch
+    /// legs use this; plain callers want [`Coordinator::submit`]).
+    pub fn submit_request(
+        &self,
+        req: WorkerRequest,
+    ) -> mpsc::Receiver<Result<QueryResult, String>> {
+        let (job, rrx) = Job::with_channel(req);
         if let Some(tx) = &self.tx {
             let _ = tx.send(job);
         }
@@ -179,7 +275,7 @@ fn worker_loop(
     rt: &mut Runtime,
     corpus: &ServingCorpus,
     store: &mut dyn StorageBackend,
-    rx: &mpsc::Receiver<Job<Vec<f32>, Result<QueryResult, String>>>,
+    rx: &mpsc::Receiver<Job<WorkerRequest, Resp>>,
     policy: &BatchPolicy,
     stats: &Arc<Mutex<ServeStats>>,
 ) {
@@ -195,73 +291,210 @@ fn worker_loop(
         })
         .collect();
     while let Some(batch) = collect_batch(rx, policy) {
-        let n_real = batch.len();
-        match run_two_stage_batch(rt, corpus, store, &shard_tensors, &batch) {
-            Ok((results, t1, t2, stall_ns)) => {
-                {
-                    let mut st = stats.lock().unwrap();
-                    st.batches += 1;
-                    st.batch_fill += n_real as f64 / SERVE.batch as f64;
-                    st.stage1_ns.push(t1.as_nanos() as f64);
-                    st.stage2_ns.push(t2.as_nanos() as f64);
-                    st.ssd_reads += (n_real * SERVE.topk) as u64;
-                    st.storage_stall_ns.push(stall_ns as f64);
-                    for (job, mut res) in batch.into_iter().zip(results) {
-                        res.latency = job.enqueued.elapsed();
-                        res.batch_size = n_real;
-                        st.queries += 1;
-                        st.latency_ns.push(res.latency.as_nanos() as f64);
-                        let _ = job.resp.send(Ok(res));
-                    }
-                }
-                // Snapshot after answering: for the sim backend this does
-                // blocking round-trips to the device thread, which must not
-                // sit between queries and their responses.
-                let snapshot = StorageSnapshot::capture(store);
-                stats.lock().unwrap().storage = Some(snapshot);
-            }
-            Err(e) => {
-                let msg = e.to_string();
-                for job in batch {
-                    let _ = job.resp.send(Err(msg.clone()));
+        // Split by leg kind: each kind runs as its own padded graph batch.
+        // Fetch legs go first (they complete two-phase queries already in
+        // flight), then full searches, then reduce legs (which *start*
+        // two-phase queries).
+        let mut searches = Vec::new();
+        let mut reduces = Vec::new();
+        let mut fetches = Vec::new();
+        for job in batch {
+            let Job { payload, enqueued, resp } = job;
+            match payload {
+                WorkerRequest::Search(q) => searches.push(Job { payload: q, enqueued, resp }),
+                WorkerRequest::Reduce(q) => reduces.push(Job { payload: q, enqueued, resp }),
+                WorkerRequest::Fetch { query, ids } => {
+                    fetches.push(Job { payload: (query, ids), enqueued, resp })
                 }
             }
+        }
+        let touched_store = !fetches.is_empty() || !searches.is_empty();
+        if !fetches.is_empty() {
+            run_fetch_group(rt, corpus, store, fetches, stats);
+        }
+        if !searches.is_empty() {
+            run_search_group(rt, corpus, store, &shard_tensors, searches, stats);
+        }
+        if !reduces.is_empty() {
+            run_reduce_group(rt, corpus, &shard_tensors, reduces, stats);
+        }
+        // Snapshot after answering: for the sim backend this does
+        // blocking round-trips to the device thread, which must not
+        // sit between requests and their responses. Reduce-only batches
+        // issued no I/O — skip the round-trip on the phase-1 hot path.
+        if touched_store {
+            let snapshot = StorageSnapshot::capture(store);
+            stats.lock().unwrap().storage = Some(snapshot);
         }
     }
 }
 
-/// Execute one padded batch through the graphs:
-/// stage 1 per shard (reduced_score) → merge → storage fetch of promoted
-/// full vectors → stage 2 (full_score) → per-query top-k.
-///
-/// Returns the per-query results, the two stage wall times, and the
-/// storage stall (device time of the slowest read in the fetch burst).
-fn run_two_stage_batch(
+/// Record one executed group's stats and answer its jobs. `record` runs
+/// once under the stats lock (the group's batch-level histograms and
+/// counters); `leg` runs once per answered job (which per-leg counter
+/// that kind bumps). Shared by all three leg kinds so the answer path
+/// cannot drift between them.
+fn answer_group<P>(
+    jobs: Vec<Job<P, Resp>>,
+    results: Vec<QueryResult>,
+    stats: &Arc<Mutex<ServeStats>>,
+    record: impl FnOnce(&mut ServeStats),
+    leg: impl Fn(&mut ServeStats, &QueryResult),
+) {
+    let n_real = jobs.len();
+    let mut st = stats.lock().unwrap();
+    st.batches += 1;
+    st.batch_fill += n_real as f64 / SERVE.batch as f64;
+    record(&mut st);
+    for (job, mut res) in jobs.into_iter().zip(results) {
+        res.latency = job.enqueued.elapsed();
+        res.batch_size = n_real;
+        leg(&mut st, &res);
+        let _ = job.resp.send(Ok(res));
+    }
+}
+
+/// Answer every job in a failed group with the error.
+fn fail_group<P>(jobs: Vec<Job<P, Resp>>, e: anyhow::Error) {
+    let msg = e.to_string();
+    for job in jobs {
+        let _ = job.resp.send(Err(msg.clone()));
+    }
+}
+
+/// Full two-stage search legs: execute, record, answer.
+fn run_search_group(
     rt: &mut Runtime,
     corpus: &ServingCorpus,
     store: &mut dyn StorageBackend,
     shard_tensors: &[Tensor],
-    batch: &[Job<Vec<f32>, Result<QueryResult, String>>],
-) -> Result<(Vec<QueryResult>, Duration, Duration, u64)> {
+    jobs: Vec<Job<Vec<f32>, Resp>>,
+    stats: &Arc<Mutex<ServeStats>>,
+) {
+    let queries: Vec<&[f32]> = jobs.iter().map(|j| j.payload.as_slice()).collect();
+    match run_two_stage_batch(rt, corpus, store, shard_tensors, &queries) {
+        Ok((results, t1, t2, stall_ns, reads)) => answer_group(
+            jobs,
+            results,
+            stats,
+            |st| {
+                st.stage1_ns.push(t1.as_nanos() as f64);
+                st.stage2_ns.push(t2.as_nanos() as f64);
+                st.ssd_reads += reads;
+                st.storage_stall_ns.push(stall_ns as f64);
+            },
+            |st, res| {
+                st.queries += 1;
+                st.latency_ns.push(res.latency.as_nanos() as f64);
+            },
+        ),
+        Err(e) => fail_group(jobs, e),
+    }
+}
+
+/// Phase-1 reduce legs: stage-1 scan only, no device traffic.
+fn run_reduce_group(
+    rt: &mut Runtime,
+    corpus: &ServingCorpus,
+    shard_tensors: &[Tensor],
+    jobs: Vec<Job<Vec<f32>, Resp>>,
+    stats: &Arc<Mutex<ServeStats>>,
+) {
+    let queries: Vec<&[f32]> = jobs.iter().map(|j| j.payload.as_slice()).collect();
+    match run_reduce_batch(rt, corpus, shard_tensors, &queries) {
+        Ok((results, t1)) => answer_group(
+            jobs,
+            results,
+            stats,
+            |st| st.stage1_ns.push(t1.as_nanos() as f64),
+            |st, _| st.reduce_legs += 1,
+        ),
+        Err(e) => fail_group(jobs, e),
+    }
+}
+
+/// Phase-2 fetch legs: device fetch + full-score of owned candidates.
+fn run_fetch_group(
+    rt: &mut Runtime,
+    corpus: &ServingCorpus,
+    store: &mut dyn StorageBackend,
+    jobs: Vec<Job<(Vec<f32>, Vec<u32>), Resp>>,
+    stats: &Arc<Mutex<ServeStats>>,
+) {
+    let legs: Vec<(&[f32], &[u32])> = jobs
+        .iter()
+        .map(|j| (j.payload.0.as_slice(), j.payload.1.as_slice()))
+        .collect();
+    match run_fetch_batch(rt, corpus, store, &legs) {
+        Ok((results, t2, stall_ns, reads)) => answer_group(
+            jobs,
+            results,
+            stats,
+            |st| {
+                st.stage2_ns.push(t2.as_nanos() as f64);
+                st.ssd_reads += reads;
+                st.storage_stall_ns.push(stall_ns as f64);
+            },
+            |st, _| st.fetch_legs += 1,
+        ),
+        Err(e) => fail_group(jobs, e),
+    }
+}
+
+/// Total-order promotion compare: reduced score descending, global id
+/// ascending on ties. This is the order a single worker's stable
+/// stage-1 sort produced implicitly (the scan pushes candidates in
+/// ascending-global-id order on score ties), made explicit so merge
+/// order can never depend on channel-arrival timing — and total, so a
+/// NaN score can no longer panic a worker or the merge thread.
+fn promote_cmp(a: &(f32, u32), b: &(f32, u32)) -> std::cmp::Ordering {
+    b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
+}
+
+/// Pad a group's queries to the fixed batch shape by repeating the last
+/// real query, validating the full dimension. Returns the padded
+/// `[b, reduced_dim]` and `[b, full_dim]` row-major buffers.
+fn pad_queries(queries: &[&[f32]]) -> Result<(Vec<f32>, Vec<f32>)> {
+    let b = SERVE.batch;
+    let fd = SERVE.full_dim;
+    let n_real = queries.len();
+    let q_red = pad_reduced(queries)?;
+    let mut q_full = vec![0f32; b * fd];
+    for i in 0..b {
+        q_full[i * fd..(i + 1) * fd].copy_from_slice(queries[i.min(n_real - 1)]);
+    }
+    Ok((q_red, q_full))
+}
+
+/// Pad only the reduced-dim prefix rows — all a phase-1 reduce leg needs
+/// (the batch's full-dim buffer would be filled and discarded). Queries
+/// still arrive full-dim on the wire and validate here, so a malformed
+/// query fails fast on the cheap phase-1 leg, before any device work.
+fn pad_reduced(queries: &[&[f32]]) -> Result<Vec<f32>> {
     let b = SERVE.batch;
     let rd = SERVE.reduced_dim;
     let fd = SERVE.full_dim;
-    let k = SERVE.topk;
-    let n_real = batch.len();
-
-    // pad to the fixed batch shape by repeating the last real query
+    let n_real = queries.len();
     let mut q_red = vec![0f32; b * rd];
-    let mut q_full = vec![0f32; b * fd];
     for i in 0..b {
-        let src = &batch[i.min(n_real - 1)].payload;
+        let src = queries[i.min(n_real - 1)];
         anyhow::ensure!(src.len() == fd, "query must be FULL_DIM={fd}, got {}", src.len());
-        q_full[i * fd..(i + 1) * fd].copy_from_slice(src);
         q_red[i * rd..(i + 1) * rd].copy_from_slice(&src[..rd]);
     }
+    Ok(q_red)
+}
 
-    // ---- stage 1: scan every DRAM shard, keep global top-k ---------------
-    let t1_start = Instant::now();
-    let q_red_t = Runtime::literal_f32(&q_red, &[b, rd])?;
+/// Stage 1 for one padded batch: scan every DRAM shard and merge each
+/// row's candidates to the global top-k by reduced score.
+fn stage1_promote(
+    rt: &mut Runtime,
+    corpus: &ServingCorpus,
+    shard_tensors: &[Tensor],
+    q_red: &[f32],
+) -> Result<Vec<Vec<(f32, u32)>>> {
+    let b = SERVE.batch;
+    let k = SERVE.topk;
+    let q_red_t = Runtime::literal_f32(q_red, &[b, SERVE.reduced_dim])?;
     // (score, global_id) per query, merged across shards
     let mut merged: Vec<Vec<(f32, u32)>> = vec![Vec::with_capacity(2 * k); b];
     for (s, shard_t) in shard_tensors.iter().enumerate() {
@@ -277,9 +510,35 @@ fn run_two_stage_batch(
         }
     }
     for m in merged.iter_mut() {
-        m.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        m.sort_by(promote_cmp);
         m.truncate(k);
     }
+    Ok(merged)
+}
+
+/// Execute one padded batch through the graphs:
+/// stage 1 per shard (reduced_score) → merge → storage fetch of promoted
+/// full vectors → stage 2 (full_score) → per-query top-k.
+///
+/// Returns the per-query results, the two stage wall times, the storage
+/// stall (device time of the slowest read in the fetch burst), and the
+/// stage-2 device reads issued.
+fn run_two_stage_batch(
+    rt: &mut Runtime,
+    corpus: &ServingCorpus,
+    store: &mut dyn StorageBackend,
+    shard_tensors: &[Tensor],
+    queries: &[&[f32]],
+) -> Result<(Vec<QueryResult>, Duration, Duration, u64, u64)> {
+    let b = SERVE.batch;
+    let fd = SERVE.full_dim;
+    let k = SERVE.topk;
+    let n_real = queries.len();
+    let (q_red, q_full) = pad_queries(queries)?;
+
+    // ---- stage 1: scan every DRAM shard, keep global top-k ---------------
+    let t1_start = Instant::now();
+    let merged = stage1_promote(rt, corpus, shard_tensors, &q_red)?;
     let t1 = t1_start.elapsed();
 
     // ---- storage fetch of promoted candidates + stage 2 ------------------
@@ -292,8 +551,9 @@ fn run_two_stage_batch(
         .iter()
         .flat_map(|m| m.iter().map(|&(_, id)| corpus.local_lba(id as usize)))
         .collect();
-    let fetched = storage::read_blocks(store, &lbas);
+    let fetched = storage::fetch_stage2(store, &lbas);
     let stall_ns = fetched.iter().map(|c| c.device_ns).max().unwrap_or(0);
+    let reads = lbas.len() as u64;
 
     let mut cand = vec![0f32; b * k * fd];
     for qi in 0..b {
@@ -328,22 +588,165 @@ fn run_two_stage_batch(
             batch_size: 0,
         });
     }
-    Ok((results, t1, t2, stall_ns))
+    Ok((results, t1, t2, stall_ns, reads))
+}
+
+/// Phase 1 of fetch-after-merge for one padded batch: stage-1 scan and
+/// local promotion only. Returns per-leg local top-k (ids + reduced
+/// scores, `scores` empty) and the stage-1 wall time.
+fn run_reduce_batch(
+    rt: &mut Runtime,
+    corpus: &ServingCorpus,
+    shard_tensors: &[Tensor],
+    queries: &[&[f32]],
+) -> Result<(Vec<QueryResult>, Duration)> {
+    let n_real = queries.len();
+    let q_red = pad_reduced(queries)?;
+    let t1_start = Instant::now();
+    let merged = stage1_promote(rt, corpus, shard_tensors, &q_red)?;
+    let t1 = t1_start.elapsed();
+    let mut results = Vec::with_capacity(n_real);
+    for m in merged.iter().take(n_real) {
+        results.push(QueryResult {
+            ids: m.iter().map(|&(_, id)| id).collect(),
+            scores: Vec::new(), // no stage-2 leg ran
+            reduced: m.iter().map(|&(red, _)| red).collect(),
+            latency: Duration::ZERO,
+            batch_size: 0,
+        });
+    }
+    Ok((results, t1))
+}
+
+/// Phase 2 of fetch-after-merge for one padded batch: read each leg's
+/// owned candidates from this worker's device (one burst for the whole
+/// group) and full-score them. Rows pad to the graph's fixed `[b, k]`
+/// candidate shape by repeating the leg's last candidate; padding slots
+/// are score-only copies, discarded and never charged as device reads.
+fn run_fetch_batch(
+    rt: &mut Runtime,
+    corpus: &ServingCorpus,
+    store: &mut dyn StorageBackend,
+    legs: &[(&[f32], &[u32])],
+) -> Result<(Vec<QueryResult>, Duration, u64, u64)> {
+    let b = SERVE.batch;
+    let fd = SERVE.full_dim;
+    let k = SERVE.topk;
+    let n_real = legs.len();
+    for (q, ids) in legs {
+        anyhow::ensure!(q.len() == fd, "query must be FULL_DIM={fd}, got {}", q.len());
+        anyhow::ensure!(
+            !ids.is_empty() && ids.len() <= k,
+            "fetch leg wants 1..={k} candidates, got {}",
+            ids.len()
+        );
+        for &id in ids.iter() {
+            anyhow::ensure!(
+                corpus.owns(id as usize),
+                "candidate {id} is not owned by this partition [{}, {})",
+                corpus.base,
+                corpus.base + corpus.n
+            );
+        }
+    }
+    let t2_start = Instant::now();
+    let lbas: Vec<u64> = legs
+        .iter()
+        .flat_map(|(_, ids)| ids.iter().map(|&id| corpus.local_lba(id as usize)))
+        .collect();
+    let fetched = storage::fetch_stage2(store, &lbas);
+    let stall_ns = fetched.iter().map(|c| c.device_ns).max().unwrap_or(0);
+    let reads = lbas.len() as u64;
+
+    let mut q_full = vec![0f32; b * fd];
+    let mut cand = vec![0f32; b * k * fd];
+    for qi in 0..b {
+        let (q, ids) = legs[qi.min(n_real - 1)];
+        q_full[qi * fd..(qi + 1) * fd].copy_from_slice(q);
+        for j in 0..k {
+            let id = ids[j.min(ids.len() - 1)] as usize;
+            cand[(qi * k + j) * fd..(qi * k + j + 1) * fd]
+                .copy_from_slice(corpus.full_vector(id));
+        }
+    }
+    let q_full_t = Runtime::literal_f32(&q_full, &[b, fd])?;
+    let cand_t = Runtime::literal_f32(&cand, &[b, k, fd])?;
+    let out = rt.execute("full_score", &[&q_full_t, &cand_t])?;
+    let scores = Runtime::to_vec_f32(&out[0])?;
+    let order = Runtime::to_vec_i32(&out[1])?;
+    let t2 = t2_start.elapsed();
+
+    // Scores come back rank-sorted with the slot permutation; invert it
+    // so each requested candidate reports its own full score (the router
+    // does the global ordering — a leg sees only its partition's slice).
+    let mut results = Vec::with_capacity(n_real);
+    for (qi, (_, ids)) in legs.iter().enumerate() {
+        let mut by_slot = vec![0f32; k];
+        for j in 0..k {
+            by_slot[order[qi * k + j] as usize] = scores[qi * k + j];
+        }
+        results.push(QueryResult {
+            ids: ids.to_vec(),
+            scores: by_slot[..ids.len()].to_vec(),
+            reduced: Vec::new(),
+            latency: Duration::ZERO,
+            batch_size: 0,
+        });
+    }
+    Ok((results, t2, stall_ns, reads))
 }
 
 /// How a [`Router`] maps queries onto its workers.
+#[derive(Clone, Copy)]
 enum RouteMode {
     /// Each worker holds a full corpus replica; queries round-robin.
     Replicate,
     /// Each worker owns a disjoint corpus partition; every query fans out
-    /// to all workers and the per-partition top-k merge to a global top-k.
-    Partition,
+    /// to all workers and the per-partition top-k merge to a global top-k,
+    /// with stage-2 candidates fetched per `fetch`.
+    Partition { fetch: FetchMode },
 }
 
-/// One scatter/gather merge awaiting its partition answers.
-struct MergeJob {
-    parts: Vec<mpsc::Receiver<Result<QueryResult, String>>>,
-    resp: mpsc::Sender<Result<QueryResult, String>>,
+/// What the merger thread needs to run fetch-after-merge phase 2: a
+/// sender per worker (to dispatch fetch legs) and each worker's owned
+/// global-id range (to group promoted candidates by owner).
+struct MergerCtx {
+    worker_txs: Vec<mpsc::Sender<Job<WorkerRequest, Resp>>>,
+    owners: Vec<Range<u32>>,
+    latency: Arc<Mutex<LatencyHist>>,
+}
+
+/// One scatter/gather merge awaiting its partition answers. `submitted`
+/// is the router-side scatter instant — merged-answer latency is measured
+/// from it, so time spent queued behind other merges is counted.
+enum MergeJob {
+    /// Speculative gather: partials already carry full scores.
+    Gather {
+        submitted: Instant,
+        parts: Vec<mpsc::Receiver<Resp>>,
+        resp: mpsc::Sender<Resp>,
+    },
+    /// After-merge: merge reduced partials, then fetch the global top-k
+    /// from their owners (phase 2) before answering.
+    TwoPhase {
+        submitted: Instant,
+        query: Vec<f32>,
+        parts: Vec<mpsc::Receiver<Resp>>,
+        resp: mpsc::Sender<Resp>,
+    },
+}
+
+/// One two-phase query past phase 1: the global promote set (promotion
+/// order), its in-flight phase-2 fetch legs, and the metadata to answer.
+/// Handed from the merger thread to the finisher thread so the merger
+/// never blocks on a fetch round-trip — phase 2 of successive queries
+/// overlaps, and their fetch legs can share worker batches.
+struct PendingFetch {
+    submitted: Instant,
+    /// (reduced, id) in promotion order.
+    cand: Vec<(f32, u32)>,
+    fetch_rx: Vec<mpsc::Receiver<Resp>>,
+    batch_size: usize,
 }
 
 /// Router over multiple workers, in replica (round-robin) or partition
@@ -355,6 +758,8 @@ pub struct Router {
     mode: RouteMode,
     merge_tx: Option<mpsc::Sender<MergeJob>>,
     merger: Option<JoinHandle<()>>,
+    finisher: Option<JoinHandle<()>>,
+    gather_latency: Arc<Mutex<LatencyHist>>,
 }
 
 impl Router {
@@ -368,44 +773,117 @@ impl Router {
             mode: RouteMode::Replicate,
             merge_tx: None,
             merger: None,
+            finisher: None,
+            gather_latency: Arc::new(Mutex::new(LatencyHist::for_latency_ns())),
         })
+    }
+
+    /// Scatter/gather router with the default [`FetchMode::Speculative`]
+    /// protocol (one round-trip, `N×k` stage-2 reads per query). See
+    /// [`Router::partitioned_with`].
+    pub fn partitioned(workers: Vec<Coordinator>) -> Result<Self> {
+        Self::partitioned_with(workers, FetchMode::Speculative)
     }
 
     /// Scatter/gather router: worker `p` owns partition `p` of the corpus
     /// (see [`ServingCorpus::partitions`]) on its own storage device.
     /// Every query fans out to all workers; a merger thread gathers the
-    /// per-partition top-k (in submission order — worker responses are
+    /// per-partition answers (in submission order — worker responses are
     /// FIFO) and merges them into the answer a single worker over the
-    /// union corpus would return, bit for bit.
+    /// union corpus would return, bit for bit, in either [`FetchMode`]:
     ///
-    /// Trade-off: each partition speculatively promotes and re-ranks its
-    /// *local* top-k before the merge, so a query costs `N×k` device
-    /// reads instead of the `k` a fetch-after-merge protocol would issue
-    /// — the price of a single round-trip to the workers. `ssd_reads`
-    /// and device stats report the traffic actually issued. Selective
-    /// fetch (merge reduced scores first, then read only the global
-    /// winners from their owners) is a tracked ROADMAP item.
-    pub fn partitioned(workers: Vec<Coordinator>) -> Result<Self> {
+    /// * [`FetchMode::Speculative`] — each partition promotes *and*
+    ///   re-ranks its local top-k before the merge: one round-trip,
+    ///   `N×k` stage-2 device reads per query.
+    /// * [`FetchMode::AfterMerge`] — partitions answer phase 1 with
+    ///   reduced scores only; the merger promotes the global top-k and
+    ///   fetches each winner from its owning worker: two round-trips,
+    ///   `k` stage-2 device reads per query — an ~N× cut in device
+    ///   traffic, visible in the `stage2_reads` counters of
+    ///   `BackendStats`/`SimStats` snapshots.
+    pub fn partitioned_with(workers: Vec<Coordinator>, fetch: FetchMode) -> Result<Self> {
         ensure!(!workers.is_empty(), "router needs at least one worker");
+        let gather_latency = Arc::new(Mutex::new(LatencyHist::for_latency_ns()));
+        let mut worker_txs = Vec::with_capacity(workers.len());
+        for w in &workers {
+            worker_txs.push(w.tx.clone().ok_or_else(|| anyhow!("worker already stopped"))?);
+        }
+        let ctx = MergerCtx {
+            worker_txs,
+            owners: workers.iter().map(|w| w.owned.clone()).collect(),
+            latency: gather_latency.clone(),
+        };
+        // The finisher completes two-phase queries (awaits their fetch
+        // legs) so the merger thread never blocks on a phase-2 round-trip:
+        // successive queries' fetch legs dispatch back-to-back and can
+        // share worker batches. Worker responses are FIFO, so finishing
+        // in dispatch order never stalls one query on a later one.
+        let (finish_tx, finish_rx) = mpsc::channel::<(PendingFetch, mpsc::Sender<Resp>)>();
+        let fin_latency = gather_latency.clone();
+        let finisher = std::thread::Builder::new()
+            .name("fivemin-finish".into())
+            .spawn(move || {
+                while let Ok((pending, resp)) = finish_rx.recv() {
+                    let result = finish_two_phase(pending);
+                    if let Ok(r) = &result {
+                        fin_latency.lock().unwrap().push(r.latency.as_nanos() as f64);
+                    }
+                    let _ = resp.send(result);
+                }
+            })?;
         let (merge_tx, merge_rx) = mpsc::channel::<MergeJob>();
         let merger = std::thread::Builder::new()
             .name("fivemin-gather".into())
             .spawn(move || {
                 while let Ok(job) = merge_rx.recv() {
-                    let _ = job.resp.send(gather(job.parts));
+                    match job {
+                        MergeJob::Gather { submitted, parts, resp } => {
+                            let mut result = gather(parts);
+                            if let Ok(r) = &mut result {
+                                r.latency = submitted.elapsed();
+                                ctx.latency.lock().unwrap().push(r.latency.as_nanos() as f64);
+                            }
+                            let _ = resp.send(result);
+                        }
+                        MergeJob::TwoPhase { submitted, query, parts, resp } => {
+                            match two_phase_dispatch(&ctx, query, parts) {
+                                Ok((cand, fetch_rx, batch_size)) => {
+                                    let _ = finish_tx.send((
+                                        PendingFetch { submitted, cand, fetch_rx, batch_size },
+                                        resp,
+                                    ));
+                                }
+                                Err(e) => {
+                                    let _ = resp.send(Err(e));
+                                }
+                            }
+                        }
+                    }
                 }
+                // exiting drops finish_tx: the finisher drains what is
+                // still pending (workers outlive both threads) and exits
             })?;
         Ok(Router {
             workers,
             next: AtomicUsize::new(0),
-            mode: RouteMode::Partition,
+            mode: RouteMode::Partition { fetch },
             merge_tx: Some(merge_tx),
             merger: Some(merger),
+            finisher: Some(finisher),
+            gather_latency,
         })
     }
 
     pub fn n_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// The fetch protocol in partition mode; `None` for replica routers.
+    pub fn fetch_mode(&self) -> Option<FetchMode> {
+        match self.mode {
+            RouteMode::Replicate => None,
+            RouteMode::Partition { fetch } => Some(fetch),
+        }
     }
 
     /// Route a query, non-blocking: to the next worker (replica mode) or
@@ -416,15 +894,33 @@ impl Router {
                 let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
                 self.workers[i].submit(query_full)
             }
-            RouteMode::Partition => {
+            RouteMode::Partition { fetch } => {
+                let submitted = Instant::now();
                 let parts: Vec<_> = self
                     .workers
                     .iter()
-                    .map(|w| w.submit(query_full.clone()))
+                    .map(|w| {
+                        w.submit_request(match fetch {
+                            FetchMode::Speculative => {
+                                WorkerRequest::Search(query_full.clone())
+                            }
+                            FetchMode::AfterMerge => {
+                                WorkerRequest::Reduce(query_full.clone())
+                            }
+                        })
+                    })
                     .collect();
                 let (rtx, rrx) = mpsc::channel();
+                let job = match fetch {
+                    FetchMode::Speculative => {
+                        MergeJob::Gather { submitted, parts, resp: rtx }
+                    }
+                    FetchMode::AfterMerge => {
+                        MergeJob::TwoPhase { submitted, query: query_full, parts, resp: rtx }
+                    }
+                };
                 if let Some(tx) = &self.merge_tx {
-                    let _ = tx.send(MergeJob { parts, resp: rtx });
+                    let _ = tx.send(job);
                 }
                 rrx
             }
@@ -444,11 +940,19 @@ impl Router {
         self.workers.iter().map(|w| w.stats()).collect()
     }
 
+    /// End-to-end merged-answer latency distribution, recorded by the
+    /// gather thread (partition mode; empty for replica routers, whose
+    /// per-worker `latency_ns` is already end-to-end).
+    pub fn gather_latency(&self) -> LatencyHist {
+        self.gather_latency.lock().unwrap().clone()
+    }
+
     /// Aggregate the per-worker [`ServeStats`]: counters add, histograms
     /// merge, and the storage snapshots fold into one aggregate whose
-    /// `shards` holds the per-worker snapshots. In partition mode every
-    /// query is counted once per worker (each partition really served
-    /// it).
+    /// `shards` holds the per-worker snapshots. In speculative partition
+    /// mode every query is counted once per worker (each partition really
+    /// served it); in after-merge mode the phase legs land in
+    /// `reduce_legs`/`fetch_legs` instead of `queries`.
     pub fn merged_stats(&self) -> ServeStats {
         let mut out = ServeStats::new();
         let mut storage: Option<StorageSnapshot> = None;
@@ -460,6 +964,8 @@ impl Router {
             out.latency_ns.merge(&s.latency_ns);
             out.stage1_ns.merge(&s.stage1_ns);
             out.stage2_ns.merge(&s.stage2_ns);
+            out.reduce_legs += s.reduce_legs;
+            out.fetch_legs += s.fetch_legs;
             out.ssd_reads += s.ssd_reads;
             out.storage_stall_ns.merge(&s.storage_stall_ns);
             if let Some(snap) = s.storage {
@@ -479,21 +985,51 @@ impl Router {
         out.storage = storage;
         out
     }
+
+    /// [`Router::merged_stats`], but only after the storage snapshots
+    /// have caught up with the coordinator-side read counters: workers
+    /// answer requests *before* capturing the batch's backend snapshot,
+    /// so a read immediately after the last answer can miss the final
+    /// fetch burst. Waits up to `timeout`. (`>=`, not `==`: a failed
+    /// stage-2 graph execution charges the device but skips the
+    /// coordinator counter, so the snapshot may legitimately run ahead.)
+    /// Accounting tests and figures use this; live dashboards can keep
+    /// the cheaper `merged_stats`.
+    pub fn settled_stats(&self, timeout: Duration) -> ServeStats {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let st = self.merged_stats();
+            let snap_reads = st
+                .storage
+                .as_ref()
+                .map(|s| s.stats.stage2_reads)
+                .unwrap_or(0);
+            if snap_reads >= st.ssd_reads || Instant::now() > deadline {
+                return st;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
 }
 
 impl Drop for Router {
     fn drop(&mut self) {
         // Close the merge queue and drain pending gathers while the
         // workers (dropped after this) are still alive to answer them.
+        // Joining the merger drops its finish_tx, which lets the finisher
+        // drain its pending phase-2 completions and exit in turn.
         self.merge_tx.take();
         if let Some(h) = self.merger.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.finisher.take() {
             let _ = h.join();
         }
     }
 }
 
 /// Await every partition's answer for one query, then merge.
-fn gather(parts: Vec<mpsc::Receiver<Result<QueryResult, String>>>) -> Result<QueryResult, String> {
+fn gather(parts: Vec<mpsc::Receiver<Resp>>) -> Resp {
     let mut partials = Vec::with_capacity(parts.len());
     for rx in parts {
         match rx.recv() {
@@ -507,17 +1043,16 @@ fn gather(parts: Vec<mpsc::Receiver<Result<QueryResult, String>>>) -> Result<Que
 
 /// Merge per-partition top-k answers into the global answer a single
 /// worker over the union corpus would return — bit-identical, which the
-/// equivalence test enforces. Two stages mirror the worker exactly:
+/// equivalence tests enforce. Two stages mirror the worker exactly:
 ///
-/// 1. **Promotion**: global top-k by *reduced* (stage-1) score. The
-///    worker's merged candidate list is sorted by reduced score with ties
-///    in push order, which is ascending global id; `(score desc, id
-///    asc)` reproduces it. Every globally-promoted candidate is in some
-///    partition's top-k, so the union of partials always covers it.
+/// 1. **Promotion**: global top-k by *reduced* (stage-1) score with the
+///    worker's exact tie order ([`promote_cmp`]: score desc, global id
+///    asc). Every globally-promoted candidate is in some partition's
+///    top-k, so the union of partials always covers it.
 /// 2. **Final order**: stable sort by *full* (stage-2) score descending —
 ///    the native engine's argsort keeps promotion order on ties, and so
 ///    does a stable sort starting from promotion order.
-fn merge_partials(parts: Vec<QueryResult>) -> Result<QueryResult, String> {
+fn merge_partials(parts: Vec<QueryResult>) -> Resp {
     let k = SERVE.topk;
     // (reduced, full, id) from every partition
     let mut cand: Vec<(f32, f32, u32)> = Vec::with_capacity(parts.len() * k);
@@ -534,7 +1069,7 @@ fn merge_partials(parts: Vec<QueryResult>) -> Result<QueryResult, String> {
         latency = latency.max(p.latency);
         batch_size = batch_size.max(p.batch_size);
     }
-    cand.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.2.cmp(&b.2)));
+    cand.sort_by(|a, b| promote_cmp(&(a.0, a.2), &(b.0, b.2)));
     cand.truncate(k);
     cand.sort_by(|a, b| b.1.total_cmp(&a.1));
     Ok(QueryResult {
@@ -542,6 +1077,103 @@ fn merge_partials(parts: Vec<QueryResult>) -> Result<QueryResult, String> {
         scores: cand.iter().map(|c| c.1).collect(),
         reduced: cand.iter().map(|c| c.0).collect(),
         latency,
+        batch_size,
+    })
+}
+
+/// Fetch-after-merge phases 1+2a for one query (runs on the merger
+/// thread, which must never wait on a fetch round-trip): gather every
+/// partition's local reduced top-k, promote the global top-k, and
+/// dispatch one [`WorkerRequest::Fetch`] leg per owning partition.
+/// Returns the promote set (promotion order), the pending fetch-leg
+/// receivers, and the largest leg batch seen so far; the finisher
+/// completes the query ([`finish_two_phase`]).
+#[allow(clippy::type_complexity)]
+fn two_phase_dispatch(
+    ctx: &MergerCtx,
+    query: Vec<f32>,
+    parts: Vec<mpsc::Receiver<Resp>>,
+) -> Result<(Vec<(f32, u32)>, Vec<mpsc::Receiver<Resp>>, usize), String> {
+    let k = SERVE.topk;
+    // ---- phase 1: gather local reduced top-k from every partition ----
+    let mut cand: Vec<(f32, u32)> = Vec::with_capacity(parts.len() * k);
+    let mut batch_size = 0usize;
+    for rx in parts {
+        let p = match rx.recv() {
+            Ok(Ok(r)) => r,
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err("partition worker gone".into()),
+        };
+        if p.ids.len() != p.reduced.len() {
+            return Err("malformed reduce leg".into());
+        }
+        for j in 0..p.ids.len() {
+            cand.push((p.reduced[j], p.ids[j]));
+        }
+        batch_size = batch_size.max(p.batch_size);
+    }
+    // Global promote set: exactly what a single worker over the union
+    // corpus promotes (reduced desc, id asc), in promotion order.
+    cand.sort_by(promote_cmp);
+    cand.truncate(k);
+    // ---- phase 2 dispatch: one fetch leg per owning partition --------
+    let mut per_owner: Vec<Vec<u32>> = vec![Vec::new(); ctx.worker_txs.len()];
+    for &(_, id) in &cand {
+        let Some(p) = ctx.owners.iter().position(|r| r.contains(&id)) else {
+            return Err(format!("no partition owns candidate id {id}"));
+        };
+        per_owner[p].push(id);
+    }
+    let mut fetch_rx = Vec::new();
+    for (p, ids) in per_owner.into_iter().enumerate() {
+        if ids.is_empty() {
+            continue; // this partition promoted nothing — no fetch leg
+        }
+        let (job, rx) = Job::with_channel(WorkerRequest::Fetch { query: query.clone(), ids });
+        if ctx.worker_txs[p].send(job).is_err() {
+            return Err("partition worker gone".into());
+        }
+        fetch_rx.push(rx);
+    }
+    Ok((cand, fetch_rx, batch_size))
+}
+
+/// Await one query's phase-2 fetch legs and produce the final merged
+/// answer (runs on the finisher thread). The final order mirrors
+/// [`merge_partials`] — and therefore the single worker: stable
+/// full-score sort from promotion order.
+fn finish_two_phase(pending: PendingFetch) -> Resp {
+    let PendingFetch { submitted, cand, fetch_rx, mut batch_size } = pending;
+    let mut full_of: HashMap<u32, f32> = HashMap::with_capacity(cand.len());
+    for rx in fetch_rx {
+        let r = match rx.recv() {
+            Ok(Ok(r)) => r,
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err("partition worker gone".into()),
+        };
+        if r.ids.len() != r.scores.len() {
+            return Err("malformed fetch leg".into());
+        }
+        for j in 0..r.ids.len() {
+            full_of.insert(r.ids[j], r.scores[j]);
+        }
+        batch_size = batch_size.max(r.batch_size);
+    }
+    // ---- final order: stable full-score sort from promotion order ----
+    let mut ranked: Vec<(f32, f32, u32)> = Vec::with_capacity(cand.len());
+    for (red, id) in cand {
+        let Some(&full) = full_of.get(&id) else {
+            return Err(format!("owner never scored candidate {id}"));
+        };
+        ranked.push((red, full, id));
+    }
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
+    Ok(QueryResult {
+        ids: ranked.iter().map(|c| c.2).collect(),
+        scores: ranked.iter().map(|c| c.1).collect(),
+        reduced: ranked.iter().map(|c| c.0).collect(),
+        // true end-to-end: scatter at the router → merged answer ready
+        latency: submitted.elapsed(),
         batch_size,
     })
 }
@@ -576,6 +1208,30 @@ mod tests {
     fn empty_router_is_an_error_not_a_panic() {
         assert!(Router::new(Vec::new()).is_err());
         assert!(Router::partitioned(Vec::new()).is_err());
+        assert!(Router::partitioned_with(Vec::new(), FetchMode::AfterMerge).is_err());
+    }
+
+    #[test]
+    fn fetch_mode_parses_cli_forms() {
+        assert_eq!(FetchMode::parse("spec").unwrap(), FetchMode::Speculative);
+        assert_eq!(FetchMode::parse("speculative").unwrap(), FetchMode::Speculative);
+        assert_eq!(FetchMode::parse("merge").unwrap(), FetchMode::AfterMerge);
+        assert_eq!(FetchMode::parse("after-merge").unwrap(), FetchMode::AfterMerge);
+        assert!(FetchMode::parse("eager").is_err());
+        assert_eq!(FetchMode::Speculative.name(), "spec");
+        assert_eq!(FetchMode::AfterMerge.name(), "merge");
+        assert_eq!(FetchMode::default(), FetchMode::Speculative);
+    }
+
+    #[test]
+    fn promote_cmp_is_total_with_id_tiebreak() {
+        use std::cmp::Ordering::*;
+        assert_eq!(promote_cmp(&(1.0, 5), &(0.5, 1)), Less, "higher score first");
+        assert_eq!(promote_cmp(&(0.5, 1), &(1.0, 5)), Greater);
+        assert_eq!(promote_cmp(&(1.0, 1), &(1.0, 2)), Less, "tie → lower id first");
+        assert_eq!(promote_cmp(&(1.0, 2), &(1.0, 1)), Greater);
+        // total order: NaNs compare without panicking
+        assert_eq!(promote_cmp(&(f32::NAN, 1), &(f32::NAN, 1)), Equal);
     }
 
     fn partial(ids: &[u32], reduced: &[f32], full: &[f32]) -> QueryResult {
@@ -622,5 +1278,55 @@ mod tests {
         // equal full scores: stable sort keeps promotion (reduced) order
         assert_eq!(m.ids, a_ids);
         assert!(!m.ids.contains(&5000));
+    }
+
+    #[test]
+    fn merge_breaks_full_score_ties_by_promotion_order_not_arrival() {
+        // Candidates with IDENTICAL full scores across partitions: the
+        // final order must follow promotion order (reduced desc, id asc)
+        // whatever order the partials arrive in — previously this
+        // depended on channel-arrival order of the tied partitions.
+        let a = partial(&[7, 3], &[0.9, 0.2], &[1.0, 1.0]);
+        let b = partial(&[5], &[0.5], &[1.0]);
+        let m1 = merge_partials(vec![a.clone(), b.clone()]).unwrap();
+        let m2 = merge_partials(vec![b, a]).unwrap();
+        assert_eq!(m1.ids, vec![7, 5, 3], "promotion order decides full ties");
+        assert_eq!(m1.ids, m2.ids, "arrival order must not matter");
+        assert_eq!(m1.scores, m2.scores);
+        assert_eq!(m1.reduced, m2.reduced);
+    }
+
+    #[test]
+    fn merge_breaks_reduced_ties_by_global_id() {
+        let k = SERVE.topk;
+        // every candidate ties at reduced 1.0: the k lowest global ids
+        // must promote, independent of partition arrival order
+        let a_ids: Vec<u32> = (0..k as u32).collect();
+        let b_ids: Vec<u32> = (0..k as u32).map(|j| 1000 + j).collect();
+        let red = vec![1.0f32; k];
+        let full = vec![0.5f32; k];
+        let m1 = merge_partials(vec![
+            partial(&a_ids, &red, &full),
+            partial(&b_ids, &red, &full),
+        ])
+        .unwrap();
+        let m2 = merge_partials(vec![
+            partial(&b_ids, &red, &full),
+            partial(&a_ids, &red, &full),
+        ])
+        .unwrap();
+        assert_eq!(m1.ids, a_ids, "lowest global ids promote on reduced ties");
+        assert_eq!(m1.ids, m2.ids);
+        assert_eq!(m1.scores, m2.scores);
+    }
+
+    #[test]
+    fn merge_survives_nan_scores() {
+        // A NaN score must not panic the merge thread (total order); the
+        // candidate just sorts deterministically.
+        let a = partial(&[1, 2], &[f32::NAN, 0.8], &[0.1, f32::NAN]);
+        let b = partial(&[5], &[0.9], &[0.3]);
+        let m = merge_partials(vec![a, b]).unwrap();
+        assert_eq!(m.ids.len(), 3, "all candidates survive the merge");
     }
 }

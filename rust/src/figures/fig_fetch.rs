@@ -1,0 +1,136 @@
+//! Two-phase fetch-after-merge vs speculative fetch (new in this
+//! reproduction; emitted as `fig13`): the same partitioned serving
+//! workload run under both [`FetchMode`]s across partition counts, at a
+//! matched per-device simulator config, reporting stage-2 device reads
+//! per query and the latency tails.
+//!
+//! This is the serving-layer half of the paper's economics argument: the
+//! collapse of the caching threshold only pays off if the ultra-high-IOPS
+//! budget is spent on *useful* fine-grained reads. Speculative fetch
+//! burns `N×k` stage-2 reads per query (every partition fetches its local
+//! top-k); fetch-after-merge trades a second worker round-trip for the
+//! DiskANN-style two-round refinement — `k` reads per query, an ~N× cut
+//! that this figure measures from the tagged
+//! [`stage2_reads`](crate::storage::BackendStats::stage2_reads) counters
+//! rather than asserting from code structure.
+
+use std::sync::Arc;
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::{Coordinator, FetchMode, Router, ServingCorpus};
+use crate::runtime::default_artifacts_dir;
+use crate::storage::BackendSpec;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// Measured outcome of one (partition count, fetch mode) serving run.
+struct FetchRun {
+    stage2_reads: u64,
+    reads_per_query: f64,
+    wall_p99_us: f64,
+    stall_p99_us: f64,
+}
+
+/// Serve `n_queries` through `n_parts` partition workers (one device per
+/// worker built from `spec`) under `fetch`; returns the measured stage-2
+/// device traffic and latency tails.
+fn run_fetch_mode(
+    corpus: &Arc<ServingCorpus>,
+    spec: &BackendSpec,
+    n_parts: usize,
+    fetch: FetchMode,
+    n_queries: usize,
+) -> FetchRun {
+    let workers: Vec<Coordinator> = corpus
+        .partitions(n_parts)
+        .expect("partition count divides corpus shards")
+        .into_iter()
+        .map(|part| {
+            let spec = spec.clone().for_capacity(part.n as u64);
+            Coordinator::start(
+                default_artifacts_dir(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                spec,
+            )
+            .expect("worker starts")
+        })
+        .collect();
+    let router = Router::partitioned_with(workers, fetch).expect("router");
+    let mut rng = Rng::new(0xF16_13);
+    let pending: Vec<_> = (0..n_queries)
+        .map(|_| {
+            let target = rng.below(corpus.n as u64) as usize;
+            router.submit(corpus.query_near(target, 0.02, &mut rng))
+        })
+        .collect();
+    for rx in pending {
+        rx.recv().expect("router alive").expect("query served");
+    }
+    let st = router.settled_stats(std::time::Duration::from_secs(10));
+    let snap = st.storage.expect("storage snapshot");
+    let wall = router.gather_latency();
+    FetchRun {
+        stage2_reads: snap.stats.stage2_reads,
+        reads_per_query: snap.stats.stage2_reads as f64 / n_queries as f64,
+        wall_p99_us: wall.percentile(0.99) / 1e3,
+        stall_p99_us: st.storage_stall_ns.percentile(0.99) / 1e3,
+    }
+}
+
+/// Fetch-protocol sweep at matched per-device config: speculative vs
+/// after-merge for each partition count, MQSim-Next behind every worker
+/// ([`BackendSpec::small_sim`], the shared test/bench geometry).
+pub fn fig13(quick: bool) -> Table {
+    let n_queries = if quick { 24 } else { 64 };
+    let counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let corpus = Arc::new(ServingCorpus::synthetic(4, 0xF16_13));
+    let spec = BackendSpec::small_sim(4096);
+    let mut t = Table::new(
+        "fig13: fetch-after-merge vs speculative fetch — stage-2 device \
+         reads per query and latency tails vs partition count (matched \
+         per-device sim config, 4-shard corpus)",
+        &["parts", "fetch", "stage2_reads", "reads_per_query", "wall_p99_us", "stall_p99_us"],
+    );
+    for &n in counts {
+        for fetch in [FetchMode::Speculative, FetchMode::AfterMerge] {
+            let r = run_fetch_mode(&corpus, &spec, n, fetch, n_queries);
+            t.row(vec![
+                format!("{n}"),
+                fetch.name().to_string(),
+                format!("{}", r.stage2_reads),
+                format!("{:.1}", r.reads_per_query),
+                format!("{:.1}", r.wall_p99_us),
+                format!("{:.2}", r.stall_p99_us),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SERVE;
+
+    /// The headline claim, measured (mem devices so the test runs fast):
+    /// with N partitions, after-merge must issue exactly 1/N of the
+    /// speculative stage-2 reads, and exactly k per query.
+    #[test]
+    fn after_merge_cuts_stage2_reads_nx() {
+        let corpus = Arc::new(ServingCorpus::synthetic(2, 77));
+        let spec = BackendSpec::Mem;
+        let q = 6usize;
+        let spec_run = run_fetch_mode(&corpus, &spec, 2, FetchMode::Speculative, q);
+        let merge_run = run_fetch_mode(&corpus, &spec, 2, FetchMode::AfterMerge, q);
+        assert_eq!(
+            spec_run.stage2_reads,
+            2 * merge_run.stage2_reads,
+            "2 partitions: speculative reads must be exactly 2x after-merge"
+        );
+        assert_eq!(merge_run.stage2_reads, (q * SERVE.topk) as u64, "k reads per query");
+        assert!(merge_run.reads_per_query > 0.0);
+        assert!(merge_run.wall_p99_us > 0.0, "gather thread records e2e latency");
+        assert!(spec_run.stall_p99_us >= 0.0);
+    }
+}

@@ -7,6 +7,7 @@
 pub mod fig_backends;
 pub mod fig_breakeven;
 pub mod fig_casestudies;
+pub mod fig_fetch;
 pub mod fig_mqsim;
 pub mod fig_peak_iops;
 pub mod fig_provisioning;
@@ -49,6 +50,12 @@ pub fn backend_figures(quick: bool) -> Vec<(&'static str, Table)> {
 /// Sharded multi-device scaling (read tail + aggregate IOPS vs shards).
 pub fn shard_figures(quick: bool) -> Vec<(&'static str, Table)> {
     vec![("fig12", fig_shards::fig12(quick))]
+}
+
+/// Two-phase fetch protocol comparison (stage-2 reads/query + latency
+/// tails, speculative vs after-merge, across partition counts).
+pub fn fetch_figures(quick: bool) -> Vec<(&'static str, Table)> {
+    vec![("fig13", fig_fetch::fig13(quick))]
 }
 
 /// Emit one table: print ASCII and write CSV under `out`.

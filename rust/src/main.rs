@@ -62,9 +62,9 @@ fn print_help() {
          \x20 breakeven  --platform cpu|gpu --nand slc|pslc|tlc --blk N [--normal] [--host-iops N] [--p99-us N]\n\
          \x20 viability  --platform cpu|gpu --dram-gb N --blk N [--sigma S] [--throughput-gbps N]\n\
          \x20 simulate   --blk N --read-pct N [--measure-us N] [--p-bch P] [--ch-bw GBps]\n\
-         \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11 --fig12] [--out DIR] [--quick]\n\
+         \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11 --fig12 --fig13] [--out DIR] [--quick]\n\
          \x20 config     --dump\n\
-         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N]] [--pace afap|wall:S]"
+         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N[,map=interleave]]] [--pace afap|wall:S] [--fetch spec|merge]"
     );
 }
 
@@ -297,6 +297,7 @@ fn cmd_figures(args: &[String]) -> Result<(), String> {
         .flag("fig10", "ANN search")
         .flag("fig11", "storage-backend tail-latency comparison")
         .flag("fig12", "sharded multi-device scaling")
+        .flag("fig13", "fetch-after-merge vs speculative fetch")
         .flag("quick", "shorter Fig 7 simulation windows")
         .opt("out", "DIR", Some("results"), "CSV output directory");
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
@@ -333,6 +334,12 @@ fn cmd_figures(args: &[String]) -> Result<(), String> {
     }
     if all || p.flag("fig12") {
         for (id, t) in fivemin::figures::shard_figures(p.flag("quick")) {
+            fivemin::figures::emit(&out, id, &t).map_err(|e| e.to_string())?;
+            emitted += 1;
+        }
+    }
+    if all || p.flag("fig13") {
+        for (id, t) in fivemin::figures::fetch_figures(p.flag("quick")) {
             fivemin::figures::emit(&out, id, &t).map_err(|e| e.to_string())?;
             emitted += 1;
         }
@@ -380,13 +387,19 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         "backend",
         "SPEC",
         Some("mem"),
-        "per-worker storage backend: mem|model|sim, ':shards=N' fans each worker's device out",
+        "per-worker storage backend: mem|model|sim, ':shards=N[,map=interleave]' fans each worker's device out",
     )
     .opt(
         "pace",
         "afap|wall:S",
         Some("afap"),
         "sim pacing: as fast as possible, or S virtual seconds per wall second",
+    )
+    .opt(
+        "fetch",
+        "spec|merge",
+        Some("spec"),
+        "stage-2 fetch protocol: speculative (1 round-trip, Nxk reads) or after-merge (2 round-trips, k reads)",
     );
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
     let shards = p.usize("shards").map_err(|e| e.to_string())?.unwrap();
@@ -398,12 +411,14 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     let backend = fivemin::storage::BackendSpec::parse(p.str("backend").unwrap(), 4096)
         .map_err(|e| e.to_string())?
         .with_pace(pace);
+    let fetch = fivemin::coordinator::FetchMode::parse(p.str("fetch").unwrap())
+        .map_err(|e| e.to_string())?;
     let queries = p.usize("queries").map_err(|e| e.to_string())?.unwrap();
     let dir = p
         .str("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(fivemin::runtime::default_artifacts_dir);
-    serve_demo(dir, shards, queries, backend).map_err(|e| e.to_string())
+    serve_demo(dir, shards, queries, backend, fetch).map_err(|e| e.to_string())
 }
 
 fn serve_demo(
@@ -411,6 +426,7 @@ fn serve_demo(
     shards: usize,
     queries: usize,
     backend: fivemin::storage::BackendSpec,
+    fetch: fivemin::coordinator::FetchMode,
 ) -> anyhow::Result<()> {
     use fivemin::coordinator::batcher::BatchPolicy;
     use fivemin::coordinator::{Coordinator, Router, ServingCorpus};
@@ -420,9 +436,10 @@ fn serve_demo(
     let corpus = Arc::new(ServingCorpus::synthetic(shards, 42));
     println!(
         "corpus: {} vectors across {shards} shard(s); one partition worker per shard, \
-         '{}' backend per worker",
+         '{}' backend per worker, '{}' stage-2 fetch",
         corpus.n,
-        backend.kind().name()
+        backend.kind().name(),
+        fetch.name()
     );
     let workers = corpus
         .partitions(shards)?
@@ -433,7 +450,7 @@ fn serve_demo(
             Coordinator::start(dir.clone(), Arc::new(part), BatchPolicy::default(), spec)
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
-    let router = Router::partitioned(workers)?;
+    let router = Router::partitioned_with(workers, fetch)?;
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
     let recvs: Vec<_> = (0..queries)
@@ -462,15 +479,27 @@ fn serve_demo(
         st.batches,
         100.0 * st.batch_fill / st.batches.max(1) as f64
     );
+    let e2e = router.gather_latency();
     println!(
-        "latency  : p50 {} p99 {} (per-partition leg)",
-        fmt_secs(st.latency_ns.percentile(0.5) / 1e9),
-        fmt_secs(st.latency_ns.percentile(0.99) / 1e9)
+        "latency  : p50 {} p99 {} (end-to-end merged answer)",
+        fmt_secs(e2e.percentile(0.5) / 1e9),
+        fmt_secs(e2e.percentile(0.99) / 1e9)
     );
+    if st.reduce_legs > 0 || st.fetch_legs > 0 {
+        println!(
+            "phases   : {} reduce legs, {} fetch legs (two-phase protocol)",
+            st.reduce_legs, st.fetch_legs
+        );
+    }
     println!(
         "stage1 p50: {}  stage2 p50: {}",
         fmt_secs(st.stage1_ns.percentile(0.5) / 1e9),
         fmt_secs(st.stage2_ns.percentile(0.5) / 1e9)
+    );
+    println!(
+        "stage2 I/O: {} device reads total ({:.1} per query; speculative costs N x k, after-merge k)",
+        st.ssd_reads,
+        st.ssd_reads as f64 / queries.max(1) as f64
     );
     println!(
         "storage  : stall p50 {} p99 {} (device time per fetch burst)",

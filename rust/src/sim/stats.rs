@@ -8,6 +8,12 @@ pub struct SimStats {
     /// Completed host reads / writes.
     pub reads_done: u64,
     pub writes_done: u64,
+    /// Host reads tagged as ANN stage-2 promoted-candidate fetches
+    /// (`storage::IoClass::Stage2`). The device core models addresses,
+    /// not traffic classes, so the `SimBackend` front-end stamps this on
+    /// each snapshot; it is what makes the fetch-after-merge router's ~N×
+    /// stage-2 read cut measurable at device level.
+    pub stage2_reads: u64,
     /// Host-read latency (ns) distribution.
     pub read_lat: LatencyHist,
     /// Host-write (buffered-ack) latency (ns).
@@ -35,6 +41,7 @@ impl SimStats {
         SimStats {
             reads_done: 0,
             writes_done: 0,
+            stage2_reads: 0,
             read_lat: LatencyHist::for_latency_ns(),
             write_lat: LatencyHist::for_latency_ns(),
             host_programs: 0,
@@ -89,6 +96,7 @@ impl SimStats {
     pub fn merge(&mut self, other: &SimStats) {
         self.reads_done += other.reads_done;
         self.writes_done += other.writes_done;
+        self.stage2_reads += other.stage2_reads;
         self.read_lat.merge(&other.read_lat);
         self.write_lat.merge(&other.write_lat);
         self.host_programs += other.host_programs;

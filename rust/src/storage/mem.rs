@@ -56,6 +56,7 @@ impl StorageBackend for MemBackend {
                 id: self.next_id,
                 op: r.op,
                 lba: r.lba,
+                class: r.class,
                 device_ns: self.latency_ns,
             };
             self.next_id += 1;

@@ -37,8 +37,10 @@
 //!   virtual time (as fast as possible, or paced to wall clock), with the
 //!   full device-level [`SimStats`] exposed.
 //! * [`ShardedBackend`] — N inner backends (one device per shard) behind
-//!   an explicit lba→device map ([`ShardMap`]), so capacity and IOPS
-//!   scale together; spec strings like `sim:shards=4` build one.
+//!   an explicit lba→device map ([`ShardMap`]: contiguous ranges, or
+//!   round-robin interleaving so narrow hot ranges spread too), so
+//!   capacity and IOPS scale together; spec strings like `sim:shards=4`
+//!   or `sim:shards=4,map=interleave` build one.
 //!
 //! Future backends (io_uring against a real device) plug in at this
 //! trait; see ROADMAP.md.
@@ -58,7 +60,7 @@ use crate::util::stats::LatencyHist;
 
 pub use mem::MemBackend;
 pub use model::ModelBackend;
-pub use sharded::{ShardMap, ShardedBackend};
+pub use sharded::{MapPolicy, ShardMap, ShardedBackend};
 pub use sim::{Pace, SimBackend};
 
 /// Block-level operation kind.
@@ -68,20 +70,41 @@ pub enum IoOp {
     Write,
 }
 
+/// Traffic class of a request: what the serving stack is fetching.
+/// Backends propagate the class from request to completion untouched, so
+/// per-class counters (`BackendStats::stage2_reads`,
+/// [`SimStats::stage2_reads`]) can split the ANN router's stage-2 fetch
+/// traffic out of the aggregate — which is what makes the fetch-after-merge
+/// protocol's ~N× read saving *measurable* rather than asserted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum IoClass {
+    /// Untagged traffic (KV buckets, WAL appends, index replays, …).
+    #[default]
+    General,
+    /// ANN stage-2 promoted-candidate fetch (the paper's "SSD read of
+    /// promoted candidates").
+    Stage2,
+}
+
 /// One block-granular request. `lba` is in units of the backend's block
 /// size (KV bucket index, ANN vector id, WAL log block, …).
 #[derive(Clone, Copy, Debug)]
 pub struct IoRequest {
     pub op: IoOp,
     pub lba: u64,
+    pub class: IoClass,
 }
 
 impl IoRequest {
     pub fn read(lba: u64) -> Self {
-        IoRequest { op: IoOp::Read, lba }
+        IoRequest { op: IoOp::Read, lba, class: IoClass::General }
     }
     pub fn write(lba: u64) -> Self {
-        IoRequest { op: IoOp::Write, lba }
+        IoRequest { op: IoOp::Write, lba, class: IoClass::General }
+    }
+    /// A read tagged as an ANN stage-2 promoted-candidate fetch.
+    pub fn stage2_read(lba: u64) -> Self {
+        IoRequest { op: IoOp::Read, lba, class: IoClass::Stage2 }
     }
 }
 
@@ -92,6 +115,8 @@ pub struct IoCompletion {
     pub id: u64,
     pub op: IoOp,
     pub lba: u64,
+    /// Traffic class, echoed from the request.
+    pub class: IoClass,
     /// Device-time latency in (virtual) nanoseconds from submission to
     /// completion: queueing + service for reads, buffered-ack for writes.
     pub device_ns: u64,
@@ -102,6 +127,9 @@ pub struct IoCompletion {
 pub struct BackendStats {
     pub reads: u64,
     pub writes: u64,
+    /// Reads tagged [`IoClass::Stage2`] (ANN promoted-candidate fetches)
+    /// — the traffic the fetch-after-merge router protocol cuts ~N×.
+    pub stage2_reads: u64,
     /// Per-read device latency distribution (ns).
     pub read_device_ns: LatencyHist,
     /// Per-write (ack) device latency distribution (ns).
@@ -115,6 +143,7 @@ impl BackendStats {
         BackendStats {
             reads: 0,
             writes: 0,
+            stage2_reads: 0,
             read_device_ns: LatencyHist::for_latency_ns(),
             write_device_ns: LatencyHist::for_latency_ns(),
             virtual_ns: 0,
@@ -125,6 +154,9 @@ impl BackendStats {
         match c.op {
             IoOp::Read => {
                 self.reads += 1;
+                if c.class == IoClass::Stage2 {
+                    self.stage2_reads += 1;
+                }
                 self.read_device_ns.push(c.device_ns as f64);
             }
             IoOp::Write => {
@@ -148,6 +180,7 @@ impl BackendStats {
     pub fn merge(&mut self, other: &BackendStats) {
         self.reads += other.reads;
         self.writes += other.writes;
+        self.stage2_reads += other.stage2_reads;
         self.read_device_ns.merge(&other.read_device_ns);
         self.write_device_ns.merge(&other.write_device_ns);
         self.virtual_ns = self.virtual_ns.max(other.virtual_ns);
@@ -215,6 +248,17 @@ pub fn read_blocks(backend: &mut dyn StorageBackend, lbas: &[u64]) -> Vec<IoComp
     backend.wait_all()
 }
 
+/// Convenience: submit a stage-2 promoted-candidate fetch burst
+/// ([`IoClass::Stage2`] reads) for `lbas` and wait for it. The class tag
+/// is what splits these reads out in `BackendStats`/[`SimStats`]
+/// snapshots, so speculative vs fetch-after-merge device traffic can be
+/// compared from measurements.
+pub fn fetch_stage2(backend: &mut dyn StorageBackend, lbas: &[u64]) -> Vec<IoCompletion> {
+    let reqs: Vec<IoRequest> = lbas.iter().map(|&l| IoRequest::stage2_read(l)).collect();
+    backend.submit(&reqs);
+    backend.wait_all()
+}
+
 /// Which backend implementation serves the traffic.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
@@ -255,24 +299,27 @@ pub enum BackendSpec {
         prm: SimParams,
         pace: Pace,
     },
-    /// N devices built from one inner spec, routed by a contiguous
-    /// [`ShardMap`].
+    /// N devices built from one inner spec, routed by a [`ShardMap`]
+    /// (contiguous ranges by default, round-robin with
+    /// [`MapPolicy::Interleave`]).
     Sharded {
         inner: Box<BackendSpec>,
         n_shards: usize,
         lbas_per_shard: u64,
+        policy: MapPolicy,
     },
 }
 
 impl BackendSpec {
     /// Parse a `--backend` CLI value — `mem` | `model` | `sim`, optionally
-    /// suffixed `:shards=N` for a multi-device fan-out (`sim:shards=4`) —
-    /// with the paper-default Storage-Next SLC device. `l_blk` is the
-    /// block size the caller serves (512 for KV buckets, 4096 for full
-    /// ANN vectors).
+    /// suffixed `:shards=N[,map=contig|interleave]` for a multi-device
+    /// fan-out (`sim:shards=4`, `sim:shards=4,map=interleave`) — with the
+    /// paper-default Storage-Next SLC device. `l_blk` is the block size
+    /// the caller serves (512 for KV buckets, 4096 for full ANN vectors).
     pub fn parse(name: &str, l_blk: u32) -> Result<Self> {
         let (base, opts) = crate::util::cli::split_spec(name);
         let mut shards: Option<usize> = None;
+        let mut policy = MapPolicy::Contiguous;
         for (k, v) in &opts {
             match *k {
                 "shards" => {
@@ -282,9 +329,16 @@ impl BackendSpec {
                     ensure!(n >= 1, "shard count must be >= 1, got {n}");
                     shards = Some(n);
                 }
-                other => bail!("unknown backend option '{other}' (want shards=N)"),
+                "map" => policy = MapPolicy::parse(v)?,
+                other => {
+                    bail!("unknown backend option '{other}' (want shards=N, map=contig|interleave)")
+                }
             }
         }
+        ensure!(
+            shards.is_some() || opts.iter().all(|(k, _)| *k != "map"),
+            "map= requires shards=N"
+        );
         let inner = match base {
             "mem" => BackendSpec::Mem,
             "model" => BackendSpec::Model {
@@ -312,6 +366,7 @@ impl BackendSpec {
                 inner: Box::new(inner),
                 n_shards: n,
                 lbas_per_shard: DEFAULT_LBAS_PER_SHARD,
+                policy,
             },
             None => inner,
         })
@@ -355,11 +410,14 @@ impl BackendSpec {
     pub fn with_pace(self, pace: Pace) -> Self {
         match self {
             BackendSpec::Sim { cfg, prm, .. } => BackendSpec::Sim { cfg, prm, pace },
-            BackendSpec::Sharded { inner, n_shards, lbas_per_shard } => BackendSpec::Sharded {
-                inner: Box::new((*inner).with_pace(pace)),
-                n_shards,
-                lbas_per_shard,
-            },
+            BackendSpec::Sharded { inner, n_shards, lbas_per_shard, policy } => {
+                BackendSpec::Sharded {
+                    inner: Box::new((*inner).with_pace(pace)),
+                    n_shards,
+                    lbas_per_shard,
+                    policy,
+                }
+            }
             other => other,
         }
     }
@@ -369,14 +427,19 @@ impl BackendSpec {
     /// single-device specs).
     pub fn for_capacity(self, total_lbas: u64) -> Self {
         match self {
-            BackendSpec::Sharded { inner, n_shards, .. } => {
+            BackendSpec::Sharded { inner, n_shards, policy, .. } => {
                 let n = n_shards as u64;
                 // round up so n_shards * lbas_per_shard covers total_lbas
                 let mut per = total_lbas / n;
                 if total_lbas % n != 0 {
                     per += 1;
                 }
-                BackendSpec::Sharded { inner, n_shards, lbas_per_shard: per.max(1) }
+                BackendSpec::Sharded {
+                    inner,
+                    n_shards,
+                    lbas_per_shard: per.max(1),
+                    policy,
+                }
             }
             other => other,
         }
@@ -393,8 +456,8 @@ impl BackendSpec {
             BackendSpec::Sim { cfg, prm, pace } => {
                 Box::new(SimBackend::spawn(cfg.clone(), prm.clone(), *pace))
             }
-            BackendSpec::Sharded { inner, n_shards, lbas_per_shard } => {
-                let map = ShardMap::new(*n_shards, *lbas_per_shard)
+            BackendSpec::Sharded { inner, n_shards, lbas_per_shard, policy } => {
+                let map = ShardMap::with_policy(*n_shards, *lbas_per_shard, *policy)
                     .expect("shard shape validated at construction");
                 let devices = (0..*n_shards).map(|_| inner.build()).collect();
                 Box::new(ShardedBackend::new(map, devices))
@@ -460,10 +523,11 @@ mod tests {
         let spec = BackendSpec::parse("mem:shards=4", 512).unwrap().for_capacity(1000);
         assert_eq!(spec.kind(), BackendKind::Sharded);
         match &spec {
-            BackendSpec::Sharded { inner, n_shards, lbas_per_shard } => {
+            BackendSpec::Sharded { inner, n_shards, lbas_per_shard, policy } => {
                 assert_eq!(inner.kind(), BackendKind::Mem);
                 assert_eq!(*n_shards, 4);
                 assert_eq!(*lbas_per_shard, 250);
+                assert_eq!(*policy, MapPolicy::Contiguous);
             }
             other => panic!("expected sharded spec, got {other:?}"),
         }
@@ -472,6 +536,59 @@ mod tests {
         assert!(BackendSpec::parse("mem:shards=0", 512).is_err());
         assert!(BackendSpec::parse("mem:shards=abc", 512).is_err());
         assert!(BackendSpec::parse("mem:replicas=2", 512).is_err());
+    }
+
+    #[test]
+    fn spec_parses_map_policy() {
+        let spec = BackendSpec::parse("sim:shards=2,map=interleave", 4096).unwrap();
+        match &spec {
+            BackendSpec::Sharded { policy, n_shards, .. } => {
+                assert_eq!(*policy, MapPolicy::Interleave);
+                assert_eq!(*n_shards, 2);
+            }
+            other => panic!("expected sharded spec, got {other:?}"),
+        }
+        // pacing and capacity fitting keep the policy
+        match BackendSpec::parse("mem:shards=2,map=interleave", 512)
+            .unwrap()
+            .with_pace(Pace::Afap)
+            .for_capacity(100)
+        {
+            BackendSpec::Sharded { policy, lbas_per_shard, .. } => {
+                assert_eq!(policy, MapPolicy::Interleave);
+                assert_eq!(lbas_per_shard, 50);
+            }
+            other => panic!("expected sharded spec, got {other:?}"),
+        }
+        assert_eq!(
+            match BackendSpec::parse("mem:shards=2,map=contig", 512).unwrap() {
+                BackendSpec::Sharded { policy, .. } => policy,
+                other => panic!("expected sharded spec, got {other:?}"),
+            },
+            MapPolicy::Contiguous
+        );
+        assert!(BackendSpec::parse("mem:shards=2,map=hash", 512).is_err());
+        assert!(BackendSpec::parse("mem:map=interleave", 512).is_err(), "map needs shards");
+    }
+
+    #[test]
+    fn stage2_class_is_split_out_of_read_counts() {
+        let mut b = MemBackend::new();
+        read_blocks(&mut b, &[1, 2, 3]);
+        fetch_stage2(&mut b, &[4, 5]);
+        let st = b.stats();
+        assert_eq!(st.reads, 5, "all reads counted in the aggregate");
+        assert_eq!(st.stage2_reads, 2, "only the tagged fetch burst");
+        // the class survives a sharded fan-out too
+        let spec = BackendSpec::parse("mem:shards=2", 512).unwrap().for_capacity(8);
+        let mut sb = spec.build();
+        fetch_stage2(&mut *sb, &[0, 1, 4, 5]);
+        read_blocks(&mut *sb, &[2, 6]);
+        let st = sb.stats();
+        assert_eq!((st.reads, st.stage2_reads), (6, 4));
+        let per = sb.shard_snapshots();
+        assert_eq!(per[0].stats.stage2_reads, 2);
+        assert_eq!(per[1].stats.stage2_reads, 2);
     }
 
     #[test]

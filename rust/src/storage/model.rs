@@ -88,6 +88,7 @@ impl StorageBackend for ModelBackend {
                 id: self.next_id,
                 op: r.op,
                 lba: r.lba,
+                class: r.class,
                 device_ns: device_ns.round() as u64,
             };
             self.next_id += 1;

@@ -10,9 +10,18 @@
 //! parallelism, not just $/byte). [`ShardedBackend`] is the storage half
 //! of that story; `coordinator::Router::partitioned` is the serving half.
 //!
-//! Routing is an explicit lba→device map ([`ShardMap`]): device
-//! `lba / lbas_per_shard` serves the request at device-local address
-//! `lba % lbas_per_shard`. Batches submitted in one call are split by
+//! Routing is an explicit lba→device map ([`ShardMap`]) with two
+//! policies ([`MapPolicy`]):
+//!
+//! * **Contiguous** (default) — device `lba / lbas_per_shard` serves the
+//!   request at device-local address `lba % lbas_per_shard`; big
+//!   sequential spans stay device-local.
+//! * **Interleave** — round-robin: device `lba % n_shards` at local
+//!   address `lba / n_shards`, so even a narrow hot address range
+//!   spreads across every device (a hot KV key cluster no longer pins
+//!   one shard).
+//!
+//! Batches submitted in one call are split by
 //! owner and arrive at every device simultaneously (the same burst
 //! semantics single-device backends implement); completions are merged
 //! back with the caller's ids and original addresses. Aggregate stats
@@ -33,19 +42,54 @@ use super::{
     BackendKind, BackendStats, IoCompletion, IoRequest, StorageBackend, StorageSnapshot,
 };
 
-/// Explicit lba→device map: contiguous ranges of `lbas_per_shard` blocks,
-/// one range per device.
+/// How a [`ShardMap`] assigns lbas to devices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MapPolicy {
+    /// Contiguous ranges of `lbas_per_shard` blocks, one range per device.
+    #[default]
+    Contiguous,
+    /// Round-robin: consecutive lbas land on consecutive devices, so a
+    /// narrow hot address range spreads across the whole array.
+    Interleave,
+}
+
+impl MapPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MapPolicy::Contiguous => "contig",
+            MapPolicy::Interleave => "interleave",
+        }
+    }
+
+    /// Parse a `map=` spec value (`contig` | `interleave`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "contig" | "contiguous" => Ok(MapPolicy::Contiguous),
+            "interleave" | "rr" => Ok(MapPolicy::Interleave),
+            other => anyhow::bail!("unknown map policy '{other}' (want contig|interleave)"),
+        }
+    }
+}
+
+/// Explicit lba→device map: `n_shards` devices of `lbas_per_shard` blocks
+/// each, assigned per [`MapPolicy`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ShardMap {
     pub n_shards: usize,
     pub lbas_per_shard: u64,
+    pub policy: MapPolicy,
 }
 
 impl ShardMap {
+    /// Contiguous map (the default policy).
     pub fn new(n_shards: usize, lbas_per_shard: u64) -> Result<Self> {
+        Self::with_policy(n_shards, lbas_per_shard, MapPolicy::Contiguous)
+    }
+
+    pub fn with_policy(n_shards: usize, lbas_per_shard: u64, policy: MapPolicy) -> Result<Self> {
         ensure!(n_shards >= 1, "shard map needs at least one shard");
         ensure!(lbas_per_shard >= 1, "lbas_per_shard must be >= 1");
-        Ok(ShardMap { n_shards, lbas_per_shard })
+        Ok(ShardMap { n_shards, lbas_per_shard, policy })
     }
 
     /// Total addressable blocks across all shards.
@@ -64,7 +108,14 @@ impl ShardMap {
             self.lbas_per_shard,
             self.total_lbas()
         );
-        Ok(((lba / self.lbas_per_shard) as usize, lba % self.lbas_per_shard))
+        Ok(match self.policy {
+            MapPolicy::Contiguous => {
+                ((lba / self.lbas_per_shard) as usize, lba % self.lbas_per_shard)
+            }
+            MapPolicy::Interleave => {
+                ((lba % self.n_shards as u64) as usize, lba / self.n_shards as u64)
+            }
+        })
     }
 }
 
@@ -100,7 +151,7 @@ impl ShardedBackend {
     /// record it in the aggregate stats.
     fn absorb(&mut self, shard: usize, c: IoCompletion) -> IoCompletion {
         let (id, lba) = self.pending[shard].remove(&c.id).unwrap_or((c.id, c.lba));
-        let done = IoCompletion { id, op: c.op, lba, device_ns: c.device_ns };
+        let done = IoCompletion { id, op: c.op, lba, class: c.class, device_ns: c.device_ns };
         self.stats.record(&done);
         done
     }
@@ -124,7 +175,7 @@ impl StorageBackend for ShardedBackend {
             // addresses onto the array. Callers that want strict checking
             // route through ShardMap::route first.
             let (shard, local) = self.map.route(r.lba % total).expect("wrapped lba in range");
-            per_shard[shard].push((id, r.lba, IoRequest { op: r.op, lba: local }));
+            per_shard[shard].push((id, r.lba, IoRequest { op: r.op, lba: local, class: r.class }));
         }
         for (s, batch) in per_shard.into_iter().enumerate() {
             if batch.is_empty() {
@@ -280,5 +331,107 @@ mod tests {
         let per = b.shard_snapshots();
         assert_eq!(per[0].stats.reads, 1);
         assert_eq!(per[1].stats.reads, 0);
+    }
+
+    #[test]
+    fn interleave_map_routes_boundaries_and_rejects_out_of_range() {
+        let m = ShardMap::with_policy(4, 100, MapPolicy::Interleave).unwrap();
+        assert_eq!(m.total_lbas(), 400);
+        // consecutive lbas round-robin across devices
+        assert_eq!(m.route(0).unwrap(), (0, 0));
+        assert_eq!(m.route(1).unwrap(), (1, 0));
+        assert_eq!(m.route(3).unwrap(), (3, 0));
+        assert_eq!(m.route(4).unwrap(), (0, 1));
+        // last lba of the array = last local block of the last device
+        assert_eq!(m.route(399).unwrap(), (3, 99));
+        // first/last lba owned by one device under interleaving
+        assert_eq!(m.route(2).unwrap(), (2, 0));
+        assert_eq!(m.route(398).unwrap(), (2, 99));
+        assert!(m.route(400).is_err());
+        assert!(m.route(u64::MAX).is_err());
+        assert!(ShardMap::with_policy(0, 100, MapPolicy::Interleave).is_err());
+        assert!(ShardMap::with_policy(4, 0, MapPolicy::Interleave).is_err());
+    }
+
+    #[test]
+    fn map_policy_parses_spec_values() {
+        assert_eq!(MapPolicy::parse("contig").unwrap(), MapPolicy::Contiguous);
+        assert_eq!(MapPolicy::parse("contiguous").unwrap(), MapPolicy::Contiguous);
+        assert_eq!(MapPolicy::parse("interleave").unwrap(), MapPolicy::Interleave);
+        assert_eq!(MapPolicy::parse("rr").unwrap(), MapPolicy::Interleave);
+        assert!(MapPolicy::parse("hash").is_err());
+        assert_eq!(MapPolicy::Contiguous.name(), "contig");
+        assert_eq!(MapPolicy::Interleave.name(), "interleave");
+    }
+
+    #[test]
+    fn burst_spanning_shard_boundaries_splits_by_owner() {
+        // a burst that straddles the shard-0/1 and 1/2 boundaries
+        let mut b = sharded_mem(4, 100);
+        let lbas: Vec<u64> = (95..205).collect(); // 5 on shard 0, 100 on 1, 10 on 2
+        read_blocks(&mut b, &lbas);
+        let per = b.shard_snapshots();
+        assert_eq!(per[0].stats.reads, 5);
+        assert_eq!(per[1].stats.reads, 100);
+        assert_eq!(per[2].stats.reads, 10);
+        assert_eq!(per[3].stats.reads, 0);
+        assert_eq!(b.stats().reads, 110);
+    }
+
+    #[test]
+    fn hot_narrow_range_spreads_under_interleave_pins_under_contig() {
+        // 64 reads in [0, 16): contiguous → all on device 0; interleaved
+        // → an even 16 per device (the small-hot-range ROADMAP case).
+        let hot: Vec<u64> = (0..64).map(|i| i % 16).collect();
+        let mut contig = sharded_mem(4, 1000);
+        read_blocks(&mut contig, &hot);
+        let per = contig.shard_snapshots();
+        assert_eq!(per[0].stats.reads, 64, "contiguous map pins the hot range");
+        assert!(per[1..].iter().all(|s| s.stats.reads == 0));
+
+        let map = ShardMap::with_policy(4, 1000, MapPolicy::Interleave).unwrap();
+        let inner: Vec<Box<dyn StorageBackend>> = (0..4)
+            .map(|_| Box::new(MemBackend::new()) as Box<dyn StorageBackend>)
+            .collect();
+        let mut inter = ShardedBackend::new(map, inner);
+        read_blocks(&mut inter, &hot);
+        let per = inter.shard_snapshots();
+        for (s, snap) in per.iter().enumerate() {
+            assert_eq!(snap.stats.reads, 16, "shard {s} should see an even slice");
+        }
+        // callers still see their own addresses back
+        assert_eq!(inter.stats().reads, 64);
+    }
+
+    /// Merged `SimStats` / `StorageSnapshot.shards` bookkeeping with real
+    /// devices behind the map: device counters must sum across shards and
+    /// the per-shard snapshots must account for every read, including the
+    /// stage-2 class split.
+    #[test]
+    fn sim_backed_shards_merge_device_stats_and_snapshots() {
+        use crate::storage::{fetch_stage2, BackendSpec, StorageSnapshot};
+        let spec = BackendSpec::small_sim(4096);
+        let map = ShardMap::new(2, 64).unwrap();
+        let inner = (0..2).map(|_| spec.build()).collect();
+        let mut b = ShardedBackend::new(map, inner);
+        // burst spanning the shard boundary: 40 on shard 0, 24 on shard 1
+        let lbas: Vec<u64> = (24..88).collect();
+        let done = fetch_stage2(&mut b, &lbas);
+        assert_eq!(done.len(), 64);
+        let dev = b.device_stats().expect("sim shards expose device stats");
+        assert_eq!(dev.reads_done, 64, "merged SimStats sums shard devices");
+        assert_eq!(dev.stage2_reads, 64, "class survives the fan-out");
+        let per = b.shard_snapshots();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].stats.reads, 40);
+        assert_eq!(per[1].stats.reads, 24);
+        assert_eq!(per[0].device.as_ref().unwrap().reads_done, 40);
+        assert_eq!(per[1].device.as_ref().unwrap().reads_done, 24);
+        // the top-level snapshot folds the same numbers
+        let snap = StorageSnapshot::capture(&b);
+        assert_eq!(snap.stats.reads, 64);
+        assert_eq!(snap.stats.stage2_reads, 64);
+        assert_eq!(snap.device.as_ref().unwrap().reads_done, 64);
+        assert_eq!(snap.shards.len(), 2);
     }
 }

@@ -29,7 +29,7 @@ use crate::config::SsdConfig;
 use crate::sim::{SimParams, SimStats, SsdSim};
 use crate::workload::trace::{IoReq, OpKind};
 
-use super::{BackendKind, BackendStats, IoCompletion, IoOp, IoRequest, StorageBackend};
+use super::{BackendKind, BackendStats, IoClass, IoCompletion, IoOp, IoRequest, StorageBackend};
 
 /// Virtual→wall time mapping for the simulator worker.
 #[derive(Clone, Copy, Debug)]
@@ -184,10 +184,14 @@ fn worker(
     let logical = sim.logical_blocks();
     let wall_origin = Instant::now();
     let virt_origin = sim.now_ns();
+    // Stage-2-classed host reads completed so far: the device core models
+    // addresses and sizes, not traffic classes, so the front-end counts
+    // them and stamps the snapshot (`SimStats::stage2_reads`).
+    let mut stage2_done: u64 = 0;
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
             Cmd::Submit(batch) => {
-                let mut by_host: HashMap<u32, (u64, IoOp, u64)> =
+                let mut by_host: HashMap<u32, (u64, IoOp, u64, IoClass)> =
                     HashMap::with_capacity(batch.len());
                 for (bid, req) in &batch {
                     let kind = match req.op {
@@ -200,17 +204,25 @@ fn worker(
                         lba: req.lba % logical,
                         bytes: l_blk,
                     });
-                    by_host.insert(hid, (*bid, req.op, req.lba));
+                    by_host.insert(hid, (*bid, req.op, req.lba, req.class));
                 }
                 for (hid, lat) in sim.drain_inflight() {
-                    if let Some((id, op, lba)) = by_host.remove(&hid) {
-                        let _ = done_tx.send(IoCompletion { id, op, lba, device_ns: lat });
+                    if let Some((id, op, lba, class)) = by_host.remove(&hid) {
+                        if op == IoOp::Read && class == IoClass::Stage2 {
+                            stage2_done += 1;
+                        }
+                        let _ = done_tx.send(IoCompletion { id, op, lba, class, device_ns: lat });
                     }
                 }
                 // A drained queue with unmatched entries cannot happen in a
-                // well-formed run; complete them anyway so callers never hang.
-                for (id, op, lba) in by_host.into_values() {
-                    let _ = done_tx.send(IoCompletion { id, op, lba, device_ns: 0 });
+                // well-formed run; complete them anyway so callers never hang
+                // (keeping the per-class count consistent with what the
+                // front-end's BackendStats will record).
+                for (id, op, lba, class) in by_host.into_values() {
+                    if op == IoOp::Read && class == IoClass::Stage2 {
+                        stage2_done += 1;
+                    }
+                    let _ = done_tx.send(IoCompletion { id, op, lba, class, device_ns: 0 });
                 }
                 if let Pace::WallClock { speedup } = pace {
                     let virt = Duration::from_nanos(sim.now_ns() - virt_origin);
@@ -222,7 +234,9 @@ fn worker(
                 }
             }
             Cmd::Stats(tx) => {
-                let _ = tx.send(sim.stats_snapshot());
+                let mut s = sim.stats_snapshot();
+                s.stage2_reads = stage2_done;
+                let _ = tx.send(s);
             }
             Cmd::Stop => break,
         }

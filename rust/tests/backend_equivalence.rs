@@ -129,8 +129,17 @@ fn kv_results_identical_on_sharded_backend() {
         inner: Box::new(small_sim_spec(512)),
         n_shards: 4,
         lbas_per_shard: (2 * p.n_buckets).div_euclid(4).max(1),
+        policy: fivemin::storage::MapPolicy::Contiguous,
     };
-    for (name, spec) in [("mem", sharded_mem), ("sim", sharded_sim)] {
+    // interleaved map: same results, different device placement
+    let interleaved_mem = BackendSpec::parse("mem:shards=4,map=interleave", 512)
+        .unwrap()
+        .for_capacity(2 * p.n_buckets);
+    for (name, spec) in [
+        ("mem", sharded_mem),
+        ("sim", sharded_sim),
+        ("mem-interleave", interleaved_mem),
+    ] {
         let (res, reads, _) = run_kv_workload(&spec);
         assert_eq!(res, mem_res, "sharded {name} backend changed GET results");
         assert_eq!(reads, mem_reads, "sharded {name} backend changed I/O count");

@@ -1,0 +1,232 @@
+//! Randomized pin of the partitioned-router equivalence guarantee.
+//!
+//! PR 2 proved bit-identical merge on two hand-picked cases; this suite
+//! turns that into a randomized property: across seeded trials with
+//! random corpus sizes, partition counts, and per-worker storage-shard
+//! counts, the answers of {one replica worker} × {partitioned,
+//! speculative fetch} × {partitioned, fetch-after-merge} must be
+//! bit-identical (ids, full scores, reduced scores), and the I/O
+//! accounting must show after-merge issuing exactly `1/N` of the
+//! speculative stage-2 device reads.
+//!
+//! (`k` itself is pinned by the AOT graph shape (`SERVE.topk`), so the
+//! randomization varies everything the protocol is generic over: corpus
+//! shards, partition fan-out, storage fan-out, query count, noise, and
+//! seeds. Replay a failure with the `FIVEMIN_PROP_SEED` env var.)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fivemin::coordinator::batcher::BatchPolicy;
+use fivemin::coordinator::{Coordinator, FetchMode, QueryResult, Router, ServingCorpus};
+use fivemin::runtime::{default_artifacts_dir, SERVE};
+use fivemin::storage::BackendSpec;
+use fivemin::util::proptest::Prop;
+use fivemin::util::rng::Rng;
+
+#[derive(Debug)]
+struct Trial {
+    corpus_shards: usize,
+    n_parts: usize,
+    /// Storage shards *per worker* (`mem:shards=S` fan-out), on top of
+    /// the worker-level partitioning.
+    backend_shards: usize,
+    n_queries: usize,
+    corpus_seed: u64,
+    query_seed: u64,
+    noise: f32,
+}
+
+fn gen_trial(rng: &mut Rng) -> Trial {
+    // Weighted toward small corpora (synthetic generation dominates the
+    // trial cost); 4-shard cases keep the deep fan-outs honest.
+    let corpus_shards = match rng.below(100) {
+        0..=54 => 1,
+        55..=84 => 2,
+        _ => 4,
+    };
+    let divisors: Vec<usize> = (1..=corpus_shards)
+        .filter(|d| corpus_shards % d == 0)
+        .collect();
+    let n_parts = divisors[rng.below(divisors.len() as u64) as usize];
+    Trial {
+        corpus_shards,
+        n_parts,
+        backend_shards: [1usize, 2, 4][rng.below(3) as usize],
+        n_queries: 2 + rng.below(2) as usize,
+        corpus_seed: rng.below(1 << 20),
+        query_seed: rng.below(1 << 20),
+        noise: 0.01 + 0.04 * rng.f64() as f32,
+    }
+}
+
+/// Submit all queries concurrently (they may share batches — results are
+/// per-query deterministic regardless) and collect in submission order.
+fn serve_all(
+    submit: impl Fn(Vec<f32>) -> std::sync::mpsc::Receiver<Result<QueryResult, String>>,
+    queries: &[Vec<f32>],
+) -> Result<Vec<QueryResult>, String> {
+    let pending: Vec<_> = queries.iter().map(|q| submit(q.clone())).collect();
+    let mut out = Vec::with_capacity(pending.len());
+    for rx in pending {
+        out.push(rx.recv().map_err(|_| "worker gone".to_string())??);
+    }
+    Ok(out)
+}
+
+/// Settle window for `Router::settled_stats` (workers answer before
+/// capturing the batch's backend snapshot).
+const SETTLE: Duration = Duration::from_secs(10);
+
+fn start_single(corpus: &Arc<ServingCorpus>) -> Result<Coordinator, String> {
+    Coordinator::start(
+        default_artifacts_dir(),
+        corpus.clone(),
+        BatchPolicy::default(),
+        BackendSpec::Mem,
+    )
+    .map_err(|e| e.to_string())
+}
+
+fn start_router(
+    corpus: &Arc<ServingCorpus>,
+    n_parts: usize,
+    worker_spec: &BackendSpec,
+    fetch: FetchMode,
+) -> Result<Router, String> {
+    let workers = corpus
+        .partitions(n_parts)
+        .map_err(|e| e.to_string())?
+        .into_iter()
+        .map(|part| {
+            let spec = worker_spec.clone().for_capacity(part.n as u64);
+            Coordinator::start(
+                default_artifacts_dir(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                spec,
+            )
+        })
+        .collect::<anyhow::Result<Vec<_>>>()
+        .map_err(|e| e.to_string())?;
+    Router::partitioned_with(workers, fetch).map_err(|e| e.to_string())
+}
+
+fn check_trial(t: &Trial) -> Result<(), String> {
+    let k = SERVE.topk as u64;
+    let corpus = Arc::new(ServingCorpus::synthetic(t.corpus_shards, t.corpus_seed));
+    let mut qrng = Rng::new(t.query_seed);
+    let queries: Vec<Vec<f32>> = (0..t.n_queries)
+        .map(|_| corpus.query_near(qrng.below(corpus.n as u64) as usize, t.noise, &mut qrng))
+        .collect();
+
+    // control arm: one replica worker over the whole corpus, mem backend
+    let single = start_single(&corpus)?;
+    let base = serve_all(|q| single.submit(q), &queries)?;
+
+    let worker_spec = if t.backend_shards == 1 {
+        BackendSpec::Mem
+    } else {
+        BackendSpec::parse(&format!("mem:shards={}", t.backend_shards), 4096)
+            .map_err(|e| e.to_string())?
+    };
+
+    for fetch in [FetchMode::Speculative, FetchMode::AfterMerge] {
+        let router = start_router(&corpus, t.n_parts, &worker_spec, fetch)?;
+        let got = serve_all(|q| router.submit(q), &queries)?;
+        for (qi, (a, b)) in base.iter().zip(&got).enumerate() {
+            if a.ids != b.ids {
+                return Err(format!("{} ids differ on query {qi}", fetch.name()));
+            }
+            if a.scores != b.scores {
+                return Err(format!("{} full scores differ on query {qi}", fetch.name()));
+            }
+            if a.reduced != b.reduced {
+                return Err(format!("{} reduced scores differ on query {qi}", fetch.name()));
+            }
+        }
+        // I/O accounting: speculative fetches k per query per partition,
+        // after-merge exactly k per query in total.
+        let st = router.settled_stats(SETTLE);
+        let want = match fetch {
+            FetchMode::Speculative => t.n_queries as u64 * k * t.n_parts as u64,
+            FetchMode::AfterMerge => t.n_queries as u64 * k,
+        };
+        if st.ssd_reads != want {
+            return Err(format!(
+                "{} issued {} stage-2 reads, want {want}",
+                fetch.name(),
+                st.ssd_reads
+            ));
+        }
+        let snap = st.storage.as_ref().ok_or("missing storage snapshot")?;
+        if snap.stats.stage2_reads != want {
+            return Err(format!(
+                "{} backend counted {} stage-2 reads, want {want}",
+                fetch.name(),
+                snap.stats.stage2_reads
+            ));
+        }
+        if fetch == FetchMode::AfterMerge {
+            let legs = st.reduce_legs;
+            let expect_legs = (t.n_queries * t.n_parts) as u64;
+            if legs != expect_legs {
+                return Err(format!("{legs} reduce legs, want {expect_legs}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn randomized_router_equivalence_and_io_accounting() {
+    Prop::new("router-equivalence").cases(20).run(gen_trial, check_trial);
+}
+
+/// The acceptance bar, measured from MQSim-Next device counters
+/// (`SimStats::stage2_reads`) rather than coordinator bookkeeping: with
+/// real simulated devices behind every partition, `--fetch merge` must
+/// return bit-identical answers AND issue ≤ speculative/(N−0.5) stage-2
+/// device reads for N ∈ {2, 4}.
+#[test]
+fn after_merge_cuts_sim_device_stage2_reads_nx() {
+    let corpus = Arc::new(ServingCorpus::synthetic(4, 1913));
+    let mut qrng = Rng::new(313);
+    let n_queries = 3usize;
+    let queries: Vec<Vec<f32>> = (0..n_queries)
+        .map(|_| corpus.query_near(qrng.below(corpus.n as u64) as usize, 0.02, &mut qrng))
+        .collect();
+    let single = start_single(&corpus).unwrap();
+    let base = serve_all(|q| single.submit(q), &queries).unwrap();
+
+    for n in [2usize, 4] {
+        let mut reads_by_mode = Vec::new();
+        for fetch in [FetchMode::Speculative, FetchMode::AfterMerge] {
+            let router =
+                start_router(&corpus, n, &BackendSpec::small_sim(4096), fetch).unwrap();
+            let got = serve_all(|q| router.submit(q), &queries).unwrap();
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.ids, b.ids, "{} N={n}: ids differ", fetch.name());
+                assert_eq!(a.scores, b.scores, "{} N={n}: scores differ", fetch.name());
+                assert_eq!(a.reduced, b.reduced, "{} N={n}: reduced differ", fetch.name());
+            }
+            let st = router.settled_stats(SETTLE);
+            let dev = st
+                .storage
+                .as_ref()
+                .and_then(|s| s.device.as_ref())
+                .expect("sim workers expose merged device stats")
+                .clone();
+            reads_by_mode.push(dev.stage2_reads);
+        }
+        let (spec_reads, merge_reads) = (reads_by_mode[0], reads_by_mode[1]);
+        let k = SERVE.topk as u64;
+        assert_eq!(spec_reads, n_queries as u64 * k * n as u64, "N={n} speculative");
+        assert_eq!(merge_reads, n_queries as u64 * k, "N={n} after-merge");
+        // the ISSUE acceptance inequality, from device-level counters
+        assert!(
+            (merge_reads as f64) <= spec_reads as f64 / (n as f64 - 0.5),
+            "N={n}: after-merge {merge_reads} reads !<= speculative {spec_reads}/(N-0.5)"
+        );
+    }
+}

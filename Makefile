@@ -1,7 +1,8 @@
 # Build/verify entry points. `make artifacts` needs jax installed;
 # everything else is pure cargo.
 
-.PHONY: artifacts verify verify-release lint pytest clean figures fig11 fig12 fig13
+.PHONY: artifacts verify verify-release lint fmt-check doc pytest ci bench-smoke smoke \
+        clean figures fig11 fig12 fig13 fig14
 
 # Lower the JAX/Pallas serving graphs to HLO-text artifacts + manifest
 # (a prerequisite only for --features pjrt builds; the native engine
@@ -22,8 +23,35 @@ verify-release:
 lint:
 	cargo clippy --all-targets -- -D warnings
 
+fmt-check:
+	cargo fmt --check
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 pytest:
 	python -m pytest python/tests -q
+
+# Perf-smoke matrix + regression gate (mirrors the bench-smoke CI job):
+# {mem,sim} x {spec,merge,adaptive} x shards {1,2}, artifact under
+# results/, reads/query gated against the checked-in baseline.
+bench-smoke:
+	cargo run --release -- smoke --json --out results/bench_smoke.json \
+		--baseline rust/benches/common/smoke_baseline.json
+
+smoke: bench-smoke
+
+# The full CI pipeline, locally: fmt -> build -> clippy -> feature-matrix
+# check -> tests in both profiles -> docs -> bench-smoke. (CI additionally
+# runs `make pytest` in a python job.)
+ci: fmt-check
+	cargo build --release
+	$(MAKE) lint
+	cargo check --features pjrt
+	cargo test -q
+	cargo test --release -q
+	$(MAKE) doc
+	$(MAKE) bench-smoke
 
 # Figure regeneration (CSV under results/ + ASCII on stdout).
 figures:
@@ -37,6 +65,9 @@ fig12:
 
 fig13:
 	cargo run --release -- figures --fig13
+
+fig14:
+	cargo run --release -- figures --fig14
 
 clean:
 	rm -rf target results

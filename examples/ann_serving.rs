@@ -18,6 +18,7 @@
 //!     cargo run --release --example ann_serving -- --backend sim --workers 2
 //!     cargo run --release --example ann_serving -- --backend sim --pace wall:50
 //!     cargo run --release --example ann_serving -- --backend sim --fetch merge
+//!     cargo run --release --example ann_serving -- --backend sim --fetch adaptive
 //!
 //! `mem` reproduces the DRAM-resident baseline; `model` charges the
 //! analytic Eq. 2 + queueing cost; `sim` replays the fetch traffic on
@@ -28,6 +29,9 @@
 //! protocol: stage-1 reduced scores merge first, then only the global
 //! top-k is fetched from its owning shards — k device reads per query
 //! instead of workers×k, at the cost of a second round-trip.
+//! `--fetch adaptive` lets a load-feedback controller pick between the
+//! two per dispatched query from the measured device stall vs phase-2
+//! round-trip, with hysteresis (per-window decisions printed at the end).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -65,9 +69,9 @@ fn main() -> anyhow::Result<()> {
         )
         .opt(
             "fetch",
-            "spec|merge",
+            "spec|merge|adaptive",
             Some("spec"),
-            "stage-2 fetch protocol: speculative (1 round-trip) or after-merge (2 round-trips, ~Nx fewer reads)",
+            "stage-2 fetch protocol: speculative (1 round-trip), after-merge (2 round-trips, ~Nx fewer reads), or adaptive (picked per query from measured load)",
         );
     let args: Vec<String> = std::env::args().skip(1).collect();
     let p = match spec.parse(&args) {
@@ -148,6 +152,25 @@ fn main() -> anyhow::Result<()> {
         fmt_secs(e2e.percentile(0.5) / 1e9),
         fmt_secs(e2e.percentile(0.99) / 1e9),
     );
+    if let Some(rep) = router.adaptive_report() {
+        println!(
+            "adaptive   : {} spec / {} merge dispatches, {} flips, final mode '{}'",
+            rep.spec_queries,
+            rep.merge_queries,
+            rep.flips,
+            rep.mode.name(),
+        );
+        for w in &rep.windows {
+            println!(
+                "  window {:>3}: {:<5} spec-cost {:>9.1}us vs merge-cost {:>9.1}us{}",
+                w.index,
+                w.mode.name(),
+                w.spec_cost_ns / 1e3,
+                w.merge_cost_ns / 1e3,
+                if w.flipped { "  << flip" } else { "" }
+            );
+        }
+    }
     for (i, s) in stats.iter().enumerate() {
         if s.queries > 0 {
             println!(

@@ -1,0 +1,485 @@
+//! Adaptive fetch-mode selection: a per-router load-feedback controller
+//! that picks speculative vs fetch-after-merge *per dispatched query*
+//! from measured device behavior instead of a static CLI flag.
+//!
+//! The paper's economics say ultra-high-IOPS flash makes fine-grained
+//! reads cheap — but not free: under load, every wasted stage-2 read
+//! inflates device queueing and therefore the tail. The two static
+//! protocols sit at the ends of that trade (see the module docs of
+//! [`crate::coordinator`]):
+//!
+//! * **Speculative** pays `N×k` stage-2 device reads per query to win one
+//!   router→worker round-trip — best when the device is idle.
+//! * **Fetch-after-merge** pays a second round-trip to win back
+//!   `(N−1)×k` reads — best when the device, not the round-trip, is the
+//!   binding constraint.
+//!
+//! The controller prices both *extra* costs from measurements taken over
+//! a sliding window of dispatched queries:
+//!
+//! ```text
+//! spec_cost  = (N−1)·k · S̄        // wasted device time per query
+//! merge_cost = R̄TT₂               // extra phase-2 round-trip per query
+//! ```
+//!
+//! where `S̄` is the windowed mean per-read device time (from
+//! [`StorageBackend::take_window`](crate::storage::StorageBackend::take_window)
+//! — it includes queueing, so it *is* the occupancy signal: it rises as
+//! the device saturates) and `R̄TT₂` is an EWMA of the measured phase-2
+//! dispatch→answer time (fed back by the router's finisher thread).
+//! The mode flips only when the preferred side wins by the hysteresis
+//! factor, and a minimum dwell of windows must pass between flips — so a
+//! bursty, oscillating stall signal produces bounded mode flips instead
+//! of thrash (unit-tested below).
+//!
+//! `S̄` is measured by *both* modes (each issues stage-2 reads), so load
+//! spikes are seen without extra traffic. `R̄TT₂` is only measured by
+//! merge-mode queries; while the controller sits in speculative mode it
+//! refreshes the estimate with a rare deterministic probe (one
+//! merge-dispatched query every [`AdaptiveConfig::refresh`] windows).
+//! Going stale is safe in both directions: a stale-low `R̄TT₂` only makes
+//! the switch *toward* merge easier, and once in merge mode the estimate
+//! is fresh again.
+//!
+//! Answers stay bit-identical whichever mode a query is dispatched in —
+//! that is the routers' equivalence invariant
+//! (`rust/tests/router_equivalence_prop.rs` runs an adaptive arm) — so
+//! the controller is free to switch without correctness risk.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::storage::DeviceWindow;
+
+use super::FetchMode;
+
+/// EWMA smoothing factor for the measured signals (higher = more
+/// responsive, less damped).
+const EWMA_ALPHA: f64 = 0.4;
+
+/// Windows of decision history kept for reporting.
+const LOG_CAP: usize = 64;
+
+/// Tuning of the [`AdaptiveController`].
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    /// Dispatched queries per sampling window: device windows are fused
+    /// and the mode re-evaluated every `window` decisions.
+    pub window: usize,
+    /// A flip requires the preferred side to win by this factor (e.g.
+    /// 1.25 = a 25% margin); oscillation inside the band never flips.
+    pub hysteresis: f64,
+    /// After a flip, at least this many windows pass before the next one.
+    pub min_dwell: usize,
+    /// While in speculative mode, refresh the phase-2 RTT estimate with
+    /// [`AdaptiveConfig::probes`] merge-dispatched queries every this
+    /// many windows (bootstrap probes fire regardless until the estimate
+    /// exists).
+    pub refresh: usize,
+    /// Probes per refresh.
+    pub probes: usize,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig { window: 32, hysteresis: 1.25, min_dwell: 2, refresh: 16, probes: 1 }
+    }
+}
+
+/// One sampling window's decision record (for `--fetch adaptive` output
+/// and debugging; bounded history).
+#[derive(Clone, Copy, Debug)]
+pub struct ModeWindow {
+    /// Window index since controller start.
+    pub index: u64,
+    /// Mode in force after this window's re-evaluation.
+    pub mode: FetchMode,
+    /// Smoothed per-read device time (ns) used for the decision.
+    pub service_ns: f64,
+    /// Smoothed phase-2 round-trip (ns) used for the decision (0 =
+    /// not yet measured).
+    pub phase2_ns: f64,
+    /// `(N−1)·k · service_ns` — speculative's priced extra cost.
+    pub spec_cost_ns: f64,
+    /// `phase2_ns` — fetch-after-merge's priced extra cost.
+    pub merge_cost_ns: f64,
+    /// Whether this window's re-evaluation flipped the mode.
+    pub flipped: bool,
+}
+
+/// Snapshot of the controller for reporting.
+#[derive(Clone, Debug)]
+pub struct AdaptiveReport {
+    /// Mode currently in force.
+    pub mode: FetchMode,
+    /// Queries dispatched (decisions made).
+    pub decisions: u64,
+    /// Queries dispatched speculatively / as fetch-after-merge.
+    pub spec_queries: u64,
+    pub merge_queries: u64,
+    /// Mode flips so far.
+    pub flips: u64,
+    /// Latest smoothed signals.
+    pub service_ns: f64,
+    pub phase2_ns: f64,
+    /// Recent per-window decisions (bounded history, oldest first).
+    pub windows: Vec<ModeWindow>,
+}
+
+impl AdaptiveReport {
+    /// Fraction of dispatched queries that went fetch-after-merge.
+    pub fn merge_share(&self) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.merge_queries as f64 / self.decisions as f64
+        }
+    }
+}
+
+struct State {
+    mode: FetchMode,
+    decisions: u64,
+    spec_queries: u64,
+    merge_queries: u64,
+    flips: u64,
+    /// Decisions made in the current window.
+    in_window: usize,
+    window_idx: u64,
+    /// Windows the mode is pinned after a flip.
+    dwell: usize,
+    windows_since_probe: usize,
+    probes_left: usize,
+    service_ns: f64,
+    phase2_ns: f64,
+    log: VecDeque<ModeWindow>,
+}
+
+/// The per-router controller. Shared by the submit path (decisions), the
+/// finisher thread (phase-2 RTT feedback), and stats readers — all state
+/// behind one short-held mutex.
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    /// `(N−1)·k`: extra stage-2 reads a speculatively-dispatched query
+    /// issues over a merge-dispatched one. 0 for a single partition —
+    /// the two modes then cost the same reads and speculative's single
+    /// round-trip always wins.
+    extra_reads: f64,
+    state: Mutex<State>,
+}
+
+impl AdaptiveController {
+    pub fn new(n_workers: usize, topk: usize, cfg: AdaptiveConfig) -> Self {
+        let cfg = AdaptiveConfig {
+            window: cfg.window.max(1),
+            hysteresis: cfg.hysteresis.max(1.0),
+            refresh: cfg.refresh.max(1),
+            // probes=0 would starve the phase-2 estimate forever and
+            // silently pin the controller to speculative
+            probes: cfg.probes.max(1),
+            ..cfg
+        };
+        AdaptiveController {
+            cfg,
+            extra_reads: (n_workers.saturating_sub(1) * topk) as f64,
+            state: Mutex::new(State {
+                mode: FetchMode::Speculative,
+                decisions: 0,
+                spec_queries: 0,
+                merge_queries: 0,
+                flips: 0,
+                in_window: 0,
+                window_idx: 0,
+                dwell: 0,
+                windows_since_probe: 0,
+                probes_left: 0,
+                service_ns: 0.0,
+                phase2_ns: 0.0,
+                log: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// Decide the dispatch mode for the next query. `sample` is invoked
+    /// only at window boundaries and must return the device window
+    /// accumulated since the previous boundary (the router fuses its
+    /// workers' windows). Returns [`FetchMode::Speculative`] or
+    /// [`FetchMode::AfterMerge`], never `Adaptive`.
+    pub fn decide_with(&self, sample: impl FnOnce() -> DeviceWindow) -> FetchMode {
+        let mut st = self.state.lock().unwrap();
+        if self.extra_reads <= 0.0 {
+            // single partition: same reads either way, fewer round-trips
+            st.decisions += 1;
+            st.spec_queries += 1;
+            return FetchMode::Speculative;
+        }
+        if st.in_window == 0 {
+            let w = sample();
+            self.on_window_boundary(&mut st, &w);
+        }
+        st.in_window = (st.in_window + 1) % self.cfg.window;
+        st.decisions += 1;
+        let mode = if st.probes_left > 0 && st.mode == FetchMode::Speculative {
+            st.probes_left -= 1;
+            FetchMode::AfterMerge
+        } else {
+            st.mode
+        };
+        match mode {
+            FetchMode::AfterMerge => st.merge_queries += 1,
+            _ => st.spec_queries += 1,
+        }
+        mode
+    }
+
+    /// Feed back one measured phase-2 round-trip (fetch-leg dispatch →
+    /// all legs answered), from the router's finisher thread.
+    pub fn observe_phase2(&self, rtt_ns: f64) {
+        if !rtt_ns.is_finite() || rtt_ns <= 0.0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.phase2_ns = if st.phase2_ns == 0.0 {
+            rtt_ns
+        } else {
+            EWMA_ALPHA * rtt_ns + (1.0 - EWMA_ALPHA) * st.phase2_ns
+        };
+    }
+
+    fn on_window_boundary(&self, st: &mut State, w: &DeviceWindow) {
+        st.window_idx += 1;
+        if w.reads > 0 {
+            let m = w.mean_read_ns();
+            st.service_ns = if st.service_ns == 0.0 {
+                m
+            } else {
+                EWMA_ALPHA * m + (1.0 - EWMA_ALPHA) * st.service_ns
+            };
+        }
+        let spec_cost = self.extra_reads * st.service_ns;
+        let merge_cost = st.phase2_ns;
+        let mut flipped = false;
+        if st.dwell > 0 {
+            st.dwell -= 1;
+        } else if st.service_ns > 0.0 && merge_cost > 0.0 {
+            // Hysteresis: flip only on a clear win for the other side.
+            match st.mode {
+                FetchMode::Speculative if spec_cost > self.cfg.hysteresis * merge_cost => {
+                    st.mode = FetchMode::AfterMerge;
+                    flipped = true;
+                }
+                FetchMode::AfterMerge if spec_cost * self.cfg.hysteresis < merge_cost => {
+                    st.mode = FetchMode::Speculative;
+                    flipped = true;
+                }
+                _ => {}
+            }
+            if flipped {
+                st.flips += 1;
+                st.dwell = self.cfg.min_dwell;
+            }
+        }
+        // Probe scheduling: only speculative mode starves the phase-2
+        // estimate. Bootstrap until it exists, then refresh rarely.
+        st.windows_since_probe += 1;
+        if st.mode == FetchMode::Speculative
+            && (st.phase2_ns == 0.0 || st.windows_since_probe >= self.cfg.refresh)
+        {
+            st.probes_left = self.cfg.probes;
+            st.windows_since_probe = 0;
+        }
+        let entry = ModeWindow {
+            index: st.window_idx,
+            mode: st.mode,
+            service_ns: st.service_ns,
+            phase2_ns: st.phase2_ns,
+            spec_cost_ns: spec_cost,
+            merge_cost_ns: merge_cost,
+            flipped,
+        };
+        if st.log.len() == LOG_CAP {
+            st.log.pop_front();
+        }
+        st.log.push_back(entry);
+    }
+
+    pub fn report(&self) -> AdaptiveReport {
+        let st = self.state.lock().unwrap();
+        AdaptiveReport {
+            mode: st.mode,
+            decisions: st.decisions,
+            spec_queries: st.spec_queries,
+            merge_queries: st.merge_queries,
+            flips: st.flips,
+            service_ns: st.service_ns,
+            phase2_ns: st.phase2_ns,
+            windows: st.log.iter().copied().collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A device window whose mean read time is `mean_ns`.
+    fn window(mean_ns: f64) -> DeviceWindow {
+        DeviceWindow {
+            reads: 64,
+            writes: 0,
+            stage2_reads: 64,
+            read_ns_total: mean_ns * 64.0,
+            span_ns: (mean_ns * 64.0) as u64,
+        }
+    }
+
+    /// window=1 makes every decision a window boundary, so tests drive
+    /// one synthetic device window per decision.
+    fn ctrl(min_dwell: usize, refresh: usize) -> AdaptiveController {
+        AdaptiveController::new(
+            2,
+            64,
+            AdaptiveConfig { window: 1, hysteresis: 1.25, min_dwell, refresh, probes: 1 },
+        )
+    }
+
+    #[test]
+    fn single_partition_always_speculative() {
+        let c = AdaptiveController::new(1, 64, AdaptiveConfig::default());
+        c.observe_phase2(1e9); // even a huge RTT changes nothing
+        for _ in 0..100 {
+            assert_eq!(c.decide_with(|| window(1e9)), FetchMode::Speculative);
+        }
+        let r = c.report();
+        assert_eq!(r.merge_queries, 0);
+        assert_eq!(r.flips, 0);
+        assert_eq!(r.decisions, 100);
+    }
+
+    #[test]
+    fn bootstraps_phase2_estimate_with_a_merge_probe() {
+        let c = ctrl(0, 1_000_000);
+        // no phase-2 estimate yet: the first decisions probe merge
+        assert_eq!(c.decide_with(|| window(1_000.0)), FetchMode::AfterMerge);
+        c.observe_phase2(1_000_000.0); // 1ms round-trip measured
+        // now the estimate exists and spec_cost (64us) << 1ms: spec wins
+        for _ in 0..50 {
+            assert_eq!(c.decide_with(|| window(1_000.0)), FetchMode::Speculative);
+        }
+        assert_eq!(c.report().flips, 0);
+    }
+
+    #[test]
+    fn sustained_high_stall_flips_to_merge_and_back_once() {
+        let c = ctrl(0, 1_000_000);
+        c.observe_phase2(1_000_000.0); // merge pays 1ms
+        // low stall: spec_cost = 64 * 1us = 64us << 1ms -> stays spec
+        for _ in 0..10 {
+            c.decide_with(|| window(1_000.0));
+        }
+        assert_eq!(c.report().mode, FetchMode::Speculative);
+        // saturated device: 64 * 100us = 6.4ms > 1.25 * 1ms -> merge
+        for _ in 0..10 {
+            c.decide_with(|| window(100_000.0));
+        }
+        let r = c.report();
+        assert_eq!(r.mode, FetchMode::AfterMerge);
+        assert_eq!(r.flips, 1, "one clean flip, no thrash on a steady signal");
+        // load drains again -> back to spec (EWMA takes a few windows)
+        for _ in 0..20 {
+            c.decide_with(|| window(1_000.0));
+        }
+        let r = c.report();
+        assert_eq!(r.mode, FetchMode::Speculative);
+        assert_eq!(r.flips, 2);
+    }
+
+    #[test]
+    fn oscillation_inside_the_hysteresis_band_never_flips() {
+        let c = ctrl(0, 1_000_000);
+        c.observe_phase2(1_000_000.0); // merge_cost = 1ms
+        // spec_cost oscillates 0.9ms <-> 1.1ms around merge_cost: inside
+        // the 1.25x band from spec's side, and from merge's side too
+        for i in 0..200 {
+            let mean = if i % 2 == 0 { 0.9e6 / 64.0 } else { 1.1e6 / 64.0 };
+            c.decide_with(|| window(mean));
+        }
+        let r = c.report();
+        assert_eq!(r.flips, 0, "in-band oscillation must not flip");
+        assert_eq!(r.mode, FetchMode::Speculative);
+    }
+
+    #[test]
+    fn dwell_bounds_flips_under_full_swing_oscillation() {
+        // an adversarial stall square wave that clears both thresholds;
+        // EWMA damps it and dwell pins the mode between flips
+        let dwell = 4;
+        let c = ctrl(dwell, 1_000_000);
+        c.observe_phase2(1_000_000.0);
+        let n = 200u64;
+        for i in 0..n {
+            // 16-window half-period: long enough that the EWMA actually
+            // crosses both hysteresis thresholds each half-cycle
+            let mean = if (i / 16) % 2 == 0 { 100.0 } else { 1e6 };
+            c.decide_with(|| window(mean));
+        }
+        let r = c.report();
+        let bound = n / (dwell as u64 + 1) + 1;
+        assert!(r.flips <= bound, "{} flips > bound {bound}", r.flips);
+        assert!(r.flips >= 2, "controller still reacts to the swing");
+    }
+
+    #[test]
+    fn single_spike_is_damped_by_the_ewma() {
+        let c = ctrl(0, 1_000_000);
+        c.observe_phase2(4_000_000.0); // merge pays 4ms
+        for _ in 0..10 {
+            c.decide_with(|| window(1_000.0)); // spec_cost 64us
+        }
+        // one outlier window (spec_cost would be 64ms instantaneously):
+        // EWMA pulls the estimate to ~0.4*1ms+... = ~400us*64 -> 25.6ms?
+        // No: service EWMA = 0.4*1ms + 0.6*1us ~ 400us; spec_cost ~26ms
+        // would flip. Use a milder spike that EWMA keeps under threshold:
+        // 0.4*120us + 0.6*1us = ~49us; spec_cost ~3.1ms < 1.25*4ms.
+        c.decide_with(|| window(120_000.0));
+        for _ in 0..3 {
+            c.decide_with(|| window(1_000.0));
+        }
+        let r = c.report();
+        assert_eq!(r.flips, 0, "one spike within EWMA damping must not flip");
+        assert_eq!(r.mode, FetchMode::Speculative);
+    }
+
+    #[test]
+    fn probes_refresh_the_phase2_estimate_at_the_configured_rate() {
+        let c = ctrl(0, 10);
+        c.observe_phase2(1_000_000.0);
+        let mut merges = 0;
+        for _ in 0..100 {
+            if c.decide_with(|| window(1_000.0)) == FetchMode::AfterMerge {
+                merges += 1;
+            }
+        }
+        // one probe every `refresh`=10 windows of 1 decision
+        assert!(merges >= 8 && merges <= 12, "probe rate off: {merges}/100");
+        let r = c.report();
+        assert_eq!(r.merge_queries, merges);
+        assert_eq!(r.flips, 0, "probes are not flips");
+    }
+
+    #[test]
+    fn report_windows_are_bounded_and_carry_costs() {
+        let c = ctrl(0, 1_000_000);
+        c.observe_phase2(2_000_000.0);
+        for _ in 0..(LOG_CAP + 40) {
+            c.decide_with(|| window(1_000.0));
+        }
+        let r = c.report();
+        assert_eq!(r.windows.len(), LOG_CAP);
+        let last = r.windows.last().unwrap();
+        assert!(last.index > LOG_CAP as u64);
+        assert!((last.spec_cost_ns - 64.0 * last.service_ns).abs() < 1e-6);
+        assert_eq!(last.merge_cost_ns, r.phase2_ns);
+        assert!(r.merge_share() < 0.1);
+    }
+}

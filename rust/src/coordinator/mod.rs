@@ -31,6 +31,12 @@
 //!   asserted: stage-2 reads are tagged
 //!   [`IoClass::Stage2`](crate::storage::IoClass) and split out in
 //!   `BackendStats`/`SimStats` snapshots.
+//! * **Adaptive** — a per-router load-feedback controller
+//!   ([`adaptive::AdaptiveController`]) picks between the two static
+//!   protocols per dispatched query, pricing speculative's extra device
+//!   reads (windowed mean device time ×`(N−1)k`) against the measured
+//!   phase-2 round-trip, with hysteresis so bursty load cannot thrash
+//!   the mode. Answers remain bit-identical in every mode.
 //!
 //! The stage-2 fetch is the paper's "SSD read of promoted candidates":
 //! each promoted global id is submitted to the owning worker's backend as
@@ -41,6 +47,7 @@
 //! query *results* stay bit-identical across backends (see
 //! `rust/tests/backend_equivalence.rs`).
 
+pub mod adaptive;
 pub mod batcher;
 pub mod corpus;
 
@@ -55,9 +62,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure, Result};
 
 use crate::runtime::{Runtime, Tensor, SERVE};
-use crate::storage::{self, BackendSpec, StorageBackend, StorageSnapshot};
+use crate::storage::{self, BackendSpec, DeviceWindow, StorageBackend, StorageSnapshot};
 use crate::util::stats::LatencyHist;
 use batcher::{collect_batch, BatchPolicy, Job};
+pub use adaptive::{AdaptiveConfig, AdaptiveController, AdaptiveReport};
 pub use corpus::ServingCorpus;
 
 /// A top-k answer for one query (or one leg of a two-phase query).
@@ -109,6 +117,12 @@ pub enum FetchMode {
     /// then fetch only the global top-k from their owning shards — `k`
     /// stage-2 device reads per query, one extra worker round-trip.
     AfterMerge,
+    /// Pick per dispatched query from measured device behavior: an
+    /// [`AdaptiveController`] prices speculative's extra device reads
+    /// against fetch-after-merge's extra round-trip over a sliding
+    /// window, with hysteresis (see [`adaptive`]). Answers stay
+    /// bit-identical to both static modes.
+    Adaptive,
 }
 
 impl FetchMode {
@@ -116,15 +130,17 @@ impl FetchMode {
         match self {
             FetchMode::Speculative => "spec",
             FetchMode::AfterMerge => "merge",
+            FetchMode::Adaptive => "adaptive",
         }
     }
 
-    /// Parse a `--fetch` CLI value (`spec` | `merge`).
+    /// Parse a `--fetch` CLI value (`spec` | `merge` | `adaptive`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "spec" | "speculative" => Ok(FetchMode::Speculative),
             "merge" | "after-merge" => Ok(FetchMode::AfterMerge),
-            other => anyhow::bail!("unknown fetch mode '{other}' (want spec|merge)"),
+            "adaptive" | "auto" => Ok(FetchMode::Adaptive),
+            other => anyhow::bail!("unknown fetch mode '{other}' (want spec|merge|adaptive)"),
         }
     }
 }
@@ -185,6 +201,9 @@ pub struct Coordinator {
     /// Global ids this worker's corpus slice owns (the full corpus for
     /// replica workers) — the router's fetch-after-merge ownership lookup.
     owned: Range<u32>,
+    /// Device window accumulated by the worker loop since the last
+    /// [`Coordinator::take_window`] (the adaptive router's signal feed).
+    window: Arc<Mutex<DeviceWindow>>,
 }
 
 impl Coordinator {
@@ -200,6 +219,8 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel::<Job<WorkerRequest, Resp>>();
         let stats = Arc::new(Mutex::new(ServeStats::new()));
         let stats2 = stats.clone();
+        let window = Arc::new(Mutex::new(DeviceWindow::default()));
+        let window2 = window.clone();
         let owned = corpus.base as u32..(corpus.base + corpus.n) as u32;
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let handle = std::thread::Builder::new()
@@ -217,13 +238,13 @@ impl Coordinator {
                     }
                 };
                 let mut store = backend.build();
-                worker_loop(&mut rt, &corpus, &mut *store, &rx, &policy, &stats2);
+                worker_loop(&mut rt, &corpus, &mut *store, &rx, &policy, &stats2, &window2);
             })?;
         ready_rx
             .recv()
             .map_err(|_| anyhow!("worker died during startup"))?
             .map_err(|e| anyhow!("worker startup: {e}"))?;
-        Ok(Coordinator { tx: Some(tx), handle: Some(handle), stats, owned })
+        Ok(Coordinator { tx: Some(tx), handle: Some(handle), stats, owned, window })
     }
 
     /// Submit a full-dimension query; returns the response receiver.
@@ -256,6 +277,13 @@ impl Coordinator {
         self.stats.lock().unwrap().clone()
     }
 
+    /// Drain the device window accumulated since the last call (the
+    /// worker folds one [`DeviceWindow`] in per storage-touching batch).
+    /// Consuming — the adaptive router is the intended single sampler.
+    pub fn take_window(&self) -> DeviceWindow {
+        std::mem::take(&mut *self.window.lock().unwrap())
+    }
+
     /// Graceful shutdown (drains the queue, joins the thread).
     pub fn stop(&mut self) {
         self.tx.take(); // closes the channel; worker drains and exits
@@ -278,7 +306,9 @@ fn worker_loop(
     rx: &mpsc::Receiver<Job<WorkerRequest, Resp>>,
     policy: &BatchPolicy,
     stats: &Arc<Mutex<ServeStats>>,
+    win_acc: &Arc<Mutex<DeviceWindow>>,
 ) {
+    let mut win_track = storage::WindowTracker::new();
     // §Perf: shard tensors are immutable — build them once per worker
     // instead of re-marshalling ~2MB per shard on every batch (this cut
     // stage-1 latency ~2x; see EXPERIMENTS.md §Perf).
@@ -324,7 +354,15 @@ fn worker_loop(
         // issued no I/O — skip the round-trip on the phase-1 hot path.
         if touched_store {
             let snapshot = StorageSnapshot::capture(store);
+            // Fold this batch's device window into the accumulator the
+            // adaptive router drains (reduce-only batches issued no I/O,
+            // so an empty fold is skipped along with the snapshot).
+            // Differencing the snapshot's cumulative stats avoids a
+            // second backend stats round-trip per batch — same numbers
+            // `store.take_window()` would return.
+            let w = win_track.take(&snapshot.stats);
             stats.lock().unwrap().storage = Some(snapshot);
+            win_acc.lock().unwrap().accumulate(&w);
         }
     }
 }
@@ -743,6 +781,9 @@ enum MergeJob {
 /// overlaps, and their fetch legs can share worker batches.
 struct PendingFetch {
     submitted: Instant,
+    /// Fetch-leg dispatch instant: `dispatched → all legs answered` is
+    /// the measured phase-2 round-trip the adaptive controller prices.
+    dispatched: Instant,
     /// (reduced, id) in promotion order.
     cand: Vec<(f32, u32)>,
     fetch_rx: Vec<mpsc::Receiver<Resp>>,
@@ -760,6 +801,8 @@ pub struct Router {
     merger: Option<JoinHandle<()>>,
     finisher: Option<JoinHandle<()>>,
     gather_latency: Arc<Mutex<LatencyHist>>,
+    /// Present iff the router was built with [`FetchMode::Adaptive`].
+    adaptive: Option<Arc<AdaptiveController>>,
 }
 
 impl Router {
@@ -775,6 +818,7 @@ impl Router {
             merger: None,
             finisher: None,
             gather_latency: Arc::new(Mutex::new(LatencyHist::for_latency_ns())),
+            adaptive: None,
         })
     }
 
@@ -802,7 +846,28 @@ impl Router {
     ///   traffic, visible in the `stage2_reads` counters of
     ///   `BackendStats`/`SimStats` snapshots.
     pub fn partitioned_with(workers: Vec<Coordinator>, fetch: FetchMode) -> Result<Self> {
+        let ctrl = match fetch {
+            FetchMode::Adaptive => Some(AdaptiveConfig::default()),
+            _ => None,
+        };
+        Self::partitioned_inner(workers, fetch, ctrl)
+    }
+
+    /// Adaptive scatter/gather router with explicit controller tuning
+    /// (window size, hysteresis, probe cadence — see [`AdaptiveConfig`]).
+    /// `partitioned_with(.., FetchMode::Adaptive)` uses the defaults.
+    pub fn partitioned_adaptive(workers: Vec<Coordinator>, cfg: AdaptiveConfig) -> Result<Self> {
+        Self::partitioned_inner(workers, FetchMode::Adaptive, Some(cfg))
+    }
+
+    fn partitioned_inner(
+        workers: Vec<Coordinator>,
+        fetch: FetchMode,
+        ctrl_cfg: Option<AdaptiveConfig>,
+    ) -> Result<Self> {
         ensure!(!workers.is_empty(), "router needs at least one worker");
+        let adaptive = ctrl_cfg
+            .map(|cfg| Arc::new(AdaptiveController::new(workers.len(), SERVE.topk, cfg)));
         let gather_latency = Arc::new(Mutex::new(LatencyHist::for_latency_ns()));
         let mut worker_txs = Vec::with_capacity(workers.len());
         for w in &workers {
@@ -820,13 +885,19 @@ impl Router {
         // in dispatch order never stalls one query on a later one.
         let (finish_tx, finish_rx) = mpsc::channel::<(PendingFetch, mpsc::Sender<Resp>)>();
         let fin_latency = gather_latency.clone();
+        let fin_ctrl = adaptive.clone();
         let finisher = std::thread::Builder::new()
             .name("fivemin-finish".into())
             .spawn(move || {
                 while let Ok((pending, resp)) = finish_rx.recv() {
+                    let dispatched = pending.dispatched;
                     let result = finish_two_phase(pending);
                     if let Ok(r) = &result {
                         fin_latency.lock().unwrap().push(r.latency.as_nanos() as f64);
+                        // measured phase-2 round-trip → adaptive controller
+                        if let Some(ctrl) = &fin_ctrl {
+                            ctrl.observe_phase2(dispatched.elapsed().as_nanos() as f64);
+                        }
                     }
                     let _ = resp.send(result);
                 }
@@ -848,8 +919,15 @@ impl Router {
                         MergeJob::TwoPhase { submitted, query, parts, resp } => {
                             match two_phase_dispatch(&ctx, query, parts) {
                                 Ok((cand, fetch_rx, batch_size)) => {
+                                    let dispatched = Instant::now();
                                     let _ = finish_tx.send((
-                                        PendingFetch { submitted, cand, fetch_rx, batch_size },
+                                        PendingFetch {
+                                            submitted,
+                                            dispatched,
+                                            cand,
+                                            fetch_rx,
+                                            batch_size,
+                                        },
                                         resp,
                                     ));
                                 }
@@ -871,6 +949,7 @@ impl Router {
             merger: Some(merger),
             finisher: Some(finisher),
             gather_latency,
+            adaptive,
         })
     }
 
@@ -895,29 +974,39 @@ impl Router {
                 self.workers[i].submit(query_full)
             }
             RouteMode::Partition { fetch } => {
+                // Adaptive mode resolves to one of the two static
+                // protocols per dispatched query; the answer is
+                // bit-identical either way, so the controller is free to
+                // switch mid-stream.
+                let eff = match (fetch, &self.adaptive) {
+                    (FetchMode::Adaptive, Some(ctrl)) => ctrl.decide_with(|| {
+                        let mut fused = DeviceWindow::default();
+                        for w in &self.workers {
+                            fused.merge(&w.take_window());
+                        }
+                        fused
+                    }),
+                    (mode, _) => mode,
+                };
                 let submitted = Instant::now();
                 let parts: Vec<_> = self
                     .workers
                     .iter()
                     .map(|w| {
-                        w.submit_request(match fetch {
-                            FetchMode::Speculative => {
-                                WorkerRequest::Search(query_full.clone())
-                            }
+                        w.submit_request(match eff {
                             FetchMode::AfterMerge => {
                                 WorkerRequest::Reduce(query_full.clone())
                             }
+                            _ => WorkerRequest::Search(query_full.clone()),
                         })
                     })
                     .collect();
                 let (rtx, rrx) = mpsc::channel();
-                let job = match fetch {
-                    FetchMode::Speculative => {
-                        MergeJob::Gather { submitted, parts, resp: rtx }
-                    }
+                let job = match eff {
                     FetchMode::AfterMerge => {
                         MergeJob::TwoPhase { submitted, query: query_full, parts, resp: rtx }
                     }
+                    _ => MergeJob::Gather { submitted, parts, resp: rtx },
                 };
                 if let Some(tx) = &self.merge_tx {
                     let _ = tx.send(job);
@@ -945,6 +1034,13 @@ impl Router {
     /// per-worker `latency_ns` is already end-to-end).
     pub fn gather_latency(&self) -> LatencyHist {
         self.gather_latency.lock().unwrap().clone()
+    }
+
+    /// Controller snapshot (mode, decision counts, flips, per-window
+    /// log) when this router runs [`FetchMode::Adaptive`]; `None` for
+    /// static fetch modes and replica routers.
+    pub fn adaptive_report(&self) -> Option<AdaptiveReport> {
+        self.adaptive.as_ref().map(|c| c.report())
     }
 
     /// Aggregate the per-worker [`ServeStats`]: counters add, histograms
@@ -1143,7 +1239,9 @@ fn two_phase_dispatch(
 /// [`merge_partials`] — and therefore the single worker: stable
 /// full-score sort from promotion order.
 fn finish_two_phase(pending: PendingFetch) -> Resp {
-    let PendingFetch { submitted, cand, fetch_rx, mut batch_size } = pending;
+    // `dispatched` is consumed by the finisher thread itself (phase-2
+    // round-trip measurement) before this call.
+    let PendingFetch { submitted, cand, fetch_rx, mut batch_size, .. } = pending;
     let mut full_of: HashMap<u32, f32> = HashMap::with_capacity(cand.len());
     for rx in fetch_rx {
         let r = match rx.recv() {
@@ -1209,6 +1307,8 @@ mod tests {
         assert!(Router::new(Vec::new()).is_err());
         assert!(Router::partitioned(Vec::new()).is_err());
         assert!(Router::partitioned_with(Vec::new(), FetchMode::AfterMerge).is_err());
+        assert!(Router::partitioned_with(Vec::new(), FetchMode::Adaptive).is_err());
+        assert!(Router::partitioned_adaptive(Vec::new(), AdaptiveConfig::default()).is_err());
     }
 
     #[test]
@@ -1217,9 +1317,15 @@ mod tests {
         assert_eq!(FetchMode::parse("speculative").unwrap(), FetchMode::Speculative);
         assert_eq!(FetchMode::parse("merge").unwrap(), FetchMode::AfterMerge);
         assert_eq!(FetchMode::parse("after-merge").unwrap(), FetchMode::AfterMerge);
+        assert_eq!(FetchMode::parse("adaptive").unwrap(), FetchMode::Adaptive);
+        assert_eq!(FetchMode::parse("auto").unwrap(), FetchMode::Adaptive);
         assert!(FetchMode::parse("eager").is_err());
+        // a malformed --fetch should name every accepted form
+        let err = FetchMode::parse("eager").unwrap_err().to_string();
+        assert!(err.contains("spec|merge|adaptive"), "unhelpful error: {err}");
         assert_eq!(FetchMode::Speculative.name(), "spec");
         assert_eq!(FetchMode::AfterMerge.name(), "merge");
+        assert_eq!(FetchMode::Adaptive.name(), "adaptive");
         assert_eq!(FetchMode::default(), FetchMode::Speculative);
     }
 

@@ -1,0 +1,197 @@
+//! Adaptive fetch-mode selection vs both static protocols across a load
+//! sweep (new in this reproduction; emitted as `fig14`): the same
+//! partitioned serving workload run closed-loop (QD 1, round-trip-bound)
+//! and open-loop (device-bound burst) under `--fetch spec`, `merge`, and
+//! `adaptive`, at a matched per-device simulator config.
+//!
+//! This is the paper's live-threshold argument applied to the serving
+//! stack: the Five-Minute-Rule revisits insist the DRAM/flash trade is a
+//! *function of measured load*, not a constant — so the fetch protocol
+//! should be too. The figure shows the controller
+//! ([`crate::coordinator::adaptive`]) tracking the better static mode at
+//! each load level: near-speculative latency when the device is idle,
+//! near-after-merge device traffic (and tail) when stage-2 reads are the
+//! bottleneck. `merge_share` makes the decision itself visible.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::{AdaptiveConfig, Coordinator, FetchMode, Router, ServingCorpus};
+use crate::runtime::default_artifacts_dir;
+use crate::storage::BackendSpec;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+use crate::util::table::Table;
+
+/// How one sweep point offers queries to the router.
+#[derive(Clone, Copy)]
+enum Load {
+    /// Closed loop at queue depth 1: each query waits for the previous
+    /// answer — the device idles, round-trips dominate.
+    Closed,
+    /// Open loop: every query submitted up front — stage-2 bursts pile
+    /// onto the device, queueing dominates.
+    Open,
+}
+
+impl Load {
+    fn name(&self) -> &'static str {
+        match self {
+            Load::Closed => "low(qd=1)",
+            Load::Open => "high(open)",
+        }
+    }
+}
+
+struct SweepRun {
+    reads_per_query: f64,
+    p50_us: f64,
+    p99_us: f64,
+    merge_share: f64,
+}
+
+/// Serve `n_queries` at the given load through `n_parts` partition
+/// workers (one simulated device each) under `fetch`; warmup queries let
+/// the adaptive controller settle and are excluded from every metric
+/// (read counts are differenced across the measured phase).
+fn run_sweep_point(
+    corpus: &Arc<ServingCorpus>,
+    spec: &BackendSpec,
+    n_parts: usize,
+    fetch: FetchMode,
+    load: Load,
+    warmup: usize,
+    n_queries: usize,
+) -> SweepRun {
+    let workers: Vec<Coordinator> = corpus
+        .partitions(n_parts)
+        .expect("partition count divides corpus shards")
+        .into_iter()
+        .map(|part| {
+            let spec = spec.clone().for_capacity(part.n as u64);
+            Coordinator::start(
+                default_artifacts_dir(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                spec,
+            )
+            .expect("worker starts")
+        })
+        .collect();
+    let router = match fetch {
+        // small window + rare probe refresh: settles within the warmup
+        // and keeps probe dispatches out of the measured tail
+        FetchMode::Adaptive => Router::partitioned_adaptive(
+            workers,
+            AdaptiveConfig { window: 8, refresh: 32, ..AdaptiveConfig::default() },
+        )
+        .expect("router"),
+        mode => Router::partitioned_with(workers, mode).expect("router"),
+    };
+    let mut rng = Rng::new(0xF16_14);
+    let mut serve = |n: usize, lat: Option<&mut Samples>| {
+        let mut lat = lat;
+        match load {
+            Load::Closed => {
+                for _ in 0..n {
+                    let t = rng.below(corpus.n as u64) as usize;
+                    let res = router
+                        .submit(corpus.query_near(t, 0.02, &mut rng))
+                        .recv()
+                        .expect("router alive")
+                        .expect("query served");
+                    if let Some(lat) = lat.as_deref_mut() {
+                        lat.push(res.latency.as_nanos() as f64);
+                    }
+                }
+            }
+            Load::Open => {
+                let pending: Vec<_> = (0..n)
+                    .map(|_| {
+                        let t = rng.below(corpus.n as u64) as usize;
+                        router.submit(corpus.query_near(t, 0.02, &mut rng))
+                    })
+                    .collect();
+                for rx in pending {
+                    let res = rx.recv().expect("router alive").expect("query served");
+                    if let Some(lat) = lat.as_deref_mut() {
+                        lat.push(res.latency.as_nanos() as f64);
+                    }
+                }
+            }
+        }
+    };
+    serve(warmup, None);
+    let reads0 = router.settled_stats(Duration::from_secs(10)).ssd_reads;
+    let mut lat = Samples::new();
+    serve(n_queries, Some(&mut lat));
+    let reads1 = router.settled_stats(Duration::from_secs(10)).ssd_reads;
+    let merge_share = router.adaptive_report().map(|r| r.merge_share()).unwrap_or(0.0);
+    SweepRun {
+        reads_per_query: (reads1 - reads0) as f64 / n_queries as f64,
+        p50_us: lat.percentile(0.5) / 1e3,
+        p99_us: lat.percentile(0.99) / 1e3,
+        merge_share,
+    }
+}
+
+/// Adaptive vs static fetch modes across the load sweep, MQSim-Next
+/// behind every partition ([`BackendSpec::small_sim`], the shared
+/// test/bench geometry).
+pub fn fig14(quick: bool) -> Table {
+    let (warmup, n_queries) = if quick { (16, 32) } else { (32, 96) };
+    let corpus = Arc::new(ServingCorpus::synthetic(2, 0xF16_14));
+    let spec = BackendSpec::small_sim(4096);
+    let mut t = Table::new(
+        "fig14: adaptive vs static fetch modes across a load sweep — \
+         stage-2 reads/query, latency, and the controller's merge share \
+         (2 partitions, matched per-device sim config)",
+        &["load", "fetch", "reads_per_query", "p50_us", "p99_us", "merge_share"],
+    );
+    for load in [Load::Closed, Load::Open] {
+        for fetch in [FetchMode::Speculative, FetchMode::AfterMerge, FetchMode::Adaptive] {
+            let r = run_sweep_point(&corpus, &spec, 2, fetch, load, warmup, n_queries);
+            t.row(vec![
+                load.name().to_string(),
+                fetch.name().to_string(),
+                format!("{:.1}", r.reads_per_query),
+                format!("{:.1}", r.p50_us),
+                format!("{:.1}", r.p99_us),
+                format!("{:.2}", r.merge_share),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SERVE;
+
+    /// Cheap pin of the sweep harness itself (mem devices, tiny volumes):
+    /// adaptive must sit between the two static read costs, and a static
+    /// run must not report a merge share.
+    #[test]
+    fn sweep_point_reads_stay_between_static_costs() {
+        let corpus = Arc::new(ServingCorpus::synthetic(2, 99));
+        let spec = BackendSpec::Mem;
+        let k = SERVE.topk as f64;
+        let s = run_sweep_point(&corpus, &spec, 2, FetchMode::Speculative, Load::Open, 2, 6);
+        let m = run_sweep_point(&corpus, &spec, 2, FetchMode::AfterMerge, Load::Open, 2, 6);
+        let a = run_sweep_point(&corpus, &spec, 2, FetchMode::Adaptive, Load::Open, 2, 6);
+        assert_eq!(s.reads_per_query, 2.0 * k, "speculative: N x k");
+        assert_eq!(m.reads_per_query, k, "after-merge: k");
+        assert!(
+            a.reads_per_query >= m.reads_per_query - 1e-9
+                && a.reads_per_query <= s.reads_per_query + 1e-9,
+            "adaptive {} outside [{}, {}]",
+            a.reads_per_query,
+            m.reads_per_query,
+            s.reads_per_query
+        );
+        assert_eq!(s.merge_share, 0.0, "static runs have no controller");
+        assert!(a.p99_us > 0.0 && a.p50_us > 0.0);
+    }
+}

@@ -4,6 +4,7 @@
 //! `fivemin figures --all` regenerates everything; each bench target under
 //! `rust/benches/` wraps one figure with timing.
 
+pub mod fig_adaptive;
 pub mod fig_backends;
 pub mod fig_breakeven;
 pub mod fig_casestudies;
@@ -56,6 +57,12 @@ pub fn shard_figures(quick: bool) -> Vec<(&'static str, Table)> {
 /// tails, speculative vs after-merge, across partition counts).
 pub fn fetch_figures(quick: bool) -> Vec<(&'static str, Table)> {
     vec![("fig13", fig_fetch::fig13(quick))]
+}
+
+/// Adaptive fetch-mode controller vs both static modes across a load
+/// sweep (reads/query, latency, merge share).
+pub fn adaptive_figures(quick: bool) -> Vec<(&'static str, Table)> {
+    vec![("fig14", fig_adaptive::fig14(quick))]
 }
 
 /// Emit one table: print ASCII and write CSV under `out`.

@@ -28,6 +28,9 @@
 //!   [`storage`] backend.
 //! * [`figures`] — regenerates every table and figure of the paper's
 //!   evaluation as CSV + ASCII charts, plus the backend-comparison table.
+//! * [`smoke`] — the `fivemin smoke` perf-smoke matrix: short serving
+//!   scenarios across backends × fetch modes × shard counts, gated
+//!   against a checked-in baseline in CI (`results/bench_smoke.json`).
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts`
 //! lowers the Layer-1/Layer-2 compute graphs to HLO text that the Rust
@@ -58,6 +61,7 @@ pub mod kvstore;
 pub mod model;
 pub mod runtime;
 pub mod sim;
+pub mod smoke;
 pub mod storage;
 pub mod util;
 pub mod workload;

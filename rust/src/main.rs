@@ -7,6 +7,7 @@
 //!   figures     — regenerate the paper's tables/figures (CSV + ASCII)
 //!   config      — dump the Table I / Table III presets as JSON
 //!   serve       — run the ANN serving stack on synthetic queries
+//!   smoke       — perf-smoke serve matrix, gated against a baseline
 
 // Same style trade-offs as the library crate (see rust/src/lib.rs).
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
@@ -47,6 +48,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "figures" => cmd_figures(rest),
         "config" => cmd_config(rest),
         "serve" => cmd_serve(rest),
+        "smoke" => cmd_smoke(rest),
         "--help" | "-h" | "help" => {
             print_help();
             Ok(())
@@ -62,9 +64,10 @@ fn print_help() {
          \x20 breakeven  --platform cpu|gpu --nand slc|pslc|tlc --blk N [--normal] [--host-iops N] [--p99-us N]\n\
          \x20 viability  --platform cpu|gpu --dram-gb N --blk N [--sigma S] [--throughput-gbps N]\n\
          \x20 simulate   --blk N --read-pct N [--measure-us N] [--p-bch P] [--ch-bw GBps]\n\
-         \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11 --fig12 --fig13] [--out DIR] [--quick]\n\
+         \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11 --fig12 --fig13 --fig14] [--out DIR] [--quick]\n\
          \x20 config     --dump\n\
-         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N[,map=interleave]]] [--pace afap|wall:S] [--fetch spec|merge]"
+         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N[,map=interleave]]] [--pace afap|wall:S] [--fetch spec|merge|adaptive]\n\
+         \x20 smoke      [--queries N] [--json] [--out FILE] [--baseline FILE] [--tolerance T]"
     );
 }
 
@@ -298,6 +301,7 @@ fn cmd_figures(args: &[String]) -> Result<(), String> {
         .flag("fig11", "storage-backend tail-latency comparison")
         .flag("fig12", "sharded multi-device scaling")
         .flag("fig13", "fetch-after-merge vs speculative fetch")
+        .flag("fig14", "adaptive fetch-mode controller load sweep")
         .flag("quick", "shorter Fig 7 simulation windows")
         .opt("out", "DIR", Some("results"), "CSV output directory");
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
@@ -344,10 +348,71 @@ fn cmd_figures(args: &[String]) -> Result<(), String> {
             emitted += 1;
         }
     }
+    if all || p.flag("fig14") {
+        for (id, t) in fivemin::figures::adaptive_figures(p.flag("quick")) {
+            fivemin::figures::emit(&out, id, &t).map_err(|e| e.to_string())?;
+            emitted += 1;
+        }
+    }
     if emitted == 0 {
         return Err(spec.usage());
     }
     println!("wrote {emitted} CSV file(s) under {}", out.display());
+    Ok(())
+}
+
+fn cmd_smoke(args: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new(
+        "smoke",
+        "perf-smoke serve matrix ({mem,sim} x {spec,merge,adaptive} x shards {1,2}), \
+         optionally gated against a checked-in baseline",
+    )
+    .opt("queries", "N", Some("48"), "queries per cell")
+    .flag("json", "write the JSON artifact (see --out)")
+    .opt(
+        "out",
+        "FILE",
+        Some("results/bench_smoke.json"),
+        "artifact path (written before the gate runs, so CI can upload it either way)",
+    )
+    .opt(
+        "baseline",
+        "FILE",
+        None,
+        "gate reads/query against this baseline (rust/benches/common/smoke_baseline.json in CI)",
+    )
+    .opt(
+        "tolerance",
+        "T",
+        Some("0.25"),
+        "relative tolerance when the baseline has no 'tolerance' field",
+    );
+    let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
+    let queries = p.usize("queries").map_err(|e| e.to_string())?.unwrap();
+    if queries == 0 {
+        return Err("--queries must be >= 1".into());
+    }
+    let tol = p.f64("tolerance").map_err(|e| e.to_string())?.unwrap();
+    let cells = fivemin::smoke::run_matrix(queries).map_err(|e| e.to_string())?;
+    println!("{}", fivemin::smoke::table(&cells).render());
+    if p.flag("json") || p.str("baseline").is_some() {
+        let out = PathBuf::from(p.str("out").unwrap());
+        fivemin::smoke::write_artifact(&out, &cells).map_err(|e| e.to_string())?;
+        println!("wrote {}", out.display());
+    }
+    if let Some(base_path) = p.str("baseline") {
+        let baseline =
+            fivemin::smoke::load_baseline(&PathBuf::from(base_path)).map_err(|e| e.to_string())?;
+        let failures = fivemin::smoke::gate(&cells, &baseline, tol);
+        if failures.is_empty() {
+            println!("gate: PASS ({} cells vs {base_path})", cells.len());
+        } else {
+            return Err(format!(
+                "gate: FAIL vs {base_path}\n  {}",
+                failures.join("\n  ")
+            ));
+        }
+    }
     Ok(())
 }
 
@@ -397,9 +462,9 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     )
     .opt(
         "fetch",
-        "spec|merge",
+        "spec|merge|adaptive",
         Some("spec"),
-        "stage-2 fetch protocol: speculative (1 round-trip, Nxk reads) or after-merge (2 round-trips, k reads)",
+        "stage-2 fetch protocol: speculative (1 round-trip, Nxk reads), after-merge (2 round-trips, k reads), or adaptive (per-query, from measured load)",
     );
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
     let shards = p.usize("shards").map_err(|e| e.to_string())?.unwrap();
@@ -490,6 +555,28 @@ fn serve_demo(
             "phases   : {} reduce legs, {} fetch legs (two-phase protocol)",
             st.reduce_legs, st.fetch_legs
         );
+    }
+    if let Some(rep) = router.adaptive_report() {
+        println!(
+            "adaptive : {} spec / {} merge dispatches ({} flips), ending in '{}' \
+             [service {:.1}us, phase-2 rtt {:.1}us]",
+            rep.spec_queries,
+            rep.merge_queries,
+            rep.flips,
+            rep.mode.name(),
+            rep.service_ns / 1e3,
+            rep.phase2_ns / 1e3
+        );
+        for w in &rep.windows {
+            println!(
+                "  window {:>3}: {:<5} spec-cost {:>9.1}us vs merge-cost {:>9.1}us{}",
+                w.index,
+                w.mode.name(),
+                w.spec_cost_ns / 1e3,
+                w.merge_cost_ns / 1e3,
+                if w.flipped { "  << flip" } else { "" }
+            );
+        }
     }
     println!(
         "stage1 p50: {}  stage2 p50: {}",

@@ -1,0 +1,461 @@
+//! Perf-smoke harness (`fivemin smoke`): a short serving-scenario matrix
+//! — `{mem, sim} × {spec, merge, adaptive} × shards ∈ {1, 2}` — measured
+//! end to end and gated against a checked-in baseline, so a regression in
+//! the router protocols or the adaptive control loop is caught
+//! mechanically in CI rather than by eyeball.
+//!
+//! Per cell the harness reports stage-2 device reads per query and the
+//! p50/p99 end-to-end (merged-answer) latency, plus the adaptive
+//! controller's merge share. The JSON artifact
+//! (`results/bench_smoke.json`) is uploaded by the `bench-smoke` CI job;
+//! the gate compares against `rust/benches/common/smoke_baseline.json`:
+//!
+//! * **`reads_per_query` is gated** (default ±25%). It is deterministic —
+//!   the equivalence suite pins `N×k` for speculative and `k` for
+//!   after-merge — so any drift is a real protocol/accounting change.
+//! * **Adaptive cells are gated relative to the same run's static
+//!   cells**: the controller may legitimately sit anywhere between the
+//!   merge and spec read costs depending on measured load, so the bound
+//!   is `merge×(1−tol) ≤ adaptive ≤ spec×(1+tol)`, not a fixed number.
+//! * **Latencies are reported, not gated by default** (shared CI runners
+//!   jitter far more than 25%); a baseline cell may opt in to an absolute
+//!   ceiling via `p99_budget_us`.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::{AdaptiveConfig, Coordinator, FetchMode, Router, ServingCorpus};
+use crate::runtime::default_artifacts_dir;
+use crate::storage::BackendSpec;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+use crate::util::table::Table;
+
+/// Artifact/baseline schema tag (bump on breaking shape changes).
+pub const SCHEMA: &str = "fivemin-bench-smoke/v1";
+
+/// Default queries per cell. Enough for the adaptive controller (tuned to
+/// an 8-query window here) to sample several windows, small enough that
+/// the whole 12-cell matrix stays a smoke test.
+pub const DEFAULT_QUERIES: usize = 48;
+
+/// One measured (backend, fetch mode, shard count) scenario.
+#[derive(Clone, Debug)]
+pub struct SmokeCell {
+    /// Storage backend behind every partition worker (`mem` | `sim`).
+    pub backend: &'static str,
+    pub fetch: FetchMode,
+    /// Corpus shards = partition workers.
+    pub shards: usize,
+    pub queries: usize,
+    /// Stage-2 device reads per query (coordinator-side counter, settled
+    /// against the backend snapshot).
+    pub reads_per_query: f64,
+    /// End-to-end merged-answer latency percentiles (µs).
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Fraction of queries the adaptive controller dispatched as
+    /// fetch-after-merge (0 for static cells).
+    pub merge_share: f64,
+}
+
+impl SmokeCell {
+    /// Stable cell key used by the baseline file.
+    pub fn key(&self) -> String {
+        format!("{}/{}/{}", self.backend, self.fetch.name(), self.shards)
+    }
+}
+
+fn run_cell(
+    backend: &'static str,
+    fetch: FetchMode,
+    shards: usize,
+    queries: usize,
+) -> Result<SmokeCell> {
+    let corpus = Arc::new(ServingCorpus::synthetic(shards, 0x5140C + shards as u64));
+    let spec = match backend {
+        "mem" => BackendSpec::Mem,
+        "sim" => BackendSpec::small_sim(4096),
+        other => return Err(anyhow!("unknown smoke backend '{other}'")),
+    };
+    let workers = corpus
+        .partitions(shards)?
+        .into_iter()
+        .map(|part| {
+            let spec = spec.clone().for_capacity(part.n as u64);
+            Coordinator::start(
+                default_artifacts_dir(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                spec,
+            )
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let router = match fetch {
+        // small window so the controller actually samples within a
+        // smoke-sized run; rare refresh keeps probes out of the tail
+        FetchMode::Adaptive => Router::partitioned_adaptive(
+            workers,
+            AdaptiveConfig { window: 8, refresh: 32, ..AdaptiveConfig::default() },
+        )?,
+        mode => Router::partitioned_with(workers, mode)?,
+    };
+    // one shared query stream per (backend, shards): every fetch mode
+    // serves identical queries, so cells differ only in protocol
+    let mut rng = Rng::new(0x5140C);
+    let pending: Vec<_> = (0..queries)
+        .map(|_| {
+            let target = rng.below(corpus.n as u64) as usize;
+            router.submit(corpus.query_near(target, 0.02, &mut rng))
+        })
+        .collect();
+    let mut lat = Samples::new();
+    for rx in pending {
+        let res = rx
+            .recv()
+            .map_err(|_| anyhow!("router worker died"))?
+            .map_err(|e| anyhow!(e))?;
+        lat.push(res.latency.as_nanos() as f64);
+    }
+    let st = router.settled_stats(Duration::from_secs(10));
+    let merge_share = router.adaptive_report().map(|r| r.merge_share()).unwrap_or(0.0);
+    Ok(SmokeCell {
+        backend,
+        fetch,
+        shards,
+        queries,
+        reads_per_query: st.ssd_reads as f64 / queries.max(1) as f64,
+        p50_us: lat.percentile(0.5) / 1e3,
+        p99_us: lat.percentile(0.99) / 1e3,
+        merge_share,
+    })
+}
+
+/// Run the full scenario matrix. Every cell serves `queries` queries
+/// open-loop through a partitioned router with one worker per corpus
+/// shard.
+pub fn run_matrix(queries: usize) -> Result<Vec<SmokeCell>> {
+    let mut cells = Vec::new();
+    for backend in ["mem", "sim"] {
+        for shards in [1usize, 2] {
+            for fetch in [FetchMode::Speculative, FetchMode::AfterMerge, FetchMode::Adaptive] {
+                cells.push(run_cell(backend, fetch, shards, queries)?);
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Render the matrix as the repo's standard ASCII/CSV table.
+pub fn table(cells: &[SmokeCell]) -> Table {
+    let mut t = Table::new(
+        "bench-smoke: serve scenario matrix — stage-2 reads/query and \
+         end-to-end latency per {backend, fetch, shards} cell",
+        &[
+            "backend",
+            "fetch",
+            "shards",
+            "queries",
+            "reads_per_query",
+            "p50_us",
+            "p99_us",
+            "merge_share",
+        ],
+    );
+    for c in cells {
+        t.row(vec![
+            c.backend.to_string(),
+            c.fetch.name().to_string(),
+            format!("{}", c.shards),
+            format!("{}", c.queries),
+            format!("{:.1}", c.reads_per_query),
+            format!("{:.1}", c.p50_us),
+            format!("{:.1}", c.p99_us),
+            format!("{:.2}", c.merge_share),
+        ]);
+    }
+    t
+}
+
+/// Serialize the matrix to the bench_smoke.json artifact shape.
+pub fn to_json(cells: &[SmokeCell]) -> Json {
+    let arr: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("backend", Json::Str(c.backend.to_string())),
+                ("fetch", Json::Str(c.fetch.name().to_string())),
+                ("shards", Json::Num(c.shards as f64)),
+                ("queries", Json::Num(c.queries as f64)),
+                ("reads_per_query", Json::Num(c.reads_per_query)),
+                ("p50_us", Json::Num(c.p50_us)),
+                ("p99_us", Json::Num(c.p99_us)),
+                ("merge_share", Json::Num(c.merge_share)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::Str(SCHEMA.to_string())),
+        ("cells", Json::Arr(arr)),
+    ])
+}
+
+/// Write the artifact (creating parent directories).
+pub fn write_artifact(path: &Path, cells: &[SmokeCell]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, format!("{}\n", to_json(cells)))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Gate the measured matrix against a baseline document. Returns the list
+/// of failures (empty = gate passes). `default_tol` applies when the
+/// baseline carries no `tolerance` field.
+pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<String> {
+    let mut failures = Vec::new();
+    let tol = baseline
+        .get(&["tolerance"])
+        .and_then(|t| t.as_f64())
+        .unwrap_or(default_tol);
+    let Some(base_cells) = baseline.get(&["cells"]).and_then(|c| c.as_obj()) else {
+        return vec!["baseline has no 'cells' object".to_string()];
+    };
+    // static cells: compare against the checked-in expectation
+    for c in cells {
+        if c.fetch == FetchMode::Adaptive {
+            continue;
+        }
+        let key = c.key();
+        let Some(base) = base_cells.get(&key) else {
+            failures.push(format!("cell {key}: missing from baseline"));
+            continue;
+        };
+        if let Some(want) = base.get(&["reads_per_query"]).and_then(|v| v.as_f64()) {
+            if (c.reads_per_query - want).abs() > tol * want {
+                failures.push(format!(
+                    "cell {key}: reads_per_query {:.2} drifted >{:.0}% from baseline {want:.2}",
+                    c.reads_per_query,
+                    tol * 100.0
+                ));
+            }
+        } else {
+            failures.push(format!("cell {key}: baseline lacks reads_per_query"));
+        }
+        if let Some(budget) = base.get(&["p99_budget_us"]).and_then(|v| v.as_f64()) {
+            if c.p99_us > budget {
+                failures.push(format!(
+                    "cell {key}: p99 {:.1}us over budget {budget:.1}us",
+                    c.p99_us
+                ));
+            }
+        }
+    }
+    // baseline cells the run never produced (a silently dropped scenario
+    // must fail the gate, not shrink the matrix)
+    for key in base_cells.keys() {
+        if !cells.iter().any(|c| &c.key() == key) {
+            failures.push(format!("cell {key}: in baseline but not measured"));
+        }
+    }
+    // adaptive cells: bounded by the same run's static modes
+    for c in cells {
+        if c.fetch != FetchMode::Adaptive {
+            continue;
+        }
+        let peer = |m: FetchMode| {
+            cells
+                .iter()
+                .find(|p| p.backend == c.backend && p.shards == c.shards && p.fetch == m)
+        };
+        let (Some(spec), Some(merge)) =
+            (peer(FetchMode::Speculative), peer(FetchMode::AfterMerge))
+        else {
+            failures.push(format!("cell {}: static peers missing from run", c.key()));
+            continue;
+        };
+        let lo = merge.reads_per_query * (1.0 - tol);
+        let hi = spec.reads_per_query * (1.0 + tol);
+        if c.reads_per_query < lo || c.reads_per_query > hi {
+            failures.push(format!(
+                "cell {}: adaptive reads_per_query {:.2} outside [{lo:.2}, {hi:.2}] \
+                 spanned by merge/spec peers",
+                c.key(),
+                c.reads_per_query
+            ));
+        }
+    }
+    failures
+}
+
+/// Load and schema-check a baseline file.
+pub fn load_baseline(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading baseline {}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("baseline {}: {e}", path.display()))?;
+    let schema = doc.get(&["schema"]).and_then(|s| s.as_str()).unwrap_or("");
+    anyhow::ensure!(
+        schema == SCHEMA,
+        "baseline schema '{schema}' != expected '{SCHEMA}'"
+    );
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(
+        backend: &'static str,
+        fetch: FetchMode,
+        shards: usize,
+        rpq: f64,
+        p99: f64,
+    ) -> SmokeCell {
+        SmokeCell {
+            backend,
+            fetch,
+            shards,
+            queries: 8,
+            reads_per_query: rpq,
+            p50_us: p99 / 2.0,
+            p99_us: p99,
+            merge_share: if fetch == FetchMode::Adaptive { 0.5 } else { 0.0 },
+        }
+    }
+
+    fn baseline(pairs: &[(&str, f64)]) -> Json {
+        let cells: Vec<(&str, Json)> = pairs
+            .iter()
+            .map(|(k, v)| (*k, Json::obj(vec![("reads_per_query", Json::Num(*v))])))
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("tolerance", Json::Num(0.25)),
+            ("cells", Json::obj(cells)),
+        ])
+    }
+
+    fn matched_run() -> Vec<SmokeCell> {
+        vec![
+            cell("mem", FetchMode::Speculative, 2, 128.0, 900.0),
+            cell("mem", FetchMode::AfterMerge, 2, 64.0, 1800.0),
+            cell("mem", FetchMode::Adaptive, 2, 100.0, 1000.0),
+        ]
+    }
+
+    #[test]
+    fn gate_passes_a_matched_run() {
+        let b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        let failures = gate(&matched_run(), &b, 0.25);
+        assert!(failures.is_empty(), "unexpected failures: {failures:?}");
+    }
+
+    #[test]
+    fn gate_catches_read_regressions_beyond_tolerance() {
+        let mut run = matched_run();
+        run[1].reads_per_query = 100.0; // merge no longer cuts reads
+        let b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("mem/merge/2"));
+        // within tolerance passes
+        run[1].reads_per_query = 70.0;
+        assert!(gate(&run, &b, 0.25).is_empty());
+    }
+
+    #[test]
+    fn gate_bounds_adaptive_by_its_static_peers() {
+        let mut run = matched_run();
+        run[2].reads_per_query = 200.0; // above spec * 1.25
+        let b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("adaptive"));
+        run[2].reads_per_query = 40.0; // below merge * 0.75
+        assert_eq!(gate(&run, &b, 0.25).len(), 1);
+    }
+
+    #[test]
+    fn gate_flags_missing_and_extra_cells() {
+        let b = baseline(&[
+            ("mem/spec/2", 128.0),
+            ("mem/merge/2", 64.0),
+            ("sim/spec/2", 128.0), // never measured
+        ]);
+        let run = matched_run();
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("sim/spec/2"));
+        // and a measured static cell absent from the baseline fails too
+        let b = baseline(&[("mem/spec/2", 128.0)]);
+        let failures = gate(&run, &b, 0.25);
+        assert!(failures.iter().any(|f| f.contains("mem/merge/2")));
+    }
+
+    #[test]
+    fn gate_enforces_opt_in_latency_budgets() {
+        let b = Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("tolerance", Json::Num(0.25)),
+            (
+                "cells",
+                Json::obj(vec![
+                    (
+                        "mem/spec/2",
+                        Json::obj(vec![
+                            ("reads_per_query", Json::Num(128.0)),
+                            ("p99_budget_us", Json::Num(100.0)),
+                        ]),
+                    ),
+                    ("mem/merge/2", Json::obj(vec![("reads_per_query", Json::Num(64.0))])),
+                ]),
+            ),
+        ]);
+        let failures = gate(&matched_run(), &b, 0.25); // p99 900us > 100us
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("over budget"));
+    }
+
+    #[test]
+    fn artifact_json_round_trips() {
+        let run = matched_run();
+        let doc = to_json(&run);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get(&["schema"]).unwrap().as_str(), Some(SCHEMA));
+        let cells = parsed.get(&["cells"]).unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 3);
+        assert_eq!(
+            cells[0].get(&["reads_per_query"]).and_then(|v| v.as_f64()),
+            Some(128.0)
+        );
+        assert_eq!(cells[2].get(&["fetch"]).and_then(|v| v.as_str()), Some("adaptive"));
+    }
+
+    #[test]
+    fn checked_in_baseline_parses_and_covers_the_static_matrix() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("rust/benches/common/smoke_baseline.json");
+        let doc = load_baseline(&path).expect("baseline loads");
+        let cells = doc.get(&["cells"]).unwrap().as_obj().unwrap();
+        for backend in ["mem", "sim"] {
+            for fetch in ["spec", "merge"] {
+                for shards in [1, 2] {
+                    let key = format!("{backend}/{fetch}/{shards}");
+                    let c = cells.get(&key).unwrap_or_else(|| panic!("missing {key}"));
+                    let rpq = c.get(&["reads_per_query"]).and_then(|v| v.as_f64()).unwrap();
+                    // the equivalence-pinned expectations: N*k spec, k merge
+                    let k = crate::runtime::SERVE.topk as f64;
+                    let want = if fetch == "spec" { shards as f64 * k } else { k };
+                    assert_eq!(rpq, want, "{key}");
+                }
+            }
+        }
+    }
+}

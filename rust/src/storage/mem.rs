@@ -8,7 +8,10 @@
 
 use std::ops::Range;
 
-use super::{BackendKind, BackendStats, IoCompletion, IoRequest, StorageBackend};
+use super::{
+    BackendKind, BackendStats, DeviceWindow, IoCompletion, IoRequest, StorageBackend,
+    WindowTracker,
+};
 
 /// DRAM-class access cost charged per request (ns). A CXL-attached or
 /// far-memory tier can be approximated by constructing the backend with a
@@ -20,6 +23,7 @@ pub struct MemBackend {
     next_id: u64,
     ready: Vec<IoCompletion>,
     stats: BackendStats,
+    window: WindowTracker,
 }
 
 impl MemBackend {
@@ -34,6 +38,7 @@ impl MemBackend {
             next_id: 0,
             ready: Vec::new(),
             stats: BackendStats::new(),
+            window: WindowTracker::new(),
         }
     }
 }
@@ -77,6 +82,11 @@ impl StorageBackend for MemBackend {
 
     fn stats(&self) -> BackendStats {
         self.stats.clone()
+    }
+
+    fn take_window(&mut self) -> DeviceWindow {
+        let cur = self.stats.clone();
+        self.window.take(&cur)
     }
 }
 

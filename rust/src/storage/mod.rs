@@ -193,6 +193,113 @@ impl Default for BackendStats {
     }
 }
 
+/// One sliding-window observation of device behavior: traffic and read
+/// service time accumulated since the previous
+/// [`StorageBackend::take_window`] call. This is the measurement feed of
+/// the adaptive fetch-mode controller
+/// ([`crate::coordinator::adaptive`]): the windowed mean read latency is
+/// an occupancy signal (it includes queueing, so it rises as the device
+/// saturates), unlike the cumulative [`BackendStats`] histograms which
+/// average over the whole run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeviceWindow {
+    /// Reads completed in the window.
+    pub reads: u64,
+    /// Writes completed in the window.
+    pub writes: u64,
+    /// [`IoClass::Stage2`] reads completed in the window.
+    pub stage2_reads: u64,
+    /// Sum of per-read device latencies in the window (ns; queueing +
+    /// service, virtual for model/sim backends).
+    pub read_ns_total: f64,
+    /// Virtual device time the window spans (ns; the busiest shard's span
+    /// for multi-device windows).
+    pub span_ns: u64,
+}
+
+impl DeviceWindow {
+    /// Mean per-read device time in the window (0.0 when no reads — the
+    /// controller treats an idle window as "no new information").
+    pub fn mean_read_ns(&self) -> f64 {
+        if self.reads == 0 {
+            0.0
+        } else {
+            self.read_ns_total / self.reads as f64
+        }
+    }
+
+    /// Rough device occupancy over the window: accumulated read device
+    /// time per unit of spanned device time. >1 means reads overlapped
+    /// (queueing); a pressure indicator, not a utilization in [0, 1].
+    pub fn occupancy(&self) -> f64 {
+        if self.span_ns == 0 {
+            0.0
+        } else {
+            self.read_ns_total / self.span_ns as f64
+        }
+    }
+
+    /// Fold a *concurrent* window into this one (across shards of one
+    /// backend, or across a router's workers — devices running in
+    /// parallel): traffic adds, spans take the max.
+    pub fn merge(&mut self, other: &DeviceWindow) {
+        self.fold(other, other.span_ns.max(self.span_ns))
+    }
+
+    /// Fold a *subsequent* window of the same device into this one (the
+    /// serving worker accumulating one window per batch): traffic adds,
+    /// spans add — taking the max here would make [`Self::occupancy`]
+    /// overstate pressure by the number of folded batches.
+    pub fn accumulate(&mut self, other: &DeviceWindow) {
+        self.fold(other, self.span_ns.saturating_add(other.span_ns))
+    }
+
+    fn fold(&mut self, other: &DeviceWindow, span_ns: u64) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.stage2_reads += other.stage2_reads;
+        self.read_ns_total += other.read_ns_total;
+        self.span_ns = span_ns;
+    }
+}
+
+/// Helper every backend embeds to implement
+/// [`StorageBackend::take_window`]: remembers the cumulative counters at
+/// the previous call and differences them against the current
+/// [`BackendStats`].
+#[derive(Debug, Default)]
+pub struct WindowTracker {
+    reads: u64,
+    writes: u64,
+    stage2_reads: u64,
+    read_ns_sum: f64,
+    virtual_ns: u64,
+}
+
+impl WindowTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The window since the previous `take` (first call: since
+    /// construction), computed from the backend's cumulative stats.
+    pub fn take(&mut self, cur: &BackendStats) -> DeviceWindow {
+        let w = DeviceWindow {
+            reads: cur.reads.saturating_sub(self.reads),
+            writes: cur.writes.saturating_sub(self.writes),
+            stage2_reads: cur.stage2_reads.saturating_sub(self.stage2_reads),
+            read_ns_total: (cur.read_device_ns.sum() - self.read_ns_sum).max(0.0),
+            span_ns: cur.virtual_ns.saturating_sub(self.virtual_ns),
+        };
+        self.reads = cur.reads;
+        self.writes = cur.writes;
+        self.stage2_reads = cur.stage2_reads;
+        self.read_ns_sum = cur.read_device_ns.sum();
+        self.virtual_ns = cur.virtual_ns;
+        w
+    }
+}
+
 /// The pluggable device interface: batched submit, non-blocking poll,
 /// barrier wait. Implementations are `Send` so a serving worker can own
 /// one on its thread.
@@ -213,6 +320,14 @@ pub trait StorageBackend: Send {
 
     /// Cumulative traffic statistics.
     fn stats(&self) -> BackendStats;
+
+    /// Windowed device-behavior snapshot: traffic and mean read service
+    /// time accumulated since the previous call (first call: since
+    /// construction). Consuming — two callers would halve each other's
+    /// windows, so route all sampling through one owner (the serving
+    /// worker drains it per batch; the adaptive router fuses the
+    /// per-worker windows).
+    fn take_window(&mut self) -> DeviceWindow;
 
     /// Device-level statistics, for backends with a device model behind
     /// them ([`SimBackend`] reports full MQSim-Next counters;
@@ -572,6 +687,29 @@ mod tests {
     }
 
     #[test]
+    fn spec_parse_errors_name_the_accepted_forms() {
+        // unknown base backend: the error lists what exists
+        let err = BackendSpec::parse("disk", 512).unwrap_err().to_string();
+        assert!(err.contains("mem|model|sim"), "unhelpful: {err}");
+        assert!(err.contains("disk"), "should echo the bad value: {err}");
+        // unknown option: the error lists the option grammar
+        let err = BackendSpec::parse("sim:replicas=2", 4096).unwrap_err().to_string();
+        assert!(err.contains("shards=N"), "unhelpful: {err}");
+        assert!(err.contains("replicas"), "should echo the bad key: {err}");
+        // bad shard count: echoed back
+        let err = BackendSpec::parse("sim:shards=abc", 4096).unwrap_err().to_string();
+        assert!(err.contains("invalid shard count"), "unhelpful: {err}");
+        let err = BackendSpec::parse("sim:shards=0", 4096).unwrap_err().to_string();
+        assert!(err.contains(">= 1"), "unhelpful: {err}");
+        // map policy grammar
+        let err = BackendSpec::parse("sim:shards=2,map=hash", 4096).unwrap_err().to_string();
+        assert!(err.contains("contig|interleave"), "unhelpful: {err}");
+        // degenerate split_spec outputs surface as option errors, not panics
+        assert!(BackendSpec::parse("sim:", 4096).is_ok(), "empty option list is fine");
+        assert!(BackendSpec::parse("sim:=4", 4096).is_err(), "empty key rejected");
+    }
+
+    #[test]
     fn stage2_class_is_split_out_of_read_counts() {
         let mut b = MemBackend::new();
         read_blocks(&mut b, &[1, 2, 3]);
@@ -602,6 +740,67 @@ mod tests {
         assert_eq!(snap.shards.len(), 2);
         assert_eq!(snap.shards[0].stats.reads, 4);
         assert_eq!(snap.shards[1].stats.reads, 2);
+    }
+
+    #[test]
+    fn take_window_differences_cumulative_traffic() {
+        let mut b = MemBackend::new();
+        read_blocks(&mut b, &[1, 2, 3]);
+        let w1 = b.take_window();
+        assert_eq!((w1.reads, w1.writes, w1.stage2_reads), (3, 0, 0));
+        assert!(w1.mean_read_ns() > 0.0, "window carries the mean read time");
+        assert!(w1.span_ns > 0);
+        // an idle window is empty, not a repeat of history
+        let w2 = b.take_window();
+        assert_eq!(w2.reads, 0);
+        assert_eq!(w2.mean_read_ns(), 0.0);
+        assert_eq!(w2.read_ns_total, 0.0);
+        // only the new burst shows up in the next window
+        fetch_stage2(&mut b, &[4, 5]);
+        let w3 = b.take_window();
+        assert_eq!((w3.reads, w3.stage2_reads), (2, 2));
+    }
+
+    #[test]
+    fn take_window_spans_sharded_fanout() {
+        let spec = BackendSpec::parse("mem:shards=2", 512).unwrap().for_capacity(8);
+        let mut b = spec.build();
+        read_blocks(&mut *b, &[0, 1, 4, 5, 6]);
+        let w = b.take_window();
+        assert_eq!(w.reads, 5, "fused window covers every shard");
+        assert!(w.occupancy() > 0.0);
+        assert_eq!(b.take_window().reads, 0);
+    }
+
+    #[test]
+    fn device_window_merge_adds_traffic_keeps_busiest_span() {
+        let mut a = DeviceWindow {
+            reads: 4,
+            writes: 1,
+            stage2_reads: 2,
+            read_ns_total: 4_000.0,
+            span_ns: 100,
+        };
+        let b = DeviceWindow {
+            reads: 2,
+            writes: 0,
+            stage2_reads: 2,
+            read_ns_total: 8_000.0,
+            span_ns: 50,
+        };
+        let mut seq = a;
+        a.merge(&b);
+        assert_eq!((a.reads, a.writes, a.stage2_reads), (6, 1, 4));
+        assert!((a.mean_read_ns() - 2_000.0).abs() < 1e-9);
+        assert_eq!(a.span_ns, 100, "parallel devices: span is the max");
+        // sequential folds (same device, later window): spans add, so
+        // occupancy is not inflated by the number of folded batches
+        seq.accumulate(&b);
+        assert_eq!(seq.reads, 6);
+        assert_eq!(seq.span_ns, 150, "sequential windows: spans add");
+        assert!((seq.occupancy() - 12_000.0 / 150.0).abs() < 1e-9);
+        assert_eq!(DeviceWindow::default().mean_read_ns(), 0.0);
+        assert_eq!(DeviceWindow::default().occupancy(), 0.0);
     }
 
     #[test]

@@ -26,7 +26,10 @@ use std::ops::Range;
 use crate::config::{IoMix, SsdConfig};
 use crate::model::ssd;
 
-use super::{BackendKind, BackendStats, IoCompletion, IoOp, IoRequest, StorageBackend};
+use super::{
+    BackendKind, BackendStats, DeviceWindow, IoCompletion, IoOp, IoRequest, StorageBackend,
+    WindowTracker,
+};
 
 /// Buffered write-ack latency (ns) — matches the simulator's default
 /// `t_wbuf` ([`crate::sim::SimParams`]).
@@ -44,6 +47,7 @@ pub struct ModelBackend {
     next_id: u64,
     ready: Vec<IoCompletion>,
     stats: BackendStats,
+    window: WindowTracker,
 }
 
 impl ModelBackend {
@@ -57,6 +61,7 @@ impl ModelBackend {
             next_id: 0,
             ready: Vec::new(),
             stats: BackendStats::new(),
+            window: WindowTracker::new(),
         }
     }
 
@@ -115,6 +120,11 @@ impl StorageBackend for ModelBackend {
 
     fn stats(&self) -> BackendStats {
         self.stats.clone()
+    }
+
+    fn take_window(&mut self) -> DeviceWindow {
+        let cur = self.stats.clone();
+        self.window.take(&cur)
     }
 }
 

@@ -39,7 +39,8 @@ use anyhow::{ensure, Result};
 use crate::sim::SimStats;
 
 use super::{
-    BackendKind, BackendStats, IoCompletion, IoRequest, StorageBackend, StorageSnapshot,
+    BackendKind, BackendStats, DeviceWindow, IoCompletion, IoRequest, StorageBackend,
+    StorageSnapshot, WindowTracker,
 };
 
 /// How a [`ShardMap`] assigns lbas to devices.
@@ -128,6 +129,7 @@ pub struct ShardedBackend {
     pending: Vec<HashMap<u64, (u64, u64)>>,
     next_id: u64,
     stats: BackendStats,
+    window: WindowTracker,
 }
 
 impl ShardedBackend {
@@ -136,7 +138,14 @@ impl ShardedBackend {
     pub fn new(map: ShardMap, inner: Vec<Box<dyn StorageBackend>>) -> Self {
         assert_eq!(map.n_shards, inner.len(), "one inner backend per shard");
         let pending = (0..inner.len()).map(|_| HashMap::new()).collect();
-        ShardedBackend { map, inner, pending, next_id: 0, stats: BackendStats::new() }
+        ShardedBackend {
+            map,
+            inner,
+            pending,
+            next_id: 0,
+            stats: BackendStats::new(),
+            window: WindowTracker::new(),
+        }
     }
 
     pub fn n_shards(&self) -> usize {
@@ -223,6 +232,14 @@ impl StorageBackend for ShardedBackend {
             .max()
             .unwrap_or(0);
         s
+    }
+
+    fn take_window(&mut self) -> DeviceWindow {
+        // One fused window over the whole array: the aggregate stats
+        // already merge per-shard traffic, and the parallel-device span
+        // (busiest shard) comes with them.
+        let cur = self.stats();
+        self.window.take(&cur)
     }
 
     fn device_stats(&self) -> Option<SimStats> {

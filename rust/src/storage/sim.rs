@@ -29,7 +29,10 @@ use crate::config::SsdConfig;
 use crate::sim::{SimParams, SimStats, SsdSim};
 use crate::workload::trace::{IoReq, OpKind};
 
-use super::{BackendKind, BackendStats, IoClass, IoCompletion, IoOp, IoRequest, StorageBackend};
+use super::{
+    BackendKind, BackendStats, DeviceWindow, IoClass, IoCompletion, IoOp, IoRequest,
+    StorageBackend, WindowTracker,
+};
 
 /// Virtual→wall time mapping for the simulator worker.
 #[derive(Clone, Copy, Debug)]
@@ -79,6 +82,7 @@ pub struct SimBackend {
     next_id: u64,
     outstanding: u64,
     stats: BackendStats,
+    window: WindowTracker,
 }
 
 impl SimBackend {
@@ -98,6 +102,7 @@ impl SimBackend {
             next_id: 0,
             outstanding: 0,
             stats: BackendStats::new(),
+            window: WindowTracker::new(),
         }
     }
 
@@ -159,6 +164,15 @@ impl StorageBackend for SimBackend {
         let (tx, rx) = mpsc::channel();
         self.cmd_tx.send(Cmd::Stats(tx)).ok()?;
         rx.recv().ok()
+    }
+
+    fn take_window(&mut self) -> DeviceWindow {
+        // stats() folds the device-side virtual span in (one blocking
+        // round-trip to the sim thread — same cost a snapshot capture
+        // already pays per batch); read latencies come from the
+        // completions this front-end has drained.
+        let cur = self.stats();
+        self.window.take(&cur)
     }
 }
 
@@ -275,6 +289,20 @@ mod tests {
     }
 
     #[test]
+    fn pace_parse_errors_name_the_accepted_forms() {
+        // a malformed --pace must tell the operator what would have parsed
+        let err = Pace::parse("slow").unwrap_err().to_string();
+        assert!(err.contains("afap|wall|wall:<speedup>"), "unhelpful: {err}");
+        let err = Pace::parse("wall:abc").unwrap_err().to_string();
+        assert!(err.contains("invalid pace speedup"), "unhelpful: {err}");
+        assert!(err.contains("abc"), "should echo the bad value: {err}");
+        let err = Pace::parse("wall:-2").unwrap_err().to_string();
+        assert!(err.contains("positive"), "unhelpful: {err}");
+        let err = Pace::parse("wall:inf").unwrap_err().to_string();
+        assert!(err.contains("positive"), "infinite speedup rejected: {err}");
+    }
+
+    #[test]
     fn burst_completes_with_device_latencies() {
         let (cfg, prm) = small_spec();
         let mut b = SimBackend::spawn(cfg, prm, Pace::Afap);
@@ -307,6 +335,19 @@ mod tests {
         assert_eq!(done.len(), 64);
         let st = b.stats();
         assert_eq!((st.reads, st.writes), (32, 32));
+    }
+
+    #[test]
+    fn take_window_tracks_drained_bursts() {
+        let (cfg, prm) = small_spec();
+        let mut b = SimBackend::spawn(cfg, prm, Pace::Afap);
+        b.submit(&(0..16).map(IoRequest::read).collect::<Vec<_>>());
+        b.wait_all();
+        let w = b.take_window();
+        assert_eq!(w.reads, 16);
+        assert!(w.mean_read_ns() >= 5_000.0, "windowed mean clears the sense floor");
+        assert!(w.span_ns > 0, "device-side virtual span folded in");
+        assert_eq!(b.take_window().reads, 0, "second take is empty");
     }
 
     #[test]

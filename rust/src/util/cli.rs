@@ -278,6 +278,24 @@ mod tests {
     }
 
     #[test]
+    fn spec_strings_split_malformed_forms_stay_parseable() {
+        // split_spec never panics on junk — it hands the pieces to the
+        // caller, whose option whitelist produces the useful error
+        assert_eq!(split_spec("sim:"), ("sim", vec![]));
+        assert_eq!(split_spec("sim:,,"), ("sim", vec![]));
+        assert_eq!(split_spec(":shards=4"), ("", vec![("shards", "4")]));
+        assert_eq!(split_spec("sim:=4"), ("sim", vec![("", "4")]));
+        assert_eq!(
+            split_spec("sim:shards=4,"),
+            ("sim", vec![("shards", "4")]),
+            "trailing comma tolerated"
+        );
+        // only the first ':' splits; later ones stay in the value
+        assert_eq!(split_spec("sim:a=b:c"), ("sim", vec![("a", "b:c")]));
+        assert_eq!(split_spec(""), ("", vec![]));
+    }
+
+    #[test]
     fn usage_mentions_options() {
         let u = spec().usage();
         assert!(u.contains("--out <DIR>"));

@@ -36,6 +36,11 @@ impl Accum {
     pub fn mean(&self) -> f64 {
         if self.n == 0 { f64::NAN } else { self.mean }
     }
+    /// Sum of every pushed value (0.0 when empty, so cumulative-counter
+    /// deltas never see a NaN).
+    pub fn sum(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean * self.n as f64 }
+    }
     pub fn var(&self) -> f64 {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
@@ -170,6 +175,13 @@ impl LatencyHist {
     pub fn mean(&self) -> f64 {
         self.accum.mean()
     }
+    /// Sum of every pushed value (exact — kept by the underlying
+    /// accumulator, not reconstructed from buckets). Windowed snapshots
+    /// ([`crate::storage::WindowTracker`]) difference this between two
+    /// cumulative captures to get a per-window mean.
+    pub fn sum(&self) -> f64 {
+        self.accum.sum()
+    }
     pub fn max(&self) -> f64 {
         self.accum.max()
     }
@@ -268,6 +280,21 @@ mod tests {
             );
         }
         assert!((h.mean() - s.mean()).abs() / s.mean() < 1e-9);
+    }
+
+    #[test]
+    fn sums_are_exact_and_zero_when_empty() {
+        let mut a = Accum::new();
+        assert_eq!(a.sum(), 0.0, "empty accumulator sums to zero, not NaN");
+        for x in [1.5, 2.5, 6.0] {
+            a.push(x);
+        }
+        assert!((a.sum() - 10.0).abs() < 1e-9);
+        let mut h = LatencyHist::for_latency_ns();
+        assert_eq!(h.sum(), 0.0);
+        h.push(5_000.0);
+        h.push(7_000.0);
+        assert!((h.sum() - 12_000.0).abs() < 1e-6);
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Acceptance pin for the adaptive fetch-mode controller: with MQSim-Next
+//! devices behind every partition, `--fetch adaptive` must *track the
+//! better static mode* at both ends of the load spectrum — within a
+//! bounded factor on stage-2 reads/query and p99 end-to-end latency.
+//!
+//! "Better" is decided per load level by measured p99 latency of the two
+//! static runs (at low load that is speculative — one round-trip; at high
+//! load fetch-after-merge — the device is the bottleneck and N× fewer
+//! stage-2 reads shortens the tail). The adaptive run then has to stay
+//! within `TRACK_FACTOR` (1.25×) of that mode's reads/query *and* p99.
+//!
+//! Every run gets a warmup phase at its load level (excluded from all
+//! metrics; read counts are differenced across the measured phase) so the
+//! test asserts the controller's steady-state choice, not its bootstrap.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fivemin::coordinator::batcher::BatchPolicy;
+use fivemin::coordinator::{
+    AdaptiveConfig, Coordinator, FetchMode, Router, ServingCorpus,
+};
+use fivemin::runtime::default_artifacts_dir;
+use fivemin::storage::BackendSpec;
+use fivemin::util::rng::Rng;
+use fivemin::util::stats::Samples;
+
+/// The ISSUE's acceptance bound: adaptive within 1.25x of the better
+/// static mode on each metric.
+const TRACK_FACTOR: f64 = 1.25;
+
+const N_PARTS: usize = 2;
+const WARMUP: usize = 24;
+const MEASURED: usize = 128;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Load {
+    /// Closed loop, queue depth 1: round-trips dominate, device idles.
+    Low,
+    /// Open loop, every query in flight at once: the device saturates.
+    High,
+}
+
+struct RunOut {
+    reads_per_query: f64,
+    p99_ns: f64,
+    merge_share: f64,
+}
+
+fn start_router(corpus: &Arc<ServingCorpus>, fetch: FetchMode) -> Router {
+    let workers: Vec<Coordinator> = corpus
+        .partitions(N_PARTS)
+        .expect("partitions")
+        .into_iter()
+        .map(|part| {
+            let spec = BackendSpec::small_sim(4096).for_capacity(part.n as u64);
+            Coordinator::start(
+                default_artifacts_dir(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                spec,
+            )
+            .expect("worker starts")
+        })
+        .collect();
+    match fetch {
+        // Small window so the controller samples several times within the
+        // warmup; rare refresh keeps probe dispatches out of the measured
+        // tail (the phase-2 estimate can only go stale-low, which biases
+        // toward merge — the safe direction under rising load).
+        FetchMode::Adaptive => Router::partitioned_adaptive(
+            workers,
+            AdaptiveConfig { window: 8, refresh: 32, ..AdaptiveConfig::default() },
+        )
+        .expect("adaptive router"),
+        mode => Router::partitioned_with(workers, mode).expect("router"),
+    }
+}
+
+/// Serve warmup + measured phases at `load`; metrics cover the measured
+/// phase only. p99 is nearest-rank over the per-query e2e latencies.
+fn run(corpus: &Arc<ServingCorpus>, fetch: FetchMode, load: Load) -> RunOut {
+    let router = start_router(corpus, fetch);
+    let mut rng = Rng::new(0xADA_97);
+    let mut serve = |n: usize, lat: Option<&mut Samples>| {
+        let mut lat = lat;
+        let push = |res: fivemin::coordinator::QueryResult, lat: &mut Option<&mut Samples>| {
+            if let Some(l) = lat.as_deref_mut() {
+                l.push(res.latency.as_nanos() as f64);
+            }
+        };
+        match load {
+            Load::Low => {
+                for _ in 0..n {
+                    let t = rng.below(corpus.n as u64) as usize;
+                    let res = router
+                        .submit(corpus.query_near(t, 0.02, &mut rng))
+                        .recv()
+                        .expect("router alive")
+                        .expect("query served");
+                    push(res, &mut lat);
+                }
+            }
+            Load::High => {
+                let pending: Vec<_> = (0..n)
+                    .map(|_| {
+                        let t = rng.below(corpus.n as u64) as usize;
+                        router.submit(corpus.query_near(t, 0.02, &mut rng))
+                    })
+                    .collect();
+                for rx in pending {
+                    let res = rx.recv().expect("router alive").expect("query served");
+                    push(res, &mut lat);
+                }
+            }
+        }
+    };
+    serve(WARMUP, None);
+    let reads0 = router.settled_stats(Duration::from_secs(10)).ssd_reads;
+    let mut lat = Samples::new();
+    serve(MEASURED, Some(&mut lat));
+    let reads1 = router.settled_stats(Duration::from_secs(10)).ssd_reads;
+    RunOut {
+        reads_per_query: (reads1 - reads0) as f64 / MEASURED as f64,
+        p99_ns: lat.percentile(0.99),
+        merge_share: router.adaptive_report().map(|r| r.merge_share()).unwrap_or(0.0),
+    }
+}
+
+fn assert_tracks(load: Load) {
+    let corpus = Arc::new(ServingCorpus::synthetic(2, 0xADA_97));
+    let spec = run(&corpus, FetchMode::Speculative, load);
+    let merge = run(&corpus, FetchMode::AfterMerge, load);
+    let adaptive = run(&corpus, FetchMode::Adaptive, load);
+    // "better" static mode at this load = lower measured p99
+    let better = if spec.p99_ns <= merge.p99_ns { &spec } else { &merge };
+    let better_name = if spec.p99_ns <= merge.p99_ns { "spec" } else { "merge" };
+    let diag = format!(
+        "load {load:?}: better={better_name} \
+         [spec rpq {:.1} p99 {:.0}us | merge rpq {:.1} p99 {:.0}us | \
+         adaptive rpq {:.1} p99 {:.0}us, merge_share {:.2}]",
+        spec.reads_per_query,
+        spec.p99_ns / 1e3,
+        merge.reads_per_query,
+        merge.p99_ns / 1e3,
+        adaptive.reads_per_query,
+        adaptive.p99_ns / 1e3,
+        adaptive.merge_share
+    );
+    assert!(
+        adaptive.reads_per_query <= TRACK_FACTOR * better.reads_per_query,
+        "adaptive reads/query {:.1} > {TRACK_FACTOR} x better mode's {:.1} — {diag}",
+        adaptive.reads_per_query,
+        better.reads_per_query
+    );
+    assert!(
+        adaptive.p99_ns <= TRACK_FACTOR * better.p99_ns,
+        "adaptive p99 {:.0}us > {TRACK_FACTOR} x better mode's {:.0}us — {diag}",
+        adaptive.p99_ns / 1e3,
+        better.p99_ns / 1e3
+    );
+    // regardless of which mode won on latency, adaptive can never beat
+    // the merge floor or exceed the spec ceiling on reads
+    assert!(
+        adaptive.reads_per_query >= merge.reads_per_query - 1e-9
+            && adaptive.reads_per_query <= spec.reads_per_query + 1e-9,
+        "adaptive reads/query outside the static interval — {diag}"
+    );
+    println!("tracked: {diag}");
+}
+
+// Both arms run in the release test pass (CI runs `cargo test --release
+// -q` with the same suite). In debug builds they are ignored: the
+// controller prices *wall-clock* phase-2 round-trips against *virtual*
+// device time, and unoptimized graph execution inflates the round-trip
+// side ~30x, swamping exactly the load signal this sweep exercises. The
+// functional (profile-independent) properties of the adaptive path are
+// covered in both profiles by `router_equivalence_prop.rs` and the
+// controller unit tests.
+
+/// Low load: round-trip-bound. Speculative's single round-trip should win
+/// on latency and the controller should mostly dispatch speculatively.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "wall-clock sweep; run under --release")]
+fn adaptive_tracks_better_mode_at_low_load() {
+    assert_tracks(Load::Low);
+}
+
+/// High load: device-bound. After-merge's N x fewer stage-2 reads should
+/// win the tail and the controller should mostly dispatch fetch-after-
+/// merge.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "wall-clock sweep; run under --release")]
+fn adaptive_tracks_better_mode_at_high_load() {
+    assert_tracks(Load::High);
+}

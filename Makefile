@@ -2,7 +2,7 @@
 # everything else is pure cargo.
 
 .PHONY: artifacts verify verify-release lint fmt-check doc pytest ci bench-smoke smoke \
-        clean figures fig11 fig12 fig13 fig14
+        clean figures fig11 fig12 fig13 fig14 fig15
 
 # Lower the JAX/Pallas serving graphs to HLO-text artifacts + manifest
 # (a prerequisite only for --features pjrt builds; the native engine
@@ -42,7 +42,8 @@ bench-smoke:
 smoke: bench-smoke
 
 # The full CI pipeline, locally: fmt -> build -> clippy -> feature-matrix
-# check -> tests in both profiles -> docs -> bench-smoke. (CI additionally
+# check -> tests in both profiles -> docs -> bench-smoke -> quick fig15
+# (the DRAM-tier policy sweep regenerates end to end). (CI additionally
 # runs `make pytest` in a python job.)
 ci: fmt-check
 	cargo build --release
@@ -52,6 +53,7 @@ ci: fmt-check
 	cargo test --release -q
 	$(MAKE) doc
 	$(MAKE) bench-smoke
+	cargo run --release -- figures --fig15 --quick
 
 # Figure regeneration (CSV under results/ + ASCII on stdout).
 figures:
@@ -68,6 +70,9 @@ fig13:
 
 fig14:
 	cargo run --release -- figures --fig14
+
+fig15:
+	cargo run --release -- figures --fig15
 
 clean:
 	rm -rf target results

@@ -32,6 +32,11 @@
 //! `--fetch adaptive` lets a load-feedback controller pick between the
 //! two per dispatched query from the measured device stall vs phase-2
 //! round-trip, with hysteresis (per-window decisions printed at the end).
+//! `--tier dram:mb=N,rule=breakeven|5min|5s|clock` puts a DRAM tier in
+//! front of every worker's device: repeated promoted reads are served
+//! from DRAM when their reuse interval beats the rule's bar (the live
+//! break-even interval by default) — device reads == tier misses,
+//! answers bit-identical either way.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -41,7 +46,7 @@ use fivemin::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
 use fivemin::coordinator::batcher::BatchPolicy;
 use fivemin::coordinator::{Coordinator, FetchMode, Router, ServingCorpus};
 use fivemin::runtime::{default_artifacts_dir, SERVE};
-use fivemin::storage::{BackendSpec, Pace};
+use fivemin::storage::{BackendSpec, Pace, TierSpec};
 use fivemin::util::cli::ArgSpec;
 use fivemin::util::rng::Rng;
 use fivemin::util::table::fmt_secs;
@@ -72,6 +77,12 @@ fn main() -> anyhow::Result<()> {
             "spec|merge|adaptive",
             Some("spec"),
             "stage-2 fetch protocol: speculative (1 round-trip), after-merge (2 round-trips, ~Nx fewer reads), or adaptive (picked per query from measured load)",
+        )
+        .opt(
+            "tier",
+            "none|dram:mb=N,rule=breakeven|5min|5s|clock",
+            Some("none"),
+            "per-worker DRAM tier in front of the device (admission by the live break-even rule by default)",
         );
     let args: Vec<String> = std::env::args().skip(1).collect();
     let p = match spec.parse(&args) {
@@ -83,9 +94,12 @@ fn main() -> anyhow::Result<()> {
     };
     let pace = Pace::parse(p.str("pace").unwrap())?;
     // Full ANN vectors are 4KB blocks on the device tier.
-    let backend = BackendSpec::parse(p.str("backend").unwrap(), 4096)
+    let mut backend = BackendSpec::parse(p.str("backend").unwrap(), 4096)
         .map_err(|e| anyhow::anyhow!("{e}"))?
         .with_pace(pace);
+    if let Some(tier) = TierSpec::parse(p.str("tier").unwrap(), 4096)? {
+        backend = backend.tiered(tier);
+    }
     let fetch = FetchMode::parse(p.str("fetch").unwrap())?;
     let n_queries: usize = p.usize("queries").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
     let n_workers: usize = p.usize("workers").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
@@ -226,6 +240,9 @@ fn main() -> anyhow::Result<()> {
             snap.shards.len(),
             fmt_secs(snap.stats.read_device_ns.percentile(0.99) / 1e9),
         );
+        if let Some(t) = &snap.stats.tier {
+            println!("DRAM tier  : {}", t.summary());
+        }
         if let Some(dev) = &snap.device {
             println!(
                 "             {:.2}M aggregate device IOPS (capacity and IOPS scale together)",

@@ -1,22 +1,27 @@
 //! SSD-resident KV store demo (Sec VII-A): the functional blocked-Cuckoo
-//! engine running a YCSB-style mixed workload with DRAM hot-pair caching
-//! and WAL consolidation — with every bucket access and log append charged
-//! to a pluggable storage backend — followed by the paper-scale Fig 8
-//! projection.
+//! engine running a YCSB-style mixed workload with WAL consolidation —
+//! every bucket access and log append charged to a pluggable storage
+//! backend, hot buckets held in DRAM by the economics-governed storage
+//! tier — followed by the paper-scale Fig 8 projection.
 //!
 //!     cargo run --release --example kv_store_demo -- --backend mem
 //!     cargo run --release --example kv_store_demo -- --backend model
 //!     cargo run --release --example kv_store_demo -- --backend sim
+//!     cargo run --release --example kv_store_demo -- --tier dram:mb=16,rule=5s
+//!     cargo run --release --example kv_store_demo -- --tier none
 //!
 //! `mem` is the in-process baseline; `model` prices each I/O with the
 //! analytic Eq. 2 + queueing model; `sim` replays the block traffic on
 //! MQSim-Next in virtual time (fewer ops, device-level stats reported).
+//! `--tier` sizes the DRAM bucket tier and picks its admission rule —
+//! the paper's break-even interval by default (the engine's old ad-hoc
+//! `KvCache` is gone; placement is the tier's decision now).
 
 use fivemin::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
 use fivemin::kvstore::{
     kv_throughput, BackedStore, CuckooParams, KvEngine, KvScenario, MemStore,
 };
-use fivemin::storage::{BackendKind, BackendSpec};
+use fivemin::storage::{BackendKind, BackendSpec, TierSpec};
 use fivemin::util::cli::ArgSpec;
 use fivemin::util::rng::{Rng, Zipf};
 use fivemin::util::table::{fmt_si, Table};
@@ -28,6 +33,12 @@ fn main() {
             "mem|model|sim",
             Some("mem"),
             "storage backend charged for bucket + WAL I/O",
+        )
+        .opt(
+            "tier",
+            "none|dram:mb=N,rule=breakeven|5min|5s|clock",
+            Some("dram:mb=8,rule=breakeven"),
+            "DRAM bucket tier in front of the backend (admission by the live break-even rule)",
         );
     let args: Vec<String> = std::env::args().skip(1).collect();
     let p = match spec.parse(&args) {
@@ -39,6 +50,13 @@ fn main() {
     };
     let backend = match BackendSpec::parse(p.str("backend").unwrap(), 512) {
         Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let tier = match TierSpec::parse(p.str("tier").unwrap(), 512) {
+        Ok(t) => t,
         Err(e) => {
             eprintln!("{e}");
             std::process::exit(2);
@@ -56,17 +74,22 @@ fn main() {
     };
     let params = CuckooParams::for_capacity(n_items, 0.7, 512, 64);
     // Fit a ':shards=N' spec's lba→device map to this store's address
-    // space (buckets + WAL region) so the traffic actually spreads.
-    let backend = backend.for_capacity(2 * params.n_buckets);
+    // space (buckets + WAL region) so the traffic actually spreads, then
+    // put the DRAM tier in front of the whole (possibly sharded) device.
+    let mut backend = backend.for_capacity(2 * params.n_buckets);
+    if let Some(t) = tier.clone() {
+        backend = backend.tiered(t);
+    }
     let store = BackedStore::new(
         MemStore::new(params.n_buckets, params.slots_per_bucket),
         backend.build(),
     );
-    let mut engine = KvEngine::new(params, store, (n_items / 10) as usize, 512);
+    let mut engine = KvEngine::new(params, store, 512);
 
     println!(
-        "loading {n_items} items into the blocked-Cuckoo store ('{}' backend)…",
-        backend.kind().name()
+        "loading {n_items} items into the blocked-Cuckoo store ('{}' backend, tier {})…",
+        backend.device_kind().name(),
+        tier.as_ref().map(|t| t.label()).unwrap_or_else(|| "none".into())
     );
     for k in 1..=n_items {
         engine.put(k, k.wrapping_mul(0x9E37_79B9));
@@ -92,9 +115,8 @@ fn main() {
         "  engine throughput : {} ops/s (wall clock, in-process)",
         fmt_si(ops as f64 / dt)
     );
-    println!("  cache hit rate    : {:.1}%", 100.0 * engine.cache.hit_rate());
     println!(
-        "  SSD I/Os per op   : {:.3} ({} reads, {} writes incl. WAL blocks)",
+        "  SSD I/Os per op   : {:.3} ({} device reads, {} writes incl. WAL blocks)",
         engine.ios_per_op(),
         st.ssd_reads,
         st.ssd_writes
@@ -102,8 +124,11 @@ fn main() {
     println!("  WAL appends/flushes: {} / {}", st.wal_appends, st.flushes);
     println!("  failed inserts    : {}", st.failed_inserts);
 
-    // ---- per-backend device timing ---------------------------------------
+    // ---- per-backend device timing + unified tier snapshot ----------------
     let snap = engine.store.snapshot();
+    if let Some(t) = &snap.stats.tier {
+        println!("  DRAM tier         : {}", t.summary());
+    }
     println!(
         "  device timing     : read p50 {:.1}us p99 {:.1}us, write-ack p50 {:.1}us",
         snap.stats.read_device_ns.percentile(0.5) / 1e3,

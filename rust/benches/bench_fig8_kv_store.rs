@@ -22,7 +22,7 @@ fn flush_spans(batch_flush: bool) -> (f64, f64) {
     );
     store.batch_flush = batch_flush;
     // high threshold: flush points are controlled by this driver, not puts
-    let mut e = KvEngine::new(p, store, 0, 1_000_000);
+    let mut e = KvEngine::new(p, store, 1_000_000);
     let mut spans = Samples::new();
     let mut last_ns = 0u64;
     for k in 1..=n_items {

@@ -67,7 +67,7 @@ fn bench_kv_engine() {
     let n_items = 100_000u64;
     let params = CuckooParams::for_capacity(n_items, 0.7, 512, 64);
     let store = MemStore::new(params.n_buckets, params.slots_per_bucket);
-    let mut engine = KvEngine::new(params, store, 10_000, 512);
+    let mut engine = KvEngine::new(params, store, 512);
     for k in 1..=n_items {
         engine.put(k, k);
     }
@@ -86,9 +86,8 @@ fn bench_kv_engine() {
     }
     let dt = t.elapsed_s();
     println!(
-        "bench kv_engine: {:.2}M ops/s (hit rate {:.1}%, {:.3} SSD IO/op)",
+        "bench kv_engine: {:.2}M ops/s ({:.3} SSD IO/op)",
         ops as f64 / dt / 1e6,
-        100.0 * engine.cache.hit_rate(),
         engine.ios_per_op()
     );
 }

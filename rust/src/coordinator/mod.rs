@@ -45,7 +45,14 @@
 //! behavior); with `Model`/`Sim` the reported stall and per-read
 //! latencies come from the analytic device model or MQSim-Next, while
 //! query *results* stay bit-identical across backends (see
-//! `rust/tests/backend_equivalence.rs`).
+//! `rust/tests/backend_equivalence.rs`). A worker's backend may also
+//! carry a DRAM tier ([`crate::storage::TieredBackend`], `--tier
+//! dram:mb=N,rule=…`): repeated promoted reads then complete at DRAM
+//! latency without touching the device, with `device reads == tier
+//! misses` exactly and the tier counters riding the same
+//! [`StorageSnapshot`] into [`ServeStats`]. The adaptive controller is
+//! unaffected by the tier's hits: its [`DeviceWindow`] feed is post-tier
+//! device traffic, so `S̄` prices real device reads only.
 
 pub mod adaptive;
 pub mod batcher;
@@ -1089,8 +1096,11 @@ impl Router {
     /// fetch burst. Waits up to `timeout`. (`>=`, not `==`: a failed
     /// stage-2 graph execution charges the device but skips the
     /// coordinator counter, so the snapshot may legitimately run ahead.)
-    /// Accounting tests and figures use this; live dashboards can keep
-    /// the cheaper `merged_stats`.
+    /// With a DRAM tier in front of a worker's device, a submitted
+    /// stage-2 read lands either on the device (`stage2_reads`) or in the
+    /// tier (`tier.stage2_hits`); the sum is what must catch the
+    /// coordinator counter. Accounting tests and figures use this; live
+    /// dashboards can keep the cheaper `merged_stats`.
     pub fn settled_stats(&self, timeout: Duration) -> ServeStats {
         let deadline = Instant::now() + timeout;
         loop {
@@ -1098,7 +1108,10 @@ impl Router {
             let snap_reads = st
                 .storage
                 .as_ref()
-                .map(|s| s.stats.stage2_reads)
+                .map(|s| {
+                    s.stats.stage2_reads
+                        + s.stats.tier.as_ref().map(|t| t.stage2_hits).unwrap_or(0)
+                })
                 .unwrap_or(0);
             if snap_reads >= st.ssd_reads || Instant::now() > deadline {
                 return st;

@@ -1,0 +1,219 @@
+//! DRAM-tier admission policies vs capacity (new in this reproduction;
+//! emitted as `fig15`): the same zipf-skewed partitioned serving workload
+//! run with the storage tier under each admission rule — the *live*
+//! break-even interval, the fixed five-minute and five-second baselines,
+//! and a plain CLOCK control — across a sweep of per-worker DRAM
+//! capacities, reporting post-tier device reads per query, tier hit rate,
+//! and the served read tail.
+//!
+//! This is the figure that makes the paper's thesis operational: the
+//! break-even interval is not a provisioning table, it is an *admission
+//! bar* the serving stack can enforce per page. The sweep shows the
+//! `breakeven` policy tracking the better of the two fixed rules at each
+//! capacity point — right-sized admission when DRAM is scarce (where the
+//! 300 s rule over-admits and churns), without starving the tier when
+//! DRAM is plentiful (where the 5 s rule under-admits).
+//!
+//! Methodology notes: queries run closed-loop (deterministic reference
+//! order, so admission decisions are reproducible across runs) against
+//! MQSim-Next devices; targets are zipf(1.1)-popular so inter-reference
+//! intervals span the 5 s / break-even / 300 s bars at the tier's
+//! reference rate ([`TIER_FIG_RATE`]). Device reads are measured from the
+//! post-tier backend snapshot — `device reads == tier misses` by the
+//! tier's accounting invariant.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::PlatformKind;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::{Coordinator, Router, ServingCorpus};
+use crate::runtime::default_artifacts_dir;
+use crate::storage::{BackendSpec, TierRule, TierSpec};
+use crate::util::rng::{Rng, Zipf};
+use crate::util::table::Table;
+
+/// Reference arrival rate (accesses/s) for the fig15 tiers: chosen so the
+/// zipf workload's realized inter-reference intervals straddle the 5 s,
+/// break-even (~10 s at 4 KB on CPU+DDR), and 300 s bars within a
+/// figure-sized run.
+pub const TIER_FIG_RATE: f64 = 400.0;
+
+/// Measured outcome of one (capacity, rule) serving run.
+pub struct TierRun {
+    /// Stage-2 reads submitted by the coordinator (tier hits + misses).
+    pub submitted: u64,
+    /// Post-tier device reads (== tier misses when a tier is present).
+    pub device_reads: u64,
+    pub device_reads_per_query: f64,
+    pub tier_hits: u64,
+    pub hit_rate: f64,
+    /// End-to-end merged-answer p99 (µs) — the served read tail.
+    pub wall_p99_us: f64,
+    /// Per-device-read latency p99 (µs).
+    pub dev_read_p99_us: f64,
+}
+
+/// Serve `targets` closed-loop through `n_parts` partition workers, each
+/// on a device built from `spec` (optionally tier-fronted), and measure
+/// post-tier device traffic. Closed-loop submission keeps the tier's
+/// reference order — and therefore every admission decision —
+/// deterministic.
+pub fn run_tier_cell(
+    corpus: &Arc<ServingCorpus>,
+    spec: &BackendSpec,
+    n_parts: usize,
+    targets: &[usize],
+    noise: f32,
+    query_seed: u64,
+) -> TierRun {
+    let workers: Vec<Coordinator> = corpus
+        .partitions(n_parts)
+        .expect("partition count divides corpus shards")
+        .into_iter()
+        .map(|part| {
+            let spec = spec.clone().for_capacity(part.n as u64);
+            Coordinator::start(
+                default_artifacts_dir(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                spec,
+            )
+            .expect("worker starts")
+        })
+        .collect();
+    let router = Router::partitioned(workers).expect("router");
+    let mut rng = Rng::new(query_seed);
+    for &t in targets {
+        router
+            .query(corpus.query_near(t, noise, &mut rng))
+            .expect("query served");
+    }
+    let st = router.settled_stats(Duration::from_secs(10));
+    let snap = st.storage.expect("storage snapshot");
+    let wall = router.gather_latency();
+    let queries = targets.len().max(1) as u64;
+    let (tier_hits, hit_rate) = snap
+        .stats
+        .tier
+        .as_ref()
+        .map(|t| (t.hits, t.hit_rate()))
+        .unwrap_or((0, 0.0));
+    TierRun {
+        submitted: st.ssd_reads,
+        device_reads: snap.stats.reads,
+        device_reads_per_query: snap.stats.reads as f64 / queries as f64,
+        tier_hits,
+        hit_rate,
+        wall_p99_us: wall.percentile(0.99) / 1e3,
+        dev_read_p99_us: snap.stats.read_device_ns.percentile(0.99) / 1e3,
+    }
+}
+
+/// Zipf(1.1)-popular target ids over the corpus, seeded (the shared query
+/// stream: every (capacity, rule) cell serves the same targets).
+fn zipf_targets(n: usize, count: usize, seed: u64) -> Vec<usize> {
+    let zipf = Zipf::new(n, 1.1);
+    let mut rng = Rng::new(seed);
+    (0..count).map(|_| zipf.sample(&mut rng).min(n - 1)).collect()
+}
+
+/// DRAM-tier policy sweep: per-worker capacity × admission rule, on
+/// MQSim-Next devices, plus an untiered control row.
+pub fn fig15(quick: bool) -> Table {
+    let n_queries = if quick { 96 } else { 256 };
+    let caps_mb: &[u64] = if quick { &[1, 8] } else { &[1, 4, 16] };
+    let rules = [TierRule::Clock, TierRule::FiveSec, TierRule::Breakeven, TierRule::FiveMin];
+    let n_parts = 2;
+    let corpus = Arc::new(ServingCorpus::synthetic(2, 0xF16_15));
+    let targets = zipf_targets(corpus.n, n_queries, 0xF16_15);
+    let device = BackendSpec::small_sim(4096);
+    let mut t = Table::new(
+        "fig15: DRAM-tier admission policies vs capacity — post-tier device \
+         reads per query, tier hit rate, and served read tail per \
+         {capacity, rule} cell (zipf targets, closed loop, MQSim-Next \
+         devices, 2 partition workers; 'none' = untiered control)",
+        &[
+            "mb_per_worker",
+            "rule",
+            "device_reads",
+            "reads_per_query",
+            "hit_rate",
+            "wall_p99_us",
+            "dev_read_p99_us",
+        ],
+    );
+    // untiered control: capacity-independent, one row
+    let base = run_tier_cell(&corpus, &device, n_parts, &targets, 0.02, 0x515);
+    t.row(vec![
+        "-".into(),
+        "none".into(),
+        format!("{}", base.device_reads),
+        format!("{:.1}", base.device_reads_per_query),
+        "-".into(),
+        format!("{:.1}", base.wall_p99_us),
+        format!("{:.2}", base.dev_read_p99_us),
+    ]);
+    for &mb in caps_mb {
+        for rule in rules {
+            let tier = TierSpec {
+                capacity_bytes: mb * (1 << 20),
+                rule,
+                rate: TIER_FIG_RATE,
+                platform: PlatformKind::CpuDdr,
+                l_blk: 4096,
+            };
+            let spec = device.clone().tiered(tier);
+            let r = run_tier_cell(&corpus, &spec, n_parts, &targets, 0.02, 0x515);
+            t.row(vec![
+                format!("{mb}"),
+                rule.name().to_string(),
+                format!("{}", r.device_reads),
+                format!("{:.1}", r.device_reads_per_query),
+                format!("{:.2}", r.hit_rate),
+                format!("{:.1}", r.wall_p99_us),
+                format!("{:.2}", r.dev_read_p99_us),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tier's accounting invariants through the full serving stack,
+    /// on mem devices so the test runs fast: hits bypass the device
+    /// (device reads == submitted − hits), repeats of identical queries
+    /// hit a generously-sized CLOCK tier, and the untiered control sees
+    /// every submitted read on the device.
+    #[test]
+    fn tier_cell_accounting_is_exact_and_hits_absorb_repeats() {
+        let corpus = Arc::new(ServingCorpus::synthetic(2, 515));
+        // noise 0 => repeated targets promote identical candidate sets
+        let targets: Vec<usize> = vec![5, 900, 5, 900, 5, 900, 5, 900];
+        let base = run_tier_cell(&corpus, &BackendSpec::Mem, 2, &targets, 0.0, 7);
+        assert_eq!(
+            base.device_reads, base.submitted,
+            "untiered control: every submitted read reaches the device"
+        );
+        assert_eq!(base.tier_hits, 0);
+        let spec = BackendSpec::Mem.tiered(TierSpec::new(64, TierRule::Clock, 4096));
+        let tiered = run_tier_cell(&corpus, &spec, 2, &targets, 0.0, 7);
+        assert_eq!(tiered.submitted, base.submitted, "same queries, same submissions");
+        assert_eq!(
+            tiered.device_reads + tiered.tier_hits,
+            tiered.submitted,
+            "every submitted read lands on the device or in the tier"
+        );
+        // 3 of 4 rounds repeat identical promote sets: most reads hit
+        assert!(
+            tiered.tier_hits >= tiered.submitted / 2,
+            "repeats must hit the CLOCK tier: {} hits of {}",
+            tiered.tier_hits,
+            tiered.submitted
+        );
+        assert!(tiered.device_reads < base.device_reads);
+    }
+}

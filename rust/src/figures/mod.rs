@@ -13,6 +13,7 @@ pub mod fig_mqsim;
 pub mod fig_peak_iops;
 pub mod fig_provisioning;
 pub mod fig_shards;
+pub mod fig_tier;
 
 use std::path::Path;
 
@@ -63,6 +64,13 @@ pub fn fetch_figures(quick: bool) -> Vec<(&'static str, Table)> {
 /// sweep (reads/query, latency, merge share).
 pub fn adaptive_figures(quick: bool) -> Vec<(&'static str, Table)> {
     vec![("fig14", fig_adaptive::fig14(quick))]
+}
+
+/// DRAM-tier admission policies (live break-even vs fixed 5 min / 5 s
+/// rules vs CLOCK control) across per-worker capacities: post-tier device
+/// reads per query, hit rate, served read tail.
+pub fn tier_figures(quick: bool) -> Vec<(&'static str, Table)> {
+    vec![("fig15", fig_tier::fig15(quick))]
 }
 
 /// Emit one table: print ASCII and write CSV under `out`.

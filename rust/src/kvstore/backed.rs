@@ -28,6 +28,19 @@
 //! instead of serializing on per-bucket waits (set
 //! [`BackedStore::batch_flush`] to `false` to measure the difference —
 //! `bench_fig8_kv_store` records it on the sim backend).
+//!
+//! # DRAM tier
+//!
+//! Wrapping the backend in a [`crate::storage::TieredBackend`]
+//! (`BackendSpec::tiered`, `--tier dram:mb=N,rule=…` on the demo) puts
+//! the engine's hot buckets under the same economics-governed DRAM tier
+//! that serves the ANN stage-2 path: repeated bucket reads complete at
+//! DRAM latency without a device submission, [`IoCounted::io_counts`]
+//! then reports post-tier *device* I/Os, and the tier's hit/miss/
+//! residency counters ride [`BackedStore::snapshot`] as
+//! [`crate::storage::TierStats`]. GET results are bit-identical with and
+//! without the tier — the tier is a timing plane, the bucket contents
+//! stay in the [`MemStore`] data plane.
 
 use crate::kvstore::cuckoo::{BlockStore, KvPair, MemStore};
 use crate::kvstore::engine::IoCounted;
@@ -219,6 +232,62 @@ mod tests {
         assert_eq!(backed.snapshot().stats.reads, 1);
         backed.end_io_batch();
         assert_eq!(backed.io_counts(), (1, 0));
+    }
+
+    /// The tier does for the engine what the retired `KvCache` did — but
+    /// at the storage seam, with exact device accounting: hot bucket
+    /// reads are absorbed in DRAM, GET results are unchanged, and device
+    /// reads equal tier misses.
+    #[test]
+    fn tier_absorbs_hot_bucket_reads_with_identical_gets() {
+        use crate::kvstore::engine::KvEngine;
+        use crate::storage::{TierRule, TierSpec};
+        let p = CuckooParams::for_capacity(5_000, 0.7, 512, 64);
+        let mk_engine = |tiered: bool| {
+            let spec = if tiered {
+                BackendSpec::Mem.tiered(TierSpec::new(8, TierRule::Clock, 512))
+            } else {
+                BackendSpec::Mem
+            };
+            let store = BackedStore::new(
+                MemStore::new(p.n_buckets, p.slots_per_bucket),
+                spec.build(),
+            );
+            KvEngine::new(p, store, 128)
+        };
+        let mut plain = mk_engine(false);
+        let mut tiered = mk_engine(true);
+        for e in [&mut plain, &mut tiered] {
+            for k in 1..=2_000u64 {
+                e.put(k, k ^ 0xABCD);
+            }
+            e.flush();
+        }
+        // hot loop: the same 100 keys over and over
+        let before = tiered.store.snapshot().stats.tier.expect("tier stats present");
+        let plain_before = plain.stats.ssd_reads;
+        let tiered_before = tiered.stats.ssd_reads;
+        for _ in 0..40 {
+            for k in 1..=100u64 {
+                assert_eq!(plain.get(k), tiered.get(k), "key {k}");
+            }
+        }
+        let t = tiered.store.snapshot().stats.tier.expect("tier stats present");
+        let (hits, misses) = (t.hits - before.hits, t.misses - before.misses);
+        assert!(hits > 0, "hot bucket reads must hit the tier");
+        assert!(
+            hits as f64 / (hits + misses) as f64 > 0.8,
+            "after the first pass the hot set lives in DRAM: {hits} hits / {misses} misses"
+        );
+        // device reads == tier misses, and the engine's counters see the
+        // post-tier cost (far fewer device reads than the untiered engine)
+        assert_eq!(tiered.store.snapshot().stats.reads, t.misses);
+        let plain_reads = plain.stats.ssd_reads - plain_before;
+        let tiered_reads = tiered.stats.ssd_reads - tiered_before;
+        assert!(
+            tiered_reads < plain_reads / 2,
+            "tiered {tiered_reads} !<< plain {plain_reads}"
+        );
     }
 
     #[test]

@@ -4,17 +4,21 @@
 //!   store (no DRAM-resident index or metadata).
 //! * [`wal`] — SSD-resident write-ahead log with bucket-consolidated
 //!   commits.
-//! * [`cache`] — CLOCK cache of hot KV pairs (all DRAM goes here).
 //! * [`engine`] — the assembled functional engine (GET/PUT over any
 //!   [`cuckoo::BlockStore`]).
 //! * [`backed`] — a block store that charges every bucket access and WAL
 //!   append to a [`crate::storage::StorageBackend`], putting the engine's
-//!   traffic on the analytic-model or MQSim-Next device path.
+//!   traffic on the analytic-model or MQSim-Next device path — and, when
+//!   that backend is a [`crate::storage::TieredBackend`], under the same
+//!   economics-governed DRAM tier that serves the ANN stage-2 path.
+//!   (The engine's old ad-hoc `KvCache` CLOCK cache is retired: DRAM
+//!   placement is the storage tier's job now, one admission policy for
+//!   both workloads; the CLOCK second-chance core lives on as the tier's
+//!   eviction machinery.)
 //! * [`analysis`] — the paper-scale throughput model behind Fig 8.
 
 pub mod analysis;
 pub mod backed;
-pub mod cache;
 pub mod cuckoo;
 pub mod engine;
 pub mod wal;

@@ -19,7 +19,10 @@
 //!   [`storage::StorageBackend`] trait with in-memory, analytic-model,
 //!   MQSim-Next-simulated, and sharded multi-device implementations, so
 //!   the same KV/ANN traffic can be replayed against any device tier —
-//!   or fanned across several — and report per-backend latency.
+//!   or fanned across several — and report per-backend latency; plus
+//!   [`storage::TieredBackend`], a DRAM tier whose admission policy *is*
+//!   the paper's live break-even rule (the five-second rule on the hot
+//!   path, not in a table).
 //! * [`runtime`] / [`coordinator`] — the serving stack: execution of the
 //!   two-stage compute graphs (native Rust engine by default, PJRT with
 //!   `--features pjrt`) and the thread-based router/batcher that drives

@@ -64,9 +64,9 @@ fn print_help() {
          \x20 breakeven  --platform cpu|gpu --nand slc|pslc|tlc --blk N [--normal] [--host-iops N] [--p99-us N]\n\
          \x20 viability  --platform cpu|gpu --dram-gb N --blk N [--sigma S] [--throughput-gbps N]\n\
          \x20 simulate   --blk N --read-pct N [--measure-us N] [--p-bch P] [--ch-bw GBps]\n\
-         \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11 --fig12 --fig13 --fig14] [--out DIR] [--quick]\n\
+         \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11 --fig12 --fig13 --fig14 --fig15] [--out DIR] [--quick]\n\
          \x20 config     --dump\n\
-         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N[,map=interleave]]] [--pace afap|wall:S] [--fetch spec|merge|adaptive]\n\
+         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N[,map=interleave]]] [--pace afap|wall:S] [--fetch spec|merge|adaptive] [--tier none|dram:mb=N,rule=breakeven|5min|5s|clock]\n\
          \x20 smoke      [--queries N] [--json] [--out FILE] [--baseline FILE] [--tolerance T]"
     );
 }
@@ -302,6 +302,7 @@ fn cmd_figures(args: &[String]) -> Result<(), String> {
         .flag("fig12", "sharded multi-device scaling")
         .flag("fig13", "fetch-after-merge vs speculative fetch")
         .flag("fig14", "adaptive fetch-mode controller load sweep")
+        .flag("fig15", "DRAM-tier admission policies vs capacity")
         .flag("quick", "shorter Fig 7 simulation windows")
         .opt("out", "DIR", Some("results"), "CSV output directory");
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
@@ -350,6 +351,12 @@ fn cmd_figures(args: &[String]) -> Result<(), String> {
     }
     if all || p.flag("fig14") {
         for (id, t) in fivemin::figures::adaptive_figures(p.flag("quick")) {
+            fivemin::figures::emit(&out, id, &t).map_err(|e| e.to_string())?;
+            emitted += 1;
+        }
+    }
+    if all || p.flag("fig15") {
+        for (id, t) in fivemin::figures::tier_figures(p.flag("quick")) {
             fivemin::figures::emit(&out, id, &t).map_err(|e| e.to_string())?;
             emitted += 1;
         }
@@ -465,6 +472,12 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         "spec|merge|adaptive",
         Some("spec"),
         "stage-2 fetch protocol: speculative (1 round-trip, Nxk reads), after-merge (2 round-trips, k reads), or adaptive (per-query, from measured load)",
+    )
+    .opt(
+        "tier",
+        "none|dram:mb=N,rule=breakeven|5min|5s|clock",
+        Some("none"),
+        "per-worker DRAM tier in front of the device: repeated stage-2 reads served from DRAM when their reuse interval beats the rule's bar",
     );
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
     let shards = p.usize("shards").map_err(|e| e.to_string())?.unwrap();
@@ -473,9 +486,14 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     }
     let pace = fivemin::storage::Pace::parse(p.str("pace").unwrap())
         .map_err(|e| e.to_string())?;
-    let backend = fivemin::storage::BackendSpec::parse(p.str("backend").unwrap(), 4096)
+    let mut backend = fivemin::storage::BackendSpec::parse(p.str("backend").unwrap(), 4096)
         .map_err(|e| e.to_string())?
         .with_pace(pace);
+    if let Some(tier) = fivemin::storage::TierSpec::parse(p.str("tier").unwrap(), 4096)
+        .map_err(|e| e.to_string())?
+    {
+        backend = backend.tiered(tier);
+    }
     let fetch = fivemin::coordinator::FetchMode::parse(p.str("fetch").unwrap())
         .map_err(|e| e.to_string())?;
     let queries = p.usize("queries").map_err(|e| e.to_string())?.unwrap();
@@ -595,13 +613,16 @@ fn serve_demo(
     );
     if let Some(snap) = &st.storage {
         println!(
-            "backends : {} x {} — {} reads total, device read p50 {} p99 {}",
+            "backends : {} x {} — {} device reads total, device read p50 {} p99 {}",
             snap.shards.len(),
             snap.kind.name(),
             snap.stats.reads,
             fmt_secs(snap.stats.read_device_ns.percentile(0.5) / 1e9),
             fmt_secs(snap.stats.read_device_ns.percentile(0.99) / 1e9)
         );
+        if let Some(t) = &snap.stats.tier {
+            println!("tier     : {}", t.summary());
+        }
         for (i, shard) in snap.shards.iter().enumerate() {
             println!(
                 "  shard {i}: {} reads, read p99 {}",

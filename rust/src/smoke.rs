@@ -1,14 +1,16 @@
 //! Perf-smoke harness (`fivemin smoke`): a short serving-scenario matrix
-//! — `{mem, sim} × {spec, merge, adaptive} × shards ∈ {1, 2}` — measured
-//! end to end and gated against a checked-in baseline, so a regression in
-//! the router protocols or the adaptive control loop is caught
-//! mechanically in CI rather than by eyeball.
+//! — `{mem, sim} × {spec, merge, adaptive} × shards ∈ {1, 2}`, plus
+//! DRAM-tier cells `{mem, sim} × {clock, breakeven} × {2 MB, 8 MB}` —
+//! measured end to end and gated against a checked-in baseline, so a
+//! regression in the router protocols, the adaptive control loop, or the
+//! tier's accounting is caught mechanically in CI rather than by eyeball.
 //!
-//! Per cell the harness reports stage-2 device reads per query and the
-//! p50/p99 end-to-end (merged-answer) latency, plus the adaptive
-//! controller's merge share. The JSON artifact
-//! (`results/bench_smoke.json`) is uploaded by the `bench-smoke` CI job;
-//! the gate compares against `rust/benches/common/smoke_baseline.json`:
+//! Per cell the harness reports stage-2 reads per query (submitted and
+//! post-tier device), the p50/p99 end-to-end (merged-answer) latency,
+//! the adaptive controller's merge share, and the tier hit rate. The
+//! JSON artifact (`results/bench_smoke.json`) is uploaded by the
+//! `bench-smoke` CI job; the gate compares against
+//! `rust/benches/common/smoke_baseline.json`:
 //!
 //! * **`reads_per_query` is gated** (default ±25%). It is deterministic —
 //!   the equivalence suite pins `N×k` for speculative and `k` for
@@ -17,6 +19,14 @@
 //!   cells**: the controller may legitimately sit anywhere between the
 //!   merge and spec read costs depending on measured load, so the bound
 //!   is `merge×(1−tol) ≤ adaptive ≤ spec×(1+tol)`, not a fixed number.
+//! * **Tier cells are gated relative to their untiered peer** too: the
+//!   tier must never *increase* device reads
+//!   (`device ≤ peer×(1+tol)`), its exact accounting
+//!   (`hits + device reads == submitted reads`) is enforced when the
+//!   cell runs, and the baseline's `tier_cells` list pins the scenario
+//!   set so a silently dropped tier cell fails the gate. The absolute
+//!   hit rate is reported, not gated — it shifts with any intentional
+//!   change to the workload shape, while the invariants above cannot.
 //! * **Latencies are reported, not gated by default** (shared CI runners
 //!   jitter far more than 25%); a baseline cell may opt in to an absolute
 //!   ceiling via `p99_budget_us`.
@@ -25,26 +35,33 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::{AdaptiveConfig, Coordinator, FetchMode, Router, ServingCorpus};
 use crate::runtime::default_artifacts_dir;
-use crate::storage::BackendSpec;
+use crate::storage::{BackendSpec, TierRule, TierSpec};
 use crate::util::json::Json;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, Zipf};
 use crate::util::stats::Samples;
 use crate::util::table::Table;
 
 /// Artifact/baseline schema tag (bump on breaking shape changes).
-pub const SCHEMA: &str = "fivemin-bench-smoke/v1";
+/// v2: tier cells + device_reads_per_query / tier_hits / tier_hit_rate.
+pub const SCHEMA: &str = "fivemin-bench-smoke/v2";
+
+/// Reference arrival rate (accesses/s) for the smoke tier cells: sized so
+/// the break-even bar bites within a 48-query cell (only the hottest
+/// zipf targets demonstrate reuse under it), keeping the clock-vs-
+/// breakeven contrast visible at smoke scale.
+const TIER_SMOKE_RATE: f64 = 100.0;
 
 /// Default queries per cell. Enough for the adaptive controller (tuned to
 /// an 8-query window here) to sample several windows, small enough that
-/// the whole 12-cell matrix stays a smoke test.
+/// the whole 20-cell matrix (12 static + 8 tier) stays a smoke test.
 pub const DEFAULT_QUERIES: usize = 48;
 
-/// One measured (backend, fetch mode, shard count) scenario.
+/// One measured (backend, fetch mode, shard count[, tier]) scenario.
 #[derive(Clone, Debug)]
 pub struct SmokeCell {
     /// Storage backend behind every partition worker (`mem` | `sim`).
@@ -52,10 +69,19 @@ pub struct SmokeCell {
     pub fetch: FetchMode,
     /// Corpus shards = partition workers.
     pub shards: usize,
+    /// DRAM-tier label (e.g. `dram2:clock`) when the cell runs the tier.
+    pub tier: Option<String>,
     pub queries: usize,
-    /// Stage-2 device reads per query (coordinator-side counter, settled
-    /// against the backend snapshot).
+    /// Stage-2 reads *submitted* per query (coordinator-side counter,
+    /// settled against the backend snapshot). With a tier, each lands on
+    /// the device or in DRAM.
     pub reads_per_query: f64,
+    /// Post-tier *device* stage-2 reads per query (== `reads_per_query`
+    /// for untiered cells).
+    pub device_reads_per_query: f64,
+    /// Tier hits (0 for untiered cells).
+    pub tier_hits: u64,
+    pub tier_hit_rate: f64,
     /// End-to-end merged-answer latency percentiles (µs).
     pub p50_us: f64,
     pub p99_us: f64,
@@ -67,7 +93,10 @@ pub struct SmokeCell {
 impl SmokeCell {
     /// Stable cell key used by the baseline file.
     pub fn key(&self) -> String {
-        format!("{}/{}/{}", self.backend, self.fetch.name(), self.shards)
+        match &self.tier {
+            Some(t) => format!("{}/{}/{}/{t}", self.backend, self.fetch.name(), self.shards),
+            None => format!("{}/{}/{}", self.backend, self.fetch.name(), self.shards),
+        }
     }
 }
 
@@ -76,12 +105,17 @@ fn run_cell(
     fetch: FetchMode,
     shards: usize,
     queries: usize,
+    tier: Option<TierSpec>,
 ) -> Result<SmokeCell> {
     let corpus = Arc::new(ServingCorpus::synthetic(shards, 0x5140C + shards as u64));
-    let spec = match backend {
+    let device = match backend {
         "mem" => BackendSpec::Mem,
         "sim" => BackendSpec::small_sim(4096),
         other => return Err(anyhow!("unknown smoke backend '{other}'")),
+    };
+    let spec = match &tier {
+        Some(t) => device.tiered(t.clone()),
+        None => device,
     };
     let workers = corpus
         .partitions(shards)?
@@ -106,11 +140,18 @@ fn run_cell(
         mode => Router::partitioned_with(workers, mode)?,
     };
     // one shared query stream per (backend, shards): every fetch mode
-    // serves identical queries, so cells differ only in protocol
+    // serves identical queries, so cells differ only in protocol. Tier
+    // cells draw zipf-popular targets instead — reuse is the thing a
+    // tier cell exists to measure.
     let mut rng = Rng::new(0x5140C);
+    let zipf = Zipf::new(corpus.n, 1.1);
     let pending: Vec<_> = (0..queries)
         .map(|_| {
-            let target = rng.below(corpus.n as u64) as usize;
+            let target = if tier.is_some() {
+                zipf.sample(&mut rng).min(corpus.n - 1)
+            } else {
+                rng.below(corpus.n as u64) as usize
+            };
             router.submit(corpus.query_near(target, 0.02, &mut rng))
         })
         .collect();
@@ -124,12 +165,34 @@ fn run_cell(
     }
     let st = router.settled_stats(Duration::from_secs(10));
     let merge_share = router.adaptive_report().map(|r| r.merge_share()).unwrap_or(0.0);
+    let snap = st.storage.as_ref().ok_or_else(|| anyhow!("missing storage snapshot"))?;
+    let (tier_hits, tier_hit_rate) = snap
+        .stats
+        .tier
+        .as_ref()
+        .map(|t| (t.stage2_hits, t.hit_rate()))
+        .unwrap_or((0, 0.0));
+    if tier.is_some() {
+        // The tier's accounting invariant, enforced at measurement time:
+        // every submitted stage-2 read lands on the device or in DRAM.
+        ensure!(
+            snap.stats.stage2_reads + tier_hits == st.ssd_reads,
+            "tier accounting broken: {} device + {} hits != {} submitted",
+            snap.stats.stage2_reads,
+            tier_hits,
+            st.ssd_reads
+        );
+    }
     Ok(SmokeCell {
         backend,
         fetch,
         shards,
+        tier: tier.as_ref().map(|t| t.label()),
         queries,
         reads_per_query: st.ssd_reads as f64 / queries.max(1) as f64,
+        device_reads_per_query: snap.stats.stage2_reads as f64 / queries.max(1) as f64,
+        tier_hits,
+        tier_hit_rate,
         p50_us: lat.percentile(0.5) / 1e3,
         p99_us: lat.percentile(0.99) / 1e3,
         merge_share,
@@ -138,13 +201,24 @@ fn run_cell(
 
 /// Run the full scenario matrix. Every cell serves `queries` queries
 /// open-loop through a partitioned router with one worker per corpus
-/// shard.
+/// shard; tier cells add a DRAM tier in front of each worker's device.
 pub fn run_matrix(queries: usize) -> Result<Vec<SmokeCell>> {
     let mut cells = Vec::new();
     for backend in ["mem", "sim"] {
         for shards in [1usize, 2] {
             for fetch in [FetchMode::Speculative, FetchMode::AfterMerge, FetchMode::Adaptive] {
-                cells.push(run_cell(backend, fetch, shards, queries)?);
+                cells.push(run_cell(backend, fetch, shards, queries, None)?);
+            }
+        }
+    }
+    // DRAM-tier cells: {clock, breakeven} at two capacities, single
+    // partition, speculative fetch (the untiered mem|sim/spec/1 cells are
+    // the relative-gate peers).
+    for backend in ["mem", "sim"] {
+        for mb in [2u64, 8] {
+            for rule in [TierRule::Clock, TierRule::Breakeven] {
+                let tier = TierSpec { rate: TIER_SMOKE_RATE, ..TierSpec::new(mb, rule, 4096) };
+                cells.push(run_cell(backend, FetchMode::Speculative, 1, queries, Some(tier))?);
             }
         }
     }
@@ -154,14 +228,18 @@ pub fn run_matrix(queries: usize) -> Result<Vec<SmokeCell>> {
 /// Render the matrix as the repo's standard ASCII/CSV table.
 pub fn table(cells: &[SmokeCell]) -> Table {
     let mut t = Table::new(
-        "bench-smoke: serve scenario matrix — stage-2 reads/query and \
-         end-to-end latency per {backend, fetch, shards} cell",
+        "bench-smoke: serve scenario matrix — stage-2 reads/query (submitted \
+         and post-tier device) and end-to-end latency per \
+         {backend, fetch, shards[, tier]} cell",
         &[
             "backend",
             "fetch",
             "shards",
+            "tier",
             "queries",
             "reads_per_query",
+            "dev_reads_per_query",
+            "tier_hit_rate",
             "p50_us",
             "p99_us",
             "merge_share",
@@ -172,8 +250,11 @@ pub fn table(cells: &[SmokeCell]) -> Table {
             c.backend.to_string(),
             c.fetch.name().to_string(),
             format!("{}", c.shards),
+            c.tier.clone().unwrap_or_else(|| "-".into()),
             format!("{}", c.queries),
             format!("{:.1}", c.reads_per_query),
+            format!("{:.1}", c.device_reads_per_query),
+            if c.tier.is_some() { format!("{:.2}", c.tier_hit_rate) } else { "-".into() },
             format!("{:.1}", c.p50_us),
             format!("{:.1}", c.p99_us),
             format!("{:.2}", c.merge_share),
@@ -187,16 +268,23 @@ pub fn to_json(cells: &[SmokeCell]) -> Json {
     let arr: Vec<Json> = cells
         .iter()
         .map(|c| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("backend", Json::Str(c.backend.to_string())),
                 ("fetch", Json::Str(c.fetch.name().to_string())),
                 ("shards", Json::Num(c.shards as f64)),
                 ("queries", Json::Num(c.queries as f64)),
                 ("reads_per_query", Json::Num(c.reads_per_query)),
+                ("device_reads_per_query", Json::Num(c.device_reads_per_query)),
                 ("p50_us", Json::Num(c.p50_us)),
                 ("p99_us", Json::Num(c.p99_us)),
                 ("merge_share", Json::Num(c.merge_share)),
-            ])
+            ];
+            if let Some(t) = &c.tier {
+                fields.push(("tier", Json::Str(t.clone())));
+                fields.push(("tier_hits", Json::Num(c.tier_hits as f64)));
+                fields.push(("tier_hit_rate", Json::Num(c.tier_hit_rate)));
+            }
+            Json::obj(fields)
         })
         .collect();
     Json::obj(vec![
@@ -229,7 +317,7 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
     };
     // static cells: compare against the checked-in expectation
     for c in cells {
-        if c.fetch == FetchMode::Adaptive {
+        if c.fetch == FetchMode::Adaptive || c.tier.is_some() {
             continue;
         }
         let key = c.key();
@@ -266,13 +354,13 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
     }
     // adaptive cells: bounded by the same run's static modes
     for c in cells {
-        if c.fetch != FetchMode::Adaptive {
+        if c.fetch != FetchMode::Adaptive || c.tier.is_some() {
             continue;
         }
         let peer = |m: FetchMode| {
-            cells
-                .iter()
-                .find(|p| p.backend == c.backend && p.shards == c.shards && p.fetch == m)
+            cells.iter().find(|p| {
+                p.backend == c.backend && p.shards == c.shards && p.fetch == m && p.tier.is_none()
+            })
         };
         let (Some(spec), Some(merge)) =
             (peer(FetchMode::Speculative), peer(FetchMode::AfterMerge))
@@ -289,6 +377,58 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
                 c.key(),
                 c.reads_per_query
             ));
+        }
+    }
+    // tier cells: gated relative to the same run's untiered peer — the
+    // tier must never increase device traffic, and its submitted count
+    // must match the peer's protocol cost (hit-rate absolutes are
+    // reported, not gated; run_cell enforces the hits+device==submitted
+    // identity before a cell ever reaches this gate)
+    for c in cells {
+        if c.tier.is_none() {
+            continue;
+        }
+        let peer = cells.iter().find(|p| {
+            p.backend == c.backend
+                && p.shards == c.shards
+                && p.fetch == c.fetch
+                && p.tier.is_none()
+        });
+        let Some(peer) = peer else {
+            failures.push(format!("cell {}: untiered peer missing from run", c.key()));
+            continue;
+        };
+        if (c.reads_per_query - peer.reads_per_query).abs() > tol * peer.reads_per_query {
+            failures.push(format!(
+                "cell {}: submitted reads/query {:.2} diverge from untiered peer {:.2} — \
+                 the tier must not change what the router submits",
+                c.key(),
+                c.reads_per_query,
+                peer.reads_per_query
+            ));
+        }
+        if c.device_reads_per_query > peer.reads_per_query * (1.0 + tol) {
+            failures.push(format!(
+                "cell {}: tiered device reads/query {:.2} exceed untiered peer {:.2}",
+                c.key(),
+                c.device_reads_per_query,
+                peer.reads_per_query
+            ));
+        }
+        if c.device_reads_per_query <= 0.0 {
+            failures.push(format!(
+                "cell {}: zero device reads — the tier cannot absorb cold misses",
+                c.key()
+            ));
+        }
+    }
+    // tier scenarios the baseline pins but the run never produced
+    if let Some(list) = baseline.get(&["tier_cells"]).and_then(|t| t.as_arr()) {
+        for want in list {
+            let Some(key) = want.as_str() else { continue };
+            if !cells.iter().any(|c| c.key() == key) {
+                failures.push(format!("cell {key}: in baseline tier_cells but not measured"));
+            }
         }
     }
     failures
@@ -322,11 +462,38 @@ mod tests {
             backend,
             fetch,
             shards,
+            tier: None,
             queries: 8,
             reads_per_query: rpq,
+            device_reads_per_query: rpq,
+            tier_hits: 0,
+            tier_hit_rate: 0.0,
             p50_us: p99 / 2.0,
             p99_us: p99,
             merge_share: if fetch == FetchMode::Adaptive { 0.5 } else { 0.0 },
+        }
+    }
+
+    fn tier_cell(
+        backend: &'static str,
+        label: &str,
+        submitted_rpq: f64,
+        device_rpq: f64,
+    ) -> SmokeCell {
+        let hits = ((submitted_rpq - device_rpq) * 8.0) as u64;
+        SmokeCell {
+            backend,
+            fetch: FetchMode::Speculative,
+            shards: 2,
+            tier: Some(label.to_string()),
+            queries: 8,
+            reads_per_query: submitted_rpq,
+            device_reads_per_query: device_rpq,
+            tier_hits: hits,
+            tier_hit_rate: 1.0 - device_rpq / submitted_rpq.max(1e-9),
+            p50_us: 100.0,
+            p99_us: 200.0,
+            merge_share: 0.0,
         }
     }
 
@@ -424,18 +591,81 @@ mod tests {
     }
 
     #[test]
+    fn gate_bounds_tier_cells_by_their_untiered_peer() {
+        let mut run = matched_run();
+        run.push(tier_cell("mem", "dram2:clock", 128.0, 80.0));
+        let b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        assert!(gate(&run, &b, 0.25).is_empty(), "tier under its peer passes");
+        // a tier that somehow inflates device reads beyond the peer fails
+        run.last_mut().unwrap().device_reads_per_query = 200.0;
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("exceed untiered peer"));
+        // a tier with zero device reads is an accounting impossibility
+        run.last_mut().unwrap().device_reads_per_query = 0.0;
+        let failures = gate(&run, &b, 0.25);
+        assert!(failures.iter().any(|f| f.contains("zero device reads")), "{failures:?}");
+        // the tier must not change what the router submits
+        run.last_mut().unwrap().device_reads_per_query = 80.0;
+        run.last_mut().unwrap().reads_per_query = 64.0; // != peer's 128
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("diverge from untiered peer"));
+        // a tier cell with no untiered peer in the run fails
+        let orphan = vec![tier_cell("sim", "dram2:clock", 128.0, 80.0)];
+        let failures = gate(&orphan, &baseline(&[]), 0.25);
+        assert!(failures.iter().any(|f| f.contains("untiered peer missing")), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_flags_tier_cells_pinned_but_not_measured() {
+        let b = Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("tolerance", Json::Num(0.25)),
+            (
+                "cells",
+                Json::obj(vec![
+                    ("mem/spec/2", Json::obj(vec![("reads_per_query", Json::Num(128.0))])),
+                    ("mem/merge/2", Json::obj(vec![("reads_per_query", Json::Num(64.0))])),
+                ]),
+            ),
+            (
+                "tier_cells",
+                Json::Arr(vec![
+                    Json::Str("mem/spec/2/dram2:clock".into()),
+                    Json::Str("mem/spec/2/dram8:clock".into()),
+                ]),
+            ),
+        ]);
+        let mut run = matched_run();
+        run.push(tier_cell("mem", "dram2:clock", 128.0, 80.0));
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("dram8:clock"));
+        run.push(tier_cell("mem", "dram8:clock", 128.0, 70.0));
+        assert!(gate(&run, &b, 0.25).is_empty());
+    }
+
+    #[test]
     fn artifact_json_round_trips() {
-        let run = matched_run();
+        let mut run = matched_run();
+        run.push(tier_cell("mem", "dram2:clock", 128.0, 80.0));
         let doc = to_json(&run);
         let parsed = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(parsed.get(&["schema"]).unwrap().as_str(), Some(SCHEMA));
         let cells = parsed.get(&["cells"]).unwrap().as_arr().unwrap();
-        assert_eq!(cells.len(), 3);
+        assert_eq!(cells.len(), 4);
         assert_eq!(
             cells[0].get(&["reads_per_query"]).and_then(|v| v.as_f64()),
             Some(128.0)
         );
         assert_eq!(cells[2].get(&["fetch"]).and_then(|v| v.as_str()), Some("adaptive"));
+        assert_eq!(cells[3].get(&["tier"]).and_then(|v| v.as_str()), Some("dram2:clock"));
+        assert_eq!(
+            cells[3].get(&["device_reads_per_query"]).and_then(|v| v.as_f64()),
+            Some(80.0)
+        );
+        assert!(cells[0].get(&["tier"]).is_none(), "untiered cells omit the tier field");
     }
 
     #[test]
@@ -457,5 +687,20 @@ mod tests {
                 }
             }
         }
+        // the tier scenario set is pinned too: exactly what run_matrix runs
+        let tier_keys = doc.get(&["tier_cells"]).and_then(|t| t.as_arr()).expect("tier_cells");
+        let mut want = Vec::new();
+        for backend in ["mem", "sim"] {
+            for mb in [2u64, 8] {
+                for rule in ["clock", "breakeven"] {
+                    want.push(format!("{backend}/spec/1/dram{mb}:{rule}"));
+                }
+            }
+        }
+        let got: Vec<&str> = tier_keys.iter().filter_map(|k| k.as_str()).collect();
+        for w in &want {
+            assert!(got.contains(&w.as_str()), "baseline tier_cells missing {w}");
+        }
+        assert_eq!(got.len(), want.len(), "unexpected extra tier cells pinned");
     }
 }

@@ -41,6 +41,12 @@
 //!   round-robin interleaving so narrow hot ranges spread too), so
 //!   capacity and IOPS scale together; spec strings like `sim:shards=4`
 //!   or `sim:shards=4,map=interleave` build one.
+//! * [`TieredBackend`] — a bounded DRAM tier in front of any of the
+//!   above, admitting and retaining pages by the paper's *live*
+//!   break-even rule (or fixed 5 min / 5 s / CLOCK baselines); tier hits
+//!   bypass device submission entirely, so `device reads == tier misses`
+//!   exactly. Built by wrapping any spec via [`BackendSpec::tiered`]
+//!   (`--tier dram:mb=N,rule=breakeven|5min|5s|clock` on the CLIs).
 //!
 //! Future backends (io_uring against a real device) plug in at this
 //! trait; see ROADMAP.md.
@@ -49,6 +55,7 @@ pub mod mem;
 pub mod model;
 pub mod sharded;
 pub mod sim;
+pub mod tiered;
 
 use std::ops::Range;
 
@@ -62,6 +69,7 @@ pub use mem::MemBackend;
 pub use model::ModelBackend;
 pub use sharded::{MapPolicy, ShardMap, ShardedBackend};
 pub use sim::{Pace, SimBackend};
+pub use tiered::{TierRule, TierSpec, TierStats, TieredBackend, DEFAULT_TIER_RATE};
 
 /// Block-level operation kind.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -136,6 +144,11 @@ pub struct BackendStats {
     pub write_device_ns: LatencyHist,
     /// Virtual device time spanned by the traffic so far (ns).
     pub virtual_ns: u64,
+    /// DRAM-tier counters when a [`TieredBackend`] fronts this traffic
+    /// (`None` otherwise). The aggregate counters above are *post-tier*
+    /// device traffic — tier hits never reach the device, so
+    /// `reads == tier.misses` holds exactly for tiered backends.
+    pub tier: Option<TierStats>,
 }
 
 impl BackendStats {
@@ -147,6 +160,7 @@ impl BackendStats {
             read_device_ns: LatencyHist::for_latency_ns(),
             write_device_ns: LatencyHist::for_latency_ns(),
             virtual_ns: 0,
+            tier: None,
         }
     }
 
@@ -175,8 +189,9 @@ impl BackendStats {
     }
 
     /// Fold another backend's traffic into this one (multi-device /
-    /// multi-worker aggregation): counts add, histograms merge, and the
-    /// span is the busiest contributor's (parallel devices).
+    /// multi-worker aggregation): counts add, histograms merge, the
+    /// span is the busiest contributor's (parallel devices), and the
+    /// DRAM-tier counters fold too ([`TierStats::merge`]).
     pub fn merge(&mut self, other: &BackendStats) {
         self.reads += other.reads;
         self.writes += other.writes;
@@ -184,6 +199,11 @@ impl BackendStats {
         self.read_device_ns.merge(&other.read_device_ns);
         self.write_device_ns.merge(&other.write_device_ns);
         self.virtual_ns = self.virtual_ns.max(other.virtual_ns);
+        match (&mut self.tier, &other.tier) {
+            (Some(m), Some(o)) => m.merge(o),
+            (None, Some(o)) => self.tier = Some(o.clone()),
+            _ => {}
+        }
     }
 }
 
@@ -381,6 +401,7 @@ pub enum BackendKind {
     Model,
     Sim,
     Sharded,
+    Tiered,
 }
 
 impl BackendKind {
@@ -390,6 +411,7 @@ impl BackendKind {
             BackendKind::Model => "model",
             BackendKind::Sim => "sim",
             BackendKind::Sharded => "sharded",
+            BackendKind::Tiered => "tiered",
         }
     }
 }
@@ -422,6 +444,12 @@ pub enum BackendSpec {
         n_shards: usize,
         lbas_per_shard: u64,
         policy: MapPolicy,
+    },
+    /// An economics-governed DRAM tier ([`TieredBackend`]) in front of
+    /// any inner spec; built via [`BackendSpec::tiered`].
+    Tiered {
+        inner: Box<BackendSpec>,
+        tier: TierSpec,
     },
 }
 
@@ -501,21 +529,32 @@ impl BackendSpec {
         BackendSpec::Sim { cfg, prm, pace: Pace::Afap }
     }
 
+    /// Wrap this spec in an economics-governed DRAM tier: repeated reads
+    /// are served from a bounded DRAM set admitted by `tier.rule` (the
+    /// live break-even interval, a fixed 5 min / 5 s bar, or a plain
+    /// CLOCK control) — see [`tiered`].
+    pub fn tiered(self, tier: TierSpec) -> Self {
+        BackendSpec::Tiered { inner: Box::new(self), tier }
+    }
+
     pub fn kind(&self) -> BackendKind {
         match self {
             BackendSpec::Mem => BackendKind::Mem,
             BackendSpec::Model { .. } => BackendKind::Model,
             BackendSpec::Sim { .. } => BackendKind::Sim,
             BackendSpec::Sharded { .. } => BackendKind::Sharded,
+            BackendSpec::Tiered { .. } => BackendKind::Tiered,
         }
     }
 
     /// The innermost device kind: what actually serves each I/O
-    /// (`Sharded` recurses into its per-shard spec). Callers sizing a
-    /// workload to device cost should key on this, not [`Self::kind`].
+    /// (`Sharded` and `Tiered` recurse into their inner spec). Callers
+    /// sizing a workload to device cost should key on this, not
+    /// [`Self::kind`].
     pub fn device_kind(&self) -> BackendKind {
         match self {
             BackendSpec::Sharded { inner, .. } => inner.device_kind(),
+            BackendSpec::Tiered { inner, .. } => inner.device_kind(),
             other => other.kind(),
         }
     }
@@ -532,6 +571,9 @@ impl BackendSpec {
                     lbas_per_shard,
                     policy,
                 }
+            }
+            BackendSpec::Tiered { inner, tier } => {
+                BackendSpec::Tiered { inner: Box::new((*inner).with_pace(pace)), tier }
             }
             other => other,
         }
@@ -556,6 +598,9 @@ impl BackendSpec {
                     policy,
                 }
             }
+            BackendSpec::Tiered { inner, tier } => {
+                BackendSpec::Tiered { inner: Box::new((*inner).for_capacity(total_lbas)), tier }
+            }
             other => other,
         }
     }
@@ -576,6 +621,9 @@ impl BackendSpec {
                     .expect("shard shape validated at construction");
                 let devices = (0..*n_shards).map(|_| inner.build()).collect();
                 Box::new(ShardedBackend::new(map, devices))
+            }
+            BackendSpec::Tiered { inner, tier } => {
+                Box::new(TieredBackend::new(inner.build(), tier))
             }
         }
     }

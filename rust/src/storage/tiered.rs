@@ -1,0 +1,1031 @@
+//! Economics-driven DRAM tier: the five-second rule as a *live admission
+//! policy* on the request path.
+//!
+//! Until now the paper's break-even interval existed in this repo only as
+//! an offline calculation ([`crate::model::economics::break_even`]): a
+//! number in a figure. [`TieredBackend`] turns it into the system's
+//! placement brain. It wraps any [`StorageBackend`] (mem/model/sim/
+//! sharded) with a bounded DRAM tier that serves repeated block reads
+//! from memory — and decides *which* blocks deserve DRAM using the rule
+//! itself: a page is admitted (and retained) only when its observed
+//! inter-reference interval beats the break-even interval computed from
+//! the configured platform/SSD economics. Both serving engines sit on
+//! this one seam — the ANN coordinator's stage-2 fetch path and the KV
+//! engine's bucket traffic (via [`crate::kvstore::BackedStore`]) — so
+//! DRAM-vs-flash placement is one policy for both workloads, not an
+//! ad-hoc cache per engine (the KV engine's old `KvCache` is retired;
+//! its CLOCK second-chance core lives on here as the tier's eviction
+//! machinery).
+//!
+//! # Policies
+//!
+//! * [`TierRule::Breakeven`] — the live bar: τ from Eq. 1 for the
+//!   configured platform (`--tier …,platform=cpu|gpu`) and the
+//!   Storage-Next SLC device at the tier's block size. Seconds, not
+//!   minutes — the paper's headline.
+//! * [`TierRule::FiveMin`] / [`TierRule::FiveSec`] — fixed 300 s / 5 s
+//!   baselines (Gray's classical rule and the paper's new regime), for
+//!   comparison sweeps (fig15).
+//! * [`TierRule::Clock`] — a plain CLOCK cache control arm: admit every
+//!   missed read, evict second-chance, no economics.
+//!
+//! # The tier's clock
+//!
+//! The rule's thresholds are in *seconds*; the tier's observable is
+//! *references*. Following the five-minute rule's own framing ("keep a
+//! page that is re-referenced every X seconds"), the tier runs on a
+//! reference clock and maps thresholds onto it with a configured
+//! reference arrival rate (`rate=R` accesses/s, default
+//! [`DEFAULT_TIER_RATE`]): the k-th reference happens at model time
+//! `k / R`, so a threshold of τ seconds is `τ·R` references. This keeps
+//! the policy independent of host wall clock (meaningless when MQSim-Next
+//! runs as-fast-as-possible in virtual time) and lets figures sweep the
+//! regime where the 5 s and 300 s rules genuinely disagree.
+//!
+//! # Accounting invariants
+//!
+//! The tier is a timing/accounting plane like every other backend —
+//! payloads stay in the engines' data planes (see the [`crate::storage`]
+//! module docs), so answers are bit-identical with and without the tier
+//! (`rust/tests/router_equivalence_prop.rs` pins this). What changes is
+//! *device traffic*:
+//!
+//! * tier hits complete at DRAM latency and **bypass device submission
+//!   entirely** — `device reads == tier misses`, exactly;
+//! * [`StorageBackend::stats`] reports the *inner* (post-tier) device
+//!   traffic, with the tier's own counters attached as
+//!   [`BackendStats::tier`], so the adaptive fetch controller's
+//!   [`DeviceWindow`] sampling prices `S̄` from real device reads only —
+//!   no double-counting between the tier and the controller;
+//! * writes pass through (write-through: WAL persistence and bucket
+//!   commits are always charged to the device) and refresh recency.
+//!
+//! # Cold-set tracking
+//!
+//! Admission needs each missed page's inter-reference interval, but
+//! per-page timestamps for the whole address space would cost O(corpus)
+//! DRAM. The tier keeps exact last-reference ticks only for the
+//! *resident* set (in its CLOCK slots) and tracks the cold set with a
+//! two-generation table rotated every threshold-width epoch: any page
+//! re-referenced within the admission bar is still in one of the two
+//! generations, while pages colder than the bar age out of tracking
+//! altogether — they could never be admitted, so forgetting them is
+//! free. Observed intervals additionally feed a coarse reuse histogram
+//! ([`TierStats::reuse_ns`]) for observability.
+
+use std::collections::HashMap;
+use std::ops::Range;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::{IoMix, NandKind, PlatformConfig, PlatformKind, SsdConfig};
+use crate::model::economics;
+use crate::sim::SimStats;
+use crate::util::stats::LatencyHist;
+
+use super::{
+    BackendKind, BackendStats, DeviceWindow, IoClass, IoCompletion, IoOp, IoRequest,
+    StorageBackend, StorageSnapshot,
+};
+
+/// DRAM-class completion latency charged for a tier hit (ns).
+const TIER_HIT_NS: u64 = 100;
+
+/// Default reference arrival rate (accesses/s) mapping the rule's
+/// second-denominated thresholds onto the tier's reference clock.
+pub const DEFAULT_TIER_RATE: f64 = 1_000.0;
+
+/// Admission/retention policy of a [`TieredBackend`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierRule {
+    /// Live break-even interval from Eq. 1 (platform + Storage-Next SLC
+    /// at the tier's block size) — the paper's rule, made operational.
+    Breakeven,
+    /// Gray's classical five-minute rule (fixed 300 s bar).
+    FiveMin,
+    /// The paper's five-*second* regime (fixed 5 s bar).
+    FiveSec,
+    /// Plain CLOCK control: admit every missed read, second-chance
+    /// eviction, no economics.
+    Clock,
+}
+
+impl TierRule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TierRule::Breakeven => "breakeven",
+            TierRule::FiveMin => "5min",
+            TierRule::FiveSec => "5s",
+            TierRule::Clock => "clock",
+        }
+    }
+
+    /// Parse a `rule=` spec value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "breakeven" | "be" => Ok(TierRule::Breakeven),
+            "5min" | "300s" => Ok(TierRule::FiveMin),
+            "5s" | "5sec" => Ok(TierRule::FiveSec),
+            "clock" => Ok(TierRule::Clock),
+            other => bail!("unknown tier rule '{other}' (want breakeven|5min|5s|clock)"),
+        }
+    }
+
+    /// The admission bar in seconds; `None` for the CLOCK control (no
+    /// economic bar).
+    pub fn threshold_secs(
+        &self,
+        platform: &PlatformConfig,
+        ssd: &SsdConfig,
+        l_blk: u32,
+    ) -> Option<f64> {
+        match self {
+            TierRule::Breakeven => Some(
+                economics::break_even(platform, ssd, l_blk as u64, IoMix::paper_default()).total,
+            ),
+            TierRule::FiveMin => Some(300.0),
+            TierRule::FiveSec => Some(5.0),
+            TierRule::Clock => None,
+        }
+    }
+}
+
+/// Buildable description of a DRAM tier — `Clone + Send` so a router can
+/// hand each serving worker its own instance (each worker gets its own
+/// tier of this capacity, in front of its own device).
+#[derive(Clone, Debug)]
+pub struct TierSpec {
+    /// DRAM budget of the tier (bytes).
+    pub capacity_bytes: u64,
+    pub rule: TierRule,
+    /// Reference arrival rate (accesses/s) mapping threshold seconds onto
+    /// the tier's reference clock — see the module docs.
+    pub rate: f64,
+    /// Host platform whose economics price the break-even bar.
+    pub platform: PlatformKind,
+    /// Tier page size (bytes): the block size of the traffic it fronts
+    /// (512 for KV buckets, 4096 for full ANN vectors).
+    pub l_blk: u32,
+}
+
+impl TierSpec {
+    /// A tier of `mb` megabytes with the given rule, paper-default rate
+    /// and CPU+DDR platform economics.
+    pub fn new(mb: u64, rule: TierRule, l_blk: u32) -> Self {
+        TierSpec {
+            capacity_bytes: mb * (1 << 20),
+            rule,
+            rate: DEFAULT_TIER_RATE,
+            platform: PlatformKind::CpuDdr,
+            l_blk,
+        }
+    }
+
+    /// Parse a `--tier` CLI value: `none` (no tier, returns `Ok(None)`)
+    /// or `dram:mb=N[,rule=breakeven|5min|5s|clock][,rate=R][,platform=cpu|gpu]`.
+    /// `l_blk` is the block size the caller serves (512 for KV buckets,
+    /// 4096 for full ANN vectors).
+    pub fn parse(s: &str, l_blk: u32) -> Result<Option<Self>> {
+        let (base, opts) = crate::util::cli::split_spec(s);
+        match base {
+            "none" | "" => return Ok(None),
+            "dram" => {}
+            other => {
+                bail!("unknown tier '{other}' (want none | dram:mb=N,rule=breakeven|5min|5s|clock)")
+            }
+        }
+        let mut mb: Option<u64> = None;
+        let mut rule = TierRule::Breakeven;
+        let mut rate = DEFAULT_TIER_RATE;
+        let mut platform = PlatformKind::CpuDdr;
+        for (k, v) in &opts {
+            match *k {
+                "mb" => {
+                    let n: u64 = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("invalid tier size '{v}' MB"))?;
+                    ensure!(n >= 1, "tier size must be >= 1 MB, got {n}");
+                    mb = Some(n);
+                }
+                "rule" => rule = TierRule::parse(v)?,
+                "rate" => {
+                    rate = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("invalid tier rate '{v}' accesses/s"))?;
+                    ensure!(rate > 0.0, "tier rate must be > 0, got {rate}");
+                }
+                "platform" => {
+                    platform = match *v {
+                        "cpu" => PlatformKind::CpuDdr,
+                        "gpu" => PlatformKind::GpuGddr,
+                        other => bail!("unknown tier platform '{other}' (want cpu|gpu)"),
+                    }
+                }
+                other => bail!(
+                    "unknown tier option '{other}' (want mb=N, rule=breakeven|5min|5s|clock, \
+                     rate=R, platform=cpu|gpu)"
+                ),
+            }
+        }
+        let Some(mb) = mb else {
+            bail!("tier spec needs mb=N (e.g. --tier dram:mb=8,rule=breakeven)");
+        };
+        Ok(Some(TierSpec {
+            capacity_bytes: mb * (1 << 20),
+            rule,
+            rate,
+            platform,
+            l_blk,
+        }))
+    }
+
+    /// Short cell label for tables/baselines, e.g. `dram8:breakeven`.
+    pub fn label(&self) -> String {
+        format!("dram{}:{}", self.capacity_bytes >> 20, self.rule.name())
+    }
+
+    /// Tier capacity in pages of `l_blk` bytes.
+    pub fn capacity_pages(&self) -> u64 {
+        (self.capacity_bytes / self.l_blk as u64).max(1)
+    }
+
+    /// The live bar in seconds (`None` for the CLOCK control).
+    pub fn threshold_secs(&self) -> Option<f64> {
+        let platform = PlatformConfig::preset(self.platform);
+        let ssd = SsdConfig::storage_next(NandKind::Slc);
+        self.rule.threshold_secs(&platform, &ssd, self.l_blk)
+    }
+}
+
+/// Cumulative tier statistics, carried on [`BackendStats::tier`] so they
+/// flow through `StorageSnapshot` → `ServeStats` → `Router::merged_stats`
+/// unchanged (counts add across shards/workers; resident/capacity pages
+/// add too — the fleet's aggregate DRAM footprint).
+#[derive(Clone, Debug)]
+pub struct TierStats {
+    pub rule: TierRule,
+    /// Reads served from the DRAM tier (no device submission).
+    pub hits: u64,
+    /// Reads forwarded to the device. Invariant: device reads == misses.
+    pub misses: u64,
+    /// Tier hits on [`IoClass::Stage2`] reads — what reconciles the
+    /// coordinator's submitted stage-2 count with the device-side
+    /// `stage2_reads` (submitted == device stage-2 reads + stage2 hits).
+    pub stage2_hits: u64,
+    /// Missed reads admitted into the tier.
+    pub admitted: u64,
+    /// Missed reads rejected by the rule (reuse interval over the bar, or
+    /// never seen before).
+    pub rejected: u64,
+    /// Pages evicted under capacity pressure.
+    pub evicted: u64,
+    pub resident_pages: u64,
+    pub capacity_pages: u64,
+    /// Tier page size (bytes).
+    pub page_bytes: u32,
+    /// The live admission bar in seconds (infinite for the CLOCK rule).
+    pub threshold_secs: f64,
+    /// Coarse histogram of observed inter-reference intervals, in model
+    /// nanoseconds (reference clock / rate).
+    pub reuse_ns: LatencyHist,
+}
+
+impl TierStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_pages * self.page_bytes as u64
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_pages * self.page_bytes as u64
+    }
+
+    /// One-line human summary for CLI reporting — shared by `fivemin
+    /// serve` and both examples so the three surfaces cannot drift.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} (bar {}) — {:.1}% hit rate ({} hits / {} misses == device reads), \
+             {}/{} pages resident, {} admitted / {} rejected / {} evicted",
+            self.rule.name(),
+            if self.threshold_secs.is_finite() {
+                format!("{:.1}s", self.threshold_secs)
+            } else {
+                "none".into()
+            },
+            100.0 * self.hit_rate(),
+            self.hits,
+            self.misses,
+            self.resident_pages,
+            self.capacity_pages,
+            self.admitted,
+            self.rejected,
+            self.evicted,
+        )
+    }
+
+    /// Fold another tier's counters into this one (multi-worker /
+    /// multi-shard aggregation): traffic counts add, DRAM footprints add,
+    /// the reuse histograms merge. The rule/threshold are kept from
+    /// `self` (aggregating routers run one policy fleet-wide).
+    pub fn merge(&mut self, other: &TierStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.stage2_hits += other.stage2_hits;
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.evicted += other.evicted;
+        self.resident_pages += other.resident_pages;
+        self.capacity_pages += other.capacity_pages;
+        self.reuse_ns.merge(&other.reuse_ns);
+    }
+}
+
+/// One CLOCK slot of the residency core.
+#[derive(Clone, Copy)]
+struct Slot {
+    lba: u64,
+    referenced: bool,
+    occupied: bool,
+    /// Reference-clock tick of the last touch (exact — the resident set
+    /// is bounded, so per-page ticks are affordable here).
+    last_tick: u64,
+}
+
+/// The tier's residency set: a CLOCK (second-chance) core — the retired
+/// `kvstore::cache::KvCache` reduced to its eviction machinery, re-keyed
+/// by lba and annotated with last-reference ticks so eviction can prefer
+/// pages whose reuse no longer clears the economic bar.
+struct Residency {
+    slots: Vec<Slot>,
+    map: HashMap<u64, usize>,
+    hand: usize,
+    /// Never-used slot indices; eviction only begins once these run out,
+    /// so admission always fills the configured capacity first.
+    free: Vec<usize>,
+}
+
+impl Residency {
+    fn new(capacity_pages: u64) -> Self {
+        let cap = capacity_pages.max(1) as usize;
+        Residency {
+            slots: vec![Slot { lba: 0, referenced: false, occupied: false, last_tick: 0 }; cap],
+            map: HashMap::with_capacity(cap),
+            hand: 0,
+            free: (0..cap).rev().collect(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Touch `lba` if resident: set the reference bit, stamp `now`, and
+    /// return the interval since its previous touch.
+    fn touch(&mut self, lba: u64, now: u64) -> Option<u64> {
+        let &i = self.map.get(&lba)?;
+        let s = &mut self.slots[i];
+        let interval = now.saturating_sub(s.last_tick);
+        s.referenced = true;
+        s.last_tick = now;
+        Some(interval)
+    }
+
+    /// Insert `lba` (must not be resident), evicting if full. Returns the
+    /// evicted page's `(lba, last_tick)` so the caller can hand its
+    /// reference history back to the cold-set tracker.
+    fn insert(&mut self, lba: u64, now: u64, threshold: Option<u64>) -> Option<(u64, u64)> {
+        let i = match self.free.pop() {
+            Some(i) => i,
+            None => self.victim(now, threshold),
+        };
+        let old = self.slots[i];
+        let evicted = if old.occupied {
+            self.map.remove(&old.lba);
+            Some((old.lba, old.last_tick))
+        } else {
+            None
+        };
+        self.slots[i] = Slot { lba, referenced: true, occupied: true, last_tick: now };
+        self.map.insert(lba, i);
+        evicted
+    }
+
+    /// Pick the eviction victim. The scan prefers pages whose observed
+    /// reuse no longer clears the bar (`now - last_tick > threshold`):
+    /// pass 1 sweeps once, evicting an unreferenced over-bar page and
+    /// clearing reference bits of over-bar pages only; pass 2 takes any
+    /// over-bar page those cleared bits exposed; pass 3 falls back to
+    /// classic second-chance among the in-bar pages. For the CLOCK rule
+    /// (`threshold == None`) passes 1–2 are skipped entirely.
+    fn victim(&mut self, now: u64, threshold: Option<u64>) -> usize {
+        let cap = self.slots.len();
+        let over_bar = |s: &Slot, thr: u64| s.occupied && now.saturating_sub(s.last_tick) > thr;
+        if let Some(thr) = threshold {
+            for _ in 0..cap {
+                let i = self.hand;
+                self.hand = (self.hand + 1) % cap;
+                let s = &mut self.slots[i];
+                if !s.occupied {
+                    return i;
+                }
+                if over_bar(s, thr) {
+                    if s.referenced {
+                        s.referenced = false;
+                    } else {
+                        return i;
+                    }
+                }
+            }
+            for _ in 0..cap {
+                let i = self.hand;
+                self.hand = (self.hand + 1) % cap;
+                let s = &self.slots[i];
+                if over_bar(s, thr) && !s.referenced {
+                    return i;
+                }
+            }
+        }
+        loop {
+            let i = self.hand;
+            self.hand = (self.hand + 1) % cap;
+            let s = &mut self.slots[i];
+            if !s.occupied || !s.referenced {
+                return i;
+            }
+            s.referenced = false;
+        }
+    }
+}
+
+/// Coarse inter-reference tracking for the cold (non-resident) set: a
+/// two-generation last-tick table rotated every `epoch_ticks` (or when a
+/// generation hits `max_entries`). Any page re-referenced within one
+/// epoch is found in `cur ∪ prev`; pages colder than two epochs age out
+/// of tracking — with the epoch sized to the admission bar, exactly the
+/// pages the rule could never admit anyway.
+struct ReuseTracker {
+    cur: HashMap<u64, u64>,
+    prev: HashMap<u64, u64>,
+    epoch_start: u64,
+    epoch_ticks: u64,
+    max_entries: usize,
+}
+
+impl ReuseTracker {
+    fn new(epoch_ticks: u64, max_entries: usize) -> Self {
+        ReuseTracker {
+            cur: HashMap::new(),
+            prev: HashMap::new(),
+            epoch_start: 0,
+            epoch_ticks: epoch_ticks.max(1),
+            max_entries: max_entries.max(16),
+        }
+    }
+
+    /// Record a reference to `lba` at tick `now`; returns the interval
+    /// since its last tracked reference, if still tracked.
+    fn note(&mut self, lba: u64, now: u64) -> Option<u64> {
+        let last = self.cur.get(&lba).or_else(|| self.prev.get(&lba)).copied();
+        self.record(lba, now);
+        last.map(|t| now.saturating_sub(t))
+    }
+
+    /// Upsert a last-reference tick without interval lookup (writes, and
+    /// evicted pages handing their history back). Every insertion path
+    /// goes through here, so the generation rotation — by epoch width,
+    /// or by the size valve — bounds the table even for write-only
+    /// traffic (a WAL append stream never calls [`Self::note`]).
+    fn record(&mut self, lba: u64, tick: u64) {
+        self.cur.insert(lba, tick);
+        if tick.saturating_sub(self.epoch_start) >= self.epoch_ticks
+            || self.cur.len() >= self.max_entries
+        {
+            self.prev = std::mem::take(&mut self.cur);
+            self.epoch_start = tick;
+        }
+    }
+}
+
+/// The DRAM tier in front of any [`StorageBackend`] — see the module
+/// docs for semantics and invariants.
+pub struct TieredBackend {
+    inner: Box<dyn StorageBackend>,
+    /// inner completion id → our completion id.
+    pending: HashMap<u64, u64>,
+    next_id: u64,
+    /// Tier-hit completions awaiting `poll`/`wait_all`.
+    ready: Vec<IoCompletion>,
+    res: Residency,
+    tracker: ReuseTracker,
+    /// Reference clock: increments once per submitted request.
+    now: u64,
+    rate: f64,
+    /// Admission bar in reference ticks (`None` = CLOCK rule).
+    threshold_ticks: Option<u64>,
+    threshold_secs: f64,
+    rule: TierRule,
+    page_bytes: u32,
+    capacity_pages: u64,
+    hits: u64,
+    misses: u64,
+    stage2_hits: u64,
+    admitted: u64,
+    rejected: u64,
+    evicted: u64,
+    reuse_ns: LatencyHist,
+}
+
+impl TieredBackend {
+    pub fn new(inner: Box<dyn StorageBackend>, spec: &TierSpec) -> Self {
+        let threshold_secs = spec.threshold_secs();
+        let threshold_ticks = threshold_secs.map(|s| ((s * spec.rate).round() as u64).max(1));
+        let capacity_pages = spec.capacity_pages();
+        // Cold-set tracking epoch: the admission bar itself (see the
+        // ReuseTracker docs); the CLOCK rule has no bar, so a fixed
+        // window bounds the reuse histogram's bookkeeping instead.
+        let epoch = threshold_ticks.unwrap_or(1 << 16);
+        // One generation can accumulate at most ~one entry per tick
+        // (every request advances the clock; eviction hand-backs at most
+        // double that), so sizing the valve to 2x the epoch means the
+        // size rotation never truncates the tracked window below the
+        // rule's own bar — up to an explicit memory cap (4M entries), past
+        // which the window coarsens rather than the table growing without
+        // bound.
+        let max_entries = epoch.saturating_mul(2).clamp(1 << 12, 1 << 22) as usize;
+        TieredBackend {
+            inner,
+            pending: HashMap::new(),
+            next_id: 0,
+            ready: Vec::new(),
+            res: Residency::new(capacity_pages),
+            tracker: ReuseTracker::new(epoch, max_entries),
+            now: 0,
+            rate: spec.rate,
+            threshold_ticks,
+            threshold_secs: threshold_secs.unwrap_or(f64::INFINITY),
+            rule: spec.rule,
+            page_bytes: spec.l_blk,
+            capacity_pages,
+            hits: 0,
+            misses: 0,
+            stage2_hits: 0,
+            admitted: 0,
+            rejected: 0,
+            evicted: 0,
+            reuse_ns: LatencyHist::for_latency_ns(),
+        }
+    }
+
+    /// The live admission bar in seconds (infinite for the CLOCK rule).
+    pub fn threshold_secs(&self) -> f64 {
+        self.threshold_secs
+    }
+
+    /// Does the rule admit a page whose observed reuse interval is
+    /// `interval` ticks (`None` = first tracked reference)?
+    fn admit(&self, interval: Option<u64>) -> bool {
+        match self.threshold_ticks {
+            // CLOCK control: admit every missed read, first touch included.
+            None => true,
+            // The rule: the page must have *demonstrated* reuse that
+            // beats the bar — an unknown interval cannot justify rent.
+            Some(thr) => interval.is_some_and(|iv| iv <= thr),
+        }
+    }
+
+    fn push_reuse(&mut self, interval_ticks: u64) {
+        // ticks → model ns at the configured reference rate
+        self.reuse_ns.push(interval_ticks as f64 / self.rate * 1e9);
+    }
+
+    fn tier_stats(&self) -> TierStats {
+        TierStats {
+            rule: self.rule,
+            hits: self.hits,
+            misses: self.misses,
+            stage2_hits: self.stage2_hits,
+            admitted: self.admitted,
+            rejected: self.rejected,
+            evicted: self.evicted,
+            resident_pages: self.res.len() as u64,
+            capacity_pages: self.capacity_pages,
+            page_bytes: self.page_bytes,
+            threshold_secs: self.threshold_secs,
+            reuse_ns: self.reuse_ns.clone(),
+        }
+    }
+
+    /// Translate one inner completion back to the caller's id.
+    fn absorb(&mut self, c: IoCompletion) -> IoCompletion {
+        let id = self.pending.remove(&c.id).unwrap_or(c.id);
+        IoCompletion { id, ..c }
+    }
+}
+
+impl StorageBackend for TieredBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Tiered
+    }
+
+    fn submit(&mut self, reqs: &[IoRequest]) -> Range<u64> {
+        let start = self.next_id;
+        // (our id, request) pairs that miss the tier and go to the device
+        let mut fwd: Vec<(u64, IoRequest)> = Vec::new();
+        for r in reqs {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.now += 1;
+            match r.op {
+                IoOp::Read => {
+                    if let Some(interval) = self.res.touch(r.lba, self.now) {
+                        // Tier hit: served from DRAM, no device submission.
+                        self.hits += 1;
+                        if r.class == IoClass::Stage2 {
+                            self.stage2_hits += 1;
+                        }
+                        self.push_reuse(interval);
+                        self.ready.push(IoCompletion {
+                            id,
+                            op: r.op,
+                            lba: r.lba,
+                            class: r.class,
+                            device_ns: TIER_HIT_NS,
+                        });
+                    } else {
+                        self.misses += 1;
+                        let interval = self.tracker.note(r.lba, self.now);
+                        if let Some(iv) = interval {
+                            self.push_reuse(iv);
+                        }
+                        if self.admit(interval) {
+                            self.admitted += 1;
+                            if let Some((lba, tick)) =
+                                self.res.insert(r.lba, self.now, self.threshold_ticks)
+                            {
+                                self.evicted += 1;
+                                // the evicted page keeps its reference
+                                // history in the cold-set tracker
+                                self.tracker.record(lba, tick);
+                            }
+                        } else {
+                            self.rejected += 1;
+                        }
+                        fwd.push((id, *r));
+                    }
+                }
+                IoOp::Write => {
+                    // Write-through: the device is always charged (WAL
+                    // persistence, bucket commits), and a resident page
+                    // stays resident — contents live in the caller's
+                    // data plane, so there is nothing to invalidate.
+                    if self.res.touch(r.lba, self.now).is_none() {
+                        self.tracker.record(r.lba, self.now);
+                    }
+                    fwd.push((id, *r));
+                }
+            }
+        }
+        if !fwd.is_empty() {
+            let inner_reqs: Vec<IoRequest> = fwd.iter().map(|t| t.1).collect();
+            let inner_ids = self.inner.submit(&inner_reqs);
+            for (inner_id, (id, _)) in inner_ids.zip(fwd) {
+                self.pending.insert(inner_id, id);
+            }
+        }
+        start..self.next_id
+    }
+
+    fn poll(&mut self) -> Vec<IoCompletion> {
+        let mut out = std::mem::take(&mut self.ready);
+        for c in self.inner.poll() {
+            let c = self.absorb(c);
+            out.push(c);
+        }
+        out
+    }
+
+    fn wait_all(&mut self) -> Vec<IoCompletion> {
+        let mut out = std::mem::take(&mut self.ready);
+        for c in self.inner.wait_all() {
+            let c = self.absorb(c);
+            out.push(c);
+        }
+        out
+    }
+
+    /// Post-tier device traffic (the inner backend's stats — hits never
+    /// reach it) with the tier's counters attached. This is what makes
+    /// the adaptive controller's window sampling see only real device
+    /// reads, and what makes `device reads == tier misses` checkable from
+    /// one snapshot.
+    fn stats(&self) -> BackendStats {
+        let mut s = self.inner.stats();
+        s.tier = Some(self.tier_stats());
+        s
+    }
+
+    fn take_window(&mut self) -> DeviceWindow {
+        self.inner.take_window()
+    }
+
+    fn device_stats(&self) -> Option<SimStats> {
+        self.inner.device_stats()
+    }
+
+    fn shard_snapshots(&self) -> Vec<StorageSnapshot> {
+        self.inner.shard_snapshots()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{fetch_stage2, read_blocks, BackendSpec, MemBackend};
+
+    /// 5 s rule at 1000 refs/s: the bar is exactly 5000 ticks.
+    fn five_sec_tier(capacity_pages: u64) -> TieredBackend {
+        let spec = TierSpec {
+            capacity_bytes: capacity_pages * 4096,
+            rule: TierRule::FiveSec,
+            rate: 1_000.0,
+            platform: PlatformKind::CpuDdr,
+            l_blk: 4096,
+        };
+        TieredBackend::new(Box::new(MemBackend::new()), &spec)
+    }
+
+    fn clock_tier(capacity_pages: u64) -> TieredBackend {
+        let spec = TierSpec {
+            capacity_bytes: capacity_pages * 4096,
+            rule: TierRule::Clock,
+            rate: 1_000.0,
+            platform: PlatformKind::CpuDdr,
+            l_blk: 4096,
+        };
+        TieredBackend::new(Box::new(MemBackend::new()), &spec)
+    }
+
+    /// Advance the reference clock by `n` ticks via reads of distinct
+    /// cold lbas (a disjoint address range, so they never interfere with
+    /// the lbas under test).
+    fn advance(b: &mut TieredBackend, n: u64, salt: &mut u64) {
+        for _ in 0..n {
+            *salt += 1;
+            read_blocks(b, &[1_000_000 + *salt]);
+        }
+    }
+
+    #[test]
+    fn spec_parses_cli_forms_and_errors_name_them() {
+        assert!(TierSpec::parse("none", 4096).unwrap().is_none());
+        let t = TierSpec::parse("dram:mb=8", 4096).unwrap().unwrap();
+        assert_eq!(t.capacity_bytes, 8 << 20);
+        assert_eq!(t.rule, TierRule::Breakeven);
+        assert_eq!(t.rate, DEFAULT_TIER_RATE);
+        assert_eq!(t.capacity_pages(), 2048);
+        assert_eq!(t.label(), "dram8:breakeven");
+        let t = TierSpec::parse("dram:mb=4,rule=5s,rate=2000,platform=gpu", 512)
+            .unwrap()
+            .unwrap();
+        assert_eq!(t.rule, TierRule::FiveSec);
+        assert_eq!(t.rate, 2000.0);
+        assert_eq!(t.platform, PlatformKind::GpuGddr);
+        assert_eq!(t.capacity_pages(), (4 << 20) / 512);
+        // errors echo the bad value and name the accepted forms
+        let err = TierSpec::parse("ssd:mb=4", 4096).unwrap_err().to_string();
+        assert!(err.contains("ssd") && err.contains("dram:mb=N"), "unhelpful: {err}");
+        let err = TierSpec::parse("dram:rule=clock", 4096).unwrap_err().to_string();
+        assert!(err.contains("mb=N"), "unhelpful: {err}");
+        let err = TierSpec::parse("dram:mb=0", 4096).unwrap_err().to_string();
+        assert!(err.contains(">= 1"), "unhelpful: {err}");
+        let err = TierSpec::parse("dram:mb=4,rule=lru", 4096).unwrap_err().to_string();
+        assert!(err.contains("breakeven|5min|5s|clock"), "unhelpful: {err}");
+        let err = TierSpec::parse("dram:mb=4,rate=0", 4096).unwrap_err().to_string();
+        assert!(err.contains("> 0"), "unhelpful: {err}");
+        let err = TierSpec::parse("dram:mb=4,pages=9", 4096).unwrap_err().to_string();
+        assert!(err.contains("pages") && err.contains("mb=N"), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn rule_thresholds_match_the_economics() {
+        let cpu = PlatformConfig::preset(PlatformKind::CpuDdr);
+        let ssd = SsdConfig::storage_next(NandKind::Slc);
+        assert_eq!(TierRule::FiveMin.threshold_secs(&cpu, &ssd, 4096), Some(300.0));
+        assert_eq!(TierRule::FiveSec.threshold_secs(&cpu, &ssd, 4096), Some(5.0));
+        assert_eq!(TierRule::Clock.threshold_secs(&cpu, &ssd, 4096), None);
+        // the live bar IS the Eq. 1 interval for this platform/device
+        let be = TierRule::Breakeven.threshold_secs(&cpu, &ssd, 4096).unwrap();
+        let want =
+            economics::break_even(&cpu, &ssd, 4096, IoMix::paper_default()).total;
+        assert_eq!(be, want);
+        assert!((8.0..13.0).contains(&be), "4KB CPU bar should be ~10s, got {be}");
+        // rule name round-trips
+        for r in [TierRule::Breakeven, TierRule::FiveMin, TierRule::FiveSec, TierRule::Clock] {
+            assert_eq!(TierRule::parse(r.name()).unwrap(), r);
+        }
+        assert!(TierRule::parse("lru").is_err());
+    }
+
+    /// The admission boundary, at tick precision: reuse exactly at the
+    /// bar admits, just under admits, just over is rejected.
+    #[test]
+    fn admission_boundary_at_exactly_the_live_threshold() {
+        // threshold = 5 s * 1000 refs/s = 5000 ticks
+        for (fillers, admitted) in [(4_998u64, true), (4_999, true), (5_000, false)] {
+            let mut b = five_sec_tier(64);
+            let mut salt = 0;
+            read_blocks(&mut b, &[7]); // first touch at tick 1: unknown reuse
+            advance(&mut b, fillers, &mut salt);
+            // second touch at tick fillers + 2: interval = fillers + 1 —
+            // the boundary decision (checked before any further touch,
+            // which would itself demonstrate fast reuse and admit)
+            read_blocks(&mut b, &[7]);
+            let t = b.stats().tier.unwrap();
+            assert_eq!(
+                t.admitted > 0,
+                admitted,
+                "interval {} vs bar 5000: admitted should be {admitted}",
+                fillers + 1
+            );
+            // a probe touch hits iff the boundary access admitted
+            read_blocks(&mut b, &[7]);
+            let t = b.stats().tier.unwrap();
+            assert_eq!(t.hits > 0, admitted, "probe after interval {}", fillers + 1);
+            // first touches are never admitted under an economic rule
+            assert!(t.rejected >= 1, "unknown-reuse first touches must be rejected");
+        }
+    }
+
+    #[test]
+    fn clock_rule_admits_on_first_touch_and_bounds_capacity() {
+        let mut b = clock_tier(4);
+        read_blocks(&mut b, &[1, 2, 3, 4]);
+        // every page admitted on its miss: the second pass is all hits
+        read_blocks(&mut b, &[1, 2, 3, 4]);
+        let t = b.stats().tier.unwrap();
+        assert_eq!((t.hits, t.misses, t.admitted), (4, 4, 4));
+        assert_eq!(t.resident_pages, 4);
+        // capacity bounds the resident set
+        read_blocks(&mut b, &[5, 6, 7]);
+        let t = b.stats().tier.unwrap();
+        assert_eq!(t.resident_pages, 4);
+        assert_eq!(t.evicted, 3);
+    }
+
+    /// Eviction under capacity pressure prefers the page whose reuse
+    /// interval no longer clears the bar, even when a fresher page sits
+    /// earlier in CLOCK order.
+    #[test]
+    fn eviction_prefers_pages_over_the_bar() {
+        let mut b = five_sec_tier(2);
+        let mut salt = 0;
+        // admit A (lba 1) and B (lba 2) via demonstrated fast reuse
+        read_blocks(&mut b, &[1, 2]);
+        read_blocks(&mut b, &[1, 2]);
+        assert_eq!(b.stats().tier.unwrap().resident_pages, 2);
+        // age A past the 5000-tick bar while keeping B fresh
+        for _ in 0..6 {
+            advance(&mut b, 999, &mut salt);
+            read_blocks(&mut b, &[2]); // B hit: referenced + restamped
+        }
+        // admit C (lba 3): the victim must be A (over the bar), not B
+        read_blocks(&mut b, &[3]);
+        advance(&mut b, 10, &mut salt);
+        read_blocks(&mut b, &[3]); // interval 11 << bar: admit, evict A
+        let before = b.stats().tier.unwrap();
+        read_blocks(&mut b, &[2]); // B must still be resident
+        read_blocks(&mut b, &[1]); // A must not
+        let after = b.stats().tier.unwrap();
+        assert_eq!(after.hits, before.hits + 1, "B evicted instead of stale A");
+        assert_eq!(after.misses, before.misses + 1, "A should have been evicted");
+    }
+
+    /// Hits bypass the device entirely: device reads == tier misses, on a
+    /// sharded inner backend too, and the window sampling is post-tier.
+    #[test]
+    fn hits_bypass_device_and_accounting_is_exact() {
+        let inner = BackendSpec::parse("mem:shards=2", 4096).unwrap().for_capacity(64).build();
+        let spec = TierSpec::new(1, TierRule::Clock, 4096);
+        let mut b = TieredBackend::new(inner, &spec);
+        let lbas: Vec<u64> = (0..16).collect();
+        let done = read_blocks(&mut b, &lbas);
+        assert_eq!(done.len(), 16, "every request completes");
+        let done = read_blocks(&mut b, &lbas);
+        assert_eq!(done.len(), 16, "hits complete too");
+        let st = b.stats();
+        let t = st.tier.as_ref().unwrap();
+        assert_eq!((t.hits, t.misses), (16, 16));
+        assert_eq!(st.reads, t.misses, "device reads == tier misses");
+        // the device window never saw the hits
+        let w = b.take_window();
+        assert_eq!(w.reads, 16, "post-tier window carries only device reads");
+        // snapshot: tiered kind on top, per-shard detail intact below
+        let snap = StorageSnapshot::capture(&b);
+        assert_eq!(snap.kind, BackendKind::Tiered);
+        assert_eq!(snap.shards.len(), 2);
+        assert_eq!(snap.stats.reads, 16);
+        assert!(snap.stats.tier.is_some());
+    }
+
+    #[test]
+    fn stage2_hits_reconcile_submitted_and_device_counts() {
+        let mut b = clock_tier(64);
+        fetch_stage2(&mut b, &[1, 2, 3, 4]);
+        fetch_stage2(&mut b, &[1, 2, 3, 4]);
+        let st = b.stats();
+        let t = st.tier.as_ref().unwrap();
+        assert_eq!(st.stage2_reads, 4, "only the missed burst reached the device");
+        assert_eq!(t.stage2_hits, 4);
+        // submitted stage-2 reads == device stage-2 reads + stage-2 hits
+        assert_eq!(st.stage2_reads + t.stage2_hits, 8);
+    }
+
+    #[test]
+    fn writes_pass_through_and_refresh_residency() {
+        let mut b = clock_tier(8);
+        read_blocks(&mut b, &[5]); // admit
+        b.submit(&[IoRequest::write(5)]);
+        b.wait_all();
+        let st = b.stats();
+        assert_eq!(st.writes, 1, "writes are always charged to the device");
+        read_blocks(&mut b, &[5]);
+        let t = b.stats().tier.unwrap();
+        assert_eq!(t.hits, 1, "the written page stayed resident");
+    }
+
+    #[test]
+    fn completion_ids_are_ours_and_in_request_order() {
+        let mut b = clock_tier(8);
+        read_blocks(&mut b, &[9]); // 9 resident
+        let ids = b.submit(&[IoRequest::read(9), IoRequest::read(10), IoRequest::write(11)]);
+        assert_eq!(ids, 1..4);
+        let mut done = b.wait_all();
+        done.sort_by_key(|c| c.id);
+        let got: Vec<(u64, IoOp, u64)> = done.iter().map(|c| (c.id, c.op, c.lba)).collect();
+        assert_eq!(
+            got,
+            vec![(1, IoOp::Read, 9), (2, IoOp::Read, 10), (3, IoOp::Write, 11)],
+            "hit and miss completions carry the caller's ids/addresses"
+        );
+    }
+
+    #[test]
+    fn tier_stats_merge_folds_counters_and_footprint() {
+        let mut a = clock_tier(8);
+        read_blocks(&mut a, &[1, 2]);
+        read_blocks(&mut a, &[1, 2]);
+        let mut b = clock_tier(8);
+        read_blocks(&mut b, &[3]);
+        let mut sa = a.stats();
+        let sb = b.stats();
+        sa.merge(&sb);
+        let t = sa.tier.unwrap();
+        assert_eq!((t.hits, t.misses, t.admitted), (2, 3, 3));
+        assert_eq!(t.resident_pages, 3, "fleet DRAM footprints add");
+        assert_eq!(t.capacity_pages, 16);
+        assert_eq!(sa.reads, 3, "device reads merged too");
+    }
+
+    #[test]
+    fn backend_spec_wrap_composes_with_pace_and_capacity() {
+        let spec = BackendSpec::parse("mem:shards=2", 4096)
+            .unwrap()
+            .tiered(TierSpec::new(2, TierRule::Breakeven, 4096))
+            .for_capacity(1000)
+            .with_pace(crate::storage::Pace::Afap);
+        assert_eq!(spec.kind(), BackendKind::Tiered);
+        assert_eq!(spec.device_kind(), BackendKind::Mem, "device kind sees through the tier");
+        let b = spec.build();
+        assert_eq!(b.kind(), BackendKind::Tiered);
+        match spec {
+            BackendSpec::Tiered { inner, .. } => match *inner {
+                BackendSpec::Sharded { lbas_per_shard, .. } => assert_eq!(lbas_per_shard, 500),
+                other => panic!("expected sharded inner, got {other:?}"),
+            },
+            other => panic!("expected tiered spec, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cold_set_tracker_ages_out_beyond_the_bar() {
+        // With the epoch sized to the bar, a page silent for more than
+        // two epochs is forgotten — re-reference looks like a first touch
+        // and is rejected (it could never have been admitted anyway).
+        let mut b = five_sec_tier(64);
+        let mut salt = 0;
+        read_blocks(&mut b, &[42]);
+        advance(&mut b, 11_000, &mut salt); // > 2 generations of tracking
+        read_blocks(&mut b, &[42]);
+        let t = b.stats().tier.unwrap();
+        assert_eq!(t.admitted, 0, "stale reuse must not admit");
+        assert_eq!(t.hits, 0);
+    }
+}

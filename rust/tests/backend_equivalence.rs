@@ -37,8 +37,8 @@ fn run_kv_workload(spec: &BackendSpec) -> (Vec<Option<u64>>, u64, f64) {
         MemStore::new(p.n_buckets, p.slots_per_bucket),
         spec.build(),
     );
-    // tiny cache so most GETs reach the block store
-    let mut e = KvEngine::new(p, store, 64, 128);
+    // no engine-side cache: every GET reaches the block store
+    let mut e = KvEngine::new(p, store, 128);
     for k in 1..=n_items {
         e.put(k, k.wrapping_mul(0x9E37_79B9));
     }

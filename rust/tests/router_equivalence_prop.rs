@@ -15,6 +15,14 @@
 //! randomization varies everything the protocol is generic over: corpus
 //! shards, partition fan-out, storage fan-out, query count, noise, and
 //! seeds. Replay a failure with the `FIVEMIN_PROP_SEED` env var.)
+//!
+//! A fourth arm runs each trial's queries with a DRAM tier
+//! (`storage::TieredBackend`) in front of every worker's backend at a
+//! randomized capacity/rule/fetch-mode: answers must stay bit-identical
+//! (the tier is a timing plane) and the accounting must be exact —
+//! `device reads == tier misses`, `tier hits + misses == submitted
+//! stage-2 reads`. A KV arm pins GET equivalence through the migrated
+//! `BackedStore` the same way.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -22,7 +30,7 @@ use std::time::Duration;
 use fivemin::coordinator::batcher::BatchPolicy;
 use fivemin::coordinator::{Coordinator, FetchMode, QueryResult, Router, ServingCorpus};
 use fivemin::runtime::{default_artifacts_dir, SERVE};
-use fivemin::storage::BackendSpec;
+use fivemin::storage::{BackendSpec, TierRule, TierSpec};
 use fivemin::util::proptest::Prop;
 use fivemin::util::rng::Rng;
 
@@ -37,6 +45,11 @@ struct Trial {
     corpus_seed: u64,
     query_seed: u64,
     noise: f32,
+    /// Tiered-arm parameters: per-worker DRAM capacity (MB), admission
+    /// rule, and the fetch protocol the tiered router runs.
+    tier_mb: u64,
+    tier_rule: TierRule,
+    tier_fetch: FetchMode,
 }
 
 fn gen_trial(rng: &mut Rng) -> Trial {
@@ -59,6 +72,9 @@ fn gen_trial(rng: &mut Rng) -> Trial {
         corpus_seed: rng.below(1 << 20),
         query_seed: rng.below(1 << 20),
         noise: 0.01 + 0.04 * rng.f64() as f32,
+        tier_mb: [1u64, 4, 64][rng.below(3) as usize],
+        tier_rule: [TierRule::Clock, TierRule::Breakeven][rng.below(2) as usize],
+        tier_fetch: [FetchMode::Speculative, FetchMode::AfterMerge][rng.below(2) as usize],
     }
 }
 
@@ -197,6 +213,43 @@ fn check_trial(t: &Trial) -> Result<(), String> {
             }
         }
     }
+
+    // ---- tiered arm: DRAM tier in front of every worker's backend ----
+    let tier = TierSpec { rate: 1_000.0, ..TierSpec::new(t.tier_mb, t.tier_rule, 4096) };
+    let label = tier.label();
+    let tiered_spec = worker_spec.clone().tiered(tier);
+    let router = start_router(&corpus, t.n_parts, &tiered_spec, t.tier_fetch)?;
+    let got = serve_all(|q| router.submit(q), &queries)?;
+    for (qi, (a, b)) in base.iter().zip(&got).enumerate() {
+        if a.ids != b.ids || a.scores != b.scores || a.reduced != b.reduced {
+            return Err(format!(
+                "{label}/{} answers differ on query {qi} — the tier must be a pure \
+                 timing plane",
+                t.tier_fetch.name()
+            ));
+        }
+    }
+    let st = router.settled_stats(SETTLE);
+    let snap = st.storage.as_ref().ok_or("missing tiered storage snapshot")?;
+    let ts = snap.stats.tier.as_ref().ok_or("missing tier stats in snapshot")?;
+    if ts.hits + ts.misses != st.ssd_reads {
+        return Err(format!(
+            "{label}: {} hits + {} misses != {} submitted stage-2 reads",
+            ts.hits, ts.misses, st.ssd_reads
+        ));
+    }
+    if snap.stats.reads != ts.misses {
+        return Err(format!(
+            "{label}: {} device reads != {} tier misses",
+            snap.stats.reads, ts.misses
+        ));
+    }
+    if snap.stats.stage2_reads + ts.stage2_hits != st.ssd_reads {
+        return Err(format!(
+            "{label}: device stage-2 {} + stage-2 hits {} != submitted {}",
+            snap.stats.stage2_reads, ts.stage2_hits, st.ssd_reads
+        ));
+    }
     Ok(())
 }
 
@@ -249,6 +302,98 @@ fn after_merge_cuts_sim_device_stage2_reads_nx() {
         assert!(
             (merge_reads as f64) <= spec_reads as f64 / (n as f64 - 0.5),
             "N={n}: after-merge {merge_reads} reads !<= speculative {spec_reads}/(N-0.5)"
+        );
+    }
+}
+
+/// The tier across an explicit capacity sweep: from a tier that can hold
+/// only a sliver of the promote traffic to one that holds everything,
+/// answers stay bit-identical to the untiered single worker, and
+/// `device reads == tier misses` holds exactly at every point — the
+/// tier's effect is *which* reads reach the device, never *what* the
+/// system answers.
+#[test]
+fn tiered_router_is_bit_identical_across_capacities() {
+    let corpus = Arc::new(ServingCorpus::synthetic(2, 4451));
+    let mut qrng = Rng::new(887);
+    let queries: Vec<Vec<f32>> = (0..3)
+        .map(|_| corpus.query_near(qrng.below(corpus.n as u64) as usize, 0.02, &mut qrng))
+        .collect();
+    let single = start_single(&corpus).unwrap();
+    let base = serve_all(|q| single.submit(q), &queries).unwrap();
+    for mb in [1u64, 4, 64] {
+        for rule in [TierRule::Clock, TierRule::Breakeven, TierRule::FiveSec] {
+            let spec = BackendSpec::Mem.tiered(TierSpec::new(mb, rule, 4096));
+            let router = start_router(&corpus, 2, &spec, FetchMode::Speculative).unwrap();
+            let got = serve_all(|q| router.submit(q), &queries).unwrap();
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.ids, b.ids, "mb={mb} {}: ids differ", rule.name());
+                assert_eq!(a.scores, b.scores, "mb={mb} {}: scores differ", rule.name());
+                assert_eq!(a.reduced, b.reduced, "mb={mb} {}: reduced differ", rule.name());
+            }
+            let st = router.settled_stats(SETTLE);
+            let snap = st.storage.as_ref().expect("storage snapshot");
+            let ts = snap.stats.tier.as_ref().expect("tier stats");
+            assert_eq!(
+                st.ssd_reads,
+                (queries.len() * 2 * SERVE.topk) as u64,
+                "speculative submits N*k per query with or without the tier"
+            );
+            assert_eq!(ts.hits + ts.misses, st.ssd_reads, "mb={mb} {}", rule.name());
+            assert_eq!(snap.stats.reads, ts.misses, "mb={mb} {}", rule.name());
+        }
+    }
+}
+
+/// KV GET equivalence through the migrated `BackedStore`: the same
+/// blocked-Cuckoo workload over an untiered and a tier-fronted backend
+/// returns identical GETs, with exact accounting — the tiered store's
+/// `hits + misses` equals the untiered store's device reads, and its
+/// device reads equal its misses.
+#[test]
+fn kv_gets_identical_through_tiered_backed_store() {
+    use fivemin::kvstore::{BackedStore, CuckooParams, KvEngine, MemStore};
+    use fivemin::util::rng::Zipf;
+
+    let n_items = 3_000u64;
+    let p = CuckooParams::for_capacity(n_items, 0.7, 512, 64);
+    let run = |tier: Option<TierSpec>| {
+        let mut spec = BackendSpec::Mem;
+        if let Some(t) = tier {
+            spec = spec.tiered(t);
+        }
+        let store = BackedStore::new(
+            MemStore::new(p.n_buckets, p.slots_per_bucket),
+            spec.build(),
+        );
+        let mut e = KvEngine::new(p, store, 128);
+        for k in 1..=n_items {
+            e.put(k, k.wrapping_mul(0x9E37_79B9));
+        }
+        e.flush();
+        let zipf = Zipf::new(n_items as usize, 1.1);
+        let mut rng = Rng::new(6161);
+        let gets: Vec<Option<u64>> = (0..5_000)
+            .map(|_| e.get(1 + zipf.sample(&mut rng) as u64))
+            .collect();
+        (gets, e.store.snapshot())
+    };
+    let (plain_gets, plain_snap) = run(None);
+    for (mb, rule) in [(1u64, TierRule::Clock), (4, TierRule::Breakeven), (64, TierRule::Clock)] {
+        let tier = TierSpec { rate: 1_000.0, ..TierSpec::new(mb, rule, 512) };
+        let label = tier.label();
+        let (gets, snap) = run(Some(tier));
+        assert_eq!(gets, plain_gets, "{label}: GET results must not depend on the tier");
+        let ts = snap.stats.tier.as_ref().expect("tier stats");
+        assert_eq!(snap.stats.reads, ts.misses, "{label}: device reads == tier misses");
+        assert_eq!(
+            ts.hits + ts.misses,
+            plain_snap.stats.reads,
+            "{label}: every untiered device read became a hit or a miss"
+        );
+        assert_eq!(
+            snap.stats.writes, plain_snap.stats.writes,
+            "{label}: writes are write-through, tier or not"
         );
     }
 }

@@ -2,7 +2,7 @@
 # everything else is pure cargo.
 
 .PHONY: artifacts verify verify-release lint fmt-check doc pytest ci bench-smoke smoke \
-        clean figures fig11 fig12 fig13 fig14 fig15
+        soak clean figures fig11 fig12 fig13 fig14 fig15
 
 # Lower the JAX/Pallas serving graphs to HLO-text artifacts + manifest
 # (a prerequisite only for --features pjrt builds; the native engine
@@ -41,10 +41,21 @@ bench-smoke:
 
 smoke: bench-smoke
 
+# Overload drill + ladder-behavior gate (mirrors the soak-drill CI job):
+# self-calibrated ramp/burst/sustained-2x/recovery load against the
+# shedding ladder, artifact under results/, per-phase rung ceilings and
+# the sustained-phase SLO/accounting contract gated against the
+# checked-in baseline. Short phases keep the whole drill well under a
+# minute.
+soak:
+	cargo run --release -- soak --secs-per-phase 3 --json \
+		--out results/bench_soak.json \
+		--baseline rust/benches/common/soak_baseline.json
+
 # The full CI pipeline, locally: fmt -> build -> clippy -> feature-matrix
-# check -> tests in both profiles -> docs -> bench-smoke -> quick fig15
-# (the DRAM-tier policy sweep regenerates end to end). (CI additionally
-# runs `make pytest` in a python job.)
+# check -> tests in both profiles -> docs -> bench-smoke -> soak drill ->
+# quick fig15 (the DRAM-tier policy sweep regenerates end to end). (CI
+# additionally runs `make pytest` in a python job.)
 ci: fmt-check
 	cargo build --release
 	$(MAKE) lint
@@ -53,6 +64,7 @@ ci: fmt-check
 	cargo test --release -q
 	$(MAKE) doc
 	$(MAKE) bench-smoke
+	$(MAKE) soak
 	cargo run --release -- figures --fig15 --quick
 
 # Figure regeneration (CSV under results/ + ASCII on stdout).

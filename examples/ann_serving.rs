@@ -19,6 +19,7 @@
 //!     cargo run --release --example ann_serving -- --backend sim --pace wall:50
 //!     cargo run --release --example ann_serving -- --backend sim --fetch merge
 //!     cargo run --release --example ann_serving -- --backend sim --fetch adaptive
+//!     cargo run --release --example ann_serving -- --backend sim --slo-p99-us 5000
 //!
 //! `mem` reproduces the DRAM-resident baseline; `model` charges the
 //! analytic Eq. 2 + queueing cost; `sim` replays the fetch traffic on
@@ -37,6 +38,11 @@
 //! from DRAM when their reuse interval beats the rule's bar (the live
 //! break-even interval by default) — device reads == tier misses,
 //! answers bit-identical either way.
+//! `--slo-p99-us US` puts the overload governor in front of the router:
+//! a hard p99 latency budget with the shedding ladder behind it —
+//! queries are admitted through `try_submit` and may be degraded or
+//! rejected instead of queueing without bound (see `fivemin soak` for
+//! the full drill).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -44,7 +50,9 @@ use std::time::Instant;
 use fivemin::ann::{ann_throughput, AnnScenario};
 use fivemin::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
 use fivemin::coordinator::batcher::BatchPolicy;
-use fivemin::coordinator::{Coordinator, FetchMode, Router, ServingCorpus};
+use fivemin::coordinator::{
+    Coordinator, FetchMode, OverloadConfig, Router, ServingCorpus, SloConfig,
+};
 use fivemin::runtime::{default_artifacts_dir, SERVE};
 use fivemin::storage::{BackendSpec, Pace, TierSpec};
 use fivemin::util::cli::ArgSpec;
@@ -83,6 +91,12 @@ fn main() -> anyhow::Result<()> {
             "none|dram:mb=N,rule=breakeven|5min|5s|clock",
             Some("none"),
             "per-worker DRAM tier in front of the device (admission by the live break-even rule by default)",
+        )
+        .opt(
+            "slo-p99-us",
+            "US",
+            Some("0"),
+            "govern admission with a hard p99 latency SLO (microseconds; 0 = ungoverned); over budget, the shedding ladder degrades then rejects",
         );
     let args: Vec<String> = std::env::args().skip(1).collect();
     let p = match spec.parse(&args) {
@@ -101,6 +115,7 @@ fn main() -> anyhow::Result<()> {
         backend = backend.tiered(tier);
     }
     let fetch = FetchMode::parse(p.str("fetch").unwrap())?;
+    let slo_p99_us: f64 = p.f64("slo-p99-us").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
     let n_queries: usize = p.usize("queries").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
     let n_workers: usize = p.usize("workers").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
 
@@ -127,15 +142,34 @@ fn main() -> anyhow::Result<()> {
             Coordinator::start(dir.clone(), Arc::new(part), BatchPolicy::default(), spec)
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
-    let router = Router::partitioned_with(workers, fetch)?;
+    let router = if slo_p99_us > 0.0 {
+        let slo = SloConfig {
+            p50_us: 0.25 * slo_p99_us,
+            p95_us: 0.5 * slo_p99_us,
+            p99_us: slo_p99_us,
+            max_queue_depth: 4 * SERVE.batch,
+        };
+        Router::partitioned_overload(workers, fetch, OverloadConfig::for_slo(slo), None)?
+    } else {
+        Router::partitioned_with(workers, fetch)?
+    };
 
     // ---- serve a batched query stream (concurrent submission) -------------
     let mut rng = Rng::new(9);
     let t0 = Instant::now();
+    let mut rejected = 0usize;
     let pending: Vec<_> = (0..n_queries)
-        .map(|_| {
+        .filter_map(|_| {
             let target = rng.below(corpus.n as u64) as usize;
-            (target, router.submit(corpus.query_near(target, 0.02, &mut rng)))
+            let query = corpus.query_near(target, 0.02, &mut rng);
+            // ungoverned routers admit everything; governed ones may shed
+            match router.try_submit(query) {
+                Ok(rx) => Some((target, rx)),
+                Err(_) => {
+                    rejected += 1;
+                    None
+                }
+            }
         })
         .collect();
     let mut hits = 0usize;
@@ -166,6 +200,17 @@ fn main() -> anyhow::Result<()> {
         fmt_secs(e2e.percentile(0.5) / 1e9),
         fmt_secs(e2e.percentile(0.99) / 1e9),
     );
+    if let Some(rep) = router.overload_report() {
+        println!(
+            "overload   : {} admitted / {} rejected ({rejected} at submit), rung '{}' \
+             ({} escalations, {} de-escalations)",
+            rep.admitted,
+            rep.rejected,
+            rep.rung.name(),
+            rep.escalations,
+            rep.de_escalations,
+        );
+    }
     if let Some(rep) = router.adaptive_report() {
         println!(
             "adaptive   : {} spec / {} merge dispatches, {} flips, final mode '{}'",

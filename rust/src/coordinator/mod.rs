@@ -53,10 +53,20 @@
 //! [`StorageSnapshot`] into [`ServeStats`]. The adaptive controller is
 //! unaffected by the tier's hits: its [`DeviceWindow`] feed is post-tier
 //! device traffic, so `S̄` prices real device reads only.
+//!
+//! Under overload, a router built with [`Router::partitioned_overload`]
+//! puts admission behind a deterministic shedding ladder
+//! ([`overload::OverloadController`]): queries enter via
+//! [`Router::try_submit`], degrade from full two-phase service through
+//! shrunk promote sets to stage-1-only answers as latency/depth
+//! guardrails trip, and are rejected (never silently dropped) only at the
+//! last rung. Degraded answers stay honest — the promote-set prefix the
+//! full path would have fetched, with `scores` empty as the marker.
 
 pub mod adaptive;
 pub mod batcher;
 pub mod corpus;
+pub mod overload;
 
 use std::collections::HashMap;
 use std::ops::Range;
@@ -69,11 +79,17 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure, Result};
 
 use crate::runtime::{Runtime, Tensor, SERVE};
-use crate::storage::{self, BackendSpec, DeviceWindow, StorageBackend, StorageSnapshot};
+use crate::storage::{
+    self, BackendSpec, DeviceWindow, StorageBackend, StorageSnapshot, TierControl,
+};
 use crate::util::stats::LatencyHist;
 use batcher::{collect_batch, BatchPolicy, Job};
 pub use adaptive::{AdaptiveConfig, AdaptiveController, AdaptiveReport};
 pub use corpus::ServingCorpus;
+pub use overload::{
+    GuardrailWindow, OverloadConfig, OverloadController, OverloadReport, Rung, ShedPlan,
+    ShedReject, SloConfig,
+};
 
 /// A top-k answer for one query (or one leg of a two-phase query).
 #[derive(Clone, Debug)]
@@ -770,6 +786,11 @@ enum MergeJob {
         submitted: Instant,
         parts: Vec<mpsc::Receiver<Resp>>,
         resp: mpsc::Sender<Resp>,
+        /// Admitted through the overload controller ([`Router::try_submit`])
+        /// — its completion must be fed back. Plain [`Router::submit`]
+        /// queries are not counted, so mixing the two entry points can
+        /// never underflow the in-flight gauge.
+        counted: bool,
     },
     /// After-merge: merge reduced partials, then fetch the global top-k
     /// from their owners (phase 2) before answering.
@@ -778,6 +799,20 @@ enum MergeJob {
         query: Vec<f32>,
         parts: Vec<mpsc::Receiver<Resp>>,
         resp: mpsc::Sender<Resp>,
+        /// Promote-set size: [`SERVE`].topk normally, shrunk by the
+        /// ladder's shrink-k rung.
+        promote_k: usize,
+        counted: bool,
+    },
+    /// Degraded (stage-1-only) answer: merge reduced partials into the
+    /// promote set and answer it directly — zero stage-2 device reads.
+    /// The shedding ladder's stage1-only rung dispatches these.
+    Stage1Only {
+        submitted: Instant,
+        parts: Vec<mpsc::Receiver<Resp>>,
+        resp: mpsc::Sender<Resp>,
+        promote_k: usize,
+        counted: bool,
     },
 }
 
@@ -795,6 +830,8 @@ struct PendingFetch {
     cand: Vec<(f32, u32)>,
     fetch_rx: Vec<mpsc::Receiver<Resp>>,
     batch_size: usize,
+    /// See [`MergeJob::Gather::counted`].
+    counted: bool,
 }
 
 /// Router over multiple workers, in replica (round-robin) or partition
@@ -810,6 +847,9 @@ pub struct Router {
     gather_latency: Arc<Mutex<LatencyHist>>,
     /// Present iff the router was built with [`FetchMode::Adaptive`].
     adaptive: Option<Arc<AdaptiveController>>,
+    /// Present iff the router was built with
+    /// [`Router::partitioned_overload`]; governs [`Router::try_submit`].
+    overload: Option<Arc<OverloadController>>,
 }
 
 impl Router {
@@ -826,6 +866,7 @@ impl Router {
             finisher: None,
             gather_latency: Arc::new(Mutex::new(LatencyHist::for_latency_ns())),
             adaptive: None,
+            overload: None,
         })
     }
 
@@ -857,20 +898,43 @@ impl Router {
             FetchMode::Adaptive => Some(AdaptiveConfig::default()),
             _ => None,
         };
-        Self::partitioned_inner(workers, fetch, ctrl)
+        Self::partitioned_inner(workers, fetch, ctrl, None)
     }
 
     /// Adaptive scatter/gather router with explicit controller tuning
     /// (window size, hysteresis, probe cadence — see [`AdaptiveConfig`]).
     /// `partitioned_with(.., FetchMode::Adaptive)` uses the defaults.
     pub fn partitioned_adaptive(workers: Vec<Coordinator>, cfg: AdaptiveConfig) -> Result<Self> {
-        Self::partitioned_inner(workers, FetchMode::Adaptive, Some(cfg))
+        Self::partitioned_inner(workers, FetchMode::Adaptive, Some(cfg), None)
+    }
+
+    /// Scatter/gather router governed by an overload controller: queries
+    /// entering through [`Router::try_submit`] are admitted (or rejected)
+    /// against the configured SLOs, dispatched per the shedding ladder's
+    /// current rung, and their completions fed back to the guardrail
+    /// monitor. `tier` is the DRAM tier's live budget knob when the
+    /// workers' backends carry one (hand the same [`TierControl`] to the
+    /// [`TierSpec`](crate::storage::TierSpec) they were built from).
+    /// [`Router::submit`] still works and bypasses governance entirely.
+    pub fn partitioned_overload(
+        workers: Vec<Coordinator>,
+        fetch: FetchMode,
+        cfg: OverloadConfig,
+        tier: Option<TierControl>,
+    ) -> Result<Self> {
+        let ctrl = match fetch {
+            FetchMode::Adaptive => Some(AdaptiveConfig::default()),
+            _ => None,
+        };
+        let over = Arc::new(OverloadController::new(cfg, tier));
+        Self::partitioned_inner(workers, fetch, ctrl, Some(over))
     }
 
     fn partitioned_inner(
         workers: Vec<Coordinator>,
         fetch: FetchMode,
         ctrl_cfg: Option<AdaptiveConfig>,
+        overload: Option<Arc<OverloadController>>,
     ) -> Result<Self> {
         ensure!(!workers.is_empty(), "router needs at least one worker");
         let adaptive = ctrl_cfg
@@ -893,11 +957,13 @@ impl Router {
         let (finish_tx, finish_rx) = mpsc::channel::<(PendingFetch, mpsc::Sender<Resp>)>();
         let fin_latency = gather_latency.clone();
         let fin_ctrl = adaptive.clone();
+        let fin_over = overload.clone();
         let finisher = std::thread::Builder::new()
             .name("fivemin-finish".into())
             .spawn(move || {
                 while let Ok((pending, resp)) = finish_rx.recv() {
                     let dispatched = pending.dispatched;
+                    let counted = pending.counted;
                     let result = finish_two_phase(pending);
                     if let Ok(r) = &result {
                         fin_latency.lock().unwrap().push(r.latency.as_nanos() as f64);
@@ -906,25 +972,65 @@ impl Router {
                             ctrl.observe_phase2(dispatched.elapsed().as_nanos() as f64);
                         }
                     }
+                    if counted {
+                        if let Some(c) = &fin_over {
+                            match &result {
+                                Ok(r) => c.on_complete(r.latency.as_nanos() as f64),
+                                Err(_) => c.on_error(),
+                            }
+                        }
+                    }
                     let _ = resp.send(result);
                 }
             })?;
         let (merge_tx, merge_rx) = mpsc::channel::<MergeJob>();
+        let mrg_over = overload.clone();
         let merger = std::thread::Builder::new()
             .name("fivemin-gather".into())
             .spawn(move || {
+                // feed one counted completion (or error) to the overload
+                // controller — merger-side answers only; two-phase queries
+                // complete on the finisher thread instead
+                let feed = |counted: bool, result: &Resp| {
+                    if !counted {
+                        return;
+                    }
+                    if let Some(c) = &mrg_over {
+                        match result {
+                            Ok(r) => c.on_complete(r.latency.as_nanos() as f64),
+                            Err(_) => c.on_error(),
+                        }
+                    }
+                };
                 while let Ok(job) = merge_rx.recv() {
                     match job {
-                        MergeJob::Gather { submitted, parts, resp } => {
+                        MergeJob::Gather { submitted, parts, resp, counted } => {
                             let mut result = gather(parts);
                             if let Ok(r) = &mut result {
                                 r.latency = submitted.elapsed();
                                 ctx.latency.lock().unwrap().push(r.latency.as_nanos() as f64);
                             }
+                            feed(counted, &result);
                             let _ = resp.send(result);
                         }
-                        MergeJob::TwoPhase { submitted, query, parts, resp } => {
-                            match two_phase_dispatch(&ctx, query, parts) {
+                        MergeJob::Stage1Only { submitted, parts, resp, promote_k, counted } => {
+                            let mut result = stage1_merge(parts, promote_k);
+                            if let Ok(r) = &mut result {
+                                r.latency = submitted.elapsed();
+                                ctx.latency.lock().unwrap().push(r.latency.as_nanos() as f64);
+                            }
+                            feed(counted, &result);
+                            let _ = resp.send(result);
+                        }
+                        MergeJob::TwoPhase {
+                            submitted,
+                            query,
+                            parts,
+                            resp,
+                            promote_k,
+                            counted,
+                        } => {
+                            match two_phase_dispatch(&ctx, query, parts, promote_k) {
                                 Ok((cand, fetch_rx, batch_size)) => {
                                     let dispatched = Instant::now();
                                     let _ = finish_tx.send((
@@ -934,12 +1040,15 @@ impl Router {
                                             cand,
                                             fetch_rx,
                                             batch_size,
+                                            counted,
                                         },
                                         resp,
                                     ));
                                 }
                                 Err(e) => {
-                                    let _ = resp.send(Err(e));
+                                    let result = Err(e);
+                                    feed(counted, &result);
+                                    let _ = resp.send(result);
                                 }
                             }
                         }
@@ -957,6 +1066,7 @@ impl Router {
             finisher: Some(finisher),
             gather_latency,
             adaptive,
+            overload,
         })
     }
 
@@ -980,7 +1090,50 @@ impl Router {
                 let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
                 self.workers[i].submit(query_full)
             }
+            RouteMode::Partition { fetch } => self.dispatch_partition(fetch, query_full, None),
+        }
+    }
+
+    /// Route a query through the shedding ladder: ask the overload
+    /// controller for admission, then dispatch per the granted
+    /// [`ShedPlan`] — full two-phase/speculative at rung 0, a shrunk
+    /// promote set or a stage-1-only degraded answer on higher rungs —
+    /// or return the [`ShedReject`] when the controller is at
+    /// [`Rung::Backpressure`] and the queue is full. The completion (or
+    /// error) of every admitted query feeds the guardrail monitor.
+    /// Routers built without [`Router::partitioned_overload`] admit
+    /// everything (plain [`Router::submit`]).
+    pub fn try_submit(
+        &self,
+        query_full: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Resp>, ShedReject> {
+        let Some(ctrl) = &self.overload else {
+            return Ok(self.submit(query_full));
+        };
+        match self.mode {
+            // overload routers are partition-mode by construction
+            RouteMode::Replicate => Ok(self.submit(query_full)),
             RouteMode::Partition { fetch } => {
+                let plan = ctrl.try_admit()?;
+                Ok(self.dispatch_partition(fetch, query_full, Some(plan)))
+            }
+        }
+    }
+
+    fn dispatch_partition(
+        &self,
+        fetch: FetchMode,
+        query_full: Vec<f32>,
+        plan: Option<ShedPlan>,
+    ) -> mpsc::Receiver<Resp> {
+        // Only governed (try_submit) queries feed the overload
+        // controller's in-flight gauge and latency windows; raw submit()
+        // traffic on the same router stays invisible to it.
+        let counted = plan.is_some();
+        let (stage1_only, promote_k, eff) = match plan {
+            Some(p) if p.stage1_only => (true, p.promote_k, FetchMode::AfterMerge),
+            Some(p) if p.promote_k < SERVE.topk => (false, p.promote_k, FetchMode::AfterMerge),
+            _ => {
                 // Adaptive mode resolves to one of the two static
                 // protocols per dispatched query; the answer is
                 // bit-identical either way, so the controller is free to
@@ -995,32 +1148,40 @@ impl Router {
                     }),
                     (mode, _) => mode,
                 };
-                let submitted = Instant::now();
-                let parts: Vec<_> = self
-                    .workers
-                    .iter()
-                    .map(|w| {
-                        w.submit_request(match eff {
-                            FetchMode::AfterMerge => {
-                                WorkerRequest::Reduce(query_full.clone())
-                            }
-                            _ => WorkerRequest::Search(query_full.clone()),
-                        })
-                    })
-                    .collect();
-                let (rtx, rrx) = mpsc::channel();
-                let job = match eff {
-                    FetchMode::AfterMerge => {
-                        MergeJob::TwoPhase { submitted, query: query_full, parts, resp: rtx }
-                    }
-                    _ => MergeJob::Gather { submitted, parts, resp: rtx },
-                };
-                if let Some(tx) = &self.merge_tx {
-                    let _ = tx.send(job);
-                }
-                rrx
+                (false, SERVE.topk, eff)
             }
+        };
+        let submitted = Instant::now();
+        let parts: Vec<_> = self
+            .workers
+            .iter()
+            .map(|w| {
+                w.submit_request(if stage1_only || eff == FetchMode::AfterMerge {
+                    WorkerRequest::Reduce(query_full.clone())
+                } else {
+                    WorkerRequest::Search(query_full.clone())
+                })
+            })
+            .collect();
+        let (rtx, rrx) = mpsc::channel();
+        let job = if stage1_only {
+            MergeJob::Stage1Only { submitted, parts, resp: rtx, promote_k, counted }
+        } else if eff == FetchMode::AfterMerge {
+            MergeJob::TwoPhase {
+                submitted,
+                query: query_full,
+                parts,
+                resp: rtx,
+                promote_k,
+                counted,
+            }
+        } else {
+            MergeJob::Gather { submitted, parts, resp: rtx, counted }
+        };
+        if let Some(tx) = &self.merge_tx {
+            let _ = tx.send(job);
         }
+        rrx
     }
 
     /// Route a query, blocking until the (merged) answer is ready.
@@ -1048,6 +1209,33 @@ impl Router {
     /// static fetch modes and replica routers.
     pub fn adaptive_report(&self) -> Option<AdaptiveReport> {
         self.adaptive.as_ref().map(|c| c.report())
+    }
+
+    /// Guardrail snapshot (rung, admission counters, per-window log) when
+    /// this router was built with [`Router::partitioned_overload`];
+    /// `None` otherwise.
+    pub fn overload_report(&self) -> Option<OverloadReport> {
+        self.overload.as_ref().map(|c| c.report())
+    }
+
+    /// The overload controller itself, for callers that need to feed it
+    /// device windows ([`OverloadController::observe_device`]) or pin a
+    /// rung in drills ([`OverloadController::force_rung`]).
+    pub fn overload(&self) -> Option<&Arc<OverloadController>> {
+        self.overload.as_ref()
+    }
+
+    /// Drain and fuse every worker's device-latency window (see
+    /// [`Coordinator::take_window`]): the overload monitor's view of
+    /// storage pressure. Consuming — each sample is seen once, so don't
+    /// combine with [`FetchMode::Adaptive`], whose controller must be the
+    /// window's single sampler.
+    pub fn take_device_window(&self) -> DeviceWindow {
+        let mut fused = DeviceWindow::default();
+        for w in &self.workers {
+            fused.merge(&w.take_window());
+        }
+        fused
     }
 
     /// Aggregate the per-worker [`ServeStats`]: counters add, histograms
@@ -1196,12 +1384,15 @@ fn merge_partials(parts: Vec<QueryResult>) -> Resp {
 /// dispatch one [`WorkerRequest::Fetch`] leg per owning partition.
 /// Returns the promote set (promotion order), the pending fetch-leg
 /// receivers, and the largest leg batch seen so far; the finisher
-/// completes the query ([`finish_two_phase`]).
+/// completes the query ([`finish_two_phase`]). `promote_k` caps the
+/// promote set below the configured top-k (the shedding ladder's
+/// shrink-k rung); `SERVE.topk` (or anything larger) keeps the full set.
 #[allow(clippy::type_complexity)]
 fn two_phase_dispatch(
     ctx: &MergerCtx,
     query: Vec<f32>,
     parts: Vec<mpsc::Receiver<Resp>>,
+    promote_k: usize,
 ) -> Result<(Vec<(f32, u32)>, Vec<mpsc::Receiver<Resp>>, usize), String> {
     let k = SERVE.topk;
     // ---- phase 1: gather local reduced top-k from every partition ----
@@ -1222,9 +1413,12 @@ fn two_phase_dispatch(
         batch_size = batch_size.max(p.batch_size);
     }
     // Global promote set: exactly what a single worker over the union
-    // corpus promotes (reduced desc, id asc), in promotion order.
+    // corpus promotes (reduced desc, id asc), in promotion order. A
+    // shrunk promote_k keeps the *prefix* of that order, so degraded
+    // answers are the full answer's promote set truncated — never a
+    // different candidate mix.
     cand.sort_by(promote_cmp);
-    cand.truncate(k);
+    cand.truncate(promote_k.min(k));
     // ---- phase 2 dispatch: one fetch leg per owning partition --------
     let mut per_owner: Vec<Vec<u32>> = vec![Vec::new(); ctx.worker_txs.len()];
     for &(_, id) in &cand {
@@ -1245,6 +1439,43 @@ fn two_phase_dispatch(
         fetch_rx.push(rx);
     }
     Ok((cand, fetch_rx, batch_size))
+}
+
+/// Stage-1-only degraded answer (the shedding ladder's reduced-score
+/// rungs): gather every partition's reduce leg and promote the global
+/// top `promote_k` by reduced score — phase 1 of [`two_phase_dispatch`]
+/// with phase 2 skipped entirely, so no stage-2 device reads are issued.
+/// The answer is, bit for bit, the promote-set *prefix* the two-phase
+/// path would have fetched: same ids, same reduced scores, same order
+/// ([`promote_cmp`]). `scores` is left empty — the honest marker that no
+/// full-dimension re-rank ran (callers detect degradation by
+/// `scores.is_empty()`). The caller stamps `latency`.
+fn stage1_merge(parts: Vec<mpsc::Receiver<Resp>>, promote_k: usize) -> Resp {
+    let mut cand: Vec<(f32, u32)> = Vec::with_capacity(parts.len() * SERVE.topk);
+    let mut batch_size = 0usize;
+    for rx in parts {
+        let p = match rx.recv() {
+            Ok(Ok(r)) => r,
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err("partition worker gone".into()),
+        };
+        if p.ids.len() != p.reduced.len() {
+            return Err("malformed reduce leg".into());
+        }
+        for j in 0..p.ids.len() {
+            cand.push((p.reduced[j], p.ids[j]));
+        }
+        batch_size = batch_size.max(p.batch_size);
+    }
+    cand.sort_by(promote_cmp);
+    cand.truncate(promote_k.min(SERVE.topk));
+    Ok(QueryResult {
+        ids: cand.iter().map(|c| c.1).collect(),
+        scores: Vec::new(),
+        reduced: cand.iter().map(|c| c.0).collect(),
+        latency: Duration::ZERO,
+        batch_size,
+    })
 }
 
 /// Await one query's phase-2 fetch legs and produce the final merged
@@ -1447,5 +1678,78 @@ mod tests {
         let b = partial(&[5], &[0.9], &[0.3]);
         let m = merge_partials(vec![a, b]).unwrap();
         assert_eq!(m.ids.len(), 3, "all candidates survive the merge");
+    }
+
+    /// A pre-answered reduce leg, as a phase-1 worker would send it:
+    /// reduced scores only, no stage-2 scores.
+    fn reduce_leg(ids: &[u32], reduced: &[f32]) -> mpsc::Receiver<Resp> {
+        let (tx, rx) = mpsc::channel();
+        tx.send(Ok(QueryResult {
+            ids: ids.to_vec(),
+            scores: Vec::new(),
+            reduced: reduced.to_vec(),
+            latency: Duration::from_millis(1),
+            batch_size: 2,
+        }))
+        .unwrap();
+        rx
+    }
+
+    #[test]
+    fn stage1_merge_answers_the_promote_set_prefix() {
+        // Union candidates sorted by promote_cmp (reduced desc, id asc):
+        // (0.9, 1), (0.7, 5000), (0.5, 2). promote_k = 2 keeps the prefix.
+        let parts = vec![reduce_leg(&[1, 2], &[0.9, 0.5]), reduce_leg(&[5000], &[0.7])];
+        let m = stage1_merge(parts, 2).unwrap();
+        assert_eq!(m.ids, vec![1, 5000]);
+        assert_eq!(m.reduced, vec![0.9, 0.7]);
+        assert!(m.scores.is_empty(), "no stage-2 ran: scores stay empty (the degraded marker)");
+        assert_eq!(m.batch_size, 2);
+    }
+
+    #[test]
+    fn stage1_merge_matches_promote_cmp_over_the_candidate_union() {
+        // Bit-for-bit check against the reference promotion: build the
+        // union, sort with promote_cmp, truncate — stage1_merge must
+        // return exactly that, including reduced-score ties broken by id.
+        let a_ids = [3u32, 9, 4];
+        let a_red = [0.5f32, 0.5, 0.25];
+        let b_ids = [7u32, 1];
+        let b_red = [0.5f32, 0.125];
+        let mut reference: Vec<(f32, u32)> = a_ids
+            .iter()
+            .zip(&a_red)
+            .chain(b_ids.iter().zip(&b_red))
+            .map(|(&id, &r)| (r, id))
+            .collect();
+        reference.sort_by(promote_cmp);
+        for k in 1..=5usize {
+            let parts = vec![reduce_leg(&a_ids, &a_red), reduce_leg(&b_ids, &b_red)];
+            let m = stage1_merge(parts, k).unwrap();
+            let want: Vec<(f32, u32)> =
+                reference.iter().copied().take(k.min(SERVE.topk)).collect();
+            assert_eq!(m.ids, want.iter().map(|c| c.1).collect::<Vec<_>>(), "k={k}");
+            assert_eq!(m.reduced, want.iter().map(|c| c.0).collect::<Vec<_>>(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn stage1_merge_rejects_malformed_reduce_legs() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(Ok(QueryResult {
+            ids: vec![1, 2],
+            scores: Vec::new(),
+            reduced: vec![0.5], // length mismatch
+            latency: Duration::ZERO,
+            batch_size: 1,
+        }))
+        .unwrap();
+        let err = stage1_merge(vec![rx], 4).unwrap_err();
+        assert!(err.contains("malformed reduce leg"), "got: {err}");
+        // a dropped worker channel is an error, not a hang or panic
+        let (tx2, rx2) = mpsc::channel::<Resp>();
+        drop(tx2);
+        let err2 = stage1_merge(vec![rx2], 4).unwrap_err();
+        assert!(err2.contains("partition worker gone"), "got: {err2}");
     }
 }

@@ -1,0 +1,680 @@
+//! Overload guardrails and the shedding ladder: hard latency SLOs checked
+//! over windows of completed queries, and a deterministic escalation
+//! policy that degrades service instead of collapsing when they trip.
+//!
+//! The adaptive fetch controller (PR 4, [`super::adaptive`]) optimises
+//! *within* the SLO: it picks the cheaper of two bit-identical protocols.
+//! This module governs what happens when no protocol is cheap enough — a
+//! millions-of-users front door is open-loop, so arrivals do not slow
+//! down because the server is busy, and past saturation the only choices
+//! are shedding work or unbounded queueing. Following the SLO-guardrail
+//! discipline of serving-stack red-line tables (hard P50/P95/P99 budgets,
+//! each with a mandatory over-limit action), every guardrail trip maps to
+//! one deterministic rung of a ladder, ordered cheapest-degradation
+//! first:
+//!
+//! ```text
+//! rung 0  Normal        full service (configured fetch mode, full k)
+//! rung 1  ShrinkK       shrink the promote set: fewer stage-2 fetches
+//! rung 2  Stage1Only    reduced-score answers only: zero stage-2 reads
+//! rung 3  TightTier     + clamp the DRAM tier budget (shed memory rent)
+//! rung 4  Backpressure  + reject new queries once the queue is full
+//! ```
+//!
+//! Escalation: one rung per tripped guardrail window (latency percentile
+//! over budget, or queue depth over the bar). The depth guardrail alone
+//! also escalates *at admission time* — if completions stall, no window
+//! boundary would ever come, so waiting for one would mean unbounded
+//! queueing exactly when the ladder is needed most.
+//!
+//! De-escalation reuses the [`AdaptiveConfig`](super::AdaptiveConfig)
+//! dwell/hysteresis idiom: a transition pins the rung for `min_dwell`
+//! windows, and stepping down requires `healthy_windows` *consecutive*
+//! windows with every signal under `margin` × its budget — so an
+//! oscillating load signal produces bounded rung flapping (unit-tested
+//! below) instead of thrash.
+//!
+//! Degraded answers stay honest: a stage-1-only answer is exactly the
+//! promote-set prefix the two-phase merger would have fetched — same ids,
+//! same reduced scores, same order ([`super::Router`] pins this
+//! bit-identity in its tests and `rust/tests/overload_shedding.rs`).
+//! Rejected queries are *counted and reported*, never silently dropped.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::runtime::SERVE;
+use crate::storage::{DeviceWindow, TierControl};
+
+/// EWMA smoothing for the device-occupancy observability signal.
+const EWMA_ALPHA: f64 = 0.4;
+
+/// Guardrail windows of history kept for reporting.
+const LOG_CAP: usize = 64;
+
+/// Hard latency service-level objectives for accepted queries, plus the
+/// queue-depth bar that backs the final rejection rung.
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// Median latency budget (µs).
+    pub p50_us: f64,
+    /// Tail budgets (µs).
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Maximum in-flight queries before the depth guardrail trips (and
+    /// the [`Rung::Backpressure`] rung rejects).
+    pub max_queue_depth: usize,
+}
+
+/// The shedding ladder's rungs, cheapest degradation first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rung {
+    Normal,
+    ShrinkK,
+    Stage1Only,
+    TightTier,
+    Backpressure,
+}
+
+impl Rung {
+    pub const ALL: [Rung; 5] =
+        [Rung::Normal, Rung::ShrinkK, Rung::Stage1Only, Rung::TightTier, Rung::Backpressure];
+
+    pub fn level(self) -> usize {
+        match self {
+            Rung::Normal => 0,
+            Rung::ShrinkK => 1,
+            Rung::Stage1Only => 2,
+            Rung::TightTier => 3,
+            Rung::Backpressure => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rung::Normal => "normal",
+            Rung::ShrinkK => "shrink-k",
+            Rung::Stage1Only => "stage1-only",
+            Rung::TightTier => "tight-tier",
+            Rung::Backpressure => "backpressure",
+        }
+    }
+
+    fn up(self) -> Rung {
+        Rung::ALL[(self.level() + 1).min(Rung::ALL.len() - 1)]
+    }
+
+    fn down(self) -> Rung {
+        Rung::ALL[self.level().saturating_sub(1)]
+    }
+}
+
+/// Tuning of the [`OverloadController`].
+#[derive(Clone, Copy, Debug)]
+pub struct OverloadConfig {
+    pub slo: SloConfig,
+    /// Completed queries per guardrail window.
+    pub window: usize,
+    /// Windows the rung is pinned after any transition.
+    pub min_dwell: usize,
+    /// Consecutive windows with every signal under `margin` × budget
+    /// required before stepping one rung down.
+    pub healthy_windows: usize,
+    /// De-escalation margin in (0, 1): hysteresis between the trip bar
+    /// (budget) and the recovery bar (`margin` × budget).
+    pub margin: f64,
+    /// Promote-set size under full service (rung 0).
+    pub full_k: usize,
+    /// Promote-set size from [`Rung::ShrinkK`] upward.
+    pub shrink_k: usize,
+    /// Tier-budget clamp (permille) applied from [`Rung::TightTier`]
+    /// upward; released to 1000 when the ladder steps back below it.
+    pub tier_clamp_pm: u64,
+}
+
+impl OverloadConfig {
+    /// Defaults for everything but the SLO itself (which is always
+    /// deployment-specific): serve-profile promote sizes, one-window
+    /// dwell, two healthy windows to step down.
+    pub fn for_slo(slo: SloConfig) -> Self {
+        OverloadConfig {
+            slo,
+            window: 32,
+            min_dwell: 1,
+            healthy_windows: 2,
+            margin: 0.7,
+            full_k: SERVE.topk,
+            shrink_k: (SERVE.topk / 4).max(1),
+            tier_clamp_pm: 500,
+        }
+    }
+}
+
+/// What an admitted query is allowed to do, per the current rung.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShedPlan {
+    pub rung: Rung,
+    /// Promote-set size: candidates kept past stage-1 merge.
+    pub promote_k: usize,
+    /// Answer from stage-1 reduced scores only — no stage-2 fetch legs.
+    pub stage1_only: bool,
+}
+
+/// A rejected admission (the caller owns reporting it upstream).
+#[derive(Clone, Copy, Debug)]
+pub struct ShedReject {
+    pub rung: Rung,
+    pub in_flight: usize,
+}
+
+/// One guardrail window's record (bounded history for reporting).
+#[derive(Clone, Copy, Debug)]
+pub struct GuardrailWindow {
+    /// Window index since controller start.
+    pub index: u64,
+    /// Measured percentiles of the window's completed queries (µs).
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Peak in-flight depth observed during the window.
+    pub depth_peak: usize,
+    /// Smoothed per-read device time (ns) at evaluation, 0 if never fed.
+    pub device_mean_ns: f64,
+    /// Whether any guardrail was over budget this window.
+    pub tripped: bool,
+    /// Whether every signal was under `margin` × budget this window.
+    pub healthy: bool,
+    /// Rung in force after this window's evaluation.
+    pub rung: Rung,
+}
+
+/// Snapshot of the controller for reporting.
+#[derive(Clone, Debug)]
+pub struct OverloadReport {
+    pub rung: Rung,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub escalations: u64,
+    pub de_escalations: u64,
+    pub in_flight: usize,
+    /// Recent guardrail windows (bounded, oldest first).
+    pub windows: Vec<GuardrailWindow>,
+}
+
+struct State {
+    rung: Rung,
+    in_flight: usize,
+    admitted: u64,
+    rejected: u64,
+    completed: u64,
+    escalations: u64,
+    de_escalations: u64,
+    /// Latencies (µs) of queries completed in the current window.
+    samples: Vec<f64>,
+    window_idx: u64,
+    depth_peak: usize,
+    /// Windows the rung stays pinned after a transition.
+    dwell_left: usize,
+    healthy_streak: usize,
+    device_mean_ns: f64,
+    log: VecDeque<GuardrailWindow>,
+}
+
+/// The per-router overload governor. Shared by the submit path
+/// (admission), the merger/finisher threads (completion feedback), and
+/// stats readers — all state behind one short-held mutex, like the
+/// adaptive controller it borrows its hysteresis idiom from.
+pub struct OverloadController {
+    cfg: OverloadConfig,
+    /// The DRAM tier's live budget knob, when the backend has a tier.
+    tier: Option<TierControl>,
+    state: Mutex<State>,
+}
+
+/// `samples` must be sorted ascending; nearest-rank percentile.
+fn pct(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let idx = ((samples.len() as f64 * q).ceil() as usize).clamp(1, samples.len()) - 1;
+    samples[idx]
+}
+
+impl OverloadController {
+    pub fn new(cfg: OverloadConfig, tier: Option<TierControl>) -> Self {
+        let cfg = OverloadConfig {
+            window: cfg.window.max(1),
+            margin: cfg.margin.clamp(0.0, 1.0),
+            full_k: cfg.full_k.max(1),
+            shrink_k: cfg.shrink_k.clamp(1, cfg.full_k.max(1)),
+            ..cfg
+        };
+        OverloadController {
+            cfg,
+            tier,
+            state: Mutex::new(State {
+                rung: Rung::Normal,
+                in_flight: 0,
+                admitted: 0,
+                rejected: 0,
+                completed: 0,
+                escalations: 0,
+                de_escalations: 0,
+                samples: Vec::new(),
+                window_idx: 0,
+                depth_peak: 0,
+                dwell_left: 0,
+                healthy_streak: 0,
+                device_mean_ns: 0.0,
+                log: VecDeque::new(),
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &OverloadConfig {
+        &self.cfg
+    }
+
+    /// Admit one query (or reject it at the final rung). The returned
+    /// plan is what the *router* must do for this query — the plan is
+    /// decided here, atomically with admission, so a rung change between
+    /// admission and dispatch cannot produce a half-degraded query.
+    pub fn try_admit(&self) -> Result<ShedPlan, ShedReject> {
+        let mut st = self.state.lock().unwrap();
+        if st.rung == Rung::Backpressure && st.in_flight >= self.cfg.slo.max_queue_depth {
+            st.rejected += 1;
+            return Err(ShedReject { rung: st.rung, in_flight: st.in_flight });
+        }
+        st.in_flight += 1;
+        st.admitted += 1;
+        st.depth_peak = st.depth_peak.max(st.in_flight);
+        // The depth guardrail escalates at admission time, bypassing the
+        // window dwell: if completions stall there are no window
+        // boundaries, and dwelling would mean unbounded queueing. One
+        // rung per admission keeps it deterministic and bounds the queue
+        // at max_queue_depth + the rungs left to climb.
+        if st.in_flight > self.cfg.slo.max_queue_depth && st.rung != Rung::Backpressure {
+            let next = st.rung.up();
+            self.apply_rung(&mut st, next);
+            st.escalations += 1;
+            st.healthy_streak = 0;
+        }
+        Ok(self.plan(st.rung))
+    }
+
+    /// Feed back one accepted query's completion latency (ns). Window
+    /// evaluation happens here, every `window` completions.
+    pub fn on_complete(&self, latency_ns: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.in_flight = st.in_flight.saturating_sub(1);
+        st.completed += 1;
+        if latency_ns.is_finite() && latency_ns >= 0.0 {
+            st.samples.push(latency_ns / 1_000.0);
+        }
+        if st.samples.len() >= self.cfg.window {
+            self.on_window_boundary(&mut st);
+        }
+    }
+
+    /// An admitted query died without a latency (worker error): release
+    /// its admission slot without polluting the latency window.
+    pub fn on_error(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.in_flight = st.in_flight.saturating_sub(1);
+    }
+
+    /// Feed the fused device window (occupancy observability for the
+    /// guardrail log; not itself a guardrail).
+    pub fn observe_device(&self, w: &DeviceWindow) {
+        if w.reads == 0 {
+            return;
+        }
+        let m = w.mean_read_ns();
+        let mut st = self.state.lock().unwrap();
+        st.device_mean_ns = if st.device_mean_ns == 0.0 {
+            m
+        } else {
+            EWMA_ALPHA * m + (1.0 - EWMA_ALPHA) * st.device_mean_ns
+        };
+    }
+
+    pub fn rung(&self) -> Rung {
+        self.state.lock().unwrap().rung
+    }
+
+    /// Pin the ladder to `rung` (tests and drills); applies the same
+    /// side effects (tier clamp) a real transition would.
+    pub fn force_rung(&self, rung: Rung) {
+        let mut st = self.state.lock().unwrap();
+        self.apply_rung(&mut st, rung);
+        st.dwell_left = 0;
+        st.healthy_streak = 0;
+    }
+
+    pub fn report(&self) -> OverloadReport {
+        let st = self.state.lock().unwrap();
+        OverloadReport {
+            rung: st.rung,
+            admitted: st.admitted,
+            rejected: st.rejected,
+            completed: st.completed,
+            escalations: st.escalations,
+            de_escalations: st.de_escalations,
+            in_flight: st.in_flight,
+            windows: st.log.iter().copied().collect(),
+        }
+    }
+
+    fn plan(&self, rung: Rung) -> ShedPlan {
+        match rung {
+            Rung::Normal => {
+                ShedPlan { rung, promote_k: self.cfg.full_k, stage1_only: false }
+            }
+            Rung::ShrinkK => {
+                ShedPlan { rung, promote_k: self.cfg.shrink_k, stage1_only: false }
+            }
+            _ => ShedPlan { rung, promote_k: self.cfg.shrink_k, stage1_only: true },
+        }
+    }
+
+    /// Move to `new`, pin the dwell, and flip the tier clamp on the
+    /// [`Rung::TightTier`] boundary crossings.
+    fn apply_rung(&self, st: &mut State, new: Rung) {
+        let was_tight = st.rung.level() >= Rung::TightTier.level();
+        let now_tight = new.level() >= Rung::TightTier.level();
+        st.rung = new;
+        st.dwell_left = self.cfg.min_dwell;
+        if let Some(t) = &self.tier {
+            if now_tight && !was_tight {
+                t.set_permille(self.cfg.tier_clamp_pm);
+            } else if was_tight && !now_tight {
+                t.set_permille(1000);
+            }
+        }
+    }
+
+    fn on_window_boundary(&self, st: &mut State) {
+        st.window_idx += 1;
+        let mut samples = std::mem::take(&mut st.samples);
+        samples.sort_by(|a, b| a.total_cmp(b));
+        let (p50, p95, p99) = (pct(&samples, 0.50), pct(&samples, 0.95), pct(&samples, 0.99));
+        let slo = &self.cfg.slo;
+        let tripped = p50 > slo.p50_us
+            || p95 > slo.p95_us
+            || p99 > slo.p99_us
+            || st.depth_peak > slo.max_queue_depth;
+        let m = self.cfg.margin;
+        let healthy = p50 <= m * slo.p50_us
+            && p95 <= m * slo.p95_us
+            && p99 <= m * slo.p99_us
+            && (st.depth_peak as f64) <= m * slo.max_queue_depth as f64;
+        if st.dwell_left > 0 {
+            st.dwell_left -= 1;
+        } else if tripped {
+            if st.rung != Rung::Backpressure {
+                let next = st.rung.up();
+                self.apply_rung(st, next);
+                st.escalations += 1;
+            }
+        } else if healthy {
+            st.healthy_streak += 1;
+            if st.healthy_streak >= self.cfg.healthy_windows && st.rung != Rung::Normal {
+                let next = st.rung.down();
+                self.apply_rung(st, next);
+                st.de_escalations += 1;
+                st.healthy_streak = 0;
+            }
+        }
+        if tripped {
+            st.healthy_streak = 0;
+        }
+        let entry = GuardrailWindow {
+            index: st.window_idx,
+            p50_us: p50,
+            p95_us: p95,
+            p99_us: p99,
+            depth_peak: st.depth_peak,
+            device_mean_ns: st.device_mean_ns,
+            tripped,
+            healthy,
+            rung: st.rung,
+        };
+        if st.log.len() == LOG_CAP {
+            st.log.pop_front();
+        }
+        st.log.push_back(entry);
+        st.depth_peak = st.in_flight;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slo() -> SloConfig {
+        SloConfig { p50_us: 100.0, p95_us: 500.0, p99_us: 1_000.0, max_queue_depth: 16 }
+    }
+
+    /// window=4, no dwell, 2 healthy windows to step down, margin 0.5,
+    /// full_k 16 / shrink_k 4.
+    fn ctrl(min_dwell: usize) -> OverloadController {
+        OverloadController::new(
+            OverloadConfig {
+                window: 4,
+                min_dwell,
+                healthy_windows: 2,
+                margin: 0.5,
+                full_k: 16,
+                shrink_k: 4,
+                tier_clamp_pm: 500,
+                slo: slo(),
+            },
+            None,
+        )
+    }
+
+    /// Drive one full guardrail window: admit + complete `window`
+    /// queries, each with latency `lat_us`.
+    fn drive_window(c: &OverloadController, lat_us: f64) {
+        for _ in 0..c.config().window {
+            c.try_admit().expect("admission below backpressure");
+            c.on_complete(lat_us * 1_000.0);
+        }
+    }
+
+    #[test]
+    fn normal_rung_grants_the_full_plan() {
+        let c = ctrl(0);
+        let plan = c.try_admit().unwrap();
+        assert_eq!(plan, ShedPlan { rung: Rung::Normal, promote_k: 16, stage1_only: false });
+        c.on_complete(50_000.0);
+        let r = c.report();
+        assert_eq!((r.admitted, r.completed, r.rejected, r.in_flight), (1, 1, 0, 0));
+        assert_eq!(r.rung, Rung::Normal);
+    }
+
+    #[test]
+    fn tripped_windows_escalate_in_ladder_order_and_saturate() {
+        let c = ctrl(0);
+        let expect = [
+            Rung::ShrinkK,
+            Rung::Stage1Only,
+            Rung::TightTier,
+            Rung::Backpressure,
+            Rung::Backpressure, // saturates, no rung past the last
+        ];
+        for want in expect {
+            drive_window(&c, 5_000.0); // p99 5ms >> 1ms budget
+            assert_eq!(c.rung(), want);
+        }
+        let r = c.report();
+        assert_eq!(r.escalations, 4);
+        assert_eq!(r.de_escalations, 0);
+        assert!(r.windows.iter().all(|w| w.tripped));
+    }
+
+    #[test]
+    fn plans_follow_the_rung() {
+        let c = ctrl(0);
+        c.force_rung(Rung::ShrinkK);
+        let p = c.try_admit().unwrap();
+        assert_eq!((p.promote_k, p.stage1_only), (4, false));
+        c.on_complete(1_000.0);
+        c.force_rung(Rung::Stage1Only);
+        let p = c.try_admit().unwrap();
+        assert_eq!((p.promote_k, p.stage1_only), (4, true));
+        c.on_complete(1_000.0);
+        c.force_rung(Rung::TightTier);
+        let p = c.try_admit().unwrap();
+        assert!(p.stage1_only);
+        c.on_complete(1_000.0);
+    }
+
+    #[test]
+    fn de_escalation_requires_a_healthy_streak_under_the_margin() {
+        let c = ctrl(0);
+        drive_window(&c, 5_000.0);
+        assert_eq!(c.rung(), Rung::ShrinkK);
+        // within budget but above margin×budget (0.5 · 100µs = 50µs at
+        // p50): neither tripped nor healthy — the rung holds
+        drive_window(&c, 80.0);
+        assert_eq!(c.rung(), Rung::ShrinkK, "in-band window must hold the rung");
+        // first clean window: still holding (streak 1 < 2)
+        drive_window(&c, 10.0);
+        assert_eq!(c.rung(), Rung::ShrinkK);
+        // second consecutive clean window: step down
+        drive_window(&c, 10.0);
+        assert_eq!(c.rung(), Rung::Normal);
+        assert_eq!(c.report().de_escalations, 1);
+    }
+
+    #[test]
+    fn a_trip_resets_the_healthy_streak() {
+        let c = ctrl(0);
+        drive_window(&c, 5_000.0);
+        drive_window(&c, 5_000.0);
+        assert_eq!(c.rung(), Rung::Stage1Only);
+        drive_window(&c, 10.0); // streak 1
+        drive_window(&c, 5_000.0); // trip: streak back to 0, escalate
+        assert_eq!(c.rung(), Rung::TightTier);
+        drive_window(&c, 10.0); // streak 1 again — not 2
+        assert_eq!(c.rung(), Rung::TightTier);
+        drive_window(&c, 10.0);
+        assert_eq!(c.rung(), Rung::Stage1Only, "only now does it step down");
+    }
+
+    #[test]
+    fn depth_guardrail_escalates_at_admission_and_rejects_last() {
+        let c = ctrl(0);
+        // a stalled server: admissions with no completions
+        let mut rejected = 0;
+        for _ in 0..40 {
+            if c.try_admit().is_err() {
+                rejected += 1;
+            }
+        }
+        let r = c.report();
+        assert_eq!(r.rung, Rung::Backpressure);
+        assert!(rejected > 0, "the final rung must reject");
+        assert_eq!(r.rejected, rejected);
+        // depth crossing escalates one rung per admission: 4 rungs past
+        // the bar of 16 → at most 20 in flight, the rest rejected
+        assert!(r.in_flight <= 16 + 4, "queue must stay bounded, got {}", r.in_flight);
+        assert_eq!(r.admitted as usize, r.in_flight);
+        assert_eq!(r.admitted + r.rejected, 40, "every arrival accounted for");
+    }
+
+    #[test]
+    fn dwell_bounds_flapping_under_an_oscillating_window() {
+        let dwell = 2;
+        let c = ctrl(dwell);
+        let n = 60u64; // windows driven
+        for i in 0..n {
+            // adversarial square wave: trip, then clean, alternating
+            let lat = if (i / 2) % 2 == 0 { 5_000.0 } else { 10.0 };
+            drive_window(&c, lat);
+        }
+        let r = c.report();
+        let transitions = r.escalations + r.de_escalations;
+        let bound = n / (dwell as u64 + 1) + 1;
+        assert!(transitions <= bound, "{transitions} transitions > bound {bound}");
+        assert!(r.escalations >= 1, "the ladder must still react");
+    }
+
+    #[test]
+    fn tier_clamp_follows_the_tight_tier_boundary() {
+        let tier = TierControl::new();
+        let c = OverloadController::new(
+            OverloadConfig {
+                window: 4,
+                min_dwell: 0,
+                healthy_windows: 1,
+                margin: 0.5,
+                full_k: 16,
+                shrink_k: 4,
+                tier_clamp_pm: 250,
+                slo: slo(),
+            },
+            Some(tier.clone()),
+        );
+        for want in [Rung::ShrinkK, Rung::Stage1Only] {
+            drive_window(&c, 5_000.0);
+            assert_eq!(c.rung(), want);
+            assert_eq!(tier.permille(), 1000, "clamp must wait for TightTier");
+        }
+        drive_window(&c, 5_000.0);
+        assert_eq!(c.rung(), Rung::TightTier);
+        assert_eq!(tier.permille(), 250);
+        drive_window(&c, 5_000.0);
+        assert_eq!(c.rung(), Rung::Backpressure);
+        assert_eq!(tier.permille(), 250, "still tight above the boundary");
+        // recovery: healthy_windows=1, one clean window per step down
+        drive_window(&c, 10.0);
+        assert_eq!(c.rung(), Rung::TightTier);
+        assert_eq!(tier.permille(), 250);
+        drive_window(&c, 10.0);
+        assert_eq!(c.rung(), Rung::Stage1Only);
+        assert_eq!(tier.permille(), 1000, "released when stepping below TightTier");
+    }
+
+    #[test]
+    fn errors_release_the_admission_slot_without_latency_samples() {
+        let c = ctrl(0);
+        c.try_admit().unwrap();
+        c.on_error();
+        let r = c.report();
+        assert_eq!(r.in_flight, 0);
+        assert_eq!(r.completed, 0);
+        // no sample was pushed: no window boundary can have fired
+        assert!(r.windows.is_empty());
+    }
+
+    #[test]
+    fn report_windows_are_bounded_and_carry_percentiles() {
+        let c = ctrl(0);
+        for _ in 0..(LOG_CAP + 10) {
+            drive_window(&c, 10.0);
+        }
+        let r = c.report();
+        assert_eq!(r.windows.len(), LOG_CAP);
+        let last = r.windows.last().unwrap();
+        assert!(last.index > LOG_CAP as u64);
+        assert!((last.p50_us - 10.0).abs() < 1e-9);
+        assert!((last.p99_us - 10.0).abs() < 1e-9);
+        assert!(last.healthy && !last.tripped);
+    }
+
+    #[test]
+    fn rung_names_and_order_are_stable() {
+        let names: Vec<&str> = Rung::ALL.iter().map(|r| r.name()).collect();
+        assert_eq!(names, vec!["normal", "shrink-k", "stage1-only", "tight-tier", "backpressure"]);
+        for w in Rung::ALL.windows(2) {
+            assert!(w[0].level() < w[1].level());
+            assert_eq!(w[0].up(), w[1]);
+            assert_eq!(w[1].down(), w[0]);
+        }
+        assert_eq!(Rung::Backpressure.up(), Rung::Backpressure);
+        assert_eq!(Rung::Normal.down(), Rung::Normal);
+    }
+}

@@ -162,6 +162,7 @@ pub fn fig15(quick: bool) -> Table {
                 rate: TIER_FIG_RATE,
                 platform: PlatformKind::CpuDdr,
                 l_blk: 4096,
+                control: None,
             };
             let spec = device.clone().tiered(tier);
             let r = run_tier_cell(&corpus, &spec, n_parts, &targets, 0.02, 0x515);

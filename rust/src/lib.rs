@@ -34,6 +34,12 @@
 //! * [`smoke`] — the `fivemin smoke` perf-smoke matrix: short serving
 //!   scenarios across backends × fetch modes × shard counts, gated
 //!   against a checked-in baseline in CI (`results/bench_smoke.json`).
+//! * [`soak`] — the `fivemin soak` overload drill: a seeded open-loop
+//!   arrival process ([`workload::ArrivalGen`]) drives a router governed
+//!   by the shedding ladder ([`coordinator::OverloadController`]) through
+//!   ramp/burst/sustained/recovery phases; per-phase guardrail verdicts
+//!   are gated against a checked-in baseline in CI
+//!   (`results/bench_soak.json`).
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts`
 //! lowers the Layer-1/Layer-2 compute graphs to HLO text that the Rust
@@ -65,6 +71,67 @@ pub mod model;
 pub mod runtime;
 pub mod sim;
 pub mod smoke;
+pub mod soak;
 pub mod storage;
 pub mod util;
 pub mod workload;
+
+#[cfg(test)]
+mod test_registration {
+    //! Guard against silently unregistered integration tests: this crate
+    //! uses explicit `[[test]]` entries in Cargo.toml (no autodiscovery
+    //! under the non-standard `rust/tests/` layout), so a new file in
+    //! `rust/tests/` that never gains an entry would sit there looking
+    //! like coverage while never compiling, let alone running. Diff the
+    //! directory against the manifest, both directions.
+
+    use std::collections::BTreeSet;
+    use std::path::Path;
+
+    fn on_disk() -> BTreeSet<String> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests");
+        std::fs::read_dir(&dir)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", dir.display()))
+            .filter_map(|entry| {
+                let name = entry.expect("dir entry").file_name();
+                let name = name.to_string_lossy();
+                name.strip_suffix(".rs").map(|stem| stem.to_string())
+            })
+            .collect()
+    }
+
+    fn in_manifest() -> BTreeSet<String> {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("Cargo.toml");
+        let manifest = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+        // string-scan, not a TOML parser (no such dependency): every
+        // [[test]] target in this repo points its `path` at
+        // rust/tests/<name>.rs on a single line
+        manifest
+            .lines()
+            .filter_map(|line| {
+                let path_val = line.trim().strip_prefix("path")?.trim_start().strip_prefix('=')?;
+                let rel = path_val.trim().trim_matches('"');
+                rel.strip_prefix("rust/tests/")?.strip_suffix(".rs").map(|s| s.to_string())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_test_file_is_registered_in_the_manifest() {
+        let disk = on_disk();
+        let manifest = in_manifest();
+        let unregistered: Vec<_> = disk.difference(&manifest).collect();
+        assert!(
+            unregistered.is_empty(),
+            "rust/tests/ files without a [[test]] entry in Cargo.toml \
+             (they would never compile or run): {unregistered:?}"
+        );
+        let phantom: Vec<_> = manifest.difference(&disk).collect();
+        assert!(
+            phantom.is_empty(),
+            "Cargo.toml [[test]] entries whose rust/tests/ file is gone: {phantom:?}"
+        );
+        assert!(!disk.is_empty(), "no integration tests found at all");
+    }
+}

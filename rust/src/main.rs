@@ -8,6 +8,7 @@
 //!   config      — dump the Table I / Table III presets as JSON
 //!   serve       — run the ANN serving stack on synthetic queries
 //!   smoke       — perf-smoke serve matrix, gated against a baseline
+//!   soak        — overload drill: bursty open-loop load vs the shedding ladder
 
 // Same style trade-offs as the library crate (see rust/src/lib.rs).
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
@@ -49,6 +50,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "config" => cmd_config(rest),
         "serve" => cmd_serve(rest),
         "smoke" => cmd_smoke(rest),
+        "soak" => cmd_soak(rest),
         "--help" | "-h" | "help" => {
             print_help();
             Ok(())
@@ -67,7 +69,8 @@ fn print_help() {
          \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11 --fig12 --fig13 --fig14 --fig15] [--out DIR] [--quick]\n\
          \x20 config     --dump\n\
          \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N[,map=interleave]]] [--pace afap|wall:S] [--fetch spec|merge|adaptive] [--tier none|dram:mb=N,rule=breakeven|5min|5s|clock]\n\
-         \x20 smoke      [--queries N] [--json] [--out FILE] [--baseline FILE] [--tolerance T]"
+         \x20 smoke      [--queries N] [--json] [--out FILE] [--baseline FILE] [--tolerance T]\n\
+         \x20 soak       [--secs-per-phase S] [--shards N] [--max-arrivals N] [--depth N] [--p99-us US] [--json] [--out FILE] [--baseline FILE] [--seed N]"
     );
 }
 
@@ -418,6 +421,73 @@ fn cmd_smoke(args: &[String]) -> Result<(), String> {
                 "gate: FAIL vs {base_path}\n  {}",
                 failures.join("\n  ")
             ));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_soak(args: &[String]) -> Result<(), String> {
+    let spec = ArgSpec::new(
+        "soak",
+        "overload drill: self-calibrated open-loop load (ramp/burst/sustained-2x/recovery) \
+         against the shedding ladder, optionally gated against a checked-in baseline",
+    )
+    .opt("secs-per-phase", "S", Some("2"), "wall-clock seconds per load phase")
+    .opt("shards", "N", Some("2"), "corpus shards = partition workers")
+    .opt("max-arrivals", "N", Some("4000"), "cap on generated arrivals per phase (CI clamp)")
+    .opt("depth", "N", Some("0"), "max in-flight queries before the depth guardrail (0 = derive)")
+    .opt("p99-us", "US", Some("0"), "p99 SLO budget in microseconds (0 = derive from capacity)")
+    .opt("p95-us", "US", Some("0"), "p95 SLO budget (0 = derive)")
+    .opt("p50-us", "US", Some("0"), "p50 SLO budget (0 = derive)")
+    .opt("seed", "N", Some("20652"), "arrival-process seed")
+    .flag("json", "write the JSON artifact (see --out)")
+    .opt(
+        "out",
+        "FILE",
+        Some("results/bench_soak.json"),
+        "artifact path (written before the gate runs, so CI can upload it either way)",
+    )
+    .opt(
+        "baseline",
+        "FILE",
+        None,
+        "gate ladder behavior against this baseline \
+         (rust/benches/common/soak_baseline.json in CI)",
+    );
+    let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
+    let secs = p.f64("secs-per-phase").map_err(|e| e.to_string())?.unwrap();
+    if secs <= 0.0 {
+        return Err("--secs-per-phase must be > 0".into());
+    }
+    let shards = p.usize("shards").map_err(|e| e.to_string())?.unwrap();
+    if shards == 0 {
+        return Err("--shards must be >= 1".into());
+    }
+    let cfg = fivemin::soak::SoakConfig {
+        shards,
+        secs_per_phase: secs,
+        max_arrivals_per_phase: p.usize("max-arrivals").map_err(|e| e.to_string())?.unwrap(),
+        depth: p.usize("depth").map_err(|e| e.to_string())?.unwrap(),
+        p99_us: p.f64("p99-us").map_err(|e| e.to_string())?.unwrap(),
+        p95_us: p.f64("p95-us").map_err(|e| e.to_string())?.unwrap(),
+        p50_us: p.f64("p50-us").map_err(|e| e.to_string())?.unwrap(),
+        seed: p.u64("seed").map_err(|e| e.to_string())?.unwrap(),
+    };
+    let run = fivemin::soak::run_soak(&cfg).map_err(|e| e.to_string())?;
+    println!("{}", fivemin::soak::table(&run).render());
+    if p.flag("json") || p.str("baseline").is_some() {
+        let out = PathBuf::from(p.str("out").unwrap());
+        fivemin::soak::write_artifact(&out, &run).map_err(|e| e.to_string())?;
+        println!("wrote {}", out.display());
+    }
+    if let Some(base_path) = p.str("baseline") {
+        let baseline = fivemin::soak::load_baseline(&PathBuf::from(base_path))
+            .map_err(|e| e.to_string())?;
+        let failures = fivemin::soak::gate(&run, &baseline);
+        if failures.is_empty() {
+            println!("gate: PASS ({} phases vs {base_path})", run.phases.len());
+        } else {
+            return Err(format!("gate: FAIL vs {base_path}\n  {}", failures.join("\n  ")));
         }
     }
     Ok(())

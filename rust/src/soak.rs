@@ -1,0 +1,702 @@
+//! Overload-soak harness (`fivemin soak`): a multi-phase open-loop load
+//! drill — ramp, burst, sustained-over-capacity, recovery — driven by the
+//! seeded arrival generator ([`crate::workload::ArrivalGen`]) against a
+//! partitioned router governed by the shedding ladder
+//! ([`crate::coordinator::OverloadController`]), with a per-phase
+//! guardrail verdict table gated against a checked-in baseline. The drill
+//! asserts the overload *contract*, not absolute throughput: under
+//! sustained load beyond capacity the server degrades and sheds instead
+//! of collapsing.
+//!
+//! The harness self-calibrates so the drill is meaningful on any runner:
+//! a pipelined closed-loop burst measures the deployment's capacity
+//! (queries/s), phase rates are multiples of that measurement (the
+//! sustained phase runs at 2× it), and the latency SLOs default to
+//! queue-theoretic multiples of the measured service time
+//! ([`derive_slo`]). Absolute latencies therefore never appear in the
+//! baseline — only ladder behavior does:
+//!
+//! * **`max_rung` is gated per phase**: the ramp phase must stay near the
+//!   bottom of the ladder; burst and sustained phases may climb to the
+//!   top but that is the *ceiling*, not a tolerance band.
+//! * **The sustained phase is the overload assertion**: the p99 of
+//!   *accepted* queries must sit within the SLO (degraded answers are
+//!   fast answers — that is the point of shedding), and every arrival
+//!   must be accounted as accepted or rejected. Rejects are counted,
+//!   never silently dropped.
+//! * **The recovery phase pins hysteresis**: after load falls away the
+//!   ladder must walk back down to `end_rung` (rung 0) before the phase
+//!   ends.
+//! * **Worker errors fail the gate unconditionally** — an admitted query
+//!   that dies is a collapse, not a shed.
+//!
+//! The JSON artifact (`results/bench_soak.json`) is uploaded by the
+//! `soak-drill` CI job; the gate compares against
+//! `rust/benches/common/soak_baseline.json`.
+
+use std::path::Path;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::{
+    Coordinator, FetchMode, OverloadConfig, OverloadController, QueryResult, Router,
+    ServingCorpus, SloConfig,
+};
+use crate::runtime::{default_artifacts_dir, SERVE};
+use crate::storage::BackendSpec;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+use crate::util::table::Table;
+use crate::workload::{ArrivalConfig, ArrivalGen};
+
+/// Artifact/baseline schema tag (bump on breaking shape changes).
+pub const SCHEMA: &str = "fivemin-bench-soak/v1";
+
+/// Soak-drill knobs (CLI-facing; zero means "derive").
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    /// Corpus shards = partition workers.
+    pub shards: usize,
+    /// Wall-clock length of each load phase (seconds).
+    pub secs_per_phase: f64,
+    /// Hard cap on generated arrivals per phase (CI clamp: a fast runner
+    /// measures a high capacity, and 2× that for several seconds is more
+    /// queries than a drill needs to prove the contract).
+    pub max_arrivals_per_phase: usize,
+    /// Max in-flight queries before the depth guardrail trips; 0 derives
+    /// `4 × SERVE.batch` (four full batches queued = a saturated server).
+    pub depth: usize,
+    /// Latency budgets (µs); 0 derives from measured capacity
+    /// ([`derive_slo`]).
+    pub p99_us: f64,
+    pub p95_us: f64,
+    pub p50_us: f64,
+    /// Arrival-process seed (phases fork deterministic substreams).
+    pub seed: u64,
+}
+
+impl Default for SoakConfig {
+    fn default() -> Self {
+        SoakConfig {
+            shards: 2,
+            secs_per_phase: 2.0,
+            max_arrivals_per_phase: 4000,
+            depth: 0,
+            p99_us: 0.0,
+            p95_us: 0.0,
+            p50_us: 0.0,
+            seed: 0x50AC,
+        }
+    }
+}
+
+/// One phase of the drill's load profile.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseSpec {
+    pub name: &'static str,
+    /// Arrival rate as a multiple of measured capacity.
+    pub rate_mult: f64,
+    /// Burst modulation (1.0 / 0.0 = flat).
+    pub burst_factor: f64,
+    pub burst_duty: f64,
+}
+
+/// The fixed four-phase profile: ramp under capacity, bursty load whose
+/// peaks overshoot capacity, sustained 2× over capacity, then recovery
+/// far under it. The baseline pins exactly these names.
+pub fn phase_plan() -> [PhaseSpec; 4] {
+    [
+        PhaseSpec { name: "ramp", rate_mult: 0.4, burst_factor: 1.0, burst_duty: 0.0 },
+        // mean 0.8 × 1.6 = 1.28× capacity; 2.4× inside bursts
+        PhaseSpec { name: "burst", rate_mult: 0.8, burst_factor: 3.0, burst_duty: 0.3 },
+        PhaseSpec { name: "sustained", rate_mult: 2.0, burst_factor: 1.0, burst_duty: 0.0 },
+        PhaseSpec { name: "recovery", rate_mult: 0.3, burst_factor: 1.0, burst_duty: 0.0 },
+    ]
+}
+
+/// One phase's guardrail verdict.
+#[derive(Clone, Debug)]
+pub struct PhaseResult {
+    pub name: &'static str,
+    pub rate_mult: f64,
+    /// Offered load: arrivals generated for the phase (post-clamp).
+    pub arrivals: usize,
+    /// `accepted + rejected == arrivals` — the gate enforces it; an
+    /// arrival the driver can't account for is a dropped query.
+    pub accepted: usize,
+    pub rejected: usize,
+    /// Accepted queries answered stage-1-only (`scores.is_empty()`).
+    pub degraded: usize,
+    /// Admitted queries that died on a worker error (gate: must be 0).
+    pub errors: usize,
+    /// Latency percentiles of *accepted* completions (µs).
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Highest ladder rung reached during the phase ([`crate::coordinator::Rung::level`]).
+    pub rung_max: usize,
+    /// Rung at phase end (after the tail of in-flight queries drained).
+    pub rung_end: usize,
+    /// `p99_us` within the derived/configured SLO budget.
+    pub within_slo: bool,
+}
+
+/// A complete drill: the calibration, the SLOs it derived, and the
+/// per-phase verdicts.
+#[derive(Clone, Debug)]
+pub struct SoakRun {
+    pub capacity_qps: f64,
+    pub slo: SloConfig,
+    pub phases: Vec<PhaseResult>,
+}
+
+/// Latency SLOs from measured capacity: the p99 budget is 1.5× the time
+/// a full admission queue (`depth` queries) takes to drain at capacity —
+/// a server keeping up never holds a query longer than its own queue —
+/// with p95/p50 at fixed fractions. Explicit (non-zero) budgets in `cfg`
+/// win over derivation.
+pub fn derive_slo(capacity_qps: f64, cfg: &SoakConfig) -> SloConfig {
+    let depth = if cfg.depth == 0 { 4 * SERVE.batch } else { cfg.depth };
+    let drain_us = depth as f64 / capacity_qps.max(1e-9) * 1e6;
+    let p99 = if cfg.p99_us > 0.0 { cfg.p99_us } else { 1.5 * drain_us };
+    let p95 = if cfg.p95_us > 0.0 { cfg.p95_us } else { 0.5 * p99 };
+    let p50 = if cfg.p50_us > 0.0 { cfg.p50_us } else { 0.25 * p99 };
+    SloConfig { p50_us: p50, p95_us: p95, p99_us: p99, max_queue_depth: depth }
+}
+
+type RespRx = mpsc::Receiver<Result<QueryResult, String>>;
+
+fn start_workers(corpus: &Arc<ServingCorpus>, shards: usize) -> Result<Vec<Coordinator>> {
+    corpus
+        .partitions(shards)?
+        .into_iter()
+        .map(|part| {
+            Coordinator::start(
+                default_artifacts_dir(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                BackendSpec::Mem,
+            )
+        })
+        .collect()
+}
+
+/// Measure deployment capacity (queries/s) with a pipelined closed-loop
+/// burst: enough concurrent queries to fill several batches, submitted
+/// back-to-back so the workers never idle. Sequential submission would
+/// measure ~1/batch of real capacity — every batch executes the full
+/// padded graph shape, so throughput comes from filling batches, not
+/// from single-query round-trips.
+fn calibrate(corpus: &Arc<ServingCorpus>, shards: usize) -> Result<f64> {
+    let router = Router::partitioned_with(start_workers(corpus, shards)?, FetchMode::AfterMerge)?;
+    let mut rng = Rng::new(0x50AC_CA1);
+    let n = (8 * SERVE.batch).max(64);
+    let start = Instant::now();
+    let pending: Vec<RespRx> = (0..n)
+        .map(|i| router.submit(corpus.query_near(i % corpus.n, 0.02, &mut rng)))
+        .collect();
+    for rx in pending {
+        rx.recv().map_err(|_| anyhow!("calibration worker died"))?.map_err(|e| anyhow!(e))?;
+    }
+    let wall = start.elapsed().as_secs_f64().max(1e-6);
+    Ok(n as f64 / wall)
+}
+
+/// Sweep the pending queue once, recording finished queries.
+fn drain_completions(
+    pending: &mut Vec<RespRx>,
+    lat: &mut Samples,
+    degraded: &mut usize,
+    errors: &mut usize,
+) {
+    pending.retain(|rx| match rx.try_recv() {
+        Ok(Ok(r)) => {
+            lat.push(r.latency.as_nanos() as f64);
+            if r.scores.is_empty() {
+                *degraded += 1;
+            }
+            false
+        }
+        Ok(Err(_)) | Err(mpsc::TryRecvError::Disconnected) => {
+            *errors += 1;
+            false
+        }
+        Err(mpsc::TryRecvError::Empty) => true,
+    });
+}
+
+fn run_phase(
+    router: &Router,
+    ctrl: &OverloadController,
+    corpus: &Arc<ServingCorpus>,
+    spec: &PhaseSpec,
+    capacity_qps: f64,
+    cfg: &SoakConfig,
+    phase_idx: u64,
+    slo: &SloConfig,
+) -> Result<PhaseResult> {
+    let acfg = ArrivalConfig {
+        rate_qps: capacity_qps * spec.rate_mult,
+        burst_factor: spec.burst_factor,
+        burst_period_s: (cfg.secs_per_phase / 3.0).max(1e-3),
+        burst_duty: spec.burst_duty,
+        seed: cfg.seed.wrapping_add(phase_idx),
+        ..ArrivalConfig::default()
+    };
+    let mut arrivals =
+        ArrivalGen::new(acfg).generate((cfg.secs_per_phase * 1e9) as u64);
+    arrivals.truncate(cfg.max_arrivals_per_phase);
+    let mut rng = Rng::new(cfg.seed ^ 0x9E37_79B9).fork(phase_idx);
+    let mut pending: Vec<RespRx> = Vec::new();
+    let mut lat = Samples::new();
+    let (mut accepted, mut rejected, mut degraded, mut errors) = (0usize, 0usize, 0usize, 0usize);
+    let mut rung_max = ctrl.rung().level();
+    let start = Instant::now();
+    let mut last_obs = start;
+    let n_arrivals = arrivals.len();
+    for a in arrivals {
+        // open loop: hold each arrival to its generated timestamp, never
+        // to the previous query's completion — overload means the offered
+        // rate does not slow down just because the server did
+        let deadline = start + Duration::from_nanos(a.at_ns);
+        loop {
+            drain_completions(&mut pending, &mut lat, &mut degraded, &mut errors);
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            std::thread::sleep((deadline - now).min(Duration::from_micros(200)));
+        }
+        // tenants map to a fixed popular target set: the zipf skew over
+        // tenants becomes key skew over the corpus
+        let target = (a.tenant as usize).wrapping_mul(131) % corpus.n;
+        match router.try_submit(corpus.query_near(target, 0.02, &mut rng)) {
+            Ok(rx) => {
+                pending.push(rx);
+                accepted += 1;
+            }
+            Err(_) => rejected += 1,
+        }
+        rung_max = rung_max.max(ctrl.rung().level());
+        if last_obs.elapsed() > Duration::from_millis(50) {
+            ctrl.observe_device(&router.take_device_window());
+            last_obs = Instant::now();
+        }
+    }
+    // drain the tail: every accepted query completes before the verdict
+    while !pending.is_empty() {
+        drain_completions(&mut pending, &mut lat, &mut degraded, &mut errors);
+        rung_max = rung_max.max(ctrl.rung().level());
+        if !pending.is_empty() {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let p99_us = lat.percentile(0.99) / 1e3;
+    Ok(PhaseResult {
+        name: spec.name,
+        rate_mult: spec.rate_mult,
+        arrivals: n_arrivals,
+        accepted,
+        rejected,
+        degraded,
+        errors,
+        p50_us: lat.percentile(0.5) / 1e3,
+        p95_us: lat.percentile(0.95) / 1e3,
+        p99_us,
+        rung_max,
+        rung_end: ctrl.rung().level(),
+        within_slo: accepted > 0 && p99_us <= slo.p99_us,
+    })
+}
+
+/// Run the full drill: calibrate, derive SLOs, then drive the four-phase
+/// profile through one overload-governed router (ladder state carries
+/// across phases — recovery must *walk down* from wherever sustained
+/// left it).
+pub fn run_soak(cfg: &SoakConfig) -> Result<SoakRun> {
+    let corpus = Arc::new(ServingCorpus::synthetic(cfg.shards, 0x50AC + cfg.shards as u64));
+    let capacity_qps = calibrate(&corpus, cfg.shards)?;
+    let slo = derive_slo(capacity_qps, cfg);
+    let over_cfg = OverloadConfig {
+        // small windows so the guardrails sample several times per phase
+        window: 16,
+        ..OverloadConfig::for_slo(slo)
+    };
+    let router = Router::partitioned_overload(
+        start_workers(&corpus, cfg.shards)?,
+        FetchMode::AfterMerge,
+        over_cfg,
+        None,
+    )?;
+    let ctrl = router.overload().ok_or_else(|| anyhow!("overload router lacks controller"))?;
+    let ctrl = Arc::clone(ctrl);
+    let mut phases = Vec::new();
+    for (i, spec) in phase_plan().iter().enumerate() {
+        phases.push(run_phase(&router, &ctrl, &corpus, spec, capacity_qps, cfg, i as u64, &slo)?);
+        // between phases the queue is drained; give the ladder idle
+        // windows' worth of nothing — de-escalation happens on window
+        // boundaries, which need completions, so the next phase's early
+        // traffic closes any window the tail left open
+    }
+    Ok(SoakRun { capacity_qps, slo, phases })
+}
+
+/// Render the drill as the repo's standard ASCII/CSV table.
+pub fn table(run: &SoakRun) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "bench-soak: overload drill at measured capacity {:.0} q/s — per-phase \
+             guardrail verdicts (SLO p99 {:.0}us, depth {})",
+            run.capacity_qps, run.slo.p99_us, run.slo.max_queue_depth
+        ),
+        &[
+            "phase",
+            "rate_mult",
+            "arrivals",
+            "accepted",
+            "rejected",
+            "degraded",
+            "errors",
+            "p50_us",
+            "p99_us",
+            "rung_max",
+            "rung_end",
+            "slo_ok",
+        ],
+    );
+    for p in &run.phases {
+        t.row(vec![
+            p.name.to_string(),
+            format!("{:.1}", p.rate_mult),
+            format!("{}", p.arrivals),
+            format!("{}", p.accepted),
+            format!("{}", p.rejected),
+            format!("{}", p.degraded),
+            format!("{}", p.errors),
+            format!("{:.1}", p.p50_us),
+            format!("{:.1}", p.p99_us),
+            format!("{}", p.rung_max),
+            format!("{}", p.rung_end),
+            format!("{}", p.within_slo),
+        ]);
+    }
+    t
+}
+
+/// Serialize the drill to the bench_soak.json artifact shape.
+pub fn to_json(run: &SoakRun) -> Json {
+    let phases: Vec<Json> = run
+        .phases
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("name", Json::Str(p.name.to_string())),
+                ("rate_mult", Json::Num(p.rate_mult)),
+                ("arrivals", Json::Num(p.arrivals as f64)),
+                ("accepted", Json::Num(p.accepted as f64)),
+                ("rejected", Json::Num(p.rejected as f64)),
+                ("degraded", Json::Num(p.degraded as f64)),
+                ("errors", Json::Num(p.errors as f64)),
+                ("p50_us", Json::Num(p.p50_us)),
+                ("p95_us", Json::Num(p.p95_us)),
+                ("p99_us", Json::Num(p.p99_us)),
+                ("rung_max", Json::Num(p.rung_max as f64)),
+                ("rung_end", Json::Num(p.rung_end as f64)),
+                ("within_slo", Json::Bool(p.within_slo)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::Str(SCHEMA.to_string())),
+        ("capacity_qps", Json::Num(run.capacity_qps)),
+        (
+            "slo",
+            Json::obj(vec![
+                ("p50_us", Json::Num(run.slo.p50_us)),
+                ("p95_us", Json::Num(run.slo.p95_us)),
+                ("p99_us", Json::Num(run.slo.p99_us)),
+                ("max_queue_depth", Json::Num(run.slo.max_queue_depth as f64)),
+            ]),
+        ),
+        ("phases", Json::Arr(phases)),
+    ])
+}
+
+/// Write the artifact (creating parent directories).
+pub fn write_artifact(path: &Path, run: &SoakRun) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, format!("{}\n", to_json(run)))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Gate the drill against a baseline document. Returns the list of
+/// failures (empty = gate passes). The baseline pins *ladder behavior*
+/// (rung ceilings, the sustained-phase SLO/accounting contract, the
+/// recovery rung) — never absolute rates or latencies, which the drill
+/// derives per machine.
+pub fn gate(run: &SoakRun, baseline: &Json) -> Vec<String> {
+    let mut failures = Vec::new();
+    let Some(base) = baseline.get(&["phases"]).and_then(|p| p.as_obj()) else {
+        return vec!["baseline has no 'phases' object".to_string()];
+    };
+    for (name, want) in base {
+        let Some(got) = run.phases.iter().find(|p| p.name == name.as_str()) else {
+            failures.push(format!("phase {name}: in baseline but not measured"));
+            continue;
+        };
+        if let Some(max) = want.get(&["max_rung"]).and_then(|v| v.as_f64()) {
+            if got.rung_max as f64 > max {
+                failures.push(format!(
+                    "phase {name}: ladder climbed to rung {} (ceiling {max:.0})",
+                    got.rung_max
+                ));
+            }
+        }
+        if let Some(end) = want.get(&["end_rung"]).and_then(|v| v.as_f64()) {
+            if got.rung_end as f64 > end {
+                failures.push(format!(
+                    "phase {name}: ended at rung {} — no recovery below {end:.0}",
+                    got.rung_end
+                ));
+            }
+        }
+        if want.get(&["require_within_slo"]).and_then(|v| v.as_bool()).unwrap_or(false)
+            && !got.within_slo
+        {
+            failures.push(format!(
+                "phase {name}: p99 {:.0}us of accepted queries over the {:.0}us SLO \
+                 (shedding failed to protect the accepted tail)",
+                got.p99_us, run.slo.p99_us
+            ));
+        }
+        if want.get(&["require_rejects_counted"]).and_then(|v| v.as_bool()).unwrap_or(false)
+            && got.accepted + got.rejected != got.arrivals
+        {
+            failures.push(format!(
+                "phase {name}: {} accepted + {} rejected != {} arrivals — \
+                 queries dropped uncounted",
+                got.accepted, got.rejected, got.arrivals
+            ));
+        }
+    }
+    for p in &run.phases {
+        if !base.contains_key(p.name) {
+            failures.push(format!("phase {}: measured but not pinned by baseline", p.name));
+        }
+        // unconditional: an admitted query that errors is a collapse
+        if p.errors > 0 {
+            failures
+                .push(format!("phase {}: {} admitted queries died on errors", p.name, p.errors));
+        }
+    }
+    failures
+}
+
+/// Load and schema-check a baseline file.
+pub fn load_baseline(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading baseline {}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("baseline {}: {e}", path.display()))?;
+    let schema = doc.get(&["schema"]).and_then(|s| s.as_str()).unwrap_or("");
+    anyhow::ensure!(schema == SCHEMA, "baseline schema '{schema}' != expected '{SCHEMA}'");
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phase(name: &'static str, rung_max: usize, rung_end: usize) -> PhaseResult {
+        PhaseResult {
+            name,
+            rate_mult: 1.0,
+            arrivals: 100,
+            accepted: 90,
+            rejected: 10,
+            degraded: 20,
+            errors: 0,
+            p50_us: 100.0,
+            p95_us: 300.0,
+            p99_us: 500.0,
+            rung_max,
+            rung_end,
+            within_slo: true,
+        }
+    }
+
+    fn run_of(phases: Vec<PhaseResult>) -> SoakRun {
+        SoakRun {
+            capacity_qps: 1000.0,
+            slo: SloConfig { p50_us: 250.0, p95_us: 500.0, p99_us: 1000.0, max_queue_depth: 16 },
+            phases,
+        }
+    }
+
+    fn baseline() -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            (
+                "phases",
+                Json::obj(vec![
+                    ("ramp", Json::obj(vec![("max_rung", Json::Num(1.0))])),
+                    ("burst", Json::obj(vec![("max_rung", Json::Num(4.0))])),
+                    (
+                        "sustained",
+                        Json::obj(vec![
+                            ("max_rung", Json::Num(4.0)),
+                            ("require_within_slo", Json::Bool(true)),
+                            ("require_rejects_counted", Json::Bool(true)),
+                        ]),
+                    ),
+                    (
+                        "recovery",
+                        Json::obj(vec![
+                            ("max_rung", Json::Num(4.0)),
+                            ("end_rung", Json::Num(0.0)),
+                        ]),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    fn matched_run() -> SoakRun {
+        run_of(vec![
+            phase("ramp", 0, 0),
+            phase("burst", 3, 1),
+            phase("sustained", 4, 4),
+            phase("recovery", 2, 0),
+        ])
+    }
+
+    #[test]
+    fn gate_passes_a_matched_run() {
+        let failures = gate(&matched_run(), &baseline());
+        assert!(failures.is_empty(), "unexpected failures: {failures:?}");
+    }
+
+    #[test]
+    fn gate_enforces_rung_ceilings_and_recovery() {
+        let mut run = matched_run();
+        run.phases[0].rung_max = 3; // ramp climbed past its ceiling
+        let failures = gate(&run, &baseline());
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("ramp") && failures[0].contains("rung 3"));
+        let mut run = matched_run();
+        run.phases[3].rung_end = 2; // stuck shedding after load fell away
+        let failures = gate(&run, &baseline());
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("recovery") && failures[0].contains("no recovery"));
+    }
+
+    #[test]
+    fn gate_enforces_the_sustained_overload_contract() {
+        let mut run = matched_run();
+        run.phases[2].within_slo = false; // accepted tail blew the SLO
+        let failures = gate(&run, &baseline());
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("sustained") && failures[0].contains("SLO"));
+        let mut run = matched_run();
+        run.phases[2].rejected = 5; // 90 + 5 != 100: dropped uncounted
+        let failures = gate(&run, &baseline());
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("dropped uncounted"));
+    }
+
+    #[test]
+    fn gate_flags_missing_phases_errors_and_bad_baselines() {
+        let mut run = matched_run();
+        run.phases.remove(1); // burst never measured
+        let failures = gate(&run, &baseline());
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("burst"));
+        let mut run = matched_run();
+        run.phases.push(phase("extra", 0, 0)); // unpinned phase
+        assert!(gate(&run, &baseline()).iter().any(|f| f.contains("not pinned")));
+        let mut run = matched_run();
+        run.phases[1].errors = 2; // admitted queries died
+        assert!(gate(&run, &baseline()).iter().any(|f| f.contains("died on errors")));
+        assert_eq!(gate(&matched_run(), &Json::obj(vec![])).len(), 1);
+    }
+
+    #[test]
+    fn phase_plan_shapes_the_drill() {
+        let plan = phase_plan();
+        assert_eq!(
+            plan.iter().map(|p| p.name).collect::<Vec<_>>(),
+            vec!["ramp", "burst", "sustained", "recovery"]
+        );
+        assert!(plan[0].rate_mult < 1.0, "ramp stays under capacity");
+        assert!(plan[1].burst_factor > 1.0 && plan[1].burst_duty > 0.0, "burst phase bursts");
+        // burst peaks overshoot capacity even though the base rate is under
+        assert!(plan[1].rate_mult * plan[1].burst_factor > 1.0);
+        assert_eq!(plan[2].rate_mult, 2.0, "sustained runs 2x over capacity");
+        assert!(plan[3].rate_mult < 0.5, "recovery falls far under capacity");
+    }
+
+    #[test]
+    fn slo_derivation_scales_with_capacity_and_respects_overrides() {
+        let cfg = SoakConfig { depth: 128, ..SoakConfig::default() };
+        let slo = derive_slo(1000.0, &cfg);
+        // 128 queries drain in 128ms at 1000 q/s; x1.5 budget = 192ms
+        assert!((slo.p99_us - 192_000.0).abs() < 1.0, "{}", slo.p99_us);
+        assert!((slo.p95_us - 96_000.0).abs() < 1.0);
+        assert!((slo.p50_us - 48_000.0).abs() < 1.0);
+        assert_eq!(slo.max_queue_depth, 128);
+        // a faster machine derives tighter budgets
+        assert!(derive_slo(10_000.0, &cfg).p99_us < slo.p99_us);
+        // explicit budgets win over derivation
+        let cfg = SoakConfig { depth: 128, p99_us: 5000.0, p50_us: 10.0, ..SoakConfig::default() };
+        let slo = derive_slo(1000.0, &cfg);
+        assert_eq!(slo.p99_us, 5000.0);
+        assert_eq!(slo.p95_us, 2500.0, "unset p95 still derives from the final p99");
+        assert_eq!(slo.p50_us, 10.0);
+        // depth 0 derives from the serve batch shape
+        assert_eq!(derive_slo(1000.0, &SoakConfig::default()).max_queue_depth, 4 * SERVE.batch);
+    }
+
+    #[test]
+    fn artifact_json_round_trips() {
+        let doc = to_json(&matched_run());
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get(&["schema"]).unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(parsed.get(&["capacity_qps"]).unwrap().as_f64(), Some(1000.0));
+        assert_eq!(parsed.get(&["slo", "max_queue_depth"]).unwrap().as_f64(), Some(16.0));
+        let phases = parsed.get(&["phases"]).unwrap().as_arr().unwrap();
+        assert_eq!(phases.len(), 4);
+        assert_eq!(phases[2].get(&["name"]).and_then(|v| v.as_str()), Some("sustained"));
+        assert_eq!(phases[2].get(&["rung_max"]).and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(phases[2].get(&["within_slo"]).and_then(|v| v.as_bool()), Some(true));
+    }
+
+    #[test]
+    fn checked_in_baseline_parses_and_pins_the_phase_plan() {
+        let path =
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/benches/common/soak_baseline.json");
+        let doc = load_baseline(&path).expect("baseline loads");
+        let phases = doc.get(&["phases"]).unwrap().as_obj().unwrap();
+        // the baseline pins exactly the phases the plan runs
+        for spec in phase_plan() {
+            assert!(phases.contains_key(spec.name), "baseline missing phase {}", spec.name);
+        }
+        assert_eq!(phases.len(), phase_plan().len(), "baseline pins extra phases");
+        // the overload contract is pinned where it matters
+        let sustained = phases.get("sustained").unwrap();
+        assert_eq!(sustained.get(&["require_within_slo"]).and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(
+            sustained.get(&["require_rejects_counted"]).and_then(|v| v.as_bool()),
+            Some(true)
+        );
+        let recovery = phases.get("recovery").unwrap();
+        assert_eq!(recovery.get(&["end_rung"]).and_then(|v| v.as_f64()), Some(0.0));
+        // the ramp must stay near the bottom of the ladder
+        let ramp_max = phases.get("ramp").unwrap().get(&["max_rung"]).and_then(|v| v.as_f64());
+        assert!(ramp_max.unwrap_or(f64::MAX) <= 1.0);
+    }
+}

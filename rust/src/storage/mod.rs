@@ -69,7 +69,7 @@ pub use mem::MemBackend;
 pub use model::ModelBackend;
 pub use sharded::{MapPolicy, ShardMap, ShardedBackend};
 pub use sim::{Pace, SimBackend};
-pub use tiered::{TierRule, TierSpec, TierStats, TieredBackend, DEFAULT_TIER_RATE};
+pub use tiered::{TierControl, TierRule, TierSpec, TierStats, TieredBackend, DEFAULT_TIER_RATE};
 
 /// Block-level operation kind.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

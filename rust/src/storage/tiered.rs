@@ -75,6 +75,8 @@
 
 use std::collections::HashMap;
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
@@ -150,6 +152,38 @@ impl TierRule {
     }
 }
 
+/// A live, shared clamp on a tier's DRAM budget, in permille of the
+/// configured capacity. A [`TierSpec`] carrying one hands a *clone* to
+/// every [`TieredBackend`] built from it, so the same knob reaches all of
+/// a router's per-worker tiers — the overload ladder's tighten-the-tier
+/// rung turns it from the coordinator side without touching any worker's
+/// backend directly. `1000` (the default) means the full configured
+/// budget; the clamp never drops below 1‰ so the tier keeps at least one
+/// page and its accounting invariants.
+#[derive(Clone, Debug)]
+pub struct TierControl(Arc<AtomicU64>);
+
+impl TierControl {
+    pub fn new() -> Self {
+        TierControl(Arc::new(AtomicU64::new(1000)))
+    }
+
+    /// Set the budget clamp; values are clamped into `1..=1000`.
+    pub fn set_permille(&self, permille: u64) {
+        self.0.store(permille.clamp(1, 1000), Ordering::Relaxed);
+    }
+
+    pub fn permille(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for TierControl {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Buildable description of a DRAM tier — `Clone + Send` so a router can
 /// hand each serving worker its own instance (each worker gets its own
 /// tier of this capacity, in front of its own device).
@@ -166,6 +200,9 @@ pub struct TierSpec {
     /// Tier page size (bytes): the block size of the traffic it fronts
     /// (512 for KV buckets, 4096 for full ANN vectors).
     pub l_blk: u32,
+    /// Optional live budget clamp shared with the overload ladder; when
+    /// absent the full configured capacity always applies.
+    pub control: Option<TierControl>,
 }
 
 impl TierSpec {
@@ -178,7 +215,14 @@ impl TierSpec {
             rate: DEFAULT_TIER_RATE,
             platform: PlatformKind::CpuDdr,
             l_blk,
+            control: None,
         }
+    }
+
+    /// Attach a live budget clamp (see [`TierControl`]).
+    pub fn with_control(mut self, control: TierControl) -> Self {
+        self.control = Some(control);
+        self
     }
 
     /// Parse a `--tier` CLI value: `none` (no tier, returns `Ok(None)`)
@@ -236,6 +280,7 @@ impl TierSpec {
             rate,
             platform,
             l_blk,
+            control: None,
         }))
     }
 
@@ -418,6 +463,31 @@ impl Residency {
         evicted
     }
 
+    /// Evict one resident page in victim order, freeing its slot. Returns
+    /// the evicted `(lba, last_tick)`, or `None` if nothing is resident.
+    /// Used by the live budget clamp, which must shrink the occupied set
+    /// *below* the slot count — [`Residency::insert`] alone can only
+    /// replace at full capacity.
+    fn evict_one(&mut self, now: u64, threshold: Option<u64>) -> Option<(u64, u64)> {
+        if self.map.is_empty() {
+            return None;
+        }
+        loop {
+            let i = self.victim(now, threshold);
+            let s = self.slots[i];
+            if !s.occupied {
+                // an already-free slot exposed by the hand (it stays on
+                // the free list); the set is non-empty, keep scanning
+                continue;
+            }
+            self.map.remove(&s.lba);
+            self.slots[i] =
+                Slot { lba: 0, referenced: false, occupied: false, last_tick: 0 };
+            self.free.push(i);
+            return Some((s.lba, s.last_tick));
+        }
+    }
+
     /// Pick the eviction victim. The scan prefers pages whose observed
     /// reuse no longer clears the bar (`now - last_tick > threshold`):
     /// pass 1 sweeps once, evicting an unreferenced over-bar page and
@@ -534,6 +604,7 @@ pub struct TieredBackend {
     rule: TierRule,
     page_bytes: u32,
     capacity_pages: u64,
+    control: Option<TierControl>,
     hits: u64,
     misses: u64,
     stage2_hits: u64,
@@ -574,6 +645,7 @@ impl TieredBackend {
             rule: spec.rule,
             page_bytes: spec.l_blk,
             capacity_pages,
+            control: spec.control.clone(),
             hits: 0,
             misses: 0,
             stage2_hits: 0,
@@ -587,6 +659,35 @@ impl TieredBackend {
     /// The live admission bar in seconds (infinite for the CLOCK rule).
     pub fn threshold_secs(&self) -> f64 {
         self.threshold_secs
+    }
+
+    /// Pages the tier may hold right now: the configured capacity, scaled
+    /// by the [`TierControl`] clamp when one is attached (never below 1).
+    fn effective_capacity(&self) -> u64 {
+        match &self.control {
+            None => self.capacity_pages,
+            Some(c) => (self.capacity_pages * c.permille() / 1000).max(1),
+        }
+    }
+
+    /// Shrink the resident set down to the clamped budget (no-op without
+    /// a control, or when already within budget). Evictions hand their
+    /// reference history to the cold-set tracker exactly like
+    /// capacity-pressure evictions do.
+    fn enforce_budget(&mut self) {
+        if self.control.is_none() {
+            return;
+        }
+        let eff = self.effective_capacity();
+        while self.res.len() as u64 > eff {
+            match self.res.evict_one(self.now, self.threshold_ticks) {
+                Some((lba, tick)) => {
+                    self.evicted += 1;
+                    self.tracker.record(lba, tick);
+                }
+                None => break,
+            }
+        }
     }
 
     /// Does the rule admit a page whose observed reuse interval is
@@ -616,7 +717,10 @@ impl TieredBackend {
             rejected: self.rejected,
             evicted: self.evicted,
             resident_pages: self.res.len() as u64,
-            capacity_pages: self.capacity_pages,
+            // report the *effective* (possibly clamped) budget so the
+            // overload ladder's tightening is visible in every stats
+            // surface; without a control this is the configured capacity
+            capacity_pages: self.effective_capacity(),
             page_bytes: self.page_bytes,
             threshold_secs: self.threshold_secs,
             reuse_ns: self.reuse_ns.clone(),
@@ -636,6 +740,7 @@ impl StorageBackend for TieredBackend {
     }
 
     fn submit(&mut self, reqs: &[IoRequest]) -> Range<u64> {
+        self.enforce_budget();
         let start = self.next_id;
         // (our id, request) pairs that miss the tier and go to the device
         let mut fwd: Vec<(u64, IoRequest)> = Vec::new();
@@ -667,6 +772,21 @@ impl StorageBackend for TieredBackend {
                         }
                         if self.admit(interval) {
                             self.admitted += 1;
+                            // Under a clamped budget, make room *below*
+                            // the slot count before inserting — insert
+                            // alone only evicts at full slot capacity.
+                            if self.control.is_some() {
+                                let eff = self.effective_capacity();
+                                while self.res.len() as u64 >= eff {
+                                    match self.res.evict_one(self.now, self.threshold_ticks) {
+                                        Some((lba, tick)) => {
+                                            self.evicted += 1;
+                                            self.tracker.record(lba, tick);
+                                        }
+                                        None => break,
+                                    }
+                                }
+                            }
                             if let Some((lba, tick)) =
                                 self.res.insert(r.lba, self.now, self.threshold_ticks)
                             {
@@ -758,6 +878,7 @@ mod tests {
             rate: 1_000.0,
             platform: PlatformKind::CpuDdr,
             l_blk: 4096,
+            control: None,
         };
         TieredBackend::new(Box::new(MemBackend::new()), &spec)
     }
@@ -769,6 +890,7 @@ mod tests {
             rate: 1_000.0,
             platform: PlatformKind::CpuDdr,
             l_blk: 4096,
+            control: None,
         };
         TieredBackend::new(Box::new(MemBackend::new()), &spec)
     }
@@ -1012,6 +1134,63 @@ mod tests {
             },
             other => panic!("expected tiered spec, got {other:?}"),
         }
+    }
+
+    /// A tier built from a `TierSpec` carrying a [`TierControl`] shrinks
+    /// its resident set to the clamped budget at the next submit and
+    /// recovers the full budget when the clamp is released.
+    #[test]
+    fn tier_control_clamps_the_budget_and_restores_it() {
+        let ctrl = TierControl::new();
+        assert_eq!(ctrl.permille(), 1000, "unclamped by default");
+        let spec = TierSpec {
+            capacity_bytes: 8 * 4096,
+            rule: TierRule::Clock,
+            rate: 1_000.0,
+            platform: PlatformKind::CpuDdr,
+            l_blk: 4096,
+            control: Some(ctrl.clone()),
+        };
+        let mut b = TieredBackend::new(Box::new(MemBackend::new()), &spec);
+        read_blocks(&mut b, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let t = b.stats().tier.unwrap();
+        assert_eq!((t.resident_pages, t.capacity_pages), (8, 8));
+        // tighten to half: the next submit evicts down to 4 pages and the
+        // new admission stays within the clamped budget
+        ctrl.set_permille(500);
+        read_blocks(&mut b, &[9]);
+        let t = b.stats().tier.unwrap();
+        assert_eq!(t.capacity_pages, 4, "stats report the effective budget");
+        assert!(t.resident_pages <= 4, "resident {} > clamped 4", t.resident_pages);
+        assert_eq!(t.evicted, 5, "8→4 shrink plus one pre-admission eviction");
+        // release: the full budget is available again
+        ctrl.set_permille(1000);
+        read_blocks(&mut b, &[10]);
+        let t = b.stats().tier.unwrap();
+        assert_eq!(t.capacity_pages, 8);
+        assert_eq!(t.resident_pages, 5, "no spurious eviction after release");
+        // hit/miss accounting is untouched by clamping: a resident page
+        // still hits, an evicted one misses
+        let before = b.stats().tier.unwrap();
+        read_blocks(&mut b, &[9, 10]);
+        let after = b.stats().tier.unwrap();
+        assert_eq!(after.hits, before.hits + 2, "survivors of the clamp still hit");
+    }
+
+    #[test]
+    fn tier_control_permille_is_clamped_into_range() {
+        let ctrl = TierControl::new();
+        ctrl.set_permille(0);
+        assert_eq!(ctrl.permille(), 1, "never below 1‰ — the tier keeps a page");
+        ctrl.set_permille(5_000);
+        assert_eq!(ctrl.permille(), 1000);
+        ctrl.set_permille(250);
+        assert_eq!(ctrl.permille(), 250);
+        // clones share the knob — that is how one ladder reaches all
+        // per-worker tiers
+        let other = ctrl.clone();
+        other.set_permille(700);
+        assert_eq!(ctrl.permille(), 700);
     }
 
     #[test]

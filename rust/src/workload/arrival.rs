@@ -1,0 +1,269 @@
+//! Open-loop arrival process for the overload-serving soak harness: a
+//! seeded non-homogeneous Poisson stream with bursty and diurnal rate
+//! modulation and zipf-over-tenants key skew.
+//!
+//! The closed-loop drivers elsewhere in the repo (`smoke.rs`, the serve
+//! demo) measure the system *at* the offered load the driver can sustain —
+//! by construction they never push past saturation. A front door serving
+//! millions of users is open-loop: arrivals do not slow down because the
+//! server is busy. This generator produces that stream ahead of time as a
+//! sorted timestamp trace, so the soak driver can replay it against the
+//! partitioned [`Router`](crate::coordinator::Router) from a single thread
+//! (submit-at-deadline, poll completions) without parking a thread per
+//! in-flight query.
+//!
+//! The instantaneous rate is a product of three deterministic factors:
+//!
+//! ```text
+//! rate(t) = rate_qps · burst(t) · diurnal(t)
+//! burst(t)   = burst_factor while (t mod burst_period) < duty·period, else 1
+//! diurnal(t) = 1 + diurnal_amp · sin(2π t / diurnal_period)
+//! ```
+//!
+//! Sampling uses Lewis-Shedler thinning: draw candidate gaps from a
+//! homogeneous Poisson process at the peak rate, then accept each candidate
+//! with probability `rate(t)/rate_max`. The result is an exact draw from
+//! the non-homogeneous process, fully determined by the seed.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// One query arrival: when it hits the front door and which tenant sent it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    /// Arrival time in ns from stream start (sorted within a trace).
+    pub at_ns: u64,
+    /// Tenant index in `[0, tenants)`; zipf-skewed so a few tenants
+    /// dominate, as in multi-tenant serving.
+    pub tenant: u32,
+}
+
+/// Configuration of the arrival stream.
+#[derive(Clone, Debug)]
+pub struct ArrivalConfig {
+    /// Base (unmodulated) arrival rate, queries per second.
+    pub rate_qps: f64,
+    /// Rate multiplier during the burst window (1.0 = no bursts).
+    pub burst_factor: f64,
+    /// Burst square-wave period, seconds.
+    pub burst_period_s: f64,
+    /// Fraction of each period spent bursting, in [0, 1].
+    pub burst_duty: f64,
+    /// Diurnal sinusoid amplitude, in [0, 1) (0 = flat).
+    pub diurnal_amp: f64,
+    /// Diurnal period, seconds (compressed for tests/soaks).
+    pub diurnal_period_s: f64,
+    /// Number of tenants sharing the front door.
+    pub tenants: usize,
+    /// Zipf exponent for tenant popularity (higher = more skew).
+    pub zipf_theta: f64,
+    pub seed: u64,
+}
+
+impl Default for ArrivalConfig {
+    fn default() -> Self {
+        ArrivalConfig {
+            rate_qps: 1_000.0,
+            burst_factor: 1.0,
+            burst_period_s: 10.0,
+            burst_duty: 0.2,
+            diurnal_amp: 0.0,
+            diurnal_period_s: 60.0,
+            tenants: 16,
+            zipf_theta: 1.1,
+            seed: 0x5_0AC,
+        }
+    }
+}
+
+pub struct ArrivalGen {
+    cfg: ArrivalConfig,
+    rng: Rng,
+    zipf: Zipf,
+}
+
+impl ArrivalGen {
+    pub fn new(cfg: ArrivalConfig) -> Self {
+        assert!(cfg.rate_qps > 0.0, "rate must be positive");
+        assert!(cfg.burst_factor >= 1.0, "burst factor is a multiplier >= 1");
+        assert!((0.0..=1.0).contains(&cfg.burst_duty), "duty in [0,1]");
+        assert!((0.0..1.0).contains(&cfg.diurnal_amp), "amp in [0,1)");
+        assert!(cfg.burst_period_s > 0.0 && cfg.diurnal_period_s > 0.0);
+        assert!(cfg.tenants > 0);
+        let rng = Rng::new(cfg.seed);
+        let zipf = Zipf::new(cfg.tenants, cfg.zipf_theta);
+        ArrivalGen { cfg, rng, zipf }
+    }
+
+    /// Instantaneous rate (qps) at `t_ns` from stream start.
+    pub fn rate_at(&self, t_ns: u64) -> f64 {
+        let t_s = t_ns as f64 / 1e9;
+        let burst = {
+            let phase = t_s % self.cfg.burst_period_s;
+            if phase < self.cfg.burst_duty * self.cfg.burst_period_s {
+                self.cfg.burst_factor
+            } else {
+                1.0
+            }
+        };
+        let diurnal = 1.0
+            + self.cfg.diurnal_amp
+                * (2.0 * std::f64::consts::PI * t_s / self.cfg.diurnal_period_s).sin();
+        self.cfg.rate_qps * burst * diurnal
+    }
+
+    /// Upper bound on `rate_at` over all t — the thinning envelope.
+    fn rate_max(&self) -> f64 {
+        self.cfg.rate_qps * self.cfg.burst_factor * (1.0 + self.cfg.diurnal_amp)
+    }
+
+    /// Whether `t_ns` falls inside a burst window (for tests and the soak
+    /// driver's per-phase accounting).
+    pub fn in_burst(&self, t_ns: u64) -> bool {
+        let t_s = t_ns as f64 / 1e9;
+        (t_s % self.cfg.burst_period_s) < self.cfg.burst_duty * self.cfg.burst_period_s
+    }
+
+    /// Generate the sorted arrival trace for `duration_ns` via thinning.
+    /// Same seed and config → bit-identical trace.
+    pub fn generate(&mut self, duration_ns: u64) -> Vec<Arrival> {
+        let mut out = Vec::new();
+        let peak_per_ns = self.rate_max() / 1e9;
+        let mut t = 0.0f64;
+        loop {
+            t += self.rng.exponential(peak_per_ns);
+            if t >= duration_ns as f64 {
+                break;
+            }
+            let at = t as u64;
+            // Thinning: accept with prob rate(t)/rate_max. The uniform draw
+            // happens unconditionally so rejected candidates still advance
+            // the stream deterministically.
+            let accept = self.rng.f64() < self.rate_at(at) / self.rate_max();
+            if accept {
+                let tenant = self.zipf.sample(&mut self.rng) as u32;
+                out.push(Arrival { at_ns: at, tenant });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(rate_qps: f64, seed: u64) -> ArrivalConfig {
+        ArrivalConfig { rate_qps, seed, ..ArrivalConfig::default() }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = ArrivalConfig {
+            burst_factor: 3.0,
+            diurnal_amp: 0.4,
+            ..flat(5_000.0, 99)
+        };
+        let a = ArrivalGen::new(cfg.clone()).generate(2_000_000_000);
+        let b = ArrivalGen::new(cfg).generate(2_000_000_000);
+        assert_eq!(a, b, "same seed must reproduce the exact trace");
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = ArrivalGen::new(flat(5_000.0, 1)).generate(1_000_000_000);
+        let b = ArrivalGen::new(flat(5_000.0, 2)).generate(1_000_000_000);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn timestamps_sorted_and_bounded() {
+        let dur = 3_000_000_000;
+        let trace = ArrivalGen::new(ArrivalConfig {
+            burst_factor: 4.0,
+            diurnal_amp: 0.5,
+            ..flat(2_000.0, 7)
+        })
+        .generate(dur);
+        assert!(trace.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+        assert!(trace.iter().all(|a| a.at_ns < dur));
+    }
+
+    #[test]
+    fn empirical_rate_matches_flat_config() {
+        // no modulation: plain Poisson at rate_qps, rate within 5%
+        let dur = 10_000_000_000u64; // 10s
+        let trace = ArrivalGen::new(flat(3_000.0, 13)).generate(dur);
+        let expected = 3_000.0 * dur as f64 / 1e9;
+        let got = trace.len() as f64;
+        assert!((got - expected).abs() < expected * 0.05, "{got} vs {expected}");
+    }
+
+    #[test]
+    fn burst_windows_carry_the_burst_factor() {
+        let cfg = ArrivalConfig {
+            burst_factor: 3.0,
+            burst_period_s: 1.0,
+            burst_duty: 0.5,
+            ..flat(2_000.0, 17)
+        };
+        let probe = ArrivalGen::new(cfg.clone());
+        let trace = ArrivalGen::new(cfg).generate(20_000_000_000);
+        let (mut burst_n, mut base_n) = (0u64, 0u64);
+        for a in &trace {
+            if probe.in_burst(a.at_ns) {
+                burst_n += 1;
+            } else {
+                base_n += 1;
+            }
+        }
+        // equal duty windows: count ratio estimates the rate ratio
+        let ratio = burst_n as f64 / base_n.max(1) as f64;
+        assert!((ratio - 3.0).abs() < 0.45, "burst/base ratio {ratio}");
+    }
+
+    #[test]
+    fn diurnal_modulation_shifts_mass_toward_the_peak_half() {
+        // one full sinusoid period: first half (sin > 0) must carry more
+        let cfg = ArrivalConfig {
+            diurnal_amp: 0.8,
+            diurnal_period_s: 2.0,
+            ..flat(5_000.0, 19)
+        };
+        let trace = ArrivalGen::new(cfg).generate(2_000_000_000);
+        let half = 1_000_000_000u64;
+        let first = trace.iter().filter(|a| a.at_ns < half).count() as f64;
+        let second = trace.len() as f64 - first;
+        assert!(first > second * 1.5, "first {first} second {second}");
+    }
+
+    #[test]
+    fn zipf_concentrates_tenants() {
+        let cfg = ArrivalConfig { tenants: 64, zipf_theta: 1.1, ..flat(5_000.0, 23) };
+        let trace = ArrivalGen::new(cfg).generate(10_000_000_000);
+        let mut counts = vec![0u64; 64];
+        for a in &trace {
+            assert!((a.tenant as usize) < 64);
+            counts[a.tenant as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top4: u64 = counts.iter().take(4).sum();
+        let frac = top4 as f64 / trace.len() as f64;
+        assert!(frac > 0.35, "top-4 tenants carry only {frac}");
+    }
+
+    #[test]
+    fn rate_at_reports_the_product_of_modulations() {
+        let g = ArrivalGen::new(ArrivalConfig {
+            burst_factor: 2.0,
+            burst_period_s: 10.0,
+            burst_duty: 0.2,
+            diurnal_amp: 0.0,
+            ..flat(1_000.0, 29)
+        });
+        // t=1s: inside the first 2s burst window
+        assert!((g.rate_at(1_000_000_000) - 2_000.0).abs() < 1e-9);
+        // t=5s: outside it
+        assert!((g.rate_at(5_000_000_000) - 1_000.0).abs() < 1e-9);
+    }
+}

@@ -1,7 +1,9 @@
 //! Workload models and trace generators: log-normal access-interval
 //! profiles (Sec V), Poisson arrivals, and the case-study mixes (Sec VII).
 
+pub mod arrival;
 pub mod lognormal;
 pub mod trace;
 
+pub use arrival::{Arrival, ArrivalConfig, ArrivalGen};
 pub use lognormal::LognormalProfile;

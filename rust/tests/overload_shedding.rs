@@ -1,0 +1,187 @@
+//! Overload governance end to end: the shedding ladder's degraded
+//! service levels, driven through a real partitioned router against real
+//! workers, must stay *honest* — every degraded answer is a deterministic
+//! function of the full answer (the promote-set prefix), never a
+//! different candidate mix, and every query is accounted as accepted or
+//! rejected.
+//!
+//! Ladder *dynamics* (trip thresholds, escalation order, dwell,
+//! hysteresis, flap bounds) are unit-tested in
+//! `rust/src/coordinator/overload.rs`; arrival-process statistics in
+//! `rust/src/workload/arrival.rs`; this suite pins the serving-path
+//! integration: rungs are forced and the answers compared bit for bit
+//! against an ungoverned router serving identical queries.
+
+use std::sync::Arc;
+
+use fivemin::coordinator::batcher::BatchPolicy;
+use fivemin::coordinator::{
+    Coordinator, FetchMode, OverloadConfig, Router, Rung, ServingCorpus, SloConfig,
+};
+use fivemin::runtime::{default_artifacts_dir, SERVE};
+use fivemin::storage::BackendSpec;
+use fivemin::util::rng::Rng;
+
+const SHARDS: usize = 2;
+const QUERIES: usize = 24;
+
+fn workers(corpus: &Arc<ServingCorpus>) -> Vec<Coordinator> {
+    corpus
+        .partitions(SHARDS)
+        .unwrap()
+        .into_iter()
+        .map(|part| {
+            Coordinator::start(
+                default_artifacts_dir(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                BackendSpec::Mem,
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+/// Governance config that never moves on its own: latency budgets and
+/// queue depth far out of reach, window too large to ever close. Tests
+/// pin rungs with `force_rung` and observe pure service-level behavior.
+fn inert_config(shrink_k: usize) -> OverloadConfig {
+    let slo = SloConfig { p50_us: 1e12, p95_us: 1e12, p99_us: 1e12, max_queue_depth: 1 << 20 };
+    OverloadConfig { window: 1 << 30, shrink_k, ..OverloadConfig::for_slo(slo) }
+}
+
+/// Identical query streams for the governed and ungoverned routers.
+fn queries(corpus: &Arc<ServingCorpus>) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(0x0_5ED);
+    (0..QUERIES)
+        .map(|_| corpus.query_near(rng.below(corpus.n as u64) as usize, 0.02, &mut rng))
+        .collect()
+}
+
+fn serve_full(corpus: &Arc<ServingCorpus>, qs: &[Vec<f32>]) -> Vec<(Vec<u32>, Vec<f32>, Vec<f32>)> {
+    let router = Router::partitioned_with(workers(corpus), FetchMode::AfterMerge).unwrap();
+    qs.iter()
+        .map(|q| {
+            let r = router.query(q.clone()).unwrap();
+            (r.ids, r.scores, r.reduced)
+        })
+        .collect()
+}
+
+/// The promote-order prefix of a full answer: its (reduced, id) pairs
+/// re-sorted the way the merger promotes (reduced desc, id asc — the
+/// worker's exact tie order), truncated to `k`. This is the reference
+/// every degraded answer must reproduce bit for bit.
+fn promote_prefix(ids: &[u32], reduced: &[f32], k: usize) -> Vec<(f32, u32)> {
+    let mut cand: Vec<(f32, u32)> =
+        reduced.iter().copied().zip(ids.iter().copied()).collect();
+    cand.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    cand.truncate(k);
+    cand
+}
+
+#[test]
+fn normal_rung_answers_match_the_ungoverned_router_bit_for_bit() {
+    let corpus = Arc::new(ServingCorpus::synthetic(SHARDS, 0x0_5ED));
+    let qs = queries(&corpus);
+    let full = serve_full(&corpus, &qs);
+    let router = Router::partitioned_overload(
+        workers(&corpus),
+        FetchMode::AfterMerge,
+        inert_config((SERVE.topk / 2).max(1)),
+        None,
+    )
+    .unwrap();
+    assert_eq!(router.overload().unwrap().rung(), Rung::Normal);
+    for (q, want) in qs.iter().zip(&full) {
+        let rx = router.try_submit(q.clone()).expect("normal rung admits everything");
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.ids, want.0, "governed full service must not change the answer");
+        assert_eq!(got.scores, want.1);
+        assert_eq!(got.reduced, want.2);
+    }
+    let rep = router.overload_report().unwrap();
+    assert_eq!(rep.admitted, QUERIES as u64);
+    assert_eq!(rep.completed, QUERIES as u64, "every admission fed back a completion");
+    assert_eq!(rep.rejected, 0);
+    assert_eq!(rep.in_flight, 0, "gauge drains to zero once answers land");
+    assert_eq!(rep.rung, Rung::Normal, "inert guardrails never move the ladder");
+}
+
+#[test]
+fn stage1_only_degraded_answers_are_the_promote_prefix_with_no_device_reads() {
+    let corpus = Arc::new(ServingCorpus::synthetic(SHARDS, 0x0_5ED));
+    let qs = queries(&corpus);
+    let full = serve_full(&corpus, &qs);
+    let shrink_k = (SERVE.topk / 2).max(1);
+    let router = Router::partitioned_overload(
+        workers(&corpus),
+        FetchMode::AfterMerge,
+        inert_config(shrink_k),
+        None,
+    )
+    .unwrap();
+    router.overload().unwrap().force_rung(Rung::Stage1Only);
+    for (q, want) in qs.iter().zip(&full) {
+        let rx = router.try_submit(q.clone()).expect("stage1-only still admits");
+        let got = rx.recv().unwrap().unwrap();
+        // the equivalence arm: degraded == the merger's reduced top-k
+        // prefix of the full answer, bit for bit
+        let prefix = promote_prefix(&want.0, &want.2, shrink_k);
+        assert_eq!(got.ids, prefix.iter().map(|c| c.1).collect::<Vec<_>>());
+        assert_eq!(got.reduced, prefix.iter().map(|c| c.0).collect::<Vec<_>>());
+        assert!(
+            got.scores.is_empty(),
+            "degraded answers must carry the honesty marker (no stage-2 scores)"
+        );
+        assert_eq!(got.ids.len(), shrink_k);
+    }
+    // stage-1-only service never touches stage 2: zero device reads
+    let st = router.merged_stats();
+    assert_eq!(st.ssd_reads, 0, "stage1-only must issue no stage-2 reads");
+    assert_eq!(st.fetch_legs, 0, "no phase-2 fetch legs dispatched");
+    let rep = router.overload_report().unwrap();
+    assert_eq!(rep.completed, QUERIES as u64, "degraded completions feed the guardrails too");
+}
+
+#[test]
+fn shrink_k_rung_serves_the_promote_prefix_with_full_scores() {
+    let corpus = Arc::new(ServingCorpus::synthetic(SHARDS, 0x0_5ED));
+    let qs = queries(&corpus);
+    let full = serve_full(&corpus, &qs);
+    let shrink_k = (SERVE.topk / 2).max(1);
+    let router = Router::partitioned_overload(
+        workers(&corpus),
+        FetchMode::AfterMerge,
+        inert_config(shrink_k),
+        None,
+    )
+    .unwrap();
+    router.overload().unwrap().force_rung(Rung::ShrinkK);
+    for (q, want) in qs.iter().zip(&full) {
+        let rx = router.try_submit(q.clone()).expect("shrink-k admits");
+        let got = rx.recv().unwrap().unwrap();
+        // shrink-k promotes the prefix, then stage 2 runs as usual: the
+        // expected answer is the prefix re-ranked by the full scores the
+        // ungoverned router measured for the same ids
+        let prefix = promote_prefix(&want.0, &want.2, shrink_k);
+        let score_of = |id: u32| {
+            let i = want.0.iter().position(|&x| x == id).expect("prefix id is in full answer");
+            want.1[i]
+        };
+        let mut expect: Vec<(f32, f32, u32)> =
+            prefix.iter().map(|&(red, id)| (red, score_of(id), id)).collect();
+        expect.sort_by(|a, b| b.1.total_cmp(&a.1));
+        assert_eq!(got.ids, expect.iter().map(|c| c.2).collect::<Vec<_>>());
+        assert_eq!(got.scores, expect.iter().map(|c| c.1).collect::<Vec<_>>());
+        assert_eq!(got.reduced, expect.iter().map(|c| c.0).collect::<Vec<_>>());
+        assert!(!got.scores.is_empty(), "shrink-k still re-ranks with stage-2 scores");
+    }
+    // k device reads per query shrink to shrink_k per query
+    let st = router.settled_stats(std::time::Duration::from_secs(10));
+    assert_eq!(
+        st.ssd_reads,
+        (QUERIES * shrink_k) as u64,
+        "shrink-k cuts stage-2 reads to the shrunk promote set"
+    );
+}

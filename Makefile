@@ -2,7 +2,7 @@
 # everything else is pure cargo.
 
 .PHONY: artifacts verify verify-release lint fmt-check doc pytest ci bench-smoke smoke \
-        soak clean figures fig11 fig12 fig13 fig14 fig15
+        uring-smoke soak clean figures fig11 fig12 fig13 fig14 fig15
 
 # Lower the JAX/Pallas serving graphs to HLO-text artifacts + manifest
 # (a prerequisite only for --features pjrt builds; the native engine
@@ -41,6 +41,19 @@ bench-smoke:
 
 smoke: bench-smoke
 
+# UringBackend against a real tempfile, end to end: the uring arms of the
+# storage unit suite and the backend-equivalence suite (identical
+# completions vs mem, payload bytes round-tripped through the file), then
+# a short reactor-seam serve run on a uring device. Built with
+# --features uring so the raw io_uring ring engine is exercised on Linux;
+# on other hosts the same commands run through the pread-thread engine
+# with identical results.
+uring-smoke:
+	cargo test --release --features uring -q --lib storage::uring
+	cargo test --release --features uring -q --test backend_equivalence
+	cargo run --release --features uring -- serve --backend uring \
+		--serve reactor --queries 128
+
 # Overload drill + ladder-behavior gate (mirrors the soak-drill CI job):
 # self-calibrated ramp/burst/sustained-2x/recovery load against the
 # shedding ladder, artifact under results/, per-phase rung ceilings and
@@ -53,17 +66,19 @@ soak:
 		--baseline rust/benches/common/soak_baseline.json
 
 # The full CI pipeline, locally: fmt -> build -> clippy -> feature-matrix
-# check -> tests in both profiles -> docs -> bench-smoke -> soak drill ->
-# quick fig15 (the DRAM-tier policy sweep regenerates end to end). (CI
-# additionally runs `make pytest` in a python job.)
+# check -> tests in both profiles -> docs -> bench-smoke -> uring smoke ->
+# soak drill -> quick fig15 (the DRAM-tier policy sweep regenerates end to
+# end). (CI additionally runs `make pytest` in a python job.)
 ci: fmt-check
 	cargo build --release
 	$(MAKE) lint
 	cargo check --features pjrt
+	cargo check --features uring
 	cargo test -q
 	cargo test --release -q
 	$(MAKE) doc
 	$(MAKE) bench-smoke
+	$(MAKE) uring-smoke
 	$(MAKE) soak
 	cargo run --release -- figures --fig15 --quick
 

@@ -20,6 +20,8 @@
 //!     cargo run --release --example ann_serving -- --backend sim --fetch merge
 //!     cargo run --release --example ann_serving -- --backend sim --fetch adaptive
 //!     cargo run --release --example ann_serving -- --backend sim --slo-p99-us 5000
+//!     cargo run --release --example ann_serving -- --serve reactor --queries 5000
+//!     cargo run --release --example ann_serving -- --backend uring --serve reactor
 //!
 //! `mem` reproduces the DRAM-resident baseline; `model` charges the
 //! analytic Eq. 2 + queueing cost; `sim` replays the fetch traffic on
@@ -43,6 +45,12 @@
 //! queries are admitted through `try_submit` and may be degraded or
 //! rejected instead of queueing without bound (see `fivemin soak` for
 //! the full drill).
+//! `--serve reactor` swaps the merger+finisher-thread seam for the
+//! completion-driven reactor: queries become small state machines
+//! advanced by one event loop, with at most `--admission` tracked
+//! in-flight at once (the rest wait in the inbox) and bit-identical
+//! answers either way. Composes with every option above, including the
+//! overload governor.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -51,7 +59,7 @@ use fivemin::ann::{ann_throughput, AnnScenario};
 use fivemin::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
 use fivemin::coordinator::batcher::BatchPolicy;
 use fivemin::coordinator::{
-    Coordinator, FetchMode, OverloadConfig, Router, ServingCorpus, SloConfig,
+    Coordinator, FetchMode, OverloadConfig, ReactorConfig, Router, ServingCorpus, SloConfig,
 };
 use fivemin::runtime::{default_artifacts_dir, SERVE};
 use fivemin::storage::{BackendSpec, Pace, TierSpec};
@@ -65,7 +73,7 @@ fn main() -> anyhow::Result<()> {
             "backend",
             "SPEC",
             Some("mem"),
-            "per-partition storage backend: mem|model|sim[:shards=N]",
+            "per-partition storage backend: mem|model|sim[:shards=N]|uring[:path=FILE]",
         )
         .opt("queries", "N", Some("256"), "queries to issue")
         .opt(
@@ -97,6 +105,18 @@ fn main() -> anyhow::Result<()> {
             "US",
             Some("0"),
             "govern admission with a hard p99 latency SLO (microseconds; 0 = ungoverned); over budget, the shedding ladder degrades then rejects",
+        )
+        .opt(
+            "serve",
+            "threads|reactor",
+            Some("threads"),
+            "scatter/gather seam: merger+finisher threads, or the completion-driven reactor event loop (bounded in-flight, no thread-per-query)",
+        )
+        .opt(
+            "admission",
+            "N",
+            Some("4096"),
+            "reactor admission window: max tracked in-flight queries (reactor seam only)",
         );
     let args: Vec<String> = std::env::args().skip(1).collect();
     let p = match spec.parse(&args) {
@@ -118,6 +138,15 @@ fn main() -> anyhow::Result<()> {
     let slo_p99_us: f64 = p.f64("slo-p99-us").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
     let n_queries: usize = p.usize("queries").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
     let n_workers: usize = p.usize("workers").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+    let reactor = match p.str("serve").unwrap() {
+        "threads" => None,
+        "reactor" => {
+            let admission = p.usize("admission").map_err(|e| anyhow::anyhow!("{e}"))?.unwrap();
+            anyhow::ensure!(admission >= 1, "--admission must be >= 1");
+            Some(ReactorConfig { admission, ..ReactorConfig::default() })
+        }
+        other => anyhow::bail!("unknown serve seam '{other}' (want threads|reactor)"),
+    };
 
     // ---- corpus + serving stack ------------------------------------------
     let dir = default_artifacts_dir();
@@ -129,9 +158,10 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "starting {n_workers} partition workers on the '{}' storage backend \
-         (scatter/gather router, '{}' stage-2 fetch)…",
+         (scatter/gather router, '{}' stage-2 fetch, '{}' serving seam)…",
         backend.kind().name(),
-        fetch.name()
+        fetch.name(),
+        if reactor.is_some() { "reactor" } else { "threads" }
     );
     let workers = corpus
         .partitions(n_workers)?
@@ -149,9 +179,16 @@ fn main() -> anyhow::Result<()> {
             p99_us: slo_p99_us,
             max_queue_depth: 4 * SERVE.batch,
         };
-        Router::partitioned_overload(workers, fetch, OverloadConfig::for_slo(slo), None)?
+        let ocfg = OverloadConfig::for_slo(slo);
+        match reactor {
+            Some(cfg) => Router::partitioned_reactor_overload(workers, fetch, cfg, ocfg, None)?,
+            None => Router::partitioned_overload(workers, fetch, ocfg, None)?,
+        }
     } else {
-        Router::partitioned_with(workers, fetch)?
+        match reactor {
+            Some(cfg) => Router::partitioned_reactor(workers, fetch, cfg)?,
+            None => Router::partitioned_with(workers, fetch)?,
+        }
     };
 
     // ---- serve a batched query stream (concurrent submission) -------------
@@ -200,6 +237,12 @@ fn main() -> anyhow::Result<()> {
         fmt_secs(e2e.percentile(0.5) / 1e9),
         fmt_secs(e2e.percentile(0.99) / 1e9),
     );
+    if let Some(rep) = router.reactor_report() {
+        println!(
+            "reactor    : {} admitted / {} completed, peak pending {} (window {})",
+            rep.admitted, rep.completed, rep.peak_pending, rep.admission
+        );
+    }
     if let Some(rep) = router.overload_report() {
         println!(
             "overload   : {} admitted / {} rejected ({rejected} at submit), rung '{}' \

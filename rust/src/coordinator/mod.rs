@@ -62,11 +62,30 @@
 //! guardrails trip, and are rejected (never silently dropped) only at the
 //! last rung. Degraded answers stay honest — the promote-set prefix the
 //! full path would have fetched, with `scores` empty as the marker.
+//!
+//! The scatter/gather seam itself comes in two servings
+//! ([`Router::serve_mode`]):
+//!
+//! * **threads** (the constructors above) — a merger thread gathers with
+//!   blocking `recv` and a finisher thread parks on phase-2 legs. Simple,
+//!   but every in-flight two-phase query holds channel buffers plus a
+//!   parked receiver, and the two threads serialize their stages.
+//! * **reactor** ([`Router::partitioned_reactor`]) — queries become small
+//!   state machines (Scatter → Phase1Merge → Phase2Fetch → Finish)
+//!   advanced by one event loop that polls worker completions
+//!   non-blocking. An explicit admission window bounds the tracked
+//!   pending set (excess queries wait in the inbox holding only their
+//!   payload), so tens of thousands of in-flight queries need no
+//!   thread-per-query and no unbounded buffering. Answers are
+//!   bit-identical to the threaded seam in every [`FetchMode`] — both
+//!   drive the same promotion/ranking helpers
+//!   ([`merge_partials`]-family), which the equivalence suite pins.
 
 pub mod adaptive;
 pub mod batcher;
 pub mod corpus;
 pub mod overload;
+pub mod reactor;
 
 use std::collections::HashMap;
 use std::ops::Range;
@@ -80,7 +99,8 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::runtime::{Runtime, Tensor, SERVE};
 use crate::storage::{
-    self, BackendSpec, DeviceWindow, StorageBackend, StorageSnapshot, TierControl,
+    self, BackendSpec, DeviceWindow, StorageBackend, StorageSnapshot, TierControl, WindowBus,
+    WindowCursor,
 };
 use crate::util::stats::LatencyHist;
 use batcher::{collect_batch, BatchPolicy, Job};
@@ -90,6 +110,7 @@ pub use overload::{
     GuardrailWindow, OverloadConfig, OverloadController, OverloadReport, Rung, ShedPlan,
     ShedReject, SloConfig,
 };
+pub use reactor::{ReactorConfig, ReactorReport};
 
 /// A top-k answer for one query (or one leg of a two-phase query).
 #[derive(Clone, Debug)]
@@ -224,9 +245,13 @@ pub struct Coordinator {
     /// Global ids this worker's corpus slice owns (the full corpus for
     /// replica workers) — the router's fetch-after-merge ownership lookup.
     owned: Range<u32>,
-    /// Device window accumulated by the worker loop since the last
-    /// [`Coordinator::take_window`] (the adaptive router's signal feed).
-    window: Arc<Mutex<DeviceWindow>>,
+    /// Measurement bus the worker loop publishes one [`DeviceWindow`]
+    /// into per storage-touching batch. Any number of subscribers
+    /// (adaptive controller, overload monitor, dashboards) each drain
+    /// their own cursor without stealing from the others.
+    bus: Arc<WindowBus>,
+    /// The [`Coordinator::take_window`] compatibility subscriber.
+    win_cursor: WindowCursor,
 }
 
 impl Coordinator {
@@ -242,8 +267,9 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel::<Job<WorkerRequest, Resp>>();
         let stats = Arc::new(Mutex::new(ServeStats::new()));
         let stats2 = stats.clone();
-        let window = Arc::new(Mutex::new(DeviceWindow::default()));
-        let window2 = window.clone();
+        let bus = Arc::new(WindowBus::new());
+        let win_cursor = bus.subscribe();
+        let bus2 = bus.clone();
         let owned = corpus.base as u32..(corpus.base + corpus.n) as u32;
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let handle = std::thread::Builder::new()
@@ -261,13 +287,13 @@ impl Coordinator {
                     }
                 };
                 let mut store = backend.build();
-                worker_loop(&mut rt, &corpus, &mut *store, &rx, &policy, &stats2, &window2);
+                worker_loop(&mut rt, &corpus, &mut *store, &rx, &policy, &stats2, &bus2);
             })?;
         ready_rx
             .recv()
             .map_err(|_| anyhow!("worker died during startup"))?
             .map_err(|e| anyhow!("worker startup: {e}"))?;
-        Ok(Coordinator { tx: Some(tx), handle: Some(handle), stats, owned, window })
+        Ok(Coordinator { tx: Some(tx), handle: Some(handle), stats, owned, bus, win_cursor })
     }
 
     /// Submit a full-dimension query; returns the response receiver.
@@ -301,10 +327,22 @@ impl Coordinator {
     }
 
     /// Drain the device window accumulated since the last call (the
-    /// worker folds one [`DeviceWindow`] in per storage-touching batch).
-    /// Consuming — the adaptive router is the intended single sampler.
+    /// worker publishes one [`DeviceWindow`] per storage-touching batch).
+    /// This drains only this coordinator's own bus cursor — other
+    /// subscribers ([`Coordinator::subscribe_window`]) see the same
+    /// stream independently.
     pub fn take_window(&self) -> DeviceWindow {
-        std::mem::take(&mut *self.window.lock().unwrap())
+        self.win_cursor.drain()
+    }
+
+    /// Register a new subscriber on this worker's measurement bus. The
+    /// cursor sees every window published after this call and drains
+    /// independently of [`Coordinator::take_window`] and of every other
+    /// cursor — the fix for the old consuming-`take_window` wart, which
+    /// forced the adaptive controller and the overload monitor onto
+    /// separate routers.
+    pub fn subscribe_window(&self) -> WindowCursor {
+        self.bus.subscribe()
     }
 
     /// Graceful shutdown (drains the queue, joins the thread).
@@ -329,7 +367,7 @@ fn worker_loop(
     rx: &mpsc::Receiver<Job<WorkerRequest, Resp>>,
     policy: &BatchPolicy,
     stats: &Arc<Mutex<ServeStats>>,
-    win_acc: &Arc<Mutex<DeviceWindow>>,
+    bus: &Arc<WindowBus>,
 ) {
     let mut win_track = storage::WindowTracker::new();
     // §Perf: shard tensors are immutable — build them once per worker
@@ -377,15 +415,16 @@ fn worker_loop(
         // issued no I/O — skip the round-trip on the phase-1 hot path.
         if touched_store {
             let snapshot = StorageSnapshot::capture(store);
-            // Fold this batch's device window into the accumulator the
-            // adaptive router drains (reduce-only batches issued no I/O,
-            // so an empty fold is skipped along with the snapshot).
-            // Differencing the snapshot's cumulative stats avoids a
-            // second backend stats round-trip per batch — same numbers
-            // `store.take_window()` would return.
+            // Publish this batch's device window onto the measurement
+            // bus every subscriber (adaptive controller, overload
+            // monitor) drains its own view of (reduce-only batches
+            // issued no I/O, so an empty fold is skipped along with the
+            // snapshot). Differencing the snapshot's cumulative stats
+            // avoids a second backend stats round-trip per batch — same
+            // numbers `store.take_window()` would return.
             let w = win_track.take(&snapshot.stats);
             stats.lock().unwrap().storage = Some(snapshot);
-            win_acc.lock().unwrap().accumulate(&w);
+            bus.publish(&w);
         }
     }
 }
@@ -850,6 +889,20 @@ pub struct Router {
     /// Present iff the router was built with
     /// [`Router::partitioned_overload`]; governs [`Router::try_submit`].
     overload: Option<Arc<OverloadController>>,
+    /// Present iff this router serves through the reactor event loop
+    /// ([`Router::partitioned_reactor`]): dispatch sends [`ReactorJob`]s
+    /// here instead of scattering inline, and the merger/finisher threads
+    /// above are absent.
+    reactor_tx: Option<mpsc::Sender<reactor::ReactorJob>>,
+    reactor: Option<JoinHandle<()>>,
+    reactor_metrics: Option<Arc<reactor::ReactorMetrics>>,
+    /// Threaded-seam adaptive device feed: one measurement-bus cursor per
+    /// worker, drained at decide time. Reactor routers subscribe their
+    /// own cursors inside the event loop instead (this stays empty).
+    adaptive_feed: Vec<WindowCursor>,
+    /// [`Router::take_device_window`]'s own per-worker subscribers —
+    /// independent of the adaptive feed, so the two can share a router.
+    device_cursors: Vec<WindowCursor>,
 }
 
 impl Router {
@@ -857,6 +910,7 @@ impl Router {
     /// round-robin across them. Errors on an empty worker set.
     pub fn new(workers: Vec<Coordinator>) -> Result<Self> {
         ensure!(!workers.is_empty(), "router needs at least one worker");
+        let device_cursors = workers.iter().map(|w| w.subscribe_window()).collect();
         Ok(Router {
             workers,
             next: AtomicUsize::new(0),
@@ -867,6 +921,11 @@ impl Router {
             gather_latency: Arc::new(Mutex::new(LatencyHist::for_latency_ns())),
             adaptive: None,
             overload: None,
+            reactor_tx: None,
+            reactor: None,
+            reactor_metrics: None,
+            adaptive_feed: Vec::new(),
+            device_cursors,
         })
     }
 
@@ -1057,6 +1116,12 @@ impl Router {
                 // exiting drops finish_tx: the finisher drains what is
                 // still pending (workers outlive both threads) and exits
             })?;
+        let adaptive_feed = if adaptive.is_some() {
+            workers.iter().map(|w| w.subscribe_window()).collect()
+        } else {
+            Vec::new()
+        };
+        let device_cursors = workers.iter().map(|w| w.subscribe_window()).collect();
         Ok(Router {
             workers,
             next: AtomicUsize::new(0),
@@ -1067,6 +1132,103 @@ impl Router {
             gather_latency,
             adaptive,
             overload,
+            reactor_tx: None,
+            reactor: None,
+            reactor_metrics: None,
+            adaptive_feed,
+            device_cursors,
+        })
+    }
+
+    /// Scatter/gather router on the **reactor** serving seam: instead of
+    /// a merger thread + finisher thread parking on blocking `recv`,
+    /// queries become small state machines (Scatter → Phase1Merge →
+    /// Phase2Fetch → Finish) advanced by one event loop that polls worker
+    /// completions non-blocking. `cfg.admission` bounds the tracked
+    /// pending set — excess queries wait in the inbox holding only their
+    /// payload — so tens of thousands of in-flight queries cost no
+    /// thread-per-query and no unbounded buffering (see
+    /// `rust/tests/reactor_bounded_memory.rs`). Answers are bit-identical
+    /// to the threaded constructors in every [`FetchMode`]
+    /// (`rust/tests/router_equivalence_prop.rs` pins this).
+    pub fn partitioned_reactor(
+        workers: Vec<Coordinator>,
+        fetch: FetchMode,
+        cfg: ReactorConfig,
+    ) -> Result<Self> {
+        Self::reactor_inner(workers, fetch, cfg, None)
+    }
+
+    /// [`Router::partitioned_reactor`] governed by the PR 6 shedding
+    /// ladder: [`Router::try_submit`] asks the overload controller for
+    /// admission and the reactor dispatches per the granted [`ShedPlan`],
+    /// feeding completions back — the reactor-seam counterpart of
+    /// [`Router::partitioned_overload`].
+    pub fn partitioned_reactor_overload(
+        workers: Vec<Coordinator>,
+        fetch: FetchMode,
+        cfg: ReactorConfig,
+        ocfg: OverloadConfig,
+        tier: Option<TierControl>,
+    ) -> Result<Self> {
+        let over = Arc::new(OverloadController::new(ocfg, tier));
+        Self::reactor_inner(workers, fetch, cfg, Some(over))
+    }
+
+    fn reactor_inner(
+        workers: Vec<Coordinator>,
+        fetch: FetchMode,
+        cfg: ReactorConfig,
+        overload: Option<Arc<OverloadController>>,
+    ) -> Result<Self> {
+        ensure!(!workers.is_empty(), "router needs at least one worker");
+        let adaptive = match fetch {
+            FetchMode::Adaptive => Some(Arc::new(AdaptiveController::new(
+                workers.len(),
+                SERVE.topk,
+                cfg.adaptive,
+            ))),
+            _ => None,
+        };
+        let gather_latency = Arc::new(Mutex::new(LatencyHist::for_latency_ns()));
+        let mut worker_txs = Vec::with_capacity(workers.len());
+        for w in &workers {
+            worker_txs.push(w.tx.clone().ok_or_else(|| anyhow!("worker already stopped"))?);
+        }
+        let metrics = Arc::new(reactor::ReactorMetrics::new(cfg.admission.max(1)));
+        let ctx = reactor::ReactorCtx {
+            worker_txs,
+            owners: workers.iter().map(|w| w.owned.clone()).collect(),
+            latency: gather_latency.clone(),
+            adaptive: adaptive.clone(),
+            // the event loop owns the adaptive device feed — one cursor
+            // per worker, drained at decide time on the reactor thread
+            adaptive_feed: workers.iter().map(|w| w.subscribe_window()).collect(),
+            overload: overload.clone(),
+            fetch,
+            metrics: metrics.clone(),
+            admission: cfg.admission.max(1),
+        };
+        let (job_tx, job_rx) = mpsc::channel::<reactor::ReactorJob>();
+        let handle = std::thread::Builder::new()
+            .name("fivemin-reactor".into())
+            .spawn(move || reactor::run(ctx, job_rx))?;
+        let device_cursors = workers.iter().map(|w| w.subscribe_window()).collect();
+        Ok(Router {
+            workers,
+            next: AtomicUsize::new(0),
+            mode: RouteMode::Partition { fetch },
+            merge_tx: None,
+            merger: None,
+            finisher: None,
+            gather_latency,
+            adaptive,
+            overload,
+            reactor_tx: Some(job_tx),
+            reactor: Some(handle),
+            reactor_metrics: Some(metrics),
+            adaptive_feed: Vec::new(),
+            device_cursors,
         })
     }
 
@@ -1126,6 +1288,19 @@ impl Router {
         query_full: Vec<f32>,
         plan: Option<ShedPlan>,
     ) -> mpsc::Receiver<Resp> {
+        // Reactor seam: hand the query (payload only — no scatter yet,
+        // that's the event loop's admission step) to the reactor inbox.
+        // `submitted` is stamped here so inbox wait counts toward latency.
+        if let Some(tx) = &self.reactor_tx {
+            let (rtx, rrx) = mpsc::channel();
+            let _ = tx.send(reactor::ReactorJob {
+                submitted: Instant::now(),
+                query: query_full,
+                resp: rtx,
+                plan,
+            });
+            return rrx;
+        }
         // Only governed (try_submit) queries feed the overload
         // controller's in-flight gauge and latency windows; raw submit()
         // traffic on the same router stays invisible to it.
@@ -1141,8 +1316,8 @@ impl Router {
                 let eff = match (fetch, &self.adaptive) {
                     (FetchMode::Adaptive, Some(ctrl)) => ctrl.decide_with(|| {
                         let mut fused = DeviceWindow::default();
-                        for w in &self.workers {
-                            fused.merge(&w.take_window());
+                        for c in &self.adaptive_feed {
+                            fused.merge(&c.drain());
                         }
                         fused
                     }),
@@ -1225,17 +1400,37 @@ impl Router {
         self.overload.as_ref()
     }
 
-    /// Drain and fuse every worker's device-latency window (see
-    /// [`Coordinator::take_window`]): the overload monitor's view of
-    /// storage pressure. Consuming — each sample is seen once, so don't
-    /// combine with [`FetchMode::Adaptive`], whose controller must be the
-    /// window's single sampler.
+    /// Drain and fuse this router's own per-worker measurement-bus
+    /// cursors: the overload monitor's view of storage pressure.
+    /// Draining advances only the router's cursors — the adaptive
+    /// controller's feed and any [`Coordinator::subscribe_window`]
+    /// subscriber see the same stream independently, so (unlike the old
+    /// consuming seam) this *is* safe to combine with
+    /// [`FetchMode::Adaptive`] on one router.
     pub fn take_device_window(&self) -> DeviceWindow {
         let mut fused = DeviceWindow::default();
-        for w in &self.workers {
-            fused.merge(&w.take_window());
+        for c in &self.device_cursors {
+            fused.merge(&c.drain());
         }
         fused
+    }
+
+    /// Which scatter/gather seam serves this router: `"reactor"` for
+    /// [`Router::partitioned_reactor`] routers, `"threads"` otherwise
+    /// (including replica routers).
+    pub fn serve_mode(&self) -> &'static str {
+        if self.reactor_tx.is_some() {
+            "reactor"
+        } else {
+            "threads"
+        }
+    }
+
+    /// Event-loop counters (admitted / completed / peak tracked pending
+    /// set vs the admission window) when this router serves through the
+    /// reactor; `None` on the threaded seam.
+    pub fn reactor_report(&self) -> Option<ReactorReport> {
+        self.reactor_metrics.as_ref().map(|m| m.report())
     }
 
     /// Aggregate the per-worker [`ServeStats`]: counters add, histograms
@@ -1322,6 +1517,22 @@ impl Drop for Router {
         if let Some(h) = self.finisher.take() {
             let _ = h.join();
         }
+        // Reactor seam: closing the inbox lets the event loop drain every
+        // tracked query (workers are still alive to answer legs) and exit.
+        self.reactor_tx.take();
+        if let Some(h) = self.reactor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Await one partition leg's answer (the threaded seam's blocking
+/// counterpart of the reactor's `try_recv` sweep).
+fn recv_partial(rx: &mpsc::Receiver<Resp>) -> Result<QueryResult, String> {
+    match rx.recv() {
+        Ok(Ok(r)) => Ok(r),
+        Ok(Err(e)) => Err(e),
+        Err(_) => Err("partition worker gone".into()),
     }
 }
 
@@ -1329,11 +1540,7 @@ impl Drop for Router {
 fn gather(parts: Vec<mpsc::Receiver<Resp>>) -> Resp {
     let mut partials = Vec::with_capacity(parts.len());
     for rx in parts {
-        match rx.recv() {
-            Ok(Ok(r)) => partials.push(r),
-            Ok(Err(e)) => return Err(e),
-            Err(_) => return Err("partition worker gone".into()),
-        }
+        partials.push(recv_partial(&rx)?);
     }
     merge_partials(partials)
 }
@@ -1394,16 +1601,31 @@ fn two_phase_dispatch(
     parts: Vec<mpsc::Receiver<Resp>>,
     promote_k: usize,
 ) -> Result<(Vec<(f32, u32)>, Vec<mpsc::Receiver<Resp>>, usize), String> {
-    let k = SERVE.topk;
     // ---- phase 1: gather local reduced top-k from every partition ----
-    let mut cand: Vec<(f32, u32)> = Vec::with_capacity(parts.len() * k);
-    let mut batch_size = 0usize;
+    let mut partials = Vec::with_capacity(parts.len());
     for rx in parts {
-        let p = match rx.recv() {
-            Ok(Ok(r)) => r,
-            Ok(Err(e)) => return Err(e),
-            Err(_) => return Err("partition worker gone".into()),
-        };
+        partials.push(recv_partial(&rx)?);
+    }
+    let (cand, batch_size) = promote_reduced(partials, promote_k)?;
+    // ---- phase 2 dispatch: one fetch leg per owning partition --------
+    let fetch_rx = dispatch_fetch_legs(&ctx.worker_txs, &ctx.owners, &query, &cand)?;
+    Ok((cand, fetch_rx, batch_size))
+}
+
+/// Promote the global top `promote_k` from gathered reduce legs: exactly
+/// what a single worker over the union corpus promotes (reduced desc, id
+/// asc — [`promote_cmp`]), in promotion order. A shrunk `promote_k`
+/// keeps the *prefix* of that order, so degraded answers are the full
+/// answer's promote set truncated — never a different candidate mix.
+/// Shared by the merger thread and the reactor so the promotion step
+/// cannot drift between serving seams.
+fn promote_reduced(
+    partials: Vec<QueryResult>,
+    promote_k: usize,
+) -> Result<(Vec<(f32, u32)>, usize), String> {
+    let mut cand: Vec<(f32, u32)> = Vec::with_capacity(partials.len() * SERVE.topk);
+    let mut batch_size = 0usize;
+    for p in partials {
         if p.ids.len() != p.reduced.len() {
             return Err("malformed reduce leg".into());
         }
@@ -1412,17 +1634,23 @@ fn two_phase_dispatch(
         }
         batch_size = batch_size.max(p.batch_size);
     }
-    // Global promote set: exactly what a single worker over the union
-    // corpus promotes (reduced desc, id asc), in promotion order. A
-    // shrunk promote_k keeps the *prefix* of that order, so degraded
-    // answers are the full answer's promote set truncated — never a
-    // different candidate mix.
     cand.sort_by(promote_cmp);
-    cand.truncate(promote_k.min(k));
-    // ---- phase 2 dispatch: one fetch leg per owning partition --------
-    let mut per_owner: Vec<Vec<u32>> = vec![Vec::new(); ctx.worker_txs.len()];
-    for &(_, id) in &cand {
-        let Some(p) = ctx.owners.iter().position(|r| r.contains(&id)) else {
+    cand.truncate(promote_k.min(SERVE.topk));
+    Ok((cand, batch_size))
+}
+
+/// Group a promote set by owning partition and send one
+/// [`WorkerRequest::Fetch`] leg per owner. Returns the pending fetch-leg
+/// receivers in worker order.
+fn dispatch_fetch_legs(
+    worker_txs: &[mpsc::Sender<Job<WorkerRequest, Resp>>],
+    owners: &[Range<u32>],
+    query: &[f32],
+    cand: &[(f32, u32)],
+) -> Result<Vec<mpsc::Receiver<Resp>>, String> {
+    let mut per_owner: Vec<Vec<u32>> = vec![Vec::new(); worker_txs.len()];
+    for &(_, id) in cand {
+        let Some(p) = owners.iter().position(|r| r.contains(&id)) else {
             return Err(format!("no partition owns candidate id {id}"));
         };
         per_owner[p].push(id);
@@ -1432,13 +1660,13 @@ fn two_phase_dispatch(
         if ids.is_empty() {
             continue; // this partition promoted nothing — no fetch leg
         }
-        let (job, rx) = Job::with_channel(WorkerRequest::Fetch { query: query.clone(), ids });
-        if ctx.worker_txs[p].send(job).is_err() {
+        let (job, rx) = Job::with_channel(WorkerRequest::Fetch { query: query.to_vec(), ids });
+        if worker_txs[p].send(job).is_err() {
             return Err("partition worker gone".into());
         }
         fetch_rx.push(rx);
     }
-    Ok((cand, fetch_rx, batch_size))
+    Ok(fetch_rx)
 }
 
 /// Stage-1-only degraded answer (the shedding ladder's reduced-score
@@ -1451,31 +1679,25 @@ fn two_phase_dispatch(
 /// full-dimension re-rank ran (callers detect degradation by
 /// `scores.is_empty()`). The caller stamps `latency`.
 fn stage1_merge(parts: Vec<mpsc::Receiver<Resp>>, promote_k: usize) -> Resp {
-    let mut cand: Vec<(f32, u32)> = Vec::with_capacity(parts.len() * SERVE.topk);
-    let mut batch_size = 0usize;
+    let mut partials = Vec::with_capacity(parts.len());
     for rx in parts {
-        let p = match rx.recv() {
-            Ok(Ok(r)) => r,
-            Ok(Err(e)) => return Err(e),
-            Err(_) => return Err("partition worker gone".into()),
-        };
-        if p.ids.len() != p.reduced.len() {
-            return Err("malformed reduce leg".into());
-        }
-        for j in 0..p.ids.len() {
-            cand.push((p.reduced[j], p.ids[j]));
-        }
-        batch_size = batch_size.max(p.batch_size);
+        partials.push(recv_partial(&rx)?);
     }
-    cand.sort_by(promote_cmp);
-    cand.truncate(promote_k.min(SERVE.topk));
-    Ok(QueryResult {
+    let (cand, batch_size) = promote_reduced(partials, promote_k)?;
+    Ok(stage1_result(cand, batch_size))
+}
+
+/// Build the degraded (stage-1-only) answer from a promote set: `scores`
+/// stays empty as the honest no-stage-2 marker; the caller stamps
+/// `latency`.
+fn stage1_result(cand: Vec<(f32, u32)>, batch_size: usize) -> QueryResult {
+    QueryResult {
         ids: cand.iter().map(|c| c.1).collect(),
         scores: Vec::new(),
         reduced: cand.iter().map(|c| c.0).collect(),
         latency: Duration::ZERO,
         batch_size,
-    })
+    }
 }
 
 /// Await one query's phase-2 fetch legs and produce the final merged
@@ -1485,14 +1707,28 @@ fn stage1_merge(parts: Vec<mpsc::Receiver<Resp>>, promote_k: usize) -> Resp {
 fn finish_two_phase(pending: PendingFetch) -> Resp {
     // `dispatched` is consumed by the finisher thread itself (phase-2
     // round-trip measurement) before this call.
-    let PendingFetch { submitted, cand, fetch_rx, mut batch_size, .. } = pending;
-    let mut full_of: HashMap<u32, f32> = HashMap::with_capacity(cand.len());
+    let PendingFetch { submitted, cand, fetch_rx, batch_size, .. } = pending;
+    let mut fetched = Vec::with_capacity(fetch_rx.len());
     for rx in fetch_rx {
-        let r = match rx.recv() {
-            Ok(Ok(r)) => r,
-            Ok(Err(e)) => return Err(e),
-            Err(_) => return Err("partition worker gone".into()),
-        };
+        fetched.push(recv_partial(&rx)?);
+    }
+    let mut result = rank_fetched(cand, fetched, batch_size)?;
+    // true end-to-end: scatter at the router → merged answer ready
+    result.latency = submitted.elapsed();
+    Ok(result)
+}
+
+/// Final order for a two-phase query from its gathered fetch legs:
+/// stable full-score sort from promotion order — mirroring
+/// [`merge_partials`], and therefore the single worker. Shared by the
+/// finisher thread and the reactor; the caller stamps `latency`.
+fn rank_fetched(
+    cand: Vec<(f32, u32)>,
+    fetched: Vec<QueryResult>,
+    mut batch_size: usize,
+) -> Resp {
+    let mut full_of: HashMap<u32, f32> = HashMap::with_capacity(cand.len());
+    for r in fetched {
         if r.ids.len() != r.scores.len() {
             return Err("malformed fetch leg".into());
         }
@@ -1501,7 +1737,6 @@ fn finish_two_phase(pending: PendingFetch) -> Resp {
         }
         batch_size = batch_size.max(r.batch_size);
     }
-    // ---- final order: stable full-score sort from promotion order ----
     let mut ranked: Vec<(f32, f32, u32)> = Vec::with_capacity(cand.len());
     for (red, id) in cand {
         let Some(&full) = full_of.get(&id) else {
@@ -1514,8 +1749,7 @@ fn finish_two_phase(pending: PendingFetch) -> Resp {
         ids: ranked.iter().map(|c| c.2).collect(),
         scores: ranked.iter().map(|c| c.1).collect(),
         reduced: ranked.iter().map(|c| c.0).collect(),
-        // true end-to-end: scatter at the router → merged answer ready
-        latency: submitted.elapsed(),
+        latency: Duration::ZERO,
         batch_size,
     })
 }

@@ -1,0 +1,470 @@
+//! Completion-driven reactor: the event-loop serving seam behind
+//! [`Router::partitioned_reactor`](super::Router::partitioned_reactor).
+//!
+//! The threaded seam parks a merger thread on blocking `recv` and a
+//! finisher thread on phase-2 legs, so every in-flight two-phase query
+//! holds a parked receiver and the two threads serialize their stages.
+//! Here each query is instead a small state machine
+//!
+//! ```text
+//!   inbox ── admit ──► Scatter ──► Phase1Merge ──► Phase2Fetch ──► Finish
+//!   (payload only)      (legs out)  (promote top-k)  (owner legs)   (rank)
+//!                          │                │
+//!                          │ speculative    │ stage1-only
+//!                          ▼                ▼
+//!                       Gather ──────────► Finish (degraded)
+//! ```
+//!
+//! advanced by one loop that sweeps worker completion channels with
+//! `try_recv` — no thread-per-query, no blocking on any single leg.
+//!
+//! **Bounded memory.** The loop admits from the inbox only while the
+//! tracked pending set is below the admission window
+//! ([`ReactorConfig::admission`]): a query beyond the window has not
+//! scattered yet and holds only its payload in the inbox channel. Peak
+//! tracked pending is counted ([`ReactorMetrics`]) and asserted `≤`
+//! window by `rust/tests/reactor_bounded_memory.rs` under 10k in-flight
+//! open-loop queries.
+//!
+//! **Bit-identity.** Every merge/promotion/ranking step calls the same
+//! helpers as the threaded seam ([`merge_partials`](super::Router),
+//! `promote_reduced`, `dispatch_fetch_legs`, `rank_fetched`,
+//! `stage1_result` in the parent module), and `promote_cmp` is a strict
+//! total order over unique candidate ids — so completion *order* cannot
+//! change the answer. `rust/tests/router_equivalence_prop.rs` pins the
+//! two seams bit-identical across random corpus/shard/fetch configs.
+//!
+//! The loop composes with both controllers exactly like the threaded
+//! seam: [`FetchMode::Adaptive`] resolves per admitted query from the
+//! reactor-owned measurement-bus cursors, and governed queries (a
+//! [`ShedPlan`] from the overload ladder) dispatch degraded and feed
+//! their completions back.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::batcher::Job;
+use super::{
+    dispatch_fetch_legs, merge_partials, promote_reduced, rank_fetched, stage1_result,
+    AdaptiveConfig, AdaptiveController, FetchMode, OverloadController, QueryResult, Resp,
+    ShedPlan, WorkerRequest,
+};
+use crate::runtime::SERVE;
+use crate::storage::{DeviceWindow, WindowCursor};
+use crate::util::stats::LatencyHist;
+
+/// Tuning for the reactor event loop.
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorConfig {
+    /// Admission window: the most queries the loop tracks (scattered,
+    /// holding live legs) at once. Queries beyond it wait in the inbox
+    /// holding only their payload — the explicit bound that replaces
+    /// thread-per-query memory. Clamped to ≥ 1.
+    pub admission: usize,
+    /// Controller tuning when the router runs [`FetchMode::Adaptive`]
+    /// (ignored for static fetch modes).
+    pub adaptive: AdaptiveConfig,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig { admission: 4096, adaptive: AdaptiveConfig::default() }
+    }
+}
+
+/// Event-loop counters, snapshotted by
+/// [`Router::reactor_report`](super::Router::reactor_report).
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorReport {
+    /// Queries admitted out of the inbox (scattered to workers).
+    pub admitted: u64,
+    /// Queries answered (ok or error).
+    pub completed: u64,
+    /// Largest tracked pending set ever observed — the bounded-memory
+    /// invariant is `peak_pending <= admission`, asserted by test.
+    pub peak_pending: u64,
+    /// The configured admission window.
+    pub admission: usize,
+}
+
+/// Shared counters the loop updates and the router snapshots.
+pub(crate) struct ReactorMetrics {
+    admitted: AtomicU64,
+    completed: AtomicU64,
+    peak_pending: AtomicU64,
+    admission: u64,
+}
+
+impl ReactorMetrics {
+    pub(crate) fn new(admission: usize) -> Self {
+        ReactorMetrics {
+            admitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            peak_pending: AtomicU64::new(0),
+            admission: admission as u64,
+        }
+    }
+
+    pub(crate) fn report(&self) -> ReactorReport {
+        ReactorReport {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            peak_pending: self.peak_pending.load(Ordering::Relaxed),
+            admission: self.admission as usize,
+        }
+    }
+}
+
+/// One query handed from [`Router::submit`](super::Router::submit) /
+/// `try_submit` to the reactor inbox. `submitted` is stamped at router
+/// dispatch, so time queued in the inbox (behind the admission window)
+/// counts toward the measured latency — same clock as the threaded seam.
+pub(crate) struct ReactorJob {
+    pub(crate) submitted: Instant,
+    pub(crate) query: Vec<f32>,
+    pub(crate) resp: mpsc::Sender<Resp>,
+    /// Granted admission plan for governed (`try_submit`) queries; `None`
+    /// for raw `submit` traffic, which stays invisible to the ladder.
+    pub(crate) plan: Option<ShedPlan>,
+}
+
+/// Everything the event loop owns (moved onto the reactor thread).
+pub(crate) struct ReactorCtx {
+    pub(crate) worker_txs: Vec<mpsc::Sender<Job<WorkerRequest, Resp>>>,
+    pub(crate) owners: Vec<std::ops::Range<u32>>,
+    pub(crate) latency: Arc<Mutex<LatencyHist>>,
+    pub(crate) adaptive: Option<Arc<AdaptiveController>>,
+    /// The adaptive controller's device feed: one measurement-bus cursor
+    /// per worker, drained at decide time on this thread.
+    pub(crate) adaptive_feed: Vec<WindowCursor>,
+    pub(crate) overload: Option<Arc<OverloadController>>,
+    pub(crate) fetch: FetchMode,
+    pub(crate) metrics: Arc<ReactorMetrics>,
+    pub(crate) admission: usize,
+}
+
+/// One pending scatter leg: its response channel and, once swept, its
+/// answer — held until every sibling leg lands so the merge sees legs in
+/// worker order (the same order the threaded seam gathers in).
+struct Leg {
+    rx: mpsc::Receiver<Resp>,
+    got: Option<QueryResult>,
+}
+
+impl Leg {
+    fn new(rx: mpsc::Receiver<Resp>) -> Self {
+        Leg { rx, got: None }
+    }
+}
+
+/// Where one tracked query stands. `Gather` is the speculative protocol
+/// (legs already carry full scores); `Phase1`/`Phase2` are the two-phase
+/// protocol, with `stage1_only` marking degraded (ladder) service that
+/// stops after the promote.
+enum QState {
+    Gather {
+        legs: Vec<Leg>,
+    },
+    Phase1 {
+        legs: Vec<Leg>,
+        query: Vec<f32>,
+        promote_k: usize,
+        stage1_only: bool,
+    },
+    Phase2 {
+        legs: Vec<Leg>,
+        /// (reduced, id) in promotion order.
+        cand: Vec<(f32, u32)>,
+        /// Fetch-leg dispatch instant — `dispatched → legs answered` is
+        /// the phase-2 round-trip the adaptive controller prices.
+        dispatched: Instant,
+        batch_size: usize,
+    },
+}
+
+/// One tracked (admitted) query.
+struct InFlight {
+    submitted: Instant,
+    /// See [`ReactorJob::plan`] — governed queries feed the ladder.
+    counted: bool,
+    state: QState,
+    resp: mpsc::Sender<Resp>,
+}
+
+/// What one [`advance`] pass did for one query.
+enum Progress {
+    /// No leg answered — nothing changed.
+    Idle,
+    /// New legs landed or the state machine transitioned.
+    Moved,
+    /// The query has its final answer (latency still unstamped).
+    Done(Resp),
+}
+
+/// The reactor event loop. Runs until the inbox closes *and* every
+/// tracked query has answered; workers outlive the loop (the router
+/// joins this thread before dropping them), so draining always finishes.
+pub(crate) fn run(ctx: ReactorCtx, inbox: mpsc::Receiver<ReactorJob>) {
+    let mut pending: Vec<InFlight> = Vec::new();
+    let mut open = true;
+    while open || !pending.is_empty() {
+        let mut progressed = false;
+        // ---- admission: fill the window from the inbox, non-blocking ----
+        while open && pending.len() < ctx.admission {
+            match inbox.try_recv() {
+                Ok(job) => {
+                    pending.push(admit(&ctx, job));
+                    progressed = true;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        ctx.metrics.peak_pending.fetch_max(pending.len() as u64, Ordering::Relaxed);
+        // ---- sweep: advance every tracked query, non-blocking ----------
+        let mut i = 0;
+        while i < pending.len() {
+            match advance(&ctx, &mut pending[i]) {
+                Progress::Done(result) => {
+                    let f = pending.swap_remove(i);
+                    finalize(&ctx, f, result);
+                    progressed = true;
+                    // swap_remove moved a new query into slot i — sweep it
+                }
+                Progress::Moved => {
+                    progressed = true;
+                    i += 1;
+                }
+                Progress::Idle => i += 1,
+            }
+        }
+        if progressed {
+            continue;
+        }
+        if pending.is_empty() {
+            if !open {
+                break;
+            }
+            // idle reactor: park on the inbox instead of spinning
+            match inbox.recv_timeout(Duration::from_millis(1)) {
+                Ok(job) => pending.push(admit(&ctx, job)),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+            }
+        } else {
+            // legs in flight but none ready: yield briefly, then re-sweep
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+}
+
+/// Scatter one inbox query and build its state machine — the reactor
+/// counterpart of the threaded `dispatch_partition`, resolving the
+/// granted [`ShedPlan`] (and, for [`FetchMode::Adaptive`], the
+/// controller's per-query protocol decision) identically.
+fn admit(ctx: &ReactorCtx, job: ReactorJob) -> InFlight {
+    let ReactorJob { submitted, query, resp, plan } = job;
+    let counted = plan.is_some();
+    let (stage1_only, promote_k, eff) = match plan {
+        Some(p) if p.stage1_only => (true, p.promote_k, FetchMode::AfterMerge),
+        Some(p) if p.promote_k < SERVE.topk => (false, p.promote_k, FetchMode::AfterMerge),
+        _ => {
+            let eff = match (ctx.fetch, &ctx.adaptive) {
+                (FetchMode::Adaptive, Some(ctrl)) => ctrl.decide_with(|| {
+                    let mut fused = DeviceWindow::default();
+                    for c in &ctx.adaptive_feed {
+                        fused.merge(&c.drain());
+                    }
+                    fused
+                }),
+                (mode, _) => mode,
+            };
+            (false, SERVE.topk, eff)
+        }
+    };
+    let two_phase = stage1_only || eff == FetchMode::AfterMerge;
+    let legs: Vec<Leg> = ctx
+        .worker_txs
+        .iter()
+        .map(|tx| {
+            let (j, rx) = Job::with_channel(if two_phase {
+                WorkerRequest::Reduce(query.clone())
+            } else {
+                WorkerRequest::Search(query.clone())
+            });
+            let _ = tx.send(j);
+            Leg::new(rx)
+        })
+        .collect();
+    let state = if two_phase {
+        QState::Phase1 { legs, query, promote_k, stage1_only }
+    } else {
+        QState::Gather { legs }
+    };
+    ctx.metrics.admitted.fetch_add(1, Ordering::Relaxed);
+    InFlight { submitted, counted, state, resp }
+}
+
+/// Sweep a leg set with `try_recv`. Returns `(all_answered, any_new)`;
+/// a failed or orphaned leg fails the whole query immediately (same
+/// error strings as the threaded seam's blocking gather).
+fn sweep(legs: &mut [Leg]) -> Result<(bool, bool), String> {
+    let mut all = true;
+    let mut fresh = false;
+    for leg in legs.iter_mut() {
+        if leg.got.is_some() {
+            continue;
+        }
+        match leg.rx.try_recv() {
+            Ok(Ok(r)) => {
+                leg.got = Some(r);
+                fresh = true;
+            }
+            Ok(Err(e)) => return Err(e),
+            Err(mpsc::TryRecvError::Empty) => all = false,
+            Err(mpsc::TryRecvError::Disconnected) => return Err("partition worker gone".into()),
+        }
+    }
+    Ok((all, fresh))
+}
+
+/// Collect a fully-swept leg set's answers in worker order.
+fn collect(legs: Vec<Leg>) -> Vec<QueryResult> {
+    legs.into_iter().filter_map(|l| l.got).collect()
+}
+
+/// Advance one query: sweep its current legs and, when the last lands,
+/// run the stage transition through the shared merge helpers.
+fn advance(ctx: &ReactorCtx, f: &mut InFlight) -> Progress {
+    let swept = match &mut f.state {
+        QState::Gather { legs } => sweep(legs),
+        QState::Phase1 { legs, .. } => sweep(legs),
+        QState::Phase2 { legs, .. } => sweep(legs),
+    };
+    let (all, fresh) = match swept {
+        Ok(x) => x,
+        Err(e) => return Progress::Done(Err(e)),
+    };
+    if !all {
+        return if fresh { Progress::Moved } else { Progress::Idle };
+    }
+    // every leg answered: transition (take the state out to consume it)
+    let state = std::mem::replace(&mut f.state, QState::Gather { legs: Vec::new() });
+    match state {
+        QState::Gather { legs } => Progress::Done(merge_partials(collect(legs))),
+        QState::Phase1 { legs, query, promote_k, stage1_only } => {
+            let (cand, batch_size) = match promote_reduced(collect(legs), promote_k) {
+                Ok(x) => x,
+                Err(e) => return Progress::Done(Err(e)),
+            };
+            if stage1_only {
+                return Progress::Done(Ok(stage1_result(cand, batch_size)));
+            }
+            match dispatch_fetch_legs(&ctx.worker_txs, &ctx.owners, &query, &cand) {
+                Ok(rxs) => {
+                    f.state = QState::Phase2 {
+                        legs: rxs.into_iter().map(Leg::new).collect(),
+                        cand,
+                        dispatched: Instant::now(),
+                        batch_size,
+                    };
+                    Progress::Moved
+                }
+                Err(e) => Progress::Done(Err(e)),
+            }
+        }
+        QState::Phase2 { legs, cand, dispatched, batch_size } => {
+            let result = rank_fetched(cand, collect(legs), batch_size);
+            if result.is_ok() {
+                // measured phase-2 round-trip → adaptive controller (the
+                // threaded seam's finisher does the same, success only)
+                if let Some(ctrl) = &ctx.adaptive {
+                    ctrl.observe_phase2(dispatched.elapsed().as_nanos() as f64);
+                }
+            }
+            Progress::Done(result)
+        }
+    }
+}
+
+/// Stamp latency, record it, feed the ladder, answer the caller.
+fn finalize(ctx: &ReactorCtx, f: InFlight, mut result: Resp) {
+    if let Ok(r) = &mut result {
+        // true end-to-end: router dispatch (incl. inbox wait) → answer
+        r.latency = f.submitted.elapsed();
+        ctx.latency.lock().unwrap().push(r.latency.as_nanos() as f64);
+    }
+    if f.counted {
+        if let Some(c) = &ctx.overload {
+            match &result {
+                Ok(r) => c.on_complete(r.latency.as_nanos() as f64),
+                Err(_) => c.on_error(),
+            }
+        }
+    }
+    ctx.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    let _ = f.resp.send(result);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_admission_window_is_positive_and_roomy() {
+        let cfg = ReactorConfig::default();
+        assert!(cfg.admission >= 1024, "window should absorb real bursts");
+    }
+
+    #[test]
+    fn metrics_report_round_trips_counters() {
+        let m = ReactorMetrics::new(256);
+        m.admitted.fetch_add(7, Ordering::Relaxed);
+        m.completed.fetch_add(5, Ordering::Relaxed);
+        m.peak_pending.fetch_max(3, Ordering::Relaxed);
+        m.peak_pending.fetch_max(2, Ordering::Relaxed); // max, not last
+        let r = m.report();
+        assert_eq!(r.admitted, 7);
+        assert_eq!(r.completed, 5);
+        assert_eq!(r.peak_pending, 3);
+        assert_eq!(r.admission, 256);
+    }
+
+    #[test]
+    fn sweep_flags_empty_disconnected_and_answered_legs() {
+        // an answered leg counts once; an empty leg holds `all` false
+        let (tx, rx) = mpsc::channel::<Resp>();
+        tx.send(Ok(QueryResult {
+            ids: vec![1],
+            scores: vec![1.0],
+            reduced: vec![0.5],
+            latency: Duration::ZERO,
+            batch_size: 1,
+        }))
+        .unwrap();
+        let (_tx2, rx2) = mpsc::channel::<Resp>();
+        let mut legs = vec![Leg::new(rx), Leg::new(rx2)];
+        let (all, fresh) = sweep(&mut legs).unwrap();
+        assert!(!all);
+        assert!(fresh);
+        assert!(legs[0].got.is_some());
+        // a second sweep with nothing new is idle, not done
+        let (all, fresh) = sweep(&mut legs).unwrap();
+        assert!(!all && !fresh);
+        // dropping the sender orphans the empty leg → hard error
+        drop(_tx2);
+        assert_eq!(sweep(&mut legs).unwrap_err(), "partition worker gone");
+    }
+
+    #[test]
+    fn sweep_propagates_a_leg_error() {
+        let (tx, rx) = mpsc::channel::<Resp>();
+        tx.send(Err("worker exploded".into())).unwrap();
+        let mut legs = vec![Leg::new(rx)];
+        assert_eq!(sweep(&mut legs).unwrap_err(), "worker exploded");
+    }
+}

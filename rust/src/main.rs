@@ -68,9 +68,9 @@ fn print_help() {
          \x20 simulate   --blk N --read-pct N [--measure-us N] [--p-bch P] [--ch-bw GBps]\n\
          \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11 --fig12 --fig13 --fig14 --fig15] [--out DIR] [--quick]\n\
          \x20 config     --dump\n\
-         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N[,map=interleave]]] [--pace afap|wall:S] [--fetch spec|merge|adaptive] [--tier none|dram:mb=N,rule=breakeven|5min|5s|clock]\n\
+         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N[,map=interleave]]|uring[:path=FILE]] [--pace afap|wall:S] [--fetch spec|merge|adaptive] [--serve threads|reactor] [--admission N] [--tier none|dram:mb=N,rule=breakeven|5min|5s|clock]\n\
          \x20 smoke      [--queries N] [--json] [--out FILE] [--baseline FILE] [--tolerance T]\n\
-         \x20 soak       [--secs-per-phase S] [--shards N] [--max-arrivals N] [--depth N] [--p99-us US] [--json] [--out FILE] [--baseline FILE] [--seed N]"
+         \x20 soak       [--secs-per-phase S] [--shards N] [--max-arrivals N] [--depth N] [--p99-us US] [--backend SPEC] [--tier SPEC] [--json] [--out FILE] [--baseline FILE] [--seed N]"
     );
 }
 
@@ -440,6 +440,20 @@ fn cmd_soak(args: &[String]) -> Result<(), String> {
     .opt("p95-us", "US", Some("0"), "p95 SLO budget (0 = derive)")
     .opt("p50-us", "US", Some("0"), "p50 SLO budget (0 = derive)")
     .opt("seed", "N", Some("20652"), "arrival-process seed")
+    .opt(
+        "backend",
+        "SPEC",
+        Some("mem"),
+        "per-worker storage backend under the drill: mem|model|sim, ':shards=N[,map=interleave]' \
+         fans each worker's device out",
+    )
+    .opt(
+        "tier",
+        "none|dram:mb=N,rule=breakeven|5min|5s|clock",
+        Some("none"),
+        "per-worker DRAM tier in front of the device; shares its budget clamp with the ladder, \
+         so the TightTier rung squeezes real tier capacity",
+    )
     .flag("json", "write the JSON artifact (see --out)")
     .opt(
         "out",
@@ -463,6 +477,10 @@ fn cmd_soak(args: &[String]) -> Result<(), String> {
     if shards == 0 {
         return Err("--shards must be >= 1".into());
     }
+    let backend = fivemin::storage::BackendSpec::parse(p.str("backend").unwrap(), 4096)
+        .map_err(|e| e.to_string())?;
+    let tier = fivemin::storage::TierSpec::parse(p.str("tier").unwrap(), 4096)
+        .map_err(|e| e.to_string())?;
     let cfg = fivemin::soak::SoakConfig {
         shards,
         secs_per_phase: secs,
@@ -472,6 +490,8 @@ fn cmd_soak(args: &[String]) -> Result<(), String> {
         p95_us: p.f64("p95-us").map_err(|e| e.to_string())?.unwrap(),
         p50_us: p.f64("p50-us").map_err(|e| e.to_string())?.unwrap(),
         seed: p.u64("seed").map_err(|e| e.to_string())?.unwrap(),
+        backend,
+        tier,
     };
     let run = fivemin::soak::run_soak(&cfg).map_err(|e| e.to_string())?;
     println!("{}", fivemin::soak::table(&run).render());
@@ -529,7 +549,8 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         "backend",
         "SPEC",
         Some("mem"),
-        "per-worker storage backend: mem|model|sim, ':shards=N[,map=interleave]' fans each worker's device out",
+        "per-worker storage backend: mem|model|sim|uring[:path=FILE], ':shards=N[,map=interleave]' \
+         fans each worker's device out (uring: real file I/O, tempfile when no path)",
     )
     .opt(
         "pace",
@@ -548,6 +569,19 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         "none|dram:mb=N,rule=breakeven|5min|5s|clock",
         Some("none"),
         "per-worker DRAM tier in front of the device: repeated stage-2 reads served from DRAM when their reuse interval beats the rule's bar",
+    )
+    .opt(
+        "serve",
+        "threads|reactor",
+        Some("threads"),
+        "scatter/gather seam: merger+finisher threads, or the completion-driven reactor event \
+         loop (bounded in-flight, no thread-per-query; bit-identical answers)",
+    )
+    .opt(
+        "admission",
+        "N",
+        Some("4096"),
+        "reactor admission window: max tracked in-flight queries (reactor seam only)",
     );
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
     let shards = p.usize("shards").map_err(|e| e.to_string())?.unwrap();
@@ -566,12 +600,26 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     }
     let fetch = fivemin::coordinator::FetchMode::parse(p.str("fetch").unwrap())
         .map_err(|e| e.to_string())?;
+    let reactor = match p.str("serve").unwrap() {
+        "threads" => None,
+        "reactor" => {
+            let admission = p.usize("admission").map_err(|e| e.to_string())?.unwrap();
+            if admission == 0 {
+                return Err("--admission must be >= 1".into());
+            }
+            Some(fivemin::coordinator::ReactorConfig {
+                admission,
+                ..fivemin::coordinator::ReactorConfig::default()
+            })
+        }
+        other => return Err(format!("unknown serve seam '{other}' (want threads|reactor)")),
+    };
     let queries = p.usize("queries").map_err(|e| e.to_string())?.unwrap();
     let dir = p
         .str("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(fivemin::runtime::default_artifacts_dir);
-    serve_demo(dir, shards, queries, backend, fetch).map_err(|e| e.to_string())
+    serve_demo(dir, shards, queries, backend, fetch, reactor).map_err(|e| e.to_string())
 }
 
 fn serve_demo(
@@ -580,6 +628,7 @@ fn serve_demo(
     queries: usize,
     backend: fivemin::storage::BackendSpec,
     fetch: fivemin::coordinator::FetchMode,
+    reactor: Option<fivemin::coordinator::ReactorConfig>,
 ) -> anyhow::Result<()> {
     use fivemin::coordinator::batcher::BatchPolicy;
     use fivemin::coordinator::{Coordinator, Router, ServingCorpus};
@@ -589,10 +638,11 @@ fn serve_demo(
     let corpus = Arc::new(ServingCorpus::synthetic(shards, 42));
     println!(
         "corpus: {} vectors across {shards} shard(s); one partition worker per shard, \
-         '{}' backend per worker, '{}' stage-2 fetch",
+         '{}' backend per worker, '{}' stage-2 fetch, '{}' serving seam",
         corpus.n,
         backend.kind().name(),
-        fetch.name()
+        fetch.name(),
+        if reactor.is_some() { "reactor" } else { "threads" }
     );
     let workers = corpus
         .partitions(shards)?
@@ -603,7 +653,10 @@ fn serve_demo(
             Coordinator::start(dir.clone(), Arc::new(part), BatchPolicy::default(), spec)
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
-    let router = Router::partitioned_with(workers, fetch)?;
+    let router = match reactor {
+        Some(cfg) => Router::partitioned_reactor(workers, fetch, cfg)?,
+        None => Router::partitioned_with(workers, fetch)?,
+    };
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
     let recvs: Vec<_> = (0..queries)
@@ -642,6 +695,12 @@ fn serve_demo(
         println!(
             "phases   : {} reduce legs, {} fetch legs (two-phase protocol)",
             st.reduce_legs, st.fetch_legs
+        );
+    }
+    if let Some(rep) = router.reactor_report() {
+        println!(
+            "reactor  : {} admitted / {} completed, peak pending {} (window {})",
+            rep.admitted, rep.completed, rep.peak_pending, rep.admission
         );
     }
     if let Some(rep) = router.adaptive_report() {

@@ -1,9 +1,11 @@
 //! Perf-smoke harness (`fivemin smoke`): a short serving-scenario matrix
 //! — `{mem, sim} × {spec, merge, adaptive} × shards ∈ {1, 2}`, plus
-//! DRAM-tier cells `{mem, sim} × {clock, breakeven} × {2 MB, 8 MB}` —
-//! measured end to end and gated against a checked-in baseline, so a
-//! regression in the router protocols, the adaptive control loop, or the
-//! tier's accounting is caught mechanically in CI rather than by eyeball.
+//! DRAM-tier cells `{mem, sim} × {clock, breakeven} × {2 MB, 8 MB}` and
+//! reactor-seam cells `{mem, sim} × {merge, adaptive}` served through
+//! `Router::partitioned_reactor` — measured end to end and gated against
+//! a checked-in baseline, so a regression in the router protocols, the
+//! adaptive control loop, the tier's accounting, or the completion-driven
+//! serving core is caught mechanically in CI rather than by eyeball.
 //!
 //! Per cell the harness reports stage-2 reads per query (submitted and
 //! post-tier device), the p50/p99 end-to-end (merged-answer) latency,
@@ -19,6 +21,12 @@
 //!   cells**: the controller may legitimately sit anywhere between the
 //!   merge and spec read costs depending on measured load, so the bound
 //!   is `merge×(1−tol) ≤ adaptive ≤ spec×(1+tol)`, not a fixed number.
+//! * **Reactor cells are gated relative to the same run's threaded
+//!   peer**: the reactor seam reuses the threaded seam's merge/promote/
+//!   rank helpers, so its submitted reads per query must match the
+//!   threaded cell for static fetch modes (adaptive reactor cells are
+//!   bounded by the threaded static peers like any adaptive cell), and
+//!   the baseline's `reactor_cells` list pins the scenario set.
 //! * **Tier cells are gated relative to their untiered peer** too: the
 //!   tier must never *increase* device reads
 //!   (`device ≤ peer×(1+tol)`), its exact accounting
@@ -38,7 +46,9 @@ use std::time::Duration;
 use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::coordinator::batcher::BatchPolicy;
-use crate::coordinator::{AdaptiveConfig, Coordinator, FetchMode, Router, ServingCorpus};
+use crate::coordinator::{
+    AdaptiveConfig, Coordinator, FetchMode, ReactorConfig, Router, ServingCorpus,
+};
 use crate::runtime::default_artifacts_dir;
 use crate::storage::{BackendSpec, TierRule, TierSpec};
 use crate::util::json::Json;
@@ -48,7 +58,9 @@ use crate::util::table::Table;
 
 /// Artifact/baseline schema tag (bump on breaking shape changes).
 /// v2: tier cells + device_reads_per_query / tier_hits / tier_hit_rate.
-pub const SCHEMA: &str = "fivemin-bench-smoke/v2";
+/// v3: per-cell `serve` seam field + reactor cells pinned by
+/// `reactor_cells`.
+pub const SCHEMA: &str = "fivemin-bench-smoke/v3";
 
 /// Reference arrival rate (accesses/s) for the smoke tier cells: sized so
 /// the break-even bar bites within a 48-query cell (only the hottest
@@ -58,10 +70,12 @@ const TIER_SMOKE_RATE: f64 = 100.0;
 
 /// Default queries per cell. Enough for the adaptive controller (tuned to
 /// an 8-query window here) to sample several windows, small enough that
-/// the whole 20-cell matrix (12 static + 8 tier) stays a smoke test.
+/// the whole 24-cell matrix (12 static + 8 tier + 4 reactor) stays a
+/// smoke test.
 pub const DEFAULT_QUERIES: usize = 48;
 
-/// One measured (backend, fetch mode, shard count[, tier]) scenario.
+/// One measured (backend, fetch mode, shard count[, tier][, seam])
+/// scenario.
 #[derive(Clone, Debug)]
 pub struct SmokeCell {
     /// Storage backend behind every partition worker (`mem` | `sim`).
@@ -71,6 +85,9 @@ pub struct SmokeCell {
     pub shards: usize,
     /// DRAM-tier label (e.g. `dram2:clock`) when the cell runs the tier.
     pub tier: Option<String>,
+    /// Serving seam: `threads` (merger + finisher threads) or `reactor`
+    /// (completion-driven event loop).
+    pub serve: &'static str,
     pub queries: usize,
     /// Stage-2 reads *submitted* per query (coordinator-side counter,
     /// settled against the backend snapshot). With a tier, each lands on
@@ -91,12 +108,19 @@ pub struct SmokeCell {
 }
 
 impl SmokeCell {
-    /// Stable cell key used by the baseline file.
+    /// Stable cell key used by the baseline file. Threaded untiered cells
+    /// keep the historical 3-segment key; tier and reactor cells append
+    /// their dimension, so existing baseline keys never move.
     pub fn key(&self) -> String {
-        match &self.tier {
-            Some(t) => format!("{}/{}/{}/{t}", self.backend, self.fetch.name(), self.shards),
-            None => format!("{}/{}/{}", self.backend, self.fetch.name(), self.shards),
+        let mut key = format!("{}/{}/{}", self.backend, self.fetch.name(), self.shards);
+        if let Some(t) = &self.tier {
+            key.push('/');
+            key.push_str(t);
         }
+        if self.serve == "reactor" {
+            key.push_str("/reactor");
+        }
+        key
     }
 }
 
@@ -106,6 +130,7 @@ fn run_cell(
     shards: usize,
     queries: usize,
     tier: Option<TierSpec>,
+    serve: &'static str,
 ) -> Result<SmokeCell> {
     let corpus = Arc::new(ServingCorpus::synthetic(shards, 0x5140C + shards as u64));
     let device = match backend {
@@ -130,14 +155,20 @@ fn run_cell(
             )
         })
         .collect::<Result<Vec<_>>>()?;
-    let router = match fetch {
-        // small window so the controller actually samples within a
-        // smoke-sized run; rare refresh keeps probes out of the tail
-        FetchMode::Adaptive => Router::partitioned_adaptive(
+    // small window so the controller actually samples within a
+    // smoke-sized run; rare refresh keeps probes out of the tail
+    let acfg = AdaptiveConfig { window: 8, refresh: 32, ..AdaptiveConfig::default() };
+    let router = match serve {
+        "reactor" => Router::partitioned_reactor(
             workers,
-            AdaptiveConfig { window: 8, refresh: 32, ..AdaptiveConfig::default() },
+            fetch,
+            ReactorConfig { adaptive: acfg, ..ReactorConfig::default() },
         )?,
-        mode => Router::partitioned_with(workers, mode)?,
+        "threads" => match fetch {
+            FetchMode::Adaptive => Router::partitioned_adaptive(workers, acfg)?,
+            mode => Router::partitioned_with(workers, mode)?,
+        },
+        other => return Err(anyhow!("unknown serve seam '{other}'")),
     };
     // one shared query stream per (backend, shards): every fetch mode
     // serves identical queries, so cells differ only in protocol. Tier
@@ -188,6 +219,7 @@ fn run_cell(
         fetch,
         shards,
         tier: tier.as_ref().map(|t| t.label()),
+        serve,
         queries,
         reads_per_query: st.ssd_reads as f64 / queries.max(1) as f64,
         device_reads_per_query: snap.stats.stage2_reads as f64 / queries.max(1) as f64,
@@ -207,7 +239,7 @@ pub fn run_matrix(queries: usize) -> Result<Vec<SmokeCell>> {
     for backend in ["mem", "sim"] {
         for shards in [1usize, 2] {
             for fetch in [FetchMode::Speculative, FetchMode::AfterMerge, FetchMode::Adaptive] {
-                cells.push(run_cell(backend, fetch, shards, queries, None)?);
+                cells.push(run_cell(backend, fetch, shards, queries, None, "threads")?);
             }
         }
     }
@@ -218,8 +250,23 @@ pub fn run_matrix(queries: usize) -> Result<Vec<SmokeCell>> {
         for mb in [2u64, 8] {
             for rule in [TierRule::Clock, TierRule::Breakeven] {
                 let tier = TierSpec { rate: TIER_SMOKE_RATE, ..TierSpec::new(mb, rule, 4096) };
-                cells.push(run_cell(backend, FetchMode::Speculative, 1, queries, Some(tier))?);
+                cells.push(run_cell(
+                    backend,
+                    FetchMode::Speculative,
+                    1,
+                    queries,
+                    Some(tier),
+                    "threads",
+                )?);
             }
+        }
+    }
+    // Reactor-seam cells: the completion-driven event loop over the same
+    // 2-shard scenarios (the threaded mem|sim/{merge,adaptive}/2 cells
+    // are the relative-gate peers).
+    for backend in ["mem", "sim"] {
+        for fetch in [FetchMode::AfterMerge, FetchMode::Adaptive] {
+            cells.push(run_cell(backend, fetch, 2, queries, None, "reactor")?);
         }
     }
     Ok(cells)
@@ -230,12 +277,13 @@ pub fn table(cells: &[SmokeCell]) -> Table {
     let mut t = Table::new(
         "bench-smoke: serve scenario matrix — stage-2 reads/query (submitted \
          and post-tier device) and end-to-end latency per \
-         {backend, fetch, shards[, tier]} cell",
+         {backend, fetch, shards[, tier], seam} cell",
         &[
             "backend",
             "fetch",
             "shards",
             "tier",
+            "serve",
             "queries",
             "reads_per_query",
             "dev_reads_per_query",
@@ -251,6 +299,7 @@ pub fn table(cells: &[SmokeCell]) -> Table {
             c.fetch.name().to_string(),
             format!("{}", c.shards),
             c.tier.clone().unwrap_or_else(|| "-".into()),
+            c.serve.to_string(),
             format!("{}", c.queries),
             format!("{:.1}", c.reads_per_query),
             format!("{:.1}", c.device_reads_per_query),
@@ -272,6 +321,7 @@ pub fn to_json(cells: &[SmokeCell]) -> Json {
                 ("backend", Json::Str(c.backend.to_string())),
                 ("fetch", Json::Str(c.fetch.name().to_string())),
                 ("shards", Json::Num(c.shards as f64)),
+                ("serve", Json::Str(c.serve.to_string())),
                 ("queries", Json::Num(c.queries as f64)),
                 ("reads_per_query", Json::Num(c.reads_per_query)),
                 ("device_reads_per_query", Json::Num(c.device_reads_per_query)),
@@ -315,9 +365,10 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
     let Some(base_cells) = baseline.get(&["cells"]).and_then(|c| c.as_obj()) else {
         return vec!["baseline has no 'cells' object".to_string()];
     };
-    // static cells: compare against the checked-in expectation
+    // static cells: compare against the checked-in expectation (reactor
+    // cells are gated against their in-run threaded peer instead)
     for c in cells {
-        if c.fetch == FetchMode::Adaptive || c.tier.is_some() {
+        if c.fetch == FetchMode::Adaptive || c.tier.is_some() || c.serve == "reactor" {
             continue;
         }
         let key = c.key();
@@ -359,7 +410,11 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
         }
         let peer = |m: FetchMode| {
             cells.iter().find(|p| {
-                p.backend == c.backend && p.shards == c.shards && p.fetch == m && p.tier.is_none()
+                p.backend == c.backend
+                    && p.shards == c.shards
+                    && p.fetch == m
+                    && p.tier.is_none()
+                    && p.serve == "threads"
             })
         };
         let (Some(spec), Some(merge)) =
@@ -393,6 +448,7 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
                 && p.shards == c.shards
                 && p.fetch == c.fetch
                 && p.tier.is_none()
+                && p.serve == "threads"
         });
         let Some(peer) = peer else {
             failures.push(format!("cell {}: untiered peer missing from run", c.key()));
@@ -422,12 +478,47 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
             ));
         }
     }
-    // tier scenarios the baseline pins but the run never produced
-    if let Some(list) = baseline.get(&["tier_cells"]).and_then(|t| t.as_arr()) {
-        for want in list {
-            let Some(key) = want.as_str() else { continue };
-            if !cells.iter().any(|c| c.key() == key) {
-                failures.push(format!("cell {key}: in baseline tier_cells but not measured"));
+    // reactor cells: gated relative to the same run's threaded peer. The
+    // two seams share the merge/promote/rank helpers, so for a static
+    // fetch mode the submitted reads per query must match the threaded
+    // cell (both are equivalence-pinned); adaptive reactor cells were
+    // already bounded by the threaded static peers above.
+    for c in cells {
+        if c.serve != "reactor" || c.tier.is_some() {
+            continue;
+        }
+        let peer = cells.iter().find(|p| {
+            p.backend == c.backend
+                && p.shards == c.shards
+                && p.fetch == c.fetch
+                && p.tier.is_none()
+                && p.serve == "threads"
+        });
+        let Some(peer) = peer else {
+            failures.push(format!("cell {}: threaded peer missing from run", c.key()));
+            continue;
+        };
+        if c.fetch != FetchMode::Adaptive
+            && (c.reads_per_query - peer.reads_per_query).abs() > tol * peer.reads_per_query
+        {
+            failures.push(format!(
+                "cell {}: reactor reads/query {:.2} diverge from threaded peer {:.2} — \
+                 the serving seam must not change the fetch protocol",
+                c.key(),
+                c.reads_per_query,
+                peer.reads_per_query
+            ));
+        }
+    }
+    // tier / reactor scenarios the baseline pins but the run never
+    // produced (a silently dropped scenario must fail the gate)
+    for pin in ["tier_cells", "reactor_cells"] {
+        if let Some(list) = baseline.get(&[pin]).and_then(|t| t.as_arr()) {
+            for want in list {
+                let Some(key) = want.as_str() else { continue };
+                if !cells.iter().any(|c| c.key() == key) {
+                    failures.push(format!("cell {key}: in baseline {pin} but not measured"));
+                }
             }
         }
     }
@@ -463,6 +554,7 @@ mod tests {
             fetch,
             shards,
             tier: None,
+            serve: "threads",
             queries: 8,
             reads_per_query: rpq,
             device_reads_per_query: rpq,
@@ -486,6 +578,7 @@ mod tests {
             fetch: FetchMode::Speculative,
             shards: 2,
             tier: Some(label.to_string()),
+            serve: "threads",
             queries: 8,
             reads_per_query: submitted_rpq,
             device_reads_per_query: device_rpq,
@@ -617,6 +710,60 @@ mod tests {
         assert!(failures.iter().any(|f| f.contains("untiered peer missing")), "{failures:?}");
     }
 
+    fn reactor_cell(fetch: FetchMode, rpq: f64) -> SmokeCell {
+        SmokeCell { serve: "reactor", ..cell("mem", fetch, 2, rpq, 500.0) }
+    }
+
+    #[test]
+    fn gate_pins_reactor_cells_to_their_threaded_peer() {
+        let b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        let mut run = matched_run();
+        run.push(reactor_cell(FetchMode::AfterMerge, 64.0));
+        assert!(gate(&run, &b, 0.25).is_empty(), "matching reactor cell passes");
+        // the reactor seam must not change the protocol's read cost
+        run.last_mut().unwrap().reads_per_query = 128.0;
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("mem/merge/2/reactor"), "{failures:?}");
+        assert!(failures[0].contains("serving seam"), "{failures:?}");
+        // a reactor cell with no threaded peer in the run fails
+        let orphan =
+            vec![cell("mem", FetchMode::Speculative, 2, 128.0, 900.0) /* no merge peer */, {
+                SmokeCell { serve: "reactor", ..cell("sim", FetchMode::AfterMerge, 2, 64.0, 500.0) }
+            }];
+        let failures = gate(&orphan, &baseline(&[("mem/spec/2", 128.0)]), 0.25);
+        assert!(failures.iter().any(|f| f.contains("threaded peer missing")), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_bounds_adaptive_reactor_cells_by_threaded_static_peers() {
+        let b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        let mut run = matched_run();
+        run.push(reactor_cell(FetchMode::Adaptive, 100.0));
+        assert!(gate(&run, &b, 0.25).is_empty(), "in-band adaptive reactor passes");
+        run.last_mut().unwrap().reads_per_query = 200.0; // above spec * 1.25
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("mem/adaptive/2/reactor"), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_flags_reactor_cells_pinned_but_not_measured() {
+        let mut b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        if let Json::Obj(fields) = &mut b {
+            fields.insert(
+                "reactor_cells".into(),
+                Json::Arr(vec![Json::Str("mem/merge/2/reactor".into())]),
+            );
+        }
+        let failures = gate(&matched_run(), &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("reactor_cells"), "{failures:?}");
+        let mut run = matched_run();
+        run.push(reactor_cell(FetchMode::AfterMerge, 64.0));
+        assert!(gate(&run, &b, 0.25).is_empty());
+    }
+
     #[test]
     fn gate_flags_tier_cells_pinned_but_not_measured() {
         let b = Json::obj(vec![
@@ -660,6 +807,7 @@ mod tests {
             Some(128.0)
         );
         assert_eq!(cells[2].get(&["fetch"]).and_then(|v| v.as_str()), Some("adaptive"));
+        assert_eq!(cells[0].get(&["serve"]).and_then(|v| v.as_str()), Some("threads"));
         assert_eq!(cells[3].get(&["tier"]).and_then(|v| v.as_str()), Some("dram2:clock"));
         assert_eq!(
             cells[3].get(&["device_reads_per_query"]).and_then(|v| v.as_f64()),
@@ -702,5 +850,19 @@ mod tests {
             assert!(got.contains(&w.as_str()), "baseline tier_cells missing {w}");
         }
         assert_eq!(got.len(), want.len(), "unexpected extra tier cells pinned");
+        // and the reactor scenario set: exactly what run_matrix runs
+        let reactor_keys =
+            doc.get(&["reactor_cells"]).and_then(|t| t.as_arr()).expect("reactor_cells");
+        let mut want = Vec::new();
+        for backend in ["mem", "sim"] {
+            for fetch in ["merge", "adaptive"] {
+                want.push(format!("{backend}/{fetch}/2/reactor"));
+            }
+        }
+        let got: Vec<&str> = reactor_keys.iter().filter_map(|k| k.as_str()).collect();
+        for w in &want {
+            assert!(got.contains(&w.as_str()), "baseline reactor_cells missing {w}");
+        }
+        assert_eq!(got.len(), want.len(), "unexpected extra reactor cells pinned");
     }
 }

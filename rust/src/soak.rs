@@ -46,7 +46,7 @@ use crate::coordinator::{
     ServingCorpus, SloConfig,
 };
 use crate::runtime::{default_artifacts_dir, SERVE};
-use crate::storage::BackendSpec;
+use crate::storage::{BackendSpec, TierControl, TierSpec};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::Samples;
@@ -77,6 +77,16 @@ pub struct SoakConfig {
     pub p50_us: f64,
     /// Arrival-process seed (phases fork deterministic substreams).
     pub seed: u64,
+    /// Per-worker storage backend (`--backend mem|model|sim[:shards=N]`):
+    /// the drill's device reads come from this spec, sized to each
+    /// worker's partition. Calibration runs on the same spec, so the
+    /// derived SLOs price the configured device, not DRAM.
+    pub backend: BackendSpec,
+    /// Optional DRAM tier in front of each worker's device (`--tier`).
+    /// When set, every worker's tier shares one [`TierControl`] that is
+    /// also handed to the overload ladder — the TightTier rung's budget
+    /// clamp then squeezes real tier capacity, end to end.
+    pub tier: Option<TierSpec>,
 }
 
 impl Default for SoakConfig {
@@ -90,6 +100,8 @@ impl Default for SoakConfig {
             p95_us: 0.0,
             p50_us: 0.0,
             seed: 0x50AC,
+            backend: BackendSpec::Mem,
+            tier: None,
         }
     }
 }
@@ -170,17 +182,29 @@ pub fn derive_slo(capacity_qps: f64, cfg: &SoakConfig) -> SloConfig {
 
 type RespRx = mpsc::Receiver<Result<QueryResult, String>>;
 
-fn start_workers(corpus: &Arc<ServingCorpus>, shards: usize) -> Result<Vec<Coordinator>> {
+/// One partition worker per shard on the configured backend. Each
+/// worker's device is sized to its slice; with a tier configured, every
+/// worker's tier carries `tier_ctrl` (the ladder's shared budget clamp)
+/// when one is given — calibration passes `None` so its tier runs at
+/// full budget.
+fn start_workers(
+    corpus: &Arc<ServingCorpus>,
+    cfg: &SoakConfig,
+    tier_ctrl: Option<&TierControl>,
+) -> Result<Vec<Coordinator>> {
     corpus
-        .partitions(shards)?
+        .partitions(cfg.shards)?
         .into_iter()
         .map(|part| {
-            Coordinator::start(
-                default_artifacts_dir(),
-                Arc::new(part),
-                BatchPolicy::default(),
-                BackendSpec::Mem,
-            )
+            let mut spec = cfg.backend.clone().for_capacity(part.n as u64);
+            if let Some(t) = &cfg.tier {
+                let mut t = t.clone();
+                if let Some(c) = tier_ctrl {
+                    t = t.with_control(c.clone());
+                }
+                spec = spec.tiered(t);
+            }
+            Coordinator::start(default_artifacts_dir(), Arc::new(part), BatchPolicy::default(), spec)
         })
         .collect()
 }
@@ -191,8 +215,9 @@ fn start_workers(corpus: &Arc<ServingCorpus>, shards: usize) -> Result<Vec<Coord
 /// measure ~1/batch of real capacity — every batch executes the full
 /// padded graph shape, so throughput comes from filling batches, not
 /// from single-query round-trips.
-fn calibrate(corpus: &Arc<ServingCorpus>, shards: usize) -> Result<f64> {
-    let router = Router::partitioned_with(start_workers(corpus, shards)?, FetchMode::AfterMerge)?;
+fn calibrate(corpus: &Arc<ServingCorpus>, cfg: &SoakConfig) -> Result<f64> {
+    let router =
+        Router::partitioned_with(start_workers(corpus, cfg, None)?, FetchMode::AfterMerge)?;
     let mut rng = Rng::new(0x50AC_CA1);
     let n = (8 * SERVE.batch).max(64);
     let start = Instant::now();
@@ -319,18 +344,21 @@ fn run_phase(
 /// left it).
 pub fn run_soak(cfg: &SoakConfig) -> Result<SoakRun> {
     let corpus = Arc::new(ServingCorpus::synthetic(cfg.shards, 0x50AC + cfg.shards as u64));
-    let capacity_qps = calibrate(&corpus, cfg.shards)?;
+    let capacity_qps = calibrate(&corpus, cfg)?;
     let slo = derive_slo(capacity_qps, cfg);
     let over_cfg = OverloadConfig {
         // small windows so the guardrails sample several times per phase
         window: 16,
         ..OverloadConfig::for_slo(slo)
     };
+    // With a tier configured, the ladder and every worker's tier share
+    // one budget clamp: the TightTier rung's squeeze hits real capacity.
+    let tier_ctrl = cfg.tier.as_ref().map(|_| TierControl::new());
     let router = Router::partitioned_overload(
-        start_workers(&corpus, cfg.shards)?,
+        start_workers(&corpus, cfg, tier_ctrl.as_ref())?,
         FetchMode::AfterMerge,
         over_cfg,
-        None,
+        tier_ctrl,
     )?;
     let ctrl = router.overload().ok_or_else(|| anyhow!("overload router lacks controller"))?;
     let ctrl = Arc::clone(ctrl);

@@ -47,17 +47,23 @@
 //!   bypass device submission entirely, so `device reads == tier misses`
 //!   exactly. Built by wrapping any spec via [`BackendSpec::tiered`]
 //!   (`--tier dram:mb=N,rule=breakeven|5min|5s|clock` on the CLIs).
-//!
-//! Future backends (io_uring against a real device) plug in at this
-//! trait; see ROADMAP.md.
+//! * [`UringBackend`] — the first *payload-carrying* backend: block reads
+//!   and writes against a real file (or block device), served by a
+//!   pread/pwrite worker thread by default and by a raw-syscall io_uring
+//!   ring under `--features uring`. Timing is measured wall time, so the
+//!   sim/model claims — and the break-even bar itself — can be checked
+//!   against actual hardware.
 
 pub mod mem;
 pub mod model;
 pub mod sharded;
 pub mod sim;
 pub mod tiered;
+pub mod uring;
 
 use std::ops::Range;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure, Result};
 
@@ -70,6 +76,7 @@ pub use model::ModelBackend;
 pub use sharded::{MapPolicy, ShardMap, ShardedBackend};
 pub use sim::{Pace, SimBackend};
 pub use tiered::{TierControl, TierRule, TierSpec, TierStats, TieredBackend, DEFAULT_TIER_RATE};
+pub use uring::UringBackend;
 
 /// Block-level operation kind.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -320,6 +327,85 @@ impl WindowTracker {
     }
 }
 
+/// Non-consuming measurement bus over [`DeviceWindow`] samples.
+///
+/// [`StorageBackend::take_window`] is consuming by design — two callers
+/// would halve each other's windows — which used to mean the adaptive
+/// fetch controller and the overload governor could not share a router
+/// (each needs its own view of the same device traffic). The bus fixes
+/// that wart: one producer (the serving worker, publishing its per-batch
+/// window) and any number of subscribers, each holding a
+/// [`WindowCursor`] that drains *its own* view of everything published
+/// since its last drain.
+///
+/// Internally the bus keeps only the running [`DeviceWindow::accumulate`]
+/// total plus one cursor position per subscriber (every field of a
+/// sequential window fold is additive), so memory is O(subscribers)
+/// regardless of publish rate, and a slow subscriber can never force the
+/// bus to buffer history.
+#[derive(Default)]
+pub struct WindowBus {
+    inner: Mutex<BusInner>,
+}
+
+#[derive(Default)]
+struct BusInner {
+    /// [`DeviceWindow::accumulate`] of every window published so far.
+    total: DeviceWindow,
+    /// Per-subscriber drain position: the running total at the last
+    /// [`WindowCursor::drain`] (or at subscription).
+    cursors: Vec<DeviceWindow>,
+}
+
+impl WindowBus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one produced window into the bus (sequential same-producer
+    /// semantics: spans add). Every live cursor will see it.
+    pub fn publish(&self, w: &DeviceWindow) {
+        self.inner.lock().unwrap().total.accumulate(w);
+    }
+
+    /// Register a new subscriber. The cursor starts at "now": it sees
+    /// only windows published after this call, not history.
+    pub fn subscribe(self: &Arc<Self>) -> WindowCursor {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.cursors.len();
+        let pos = inner.total;
+        inner.cursors.push(pos);
+        WindowCursor { bus: self.clone(), id }
+    }
+}
+
+/// One subscriber's position on a [`WindowBus`]. Draining returns the
+/// accumulated window since this cursor's previous drain and advances
+/// only this cursor — other subscribers are unaffected.
+pub struct WindowCursor {
+    bus: Arc<WindowBus>,
+    id: usize,
+}
+
+impl WindowCursor {
+    /// Everything published since this cursor's last drain, folded with
+    /// [`DeviceWindow::accumulate`] semantics. Empty window when nothing
+    /// new was published.
+    pub fn drain(&self) -> DeviceWindow {
+        let mut inner = self.bus.inner.lock().unwrap();
+        let total = inner.total;
+        let pos = inner.cursors[self.id];
+        inner.cursors[self.id] = total;
+        DeviceWindow {
+            reads: total.reads.saturating_sub(pos.reads),
+            writes: total.writes.saturating_sub(pos.writes),
+            stage2_reads: total.stage2_reads.saturating_sub(pos.stage2_reads),
+            read_ns_total: (total.read_ns_total - pos.read_ns_total).max(0.0),
+            span_ns: total.span_ns.saturating_sub(pos.span_ns),
+        }
+    }
+}
+
 /// The pluggable device interface: batched submit, non-blocking poll,
 /// barrier wait. Implementations are `Send` so a serving worker can own
 /// one on its thread.
@@ -402,6 +488,7 @@ pub enum BackendKind {
     Sim,
     Sharded,
     Tiered,
+    Uring,
 }
 
 impl BackendKind {
@@ -412,6 +499,7 @@ impl BackendKind {
             BackendKind::Sim => "sim",
             BackendKind::Sharded => "sharded",
             BackendKind::Tiered => "tiered",
+            BackendKind::Uring => "uring",
         }
     }
 }
@@ -451,18 +539,32 @@ pub enum BackendSpec {
         inner: Box<BackendSpec>,
         tier: TierSpec,
     },
+    /// Real-file backend ([`UringBackend`]): payload-carrying reads and
+    /// writes against `path` (a fresh unique tempfile per [`build`] when
+    /// `None`), `blocks × l_blk` bytes of sparse capacity. Served by the
+    /// portable pread worker thread by default, by raw-syscall io_uring
+    /// under `--features uring`.
+    ///
+    /// [`build`]: BackendSpec::build
+    Uring {
+        path: Option<PathBuf>,
+        blocks: u64,
+        l_blk: u32,
+    },
 }
 
 impl BackendSpec {
-    /// Parse a `--backend` CLI value — `mem` | `model` | `sim`, optionally
-    /// suffixed `:shards=N[,map=contig|interleave]` for a multi-device
-    /// fan-out (`sim:shards=4`, `sim:shards=4,map=interleave`) — with the
+    /// Parse a `--backend` CLI value — `mem` | `model` | `sim` |
+    /// `uring[:path=FILE]`, optionally suffixed
+    /// `:shards=N[,map=contig|interleave]` for a multi-device fan-out
+    /// (`sim:shards=4`, `sim:shards=4,map=interleave`) — with the
     /// paper-default Storage-Next SLC device. `l_blk` is the block size
     /// the caller serves (512 for KV buckets, 4096 for full ANN vectors).
     pub fn parse(name: &str, l_blk: u32) -> Result<Self> {
         let (base, opts) = crate::util::cli::split_spec(name);
         let mut shards: Option<usize> = None;
         let mut policy = MapPolicy::Contiguous;
+        let mut path: Option<PathBuf> = None;
         for (k, v) in &opts {
             match *k {
                 "shards" => {
@@ -473,8 +575,12 @@ impl BackendSpec {
                     shards = Some(n);
                 }
                 "map" => policy = MapPolicy::parse(v)?,
+                "path" => {
+                    ensure!(base == "uring", "path= is a uring backend option");
+                    path = Some(PathBuf::from(v));
+                }
                 other => {
-                    bail!("unknown backend option '{other}' (want shards=N, map=contig|interleave)")
+                    bail!("unknown backend option '{other}' (want shards=N, map=contig|interleave, path=FILE)")
                 }
             }
         }
@@ -500,8 +606,16 @@ impl BackendSpec {
                     pace: Pace::Afap,
                 }
             }
+            "uring" => {
+                ensure!(
+                    shards.is_none(),
+                    "uring backend does not compose with shards=N (its shards would \
+                     collide on one file); run one uring device per worker instead"
+                );
+                BackendSpec::Uring { path, blocks: DEFAULT_LBAS_PER_SHARD, l_blk }
+            }
             other => {
-                bail!("unknown storage backend '{other}' (want mem|model|sim[:shards=N])")
+                bail!("unknown storage backend '{other}' (want mem|model|sim[:shards=N]|uring[:path=FILE])")
             }
         };
         Ok(match shards {
@@ -544,6 +658,7 @@ impl BackendSpec {
             BackendSpec::Sim { .. } => BackendKind::Sim,
             BackendSpec::Sharded { .. } => BackendKind::Sharded,
             BackendSpec::Tiered { .. } => BackendKind::Tiered,
+            BackendSpec::Uring { .. } => BackendKind::Uring,
         }
     }
 
@@ -601,6 +716,9 @@ impl BackendSpec {
             BackendSpec::Tiered { inner, tier } => {
                 BackendSpec::Tiered { inner: Box::new((*inner).for_capacity(total_lbas)), tier }
             }
+            BackendSpec::Uring { path, l_blk, .. } => {
+                BackendSpec::Uring { path, blocks: total_lbas.max(1), l_blk }
+            }
             other => other,
         }
     }
@@ -625,6 +743,13 @@ impl BackendSpec {
             BackendSpec::Tiered { inner, tier } => {
                 Box::new(TieredBackend::new(inner.build(), tier))
             }
+            BackendSpec::Uring { path, blocks, l_blk } => Box::new(
+                match path {
+                    Some(p) => UringBackend::open(p.clone(), *blocks, *l_blk),
+                    None => UringBackend::open_temp(*blocks, *l_blk),
+                }
+                .expect("uring backend file open"),
+            ),
         }
     }
 }
@@ -849,6 +974,77 @@ mod tests {
         assert!((seq.occupancy() - 12_000.0 / 150.0).abs() < 1e-9);
         assert_eq!(DeviceWindow::default().mean_read_ns(), 0.0);
         assert_eq!(DeviceWindow::default().occupancy(), 0.0);
+    }
+
+    #[test]
+    fn window_bus_gives_every_subscriber_the_full_stream() {
+        let bus = Arc::new(WindowBus::new());
+        let a = bus.subscribe();
+        let b = bus.subscribe();
+        let w = DeviceWindow {
+            reads: 4,
+            writes: 1,
+            stage2_reads: 2,
+            read_ns_total: 4_000.0,
+            span_ns: 100,
+        };
+        bus.publish(&w);
+        bus.publish(&w);
+        // both cursors see the whole stream — publishing is not consumed
+        // by the first drain (the take_window wart this bus fixes)
+        let da = a.drain();
+        assert_eq!((da.reads, da.writes, da.stage2_reads), (8, 2, 4));
+        assert_eq!(da.span_ns, 200, "sequential publishes: spans add");
+        let db = b.drain();
+        assert_eq!(db.reads, 8, "second subscriber sees the same traffic");
+        // drains are per-cursor: a is now empty, b already drained too
+        assert_eq!(a.drain().reads, 0);
+        assert_eq!(b.drain().reads, 0);
+        // a publish after the drains reaches both again
+        bus.publish(&w);
+        assert_eq!(a.drain().reads, 4);
+        assert_eq!(b.drain().reads, 4);
+    }
+
+    #[test]
+    fn window_bus_late_subscriber_starts_at_now() {
+        let bus = Arc::new(WindowBus::new());
+        let w = DeviceWindow { reads: 3, read_ns_total: 300.0, span_ns: 30, ..Default::default() };
+        bus.publish(&w);
+        let late = bus.subscribe();
+        assert_eq!(late.drain().reads, 0, "no history replay");
+        bus.publish(&w);
+        let d = late.drain();
+        assert_eq!(d.reads, 3);
+        assert!((d.mean_read_ns() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uring_spec_parses_and_reports_kind() {
+        let spec = BackendSpec::parse("uring", 4096).unwrap();
+        assert_eq!(spec.kind(), BackendKind::Uring);
+        assert_eq!(spec.device_kind(), BackendKind::Uring);
+        match spec.for_capacity(1000) {
+            BackendSpec::Uring { path, blocks, l_blk } => {
+                assert!(path.is_none(), "default path is a fresh tempfile per build");
+                assert_eq!(blocks, 1000);
+                assert_eq!(l_blk, 4096);
+            }
+            other => panic!("expected uring spec, got {other:?}"),
+        }
+        match BackendSpec::parse("uring:path=/tmp/fivemin-dev.img", 512).unwrap() {
+            BackendSpec::Uring { path, .. } => {
+                assert_eq!(path.as_deref(), Some(std::path::Path::new("/tmp/fivemin-dev.img")));
+            }
+            other => panic!("expected uring spec, got {other:?}"),
+        }
+        // path= belongs to uring; shards would collide on one file
+        assert!(BackendSpec::parse("mem:path=/tmp/x", 512).is_err());
+        let err = BackendSpec::parse("uring:shards=2", 4096).unwrap_err().to_string();
+        assert!(err.contains("does not compose with shards"), "unhelpful: {err}");
+        // the unknown-backend error now names uring
+        let err = BackendSpec::parse("disk", 512).unwrap_err().to_string();
+        assert!(err.contains("uring"), "should advertise uring: {err}");
     }
 
     #[test]

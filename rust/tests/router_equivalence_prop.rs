@@ -28,7 +28,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use fivemin::coordinator::batcher::BatchPolicy;
-use fivemin::coordinator::{Coordinator, FetchMode, QueryResult, Router, ServingCorpus};
+use fivemin::coordinator::{
+    Coordinator, FetchMode, QueryResult, ReactorConfig, Router, ServingCorpus,
+};
 use fivemin::runtime::{default_artifacts_dir, SERVE};
 use fivemin::storage::{BackendSpec, TierRule, TierSpec};
 use fivemin::util::proptest::Prop;
@@ -50,6 +52,10 @@ struct Trial {
     tier_mb: u64,
     tier_rule: TierRule,
     tier_fetch: FetchMode,
+    /// Reactor-arm admission window. Small values force queries to queue
+    /// in the inbox behind the window — the equivalence claim must hold
+    /// under that pressure too.
+    admission: usize,
 }
 
 fn gen_trial(rng: &mut Rng) -> Trial {
@@ -75,6 +81,7 @@ fn gen_trial(rng: &mut Rng) -> Trial {
         tier_mb: [1u64, 4, 64][rng.below(3) as usize],
         tier_rule: [TierRule::Clock, TierRule::Breakeven][rng.below(2) as usize],
         tier_fetch: [FetchMode::Speculative, FetchMode::AfterMerge][rng.below(2) as usize],
+        admission: [1usize, 2, 4096][rng.below(3) as usize],
     }
 }
 
@@ -111,6 +118,7 @@ fn start_router(
     n_parts: usize,
     worker_spec: &BackendSpec,
     fetch: FetchMode,
+    reactor: Option<ReactorConfig>,
 ) -> Result<Router, String> {
     let workers = corpus
         .partitions(n_parts)
@@ -127,7 +135,11 @@ fn start_router(
         })
         .collect::<anyhow::Result<Vec<_>>>()
         .map_err(|e| e.to_string())?;
-    Router::partitioned_with(workers, fetch).map_err(|e| e.to_string())
+    match reactor {
+        Some(cfg) => Router::partitioned_reactor(workers, fetch, cfg),
+        None => Router::partitioned_with(workers, fetch),
+    }
+    .map_err(|e| e.to_string())
 }
 
 fn check_trial(t: &Trial) -> Result<(), String> {
@@ -150,66 +162,100 @@ fn check_trial(t: &Trial) -> Result<(), String> {
     };
 
     for fetch in [FetchMode::Speculative, FetchMode::AfterMerge, FetchMode::Adaptive] {
-        let router = start_router(&corpus, t.n_parts, &worker_spec, fetch)?;
-        let got = serve_all(|q| router.submit(q), &queries)?;
-        for (qi, (a, b)) in base.iter().zip(&got).enumerate() {
-            if a.ids != b.ids {
-                return Err(format!("{} ids differ on query {qi}", fetch.name()));
+        // Both serving seams must produce the same bits AND the same
+        // exact read accounting — the reactor arm additionally runs with
+        // the trial's (possibly tiny) admission window, so equivalence
+        // holds when queries queue in the inbox behind it.
+        for reactor in [None, Some(ReactorConfig { admission: t.admission, ..Default::default() })]
+        {
+            let seam = if reactor.is_some() { "reactor" } else { "threads" };
+            let router = start_router(&corpus, t.n_parts, &worker_spec, fetch, reactor)?;
+            if router.serve_mode() != seam {
+                return Err(format!("router reports seam {}, want {seam}", router.serve_mode()));
             }
-            if a.scores != b.scores {
-                return Err(format!("{} full scores differ on query {qi}", fetch.name()));
-            }
-            if a.reduced != b.reduced {
-                return Err(format!("{} reduced scores differ on query {qi}", fetch.name()));
-            }
-        }
-        // I/O accounting: speculative fetches k per query per partition,
-        // after-merge exactly k per query in total. The adaptive arm
-        // dispatches a measurement-dependent mix, so its total must land
-        // in the closed interval the static modes pin down — and the
-        // device-side counter must agree with the coordinator's exactly.
-        let st = router.settled_stats(SETTLE);
-        let merge_want = t.n_queries as u64 * k;
-        let spec_want = merge_want * t.n_parts as u64;
-        let snap = st.storage.as_ref().ok_or("missing storage snapshot")?;
-        match fetch {
-            FetchMode::Adaptive => {
-                if st.ssd_reads < merge_want || st.ssd_reads > spec_want {
+            let got = serve_all(|q| router.submit(q), &queries)?;
+            for (qi, (a, b)) in base.iter().zip(&got).enumerate() {
+                if a.ids != b.ids {
+                    return Err(format!("{}/{seam} ids differ on query {qi}", fetch.name()));
+                }
+                if a.scores != b.scores {
                     return Err(format!(
-                        "adaptive issued {} stage-2 reads, outside [{merge_want}, {spec_want}]",
-                        st.ssd_reads
+                        "{}/{seam} full scores differ on query {qi}",
+                        fetch.name()
                     ));
                 }
-                if snap.stats.stage2_reads != st.ssd_reads {
+                if a.reduced != b.reduced {
                     return Err(format!(
-                        "adaptive backend counted {} stage-2 reads, coordinator {}",
-                        snap.stats.stage2_reads, st.ssd_reads
+                        "{}/{seam} reduced scores differ on query {qi}",
+                        fetch.name()
                     ));
                 }
             }
-            _ => {
-                let want = if fetch == FetchMode::Speculative { spec_want } else { merge_want };
-                if st.ssd_reads != want {
+            if let Some(rep) = router.reactor_report() {
+                if rep.completed != t.n_queries as u64 {
                     return Err(format!(
-                        "{} issued {} stage-2 reads, want {want}",
-                        fetch.name(),
-                        st.ssd_reads
+                        "reactor completed {} of {} queries",
+                        rep.completed, t.n_queries
                     ));
                 }
-                if snap.stats.stage2_reads != want {
+                if rep.peak_pending > t.admission as u64 {
                     return Err(format!(
-                        "{} backend counted {} stage-2 reads, want {want}",
-                        fetch.name(),
-                        snap.stats.stage2_reads
+                        "reactor peak pending {} exceeded admission window {}",
+                        rep.peak_pending, t.admission
                     ));
                 }
             }
-        }
-        if fetch == FetchMode::AfterMerge {
-            let legs = st.reduce_legs;
-            let expect_legs = (t.n_queries * t.n_parts) as u64;
-            if legs != expect_legs {
-                return Err(format!("{legs} reduce legs, want {expect_legs}"));
+            // I/O accounting: speculative fetches k per query per
+            // partition, after-merge exactly k per query in total. The
+            // adaptive arm dispatches a measurement-dependent mix, so its
+            // total must land in the closed interval the static modes pin
+            // down — and the device-side counter must agree with the
+            // coordinator's exactly.
+            let st = router.settled_stats(SETTLE);
+            let merge_want = t.n_queries as u64 * k;
+            let spec_want = merge_want * t.n_parts as u64;
+            let snap = st.storage.as_ref().ok_or("missing storage snapshot")?;
+            match fetch {
+                FetchMode::Adaptive => {
+                    if st.ssd_reads < merge_want || st.ssd_reads > spec_want {
+                        return Err(format!(
+                            "adaptive/{seam} issued {} stage-2 reads, outside \
+                             [{merge_want}, {spec_want}]",
+                            st.ssd_reads
+                        ));
+                    }
+                    if snap.stats.stage2_reads != st.ssd_reads {
+                        return Err(format!(
+                            "adaptive/{seam} backend counted {} stage-2 reads, coordinator {}",
+                            snap.stats.stage2_reads, st.ssd_reads
+                        ));
+                    }
+                }
+                _ => {
+                    let want =
+                        if fetch == FetchMode::Speculative { spec_want } else { merge_want };
+                    if st.ssd_reads != want {
+                        return Err(format!(
+                            "{}/{seam} issued {} stage-2 reads, want {want}",
+                            fetch.name(),
+                            st.ssd_reads
+                        ));
+                    }
+                    if snap.stats.stage2_reads != want {
+                        return Err(format!(
+                            "{}/{seam} backend counted {} stage-2 reads, want {want}",
+                            fetch.name(),
+                            snap.stats.stage2_reads
+                        ));
+                    }
+                }
+            }
+            if fetch == FetchMode::AfterMerge {
+                let legs = st.reduce_legs;
+                let expect_legs = (t.n_queries * t.n_parts) as u64;
+                if legs != expect_legs {
+                    return Err(format!("{seam}: {legs} reduce legs, want {expect_legs}"));
+                }
             }
         }
     }
@@ -218,7 +264,7 @@ fn check_trial(t: &Trial) -> Result<(), String> {
     let tier = TierSpec { rate: 1_000.0, ..TierSpec::new(t.tier_mb, t.tier_rule, 4096) };
     let label = tier.label();
     let tiered_spec = worker_spec.clone().tiered(tier);
-    let router = start_router(&corpus, t.n_parts, &tiered_spec, t.tier_fetch)?;
+    let router = start_router(&corpus, t.n_parts, &tiered_spec, t.tier_fetch, None)?;
     let got = serve_all(|q| router.submit(q), &queries)?;
     for (qi, (a, b)) in base.iter().zip(&got).enumerate() {
         if a.ids != b.ids || a.scores != b.scores || a.reduced != b.reduced {
@@ -278,7 +324,7 @@ fn after_merge_cuts_sim_device_stage2_reads_nx() {
         let mut reads_by_mode = Vec::new();
         for fetch in [FetchMode::Speculative, FetchMode::AfterMerge] {
             let router =
-                start_router(&corpus, n, &BackendSpec::small_sim(4096), fetch).unwrap();
+                start_router(&corpus, n, &BackendSpec::small_sim(4096), fetch, None).unwrap();
             let got = serve_all(|q| router.submit(q), &queries).unwrap();
             for (a, b) in base.iter().zip(&got) {
                 assert_eq!(a.ids, b.ids, "{} N={n}: ids differ", fetch.name());
@@ -324,7 +370,7 @@ fn tiered_router_is_bit_identical_across_capacities() {
     for mb in [1u64, 4, 64] {
         for rule in [TierRule::Clock, TierRule::Breakeven, TierRule::FiveSec] {
             let spec = BackendSpec::Mem.tiered(TierSpec::new(mb, rule, 4096));
-            let router = start_router(&corpus, 2, &spec, FetchMode::Speculative).unwrap();
+            let router = start_router(&corpus, 2, &spec, FetchMode::Speculative, None).unwrap();
             let got = serve_all(|q| router.submit(q), &queries).unwrap();
             for (a, b) in base.iter().zip(&got) {
                 assert_eq!(a.ids, b.ids, "mb={mb} {}: ids differ", rule.name());

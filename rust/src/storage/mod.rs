@@ -61,6 +61,7 @@ pub mod sim;
 pub mod tiered;
 pub mod uring;
 
+use std::collections::HashMap;
 use std::ops::Range;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -339,10 +340,11 @@ impl WindowTracker {
 /// since its last drain.
 ///
 /// Internally the bus keeps only the running [`DeviceWindow::accumulate`]
-/// total plus one cursor position per subscriber (every field of a
-/// sequential window fold is additive), so memory is O(subscribers)
-/// regardless of publish rate, and a slow subscriber can never force the
-/// bus to buffer history.
+/// total plus one cursor position per *live* subscriber (every field of a
+/// sequential window fold is additive; a dropped cursor frees its slot),
+/// so memory is O(live subscribers) regardless of publish rate or
+/// subscriber churn, and a slow subscriber can never force the bus to
+/// buffer history.
 #[derive(Default)]
 pub struct WindowBus {
     inner: Mutex<BusInner>,
@@ -352,9 +354,14 @@ pub struct WindowBus {
 struct BusInner {
     /// [`DeviceWindow::accumulate`] of every window published so far.
     total: DeviceWindow,
+    /// Next subscriber id (never reused, so a drop can't free a slot a
+    /// later subscriber inherited).
+    next_id: u64,
     /// Per-subscriber drain position: the running total at the last
-    /// [`WindowCursor::drain`] (or at subscription).
-    cursors: Vec<DeviceWindow>,
+    /// [`WindowCursor::drain`] (or at subscription). Slots are freed by
+    /// [`WindowCursor`]'s `Drop`, so subscriber churn doesn't grow the
+    /// bus without bound.
+    cursors: HashMap<u64, DeviceWindow>,
 }
 
 impl WindowBus {
@@ -372,9 +379,10 @@ impl WindowBus {
     /// only windows published after this call, not history.
     pub fn subscribe(self: &Arc<Self>) -> WindowCursor {
         let mut inner = self.inner.lock().unwrap();
-        let id = inner.cursors.len();
+        let id = inner.next_id;
+        inner.next_id += 1;
         let pos = inner.total;
-        inner.cursors.push(pos);
+        inner.cursors.insert(id, pos);
         WindowCursor { bus: self.clone(), id }
     }
 }
@@ -384,7 +392,7 @@ impl WindowBus {
 /// only this cursor — other subscribers are unaffected.
 pub struct WindowCursor {
     bus: Arc<WindowBus>,
-    id: usize,
+    id: u64,
 }
 
 impl WindowCursor {
@@ -394,14 +402,26 @@ impl WindowCursor {
     pub fn drain(&self) -> DeviceWindow {
         let mut inner = self.bus.inner.lock().unwrap();
         let total = inner.total;
-        let pos = inner.cursors[self.id];
-        inner.cursors[self.id] = total;
+        let pos = inner
+            .cursors
+            .insert(self.id, total)
+            .expect("live cursor has a slot");
         DeviceWindow {
             reads: total.reads.saturating_sub(pos.reads),
             writes: total.writes.saturating_sub(pos.writes),
             stage2_reads: total.stage2_reads.saturating_sub(pos.stage2_reads),
             read_ns_total: (total.read_ns_total - pos.read_ns_total).max(0.0),
             span_ns: total.span_ns.saturating_sub(pos.span_ns),
+        }
+    }
+}
+
+impl Drop for WindowCursor {
+    fn drop(&mut self) {
+        // Free the slot so subscriber churn doesn't grow the bus. A
+        // poisoned mutex is ignored: never panic inside drop.
+        if let Ok(mut inner) = self.bus.inner.lock() {
+            inner.cursors.remove(&self.id);
         }
     }
 }
@@ -1017,6 +1037,25 @@ mod tests {
         let d = late.drain();
         assert_eq!(d.reads, 3);
         assert!((d.mean_read_ns() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_bus_reclaims_dropped_cursor_slots() {
+        let bus = Arc::new(WindowBus::new());
+        let keeper = bus.subscribe();
+        let w = DeviceWindow { reads: 2, span_ns: 10, ..Default::default() };
+        // churn transient subscribers: slots must be freed on drop, not
+        // accumulate one full DeviceWindow per subscribe ever made
+        for _ in 0..100 {
+            let transient = bus.subscribe();
+            bus.publish(&w);
+            assert_eq!(transient.drain().reads, 2);
+        }
+        assert_eq!(bus.inner.lock().unwrap().cursors.len(), 1, "only the keeper's slot remains");
+        // the survivor is unaffected by the churn
+        assert_eq!(keeper.drain().reads, 200);
+        drop(keeper);
+        assert!(bus.inner.lock().unwrap().cursors.is_empty());
     }
 
     #[test]

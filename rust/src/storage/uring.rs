@@ -286,15 +286,15 @@ enum Engine {
 
 impl Engine {
     fn start(file: File, l_blk: u32) -> Result<Self> {
+        // Ring setup failing (pre-5.6 kernel, seccomp) is a deployment
+        // property, not a bug: take the file back and fall through to
+        // pread. On success the engine owns the File, keeping the fd its
+        // SQEs target alive for the engine's lifetime.
         #[cfg(all(feature = "uring", target_os = "linux"))]
-        {
-            match ring::UringEngine::new(&file, l_blk) {
-                Ok(e) => return Ok(Engine::Uring(e)),
-                // Ring setup failing (pre-5.6 kernel, seccomp) is a
-                // deployment property, not a bug: fall through to pread.
-                Err(_) => {}
-            }
-        }
+        let file = match ring::UringEngine::new(file, l_blk) {
+            Ok(e) => return Ok(Engine::Uring(e)),
+            Err(file) => file,
+        };
         Ok(Engine::Pread(PreadEngine::start(file, l_blk)?))
     }
 
@@ -477,6 +477,9 @@ mod ring {
     const IORING_OP_READ: u8 = 22;
     const IORING_OP_WRITE: u8 = 23;
 
+    const EINTR: i32 = 4;
+    const EAGAIN: i32 = 11;
+
     const PROT_READ_WRITE: c_int = 0x3;
     const MAP_SHARED: c_int = 0x1;
 
@@ -611,6 +614,9 @@ mod ring {
 
     pub(super) struct UringEngine {
         ring_fd: c_int,
+        /// Owns the backing file so `file_fd` stays open (and is not
+        /// reused by a later `open`) while SQEs may still reference it.
+        _file: File,
         file_fd: c_int,
         _sq_map: Mmap,
         _cq_map: Mmap,
@@ -638,39 +644,36 @@ mod ring {
     unsafe impl Send for UringEngine {}
 
     impl UringEngine {
-        pub(super) fn new(file: &File, _l_blk: u32) -> Result<Self> {
+        /// Set up the ring, taking ownership of the backing file. On any
+        /// setup failure (old kernel, seccomp, mmap denial) the file is
+        /// handed back so the caller can fall back to the pread engine;
+        /// the reason is discarded — setup failure is a deployment
+        /// property, not a bug.
+        pub(super) fn new(file: File, _l_blk: u32) -> std::result::Result<Self, File> {
             let mut p = IoUringParams::default();
             // SAFETY: io_uring_setup reads the params struct we own.
             let fd = unsafe { syscall(SYS_IO_URING_SETUP, ENTRIES, &mut p as *mut IoUringParams) };
             if fd < 0 {
-                bail!("io_uring_setup: {}", Error::last_os_error());
+                return Err(file);
             }
             let fd = fd as c_int;
             let sq_len = p.sq_off.array as usize + p.sq_entries as usize * 4;
             let cq_len = p.cq_off.cqes as usize + p.cq_entries as usize * std::mem::size_of::<Cqe>();
-            let sq_map = match Mmap::new(fd, sq_len, IORING_OFF_SQ_RING) {
-                Ok(m) => m,
-                Err(e) => {
-                    // SAFETY: fd came from io_uring_setup above.
-                    unsafe { close(fd) };
-                    return Err(e);
-                }
+            let Ok(sq_map) = Mmap::new(fd, sq_len, IORING_OFF_SQ_RING) else {
+                // SAFETY: fd came from io_uring_setup above.
+                unsafe { close(fd) };
+                return Err(file);
             };
-            let cq_map = match Mmap::new(fd, cq_len, IORING_OFF_CQ_RING) {
-                Ok(m) => m,
-                Err(e) => {
-                    unsafe { close(fd) };
-                    return Err(e);
-                }
+            let Ok(cq_map) = Mmap::new(fd, cq_len, IORING_OFF_CQ_RING) else {
+                unsafe { close(fd) };
+                return Err(file);
             };
-            let sqe_map =
-                match Mmap::new(fd, p.sq_entries as usize * std::mem::size_of::<Sqe>(), IORING_OFF_SQES) {
-                    Ok(m) => m,
-                    Err(e) => {
-                        unsafe { close(fd) };
-                        return Err(e);
-                    }
-                };
+            let Ok(sqe_map) =
+                Mmap::new(fd, p.sq_entries as usize * std::mem::size_of::<Sqe>(), IORING_OFF_SQES)
+            else {
+                unsafe { close(fd) };
+                return Err(file);
+            };
             // SAFETY: ring_mask fields are plain u32 loads at
             // kernel-prescribed offsets into live mappings.
             let sq_mask = unsafe { *sq_map.at::<u32>(p.sq_off.ring_mask) };
@@ -678,6 +681,7 @@ mod ring {
             Ok(UringEngine {
                 ring_fd: fd,
                 file_fd: file.as_raw_fd(),
+                _file: file,
                 sq_head: sq_map.at::<AtomicU32>(p.sq_off.head),
                 sq_tail: sq_map.at::<AtomicU32>(p.sq_off.tail),
                 sq_mask,
@@ -743,27 +747,42 @@ mod ring {
             reaped
         }
 
+        /// `io_uring_enter`, retrying EINTR (signal while blocked) and
+        /// EAGAIN (transient kernel resource pressure). Any other errno
+        /// panics — this is a measurement harness with no partial-failure
+        /// story (see the module docs).
+        fn enter(&self, to_submit: u32, min_complete: u32, flags: c_uint) -> u32 {
+            loop {
+                // SAFETY: plain syscall on our ring fd; buffers referenced
+                // by submitted SQEs stay alive in `pending` until reaped.
+                let r = unsafe {
+                    syscall(
+                        SYS_IO_URING_ENTER,
+                        self.ring_fd,
+                        to_submit,
+                        min_complete,
+                        flags,
+                        std::ptr::null::<c_void>(),
+                        0usize,
+                    )
+                };
+                if r >= 0 {
+                    return r as u32;
+                }
+                let err = Error::last_os_error();
+                match err.raw_os_error() {
+                    Some(EINTR) | Some(EAGAIN) => continue,
+                    _ => panic!("io_uring_enter: {err}"),
+                }
+            }
+        }
+
         pub(super) fn flush(&mut self) {
             if self.unsubmitted == 0 {
                 return;
             }
-            // SAFETY: enter submits the SQEs published above; buffers
-            // stay alive in `pending` until their CQE is reaped.
-            let r = unsafe {
-                syscall(
-                    SYS_IO_URING_ENTER,
-                    self.ring_fd,
-                    self.unsubmitted,
-                    0 as c_uint,
-                    0 as c_uint,
-                    std::ptr::null::<c_void>(),
-                    0usize,
-                )
-            };
-            if r < 0 {
-                panic!("io_uring_enter(submit): {}", Error::last_os_error());
-            }
-            self.unsubmitted -= r as u32;
+            let n = self.enter(self.unsubmitted, 0, 0);
+            self.unsubmitted -= n;
         }
 
         fn reap(&mut self) -> Vec<Done> {
@@ -827,30 +846,57 @@ mod ring {
                     return None;
                 }
                 self.flush();
-                // SAFETY: GETEVENTS blocks until >=1 completion.
-                let r = unsafe {
-                    syscall(
-                        SYS_IO_URING_ENTER,
-                        self.ring_fd,
-                        0 as c_uint,
-                        1 as c_uint,
-                        IORING_ENTER_GETEVENTS,
-                        std::ptr::null::<c_void>(),
-                        0usize,
-                    )
-                };
-                if r < 0 {
-                    panic!("io_uring_enter(wait): {}", Error::last_os_error());
-                }
+                // GETEVENTS blocks until >=1 completion.
+                self.enter(0, 1, IORING_ENTER_GETEVENTS);
             }
         }
     }
 
     impl Drop for UringEngine {
         fn drop(&mut self) {
-            // SAFETY: closing the ring fd cancels/completes outstanding
-            // SQEs before the mmaps (dropped after this) go away; the
-            // data fd belongs to the backend's File, not us.
+            // Closing an io_uring fd does NOT synchronously cancel
+            // in-flight SQEs on modern kernels — the kernel can keep
+            // DMA-ing into their buffers after close(2) returns. Reap
+            // until nothing is pending (ignoring per-request errors)
+            // before the buffers in `pending` are freed. Panicking is off
+            // the table in drop, so if the ring is wedged the buffers are
+            // leaked rather than handed back to the allocator while the
+            // kernel may still write them.
+            while !self.pending.is_empty() {
+                self.reap();
+                if self.pending.is_empty() {
+                    break;
+                }
+                // SAFETY: same enter as the helper; also submits any
+                // queued-but-unsubmitted SQEs so their CQEs can arrive.
+                let r = unsafe {
+                    syscall(
+                        SYS_IO_URING_ENTER,
+                        self.ring_fd,
+                        self.unsubmitted,
+                        1 as c_uint,
+                        IORING_ENTER_GETEVENTS,
+                        std::ptr::null::<c_void>(),
+                        0usize,
+                    )
+                };
+                if r >= 0 {
+                    self.unsubmitted = self.unsubmitted.saturating_sub(r as u32);
+                    continue;
+                }
+                match Error::last_os_error().raw_os_error() {
+                    Some(EINTR) | Some(EAGAIN) => continue,
+                    _ => {
+                        for (_, p) in self.pending.drain() {
+                            std::mem::forget(p.buf);
+                        }
+                        break;
+                    }
+                }
+            }
+            // SAFETY: nothing is pending (or its buffers were leaked);
+            // the mmaps are dropped after this, and the data fd belongs
+            // to `_file`, not us.
             unsafe {
                 close(self.ring_fd);
             }

@@ -44,15 +44,19 @@ smoke: bench-smoke
 # UringBackend against a real tempfile, end to end: the uring arms of the
 # storage unit suite and the backend-equivalence suite (identical
 # completions vs mem, payload bytes round-tripped through the file), then
-# a short reactor-seam serve run on a uring device. Built with
-# --features uring so the raw io_uring ring engine is exercised on Linux;
-# on other hosts the same commands run through the pread-thread engine
-# with identical results.
+# short reactor-seam serve runs on a uring device — after-merge (fetch
+# legs through the async submit/sweep path) and speculative (full-search
+# stage-2 bursts through the same path, no thread ever parked on the
+# ring). Built with --features uring so the raw io_uring ring engine is
+# exercised on Linux; on other hosts the same commands run through the
+# pread-thread engine with identical results.
 uring-smoke:
 	cargo test --release --features uring -q --lib storage::uring
 	cargo test --release --features uring -q --test backend_equivalence
 	cargo run --release --features uring -- serve --backend uring \
 		--serve reactor --queries 128
+	cargo run --release --features uring -- serve --backend uring \
+		--serve reactor --fetch spec --queries 128
 
 # Overload drill + ladder-behavior gate (mirrors the soak-drill CI job):
 # self-calibrated ramp/burst/sustained-2x/recovery load against the

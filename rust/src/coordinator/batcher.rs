@@ -70,6 +70,32 @@ pub fn collect_batch<T, R>(
     policy: &BatchPolicy,
 ) -> Option<Vec<Job<T, R>>> {
     let first = rx.recv().ok()?;
+    Some(fill_batch(first, rx, policy))
+}
+
+/// [`collect_batch`] with a bounded wait for the *first* job: the async
+/// worker's variant, used while storage completions are in flight — the
+/// loop must come back to sweep `poll()` even if no new work arrives.
+/// Returns `Some(vec![])` when `first_wait` expires with nothing queued;
+/// `None` still means "channel closed and empty" (shutdown), and once a
+/// first job lands the fill phases are identical to [`collect_batch`].
+pub fn collect_batch_timeout<T, R>(
+    rx: &mpsc::Receiver<Job<T, R>>,
+    policy: &BatchPolicy,
+    first_wait: Duration,
+) -> Option<Vec<Job<T, R>>> {
+    match rx.recv_timeout(first_wait) {
+        Ok(first) => Some(fill_batch(first, rx, policy)),
+        Err(mpsc::RecvTimeoutError::Timeout) => Some(Vec::new()),
+        Err(mpsc::RecvTimeoutError::Disconnected) => None,
+    }
+}
+
+fn fill_batch<T, R>(
+    first: Job<T, R>,
+    rx: &mpsc::Receiver<Job<T, R>>,
+    policy: &BatchPolicy,
+) -> Vec<Job<T, R>> {
     let deadline = first.enqueued + policy.max_wait;
     let mut batch = vec![first];
     // Greedily drain the backlog first: under load, jobs queued while the
@@ -94,7 +120,7 @@ pub fn collect_batch<T, R>(
             Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
     }
-    Some(batch)
+    batch
 }
 
 #[cfg(test)]
@@ -160,5 +186,34 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Job<u32, u32>>();
         drop(tx);
         assert!(collect_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn timeout_variant_returns_empty_batch_when_idle() {
+        let (tx, rx) = mpsc::channel::<Job<u32, u32>>();
+        let t0 = Instant::now();
+        let batch =
+            collect_batch_timeout(&rx, &BatchPolicy::default(), Duration::from_millis(5)).unwrap();
+        assert!(batch.is_empty(), "no work arrived: empty batch, not a block");
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        drop(tx);
+    }
+
+    #[test]
+    fn timeout_variant_fills_like_the_blocking_path() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..6 {
+            let (j, _r) = job(i);
+            tx.send(j).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(1) };
+        let batch = collect_batch_timeout(&rx, &policy, Duration::from_millis(5)).unwrap();
+        assert_eq!(batch.len(), 4, "backlog drains up to max_batch");
+        assert_eq!(batch[0].payload, 0);
+        // shutdown signal is unchanged: closed AND empty → None
+        let rest = collect_batch_timeout(&rx, &policy, Duration::from_millis(5)).unwrap();
+        assert_eq!(rest.len(), 2);
+        drop(tx);
+        assert!(collect_batch_timeout(&rx, &policy, Duration::from_millis(5)).is_none());
     }
 }

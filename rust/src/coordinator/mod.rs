@@ -40,7 +40,10 @@
 //!
 //! The stage-2 fetch is the paper's "SSD read of promoted candidates":
 //! each promoted global id is submitted to the owning worker's backend as
-//! a block read, and the batch stalls for the burst to complete. With
+//! a block read. The worker does *not* park on the burst — it records a
+//! pending group and keeps batching other legs, sweeping `poll()` each
+//! loop pass and running the deferred re-rank when the group's last read
+//! lands (the worker loop's submit/completion split). With
 //! [`BackendSpec::Mem`] that stall is DRAM-class (the pre-storage-layer
 //! behavior); with `Model`/`Sim` the reported stall and per-read
 //! latencies come from the analytic device model or MQSim-Next, while
@@ -103,7 +106,7 @@ use crate::storage::{
     WindowCursor,
 };
 use crate::util::stats::LatencyHist;
-use batcher::{collect_batch, BatchPolicy, Job};
+use batcher::{collect_batch, collect_batch_timeout, BatchPolicy, Job};
 pub use adaptive::{AdaptiveConfig, AdaptiveController, AdaptiveReport};
 pub use corpus::ServingCorpus;
 pub use overload::{
@@ -381,11 +384,25 @@ fn worker_loop(
                 .expect("shard tensor")
         })
         .collect();
-    while let Some(batch) = collect_batch(rx, policy) {
+    // Stage-2 bursts in flight on this worker's device. While any are
+    // pending, the loop waits for new jobs with a bounded timeout instead
+    // of parking indefinitely, sweeping `store.poll()` each pass — so
+    // searches and reduces keep flowing while device reads complete in
+    // the background, and no thread ever blocks on a read.
+    let mut pending: Vec<PendingGroup> = Vec::new();
+    loop {
+        let batch = if pending.is_empty() {
+            collect_batch(rx, policy)
+        } else {
+            collect_batch_timeout(rx, policy, SWEEP_PARK)
+        };
+        let Some(batch) = batch else { break };
         // Split by leg kind: each kind runs as its own padded graph batch.
-        // Fetch legs go first (they complete two-phase queries already in
-        // flight), then full searches, then reduce legs (which *start*
-        // two-phase queries).
+        // Fetch legs submit first (they complete two-phase queries already
+        // in flight), then full searches — both only *issue* their stage-2
+        // bursts here. Reduce legs (which *start* two-phase queries) run
+        // to completion inline: no device traffic, so they answer while
+        // the bursts above are still in flight.
         let mut searches = Vec::new();
         let mut reduces = Vec::new();
         let mut fetches = Vec::new();
@@ -399,32 +416,173 @@ fn worker_loop(
                 }
             }
         }
-        let touched_store = !fetches.is_empty() || !searches.is_empty();
+        let submitted = !fetches.is_empty() || !searches.is_empty();
         if !fetches.is_empty() {
-            run_fetch_group(rt, corpus, store, fetches, stats);
+            submit_fetch_group(corpus, store, fetches, &mut pending);
         }
         if !searches.is_empty() {
-            run_search_group(rt, corpus, store, &shard_tensors, searches, stats);
+            submit_search_group(rt, corpus, store, &shard_tensors, searches, &mut pending);
         }
         if !reduces.is_empty() {
             run_reduce_group(rt, corpus, &shard_tensors, reduces, stats);
         }
-        // Snapshot after answering: for the sim backend this does
-        // blocking round-trips to the device thread, which must not
-        // sit between requests and their responses. Reduce-only batches
-        // issued no I/O — skip the round-trip on the phase-1 hot path.
-        if touched_store {
+        let finished = sweep_completions(rt, corpus, store, &mut pending, stats);
+        // Snapshot whenever device state changed: after a submit the
+        // burst is observably in flight (`BackendStats::inflight`), and
+        // after a finish the counters cover the completions just charged
+        // to ServeStats — which is what `settled_stats` reconciles
+        // against. Reduce-only idle passes skip the capture. The batch's
+        // device window rides the measurement bus; every subscriber
+        // (adaptive controller, overload monitor) drains its own view.
+        if submitted || finished {
             let snapshot = StorageSnapshot::capture(store);
-            // Publish this batch's device window onto the measurement
-            // bus every subscriber (adaptive controller, overload
-            // monitor) drains its own view of (reduce-only batches
-            // issued no I/O, so an empty fold is skipped along with the
-            // snapshot). Differencing the snapshot's cumulative stats
-            // avoids a second backend stats round-trip per batch — same
-            // numbers `store.take_window()` would return.
             let w = win_track.take(&snapshot.stats);
             stats.lock().unwrap().storage = Some(snapshot);
             bus.publish(&w);
+        }
+    }
+    // Channel closed with bursts still in flight: drain them so every
+    // accepted leg is answered before the backend drops.
+    while !pending.is_empty() {
+        if sweep_completions(rt, corpus, store, &mut pending, stats) {
+            let snapshot = StorageSnapshot::capture(store);
+            let w = win_track.take(&snapshot.stats);
+            stats.lock().unwrap().storage = Some(snapshot);
+            bus.publish(&w);
+        } else {
+            std::thread::sleep(SWEEP_PARK);
+        }
+    }
+}
+
+/// How long the async worker waits for new jobs between completion
+/// sweeps while a stage-2 burst is in flight. Short enough that a
+/// completed burst is re-ranked and answered promptly; long enough that
+/// the wait parks the thread instead of spinning.
+const SWEEP_PARK: Duration = Duration::from_micros(50);
+
+/// One stage-2 burst in flight on this worker's device: the
+/// completion-id range `submit()` assigned, how many reads are still
+/// out, the running stall (max per-read device time — exactly the
+/// "slowest read in the burst" the blocking path reported), and the
+/// deferred completion half that runs when the last read lands.
+struct PendingGroup {
+    ids: Range<u64>,
+    remaining: usize,
+    stall_ns: u64,
+    work: PendingWork,
+}
+
+enum PendingWork {
+    /// A search group past stage 1: finish = stage-2 re-rank + answer.
+    Search {
+        jobs: Vec<Job<Vec<f32>, Resp>>,
+        /// Per-query global promote sets from stage 1 (reduced score,
+        /// global id), promotion-ordered.
+        merged: Vec<Vec<(f32, u32)>>,
+        t1: Duration,
+        t2_start: Instant,
+    },
+    /// A phase-2 fetch-leg group: finish = full-score + slot inversion
+    /// + answer.
+    Fetch {
+        jobs: Vec<Job<(Vec<f32>, Vec<u32>), Resp>>,
+        t2_start: Instant,
+    },
+}
+
+/// Drain every completion the backend has ready, credit it to its
+/// pending burst, and run the completion half of any group whose last
+/// read landed. Returns whether any group finished (the caller
+/// re-snapshots storage then).
+fn sweep_completions(
+    rt: &mut Runtime,
+    corpus: &ServingCorpus,
+    store: &mut dyn StorageBackend,
+    pending: &mut Vec<PendingGroup>,
+    stats: &Arc<Mutex<ServeStats>>,
+) -> bool {
+    if !pending.is_empty() {
+        for c in store.poll() {
+            if let Some(g) = pending.iter_mut().find(|g| g.ids.contains(&c.id)) {
+                g.remaining = g.remaining.saturating_sub(1);
+                g.stall_ns = g.stall_ns.max(c.device_ns);
+            }
+        }
+    }
+    let mut finished = false;
+    let mut i = 0;
+    while i < pending.len() {
+        if pending[i].remaining == 0 {
+            let group = pending.remove(i);
+            finish_group(rt, corpus, group, stats);
+            finished = true;
+        } else {
+            i += 1;
+        }
+    }
+    finished
+}
+
+/// Completion-half dispatcher: the burst's last read landed — run the
+/// deferred re-rank and answer the group, charging `ssd_reads`, the
+/// burst stall, and the stage-2 wall time (submit → last completion →
+/// re-rank, the same span the blocking path measured) exactly as before.
+fn finish_group(
+    rt: &mut Runtime,
+    corpus: &ServingCorpus,
+    group: PendingGroup,
+    stats: &Arc<Mutex<ServeStats>>,
+) {
+    let PendingGroup { ids, stall_ns, work, .. } = group;
+    let reads = ids.end - ids.start;
+    match work {
+        PendingWork::Search { jobs, merged, t1, t2_start } => {
+            let queries: Vec<&[f32]> = jobs.iter().map(|j| j.payload.as_slice()).collect();
+            match finish_search_batch(rt, corpus, &queries, &merged) {
+                Ok(results) => {
+                    let t2 = t2_start.elapsed();
+                    answer_group(
+                        jobs,
+                        results,
+                        stats,
+                        |st| {
+                            st.stage1_ns.push(t1.as_nanos() as f64);
+                            st.stage2_ns.push(t2.as_nanos() as f64);
+                            st.ssd_reads += reads;
+                            st.storage_stall_ns.push(stall_ns as f64);
+                        },
+                        |st, res| {
+                            st.queries += 1;
+                            st.latency_ns.push(res.latency.as_nanos() as f64);
+                        },
+                    )
+                }
+                Err(e) => fail_group(jobs, e),
+            }
+        }
+        PendingWork::Fetch { jobs, t2_start } => {
+            let legs: Vec<(&[f32], &[u32])> = jobs
+                .iter()
+                .map(|j| (j.payload.0.as_slice(), j.payload.1.as_slice()))
+                .collect();
+            match finish_fetch_batch(rt, corpus, &legs) {
+                Ok(results) => {
+                    let t2 = t2_start.elapsed();
+                    answer_group(
+                        jobs,
+                        results,
+                        stats,
+                        |st| {
+                            st.stage2_ns.push(t2.as_nanos() as f64);
+                            st.ssd_reads += reads;
+                            st.storage_stall_ns.push(stall_ns as f64);
+                        },
+                        |st, _| st.fetch_legs += 1,
+                    )
+                }
+                Err(e) => fail_group(jobs, e),
+            }
         }
     }
 }
@@ -462,32 +620,53 @@ fn fail_group<P>(jobs: Vec<Job<P, Resp>>, e: anyhow::Error) {
     }
 }
 
-/// Full two-stage search legs: execute, record, answer.
-fn run_search_group(
+/// Submit half of a full two-stage search group: stage-1 scan + global
+/// promotion, then *issue* the stage-2 burst — no waiting. The matching
+/// completion half is [`finish_search_batch`], run from
+/// [`sweep_completions`] when the burst's last read lands. A stage-1 or
+/// validation error fails the group before any device read is charged.
+fn submit_search_group(
     rt: &mut Runtime,
     corpus: &ServingCorpus,
     store: &mut dyn StorageBackend,
     shard_tensors: &[Tensor],
     jobs: Vec<Job<Vec<f32>, Resp>>,
-    stats: &Arc<Mutex<ServeStats>>,
+    pending: &mut Vec<PendingGroup>,
 ) {
     let queries: Vec<&[f32]> = jobs.iter().map(|j| j.payload.as_slice()).collect();
-    match run_two_stage_batch(rt, corpus, store, shard_tensors, &queries) {
-        Ok((results, t1, t2, stall_ns, reads)) => answer_group(
-            jobs,
-            results,
-            stats,
-            |st| {
-                st.stage1_ns.push(t1.as_nanos() as f64);
-                st.stage2_ns.push(t2.as_nanos() as f64);
-                st.ssd_reads += reads;
-                st.storage_stall_ns.push(stall_ns as f64);
-            },
-            |st, res| {
-                st.queries += 1;
-                st.latency_ns.push(res.latency.as_nanos() as f64);
-            },
-        ),
+    let staged = (|| -> Result<(Vec<Vec<(f32, u32)>>, Duration, Range<u64>, Instant)> {
+        let n_real = queries.len();
+        let q_red = pad_reduced(&queries)?;
+
+        // ---- stage 1: scan every DRAM shard, keep global top-k ------------
+        let t1_start = Instant::now();
+        let merged = stage1_promote(rt, corpus, shard_tensors, &q_red)?;
+        let t1 = t1_start.elapsed();
+
+        // ---- issue the storage fetch of promoted candidates ---------------
+        let t2_start = Instant::now();
+        // Only the n_real live queries fetch; padding rows reuse the last
+        // real query's promotions in the gather (their scores are
+        // discarded) without charging extra device reads. Addresses are
+        // device-local: each partition worker's device holds exactly its
+        // slice.
+        let reqs: Vec<storage::IoRequest> = merged[..n_real]
+            .iter()
+            .flat_map(|m| {
+                m.iter()
+                    .map(|&(_, id)| storage::IoRequest::stage2_read(corpus.local_lba(id as usize)))
+            })
+            .collect();
+        let ids = store.submit(&reqs);
+        Ok((merged, t1, ids, t2_start))
+    })();
+    match staged {
+        Ok((merged, t1, ids, t2_start)) => pending.push(PendingGroup {
+            remaining: (ids.end - ids.start) as usize,
+            ids,
+            stall_ns: 0,
+            work: PendingWork::Search { jobs, merged, t1, t2_start },
+        }),
         Err(e) => fail_group(jobs, e),
     }
 }
@@ -513,30 +692,56 @@ fn run_reduce_group(
     }
 }
 
-/// Phase-2 fetch legs: device fetch + full-score of owned candidates.
-fn run_fetch_group(
-    rt: &mut Runtime,
+/// Submit half of a phase-2 fetch-leg group: validate every leg, then
+/// *issue* the device burst for the owned candidates — no waiting. The
+/// matching completion half is [`finish_fetch_batch`], run from
+/// [`sweep_completions`]. A malformed leg fails the whole group before
+/// any device read is charged (same contract as the blocking path).
+fn submit_fetch_group(
     corpus: &ServingCorpus,
     store: &mut dyn StorageBackend,
     jobs: Vec<Job<(Vec<f32>, Vec<u32>), Resp>>,
-    stats: &Arc<Mutex<ServeStats>>,
+    pending: &mut Vec<PendingGroup>,
 ) {
-    let legs: Vec<(&[f32], &[u32])> = jobs
-        .iter()
-        .map(|j| (j.payload.0.as_slice(), j.payload.1.as_slice()))
-        .collect();
-    match run_fetch_batch(rt, corpus, store, &legs) {
-        Ok((results, t2, stall_ns, reads)) => answer_group(
-            jobs,
-            results,
-            stats,
-            |st| {
-                st.stage2_ns.push(t2.as_nanos() as f64);
-                st.ssd_reads += reads;
-                st.storage_stall_ns.push(stall_ns as f64);
-            },
-            |st, _| st.fetch_legs += 1,
-        ),
+    let fd = SERVE.full_dim;
+    let k = SERVE.topk;
+    let staged = (|| -> Result<(Range<u64>, Instant)> {
+        for job in &jobs {
+            let (q, ids) = (&job.payload.0, &job.payload.1);
+            anyhow::ensure!(q.len() == fd, "query must be FULL_DIM={fd}, got {}", q.len());
+            anyhow::ensure!(
+                !ids.is_empty() && ids.len() <= k,
+                "fetch leg wants 1..={k} candidates, got {}",
+                ids.len()
+            );
+            for &id in ids.iter() {
+                anyhow::ensure!(
+                    corpus.owns(id as usize),
+                    "candidate {id} is not owned by this partition [{}, {})",
+                    corpus.base,
+                    corpus.base + corpus.n
+                );
+            }
+        }
+        let t2_start = Instant::now();
+        let reqs: Vec<storage::IoRequest> = jobs
+            .iter()
+            .flat_map(|j| {
+                j.payload
+                    .1
+                    .iter()
+                    .map(|&id| storage::IoRequest::stage2_read(corpus.local_lba(id as usize)))
+            })
+            .collect();
+        Ok((store.submit(&reqs), t2_start))
+    })();
+    match staged {
+        Ok((ids, t2_start)) => pending.push(PendingGroup {
+            remaining: (ids.end - ids.start) as usize,
+            ids,
+            stall_ns: 0,
+            work: PendingWork::Fetch { jobs, t2_start },
+        }),
         Err(e) => fail_group(jobs, e),
     }
 }
@@ -549,21 +754,6 @@ fn run_fetch_group(
 /// NaN score can no longer panic a worker or the merge thread.
 fn promote_cmp(a: &(f32, u32), b: &(f32, u32)) -> std::cmp::Ordering {
     b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
-}
-
-/// Pad a group's queries to the fixed batch shape by repeating the last
-/// real query, validating the full dimension. Returns the padded
-/// `[b, reduced_dim]` and `[b, full_dim]` row-major buffers.
-fn pad_queries(queries: &[&[f32]]) -> Result<(Vec<f32>, Vec<f32>)> {
-    let b = SERVE.batch;
-    let fd = SERVE.full_dim;
-    let n_real = queries.len();
-    let q_red = pad_reduced(queries)?;
-    let mut q_full = vec![0f32; b * fd];
-    for i in 0..b {
-        q_full[i * fd..(i + 1) * fd].copy_from_slice(queries[i.min(n_real - 1)]);
-    }
-    Ok((q_red, q_full))
 }
 
 /// Pad only the reduced-dim prefix rows — all a phase-1 reduce leg needs
@@ -616,45 +806,28 @@ fn stage1_promote(
     Ok(merged)
 }
 
-/// Execute one padded batch through the graphs:
-/// stage 1 per shard (reduced_score) → merge → storage fetch of promoted
-/// full vectors → stage 2 (full_score) → per-query top-k.
-///
-/// Returns the per-query results, the two stage wall times, the storage
-/// stall (device time of the slowest read in the fetch burst), and the
-/// stage-2 device reads issued.
-fn run_two_stage_batch(
+/// Completion half of a search group (the burst's reads have all
+/// landed): gather the promoted full vectors from the corpus, run
+/// stage 2 (full_score), and build the per-query top-k. The candidate
+/// payloads come from [`ServingCorpus::full_vector`] — the storage layer
+/// is a timing/accounting plane — so the results are bit-identical to
+/// the old blocking path by construction.
+fn finish_search_batch(
     rt: &mut Runtime,
     corpus: &ServingCorpus,
-    store: &mut dyn StorageBackend,
-    shard_tensors: &[Tensor],
     queries: &[&[f32]],
-) -> Result<(Vec<QueryResult>, Duration, Duration, u64, u64)> {
+    merged: &[Vec<(f32, u32)>],
+) -> Result<Vec<QueryResult>> {
     let b = SERVE.batch;
     let fd = SERVE.full_dim;
     let k = SERVE.topk;
     let n_real = queries.len();
-    let (q_red, q_full) = pad_queries(queries)?;
-
-    // ---- stage 1: scan every DRAM shard, keep global top-k ---------------
-    let t1_start = Instant::now();
-    let merged = stage1_promote(rt, corpus, shard_tensors, &q_red)?;
-    let t1 = t1_start.elapsed();
-
-    // ---- storage fetch of promoted candidates + stage 2 ------------------
-    let t2_start = Instant::now();
-    // Only the n_real live queries fetch; padding rows reuse the last real
-    // query's promotions in the gather below (their scores are discarded)
-    // without charging extra device reads. Addresses are device-local:
-    // each partition worker's device holds exactly its slice.
-    let lbas: Vec<u64> = merged[..n_real]
-        .iter()
-        .flat_map(|m| m.iter().map(|&(_, id)| corpus.local_lba(id as usize)))
-        .collect();
-    let fetched = storage::fetch_stage2(store, &lbas);
-    let stall_ns = fetched.iter().map(|c| c.device_ns).max().unwrap_or(0);
-    let reads = lbas.len() as u64;
-
+    // Pad to the fixed batch shape by repeating the last real query
+    // (dimensions were validated on the submit half).
+    let mut q_full = vec![0f32; b * fd];
+    for i in 0..b {
+        q_full[i * fd..(i + 1) * fd].copy_from_slice(queries[i.min(n_real - 1)]);
+    }
     let mut cand = vec![0f32; b * k * fd];
     for qi in 0..b {
         let src_q = qi.min(n_real - 1);
@@ -668,7 +841,6 @@ fn run_two_stage_batch(
     let out = rt.execute("full_score", &[&q_full_t, &cand_t])?;
     let scores = Runtime::to_vec_f32(&out[0])?;
     let order = Runtime::to_vec_i32(&out[1])?;
-    let t2 = t2_start.elapsed();
 
     let mut results = Vec::with_capacity(n_real);
     for qi in 0..n_real {
@@ -688,7 +860,7 @@ fn run_two_stage_batch(
             batch_size: 0,
         });
     }
-    Ok((results, t1, t2, stall_ns, reads))
+    Ok(results)
 }
 
 /// Phase 1 of fetch-after-merge for one padded batch: stage-1 scan and
@@ -718,46 +890,21 @@ fn run_reduce_batch(
     Ok((results, t1))
 }
 
-/// Phase 2 of fetch-after-merge for one padded batch: read each leg's
-/// owned candidates from this worker's device (one burst for the whole
-/// group) and full-score them. Rows pad to the graph's fixed `[b, k]`
-/// candidate shape by repeating the leg's last candidate; padding slots
-/// are score-only copies, discarded and never charged as device reads.
-fn run_fetch_batch(
+/// Completion half of a fetch-after-merge phase-2 group (the burst's
+/// reads have all landed): full-score each leg's owned candidates. Rows
+/// pad to the graph's fixed `[b, k]` candidate shape by repeating the
+/// leg's last candidate; padding slots are score-only copies, discarded
+/// and never charged as device reads. Legs were validated on the submit
+/// half ([`submit_fetch_group`]).
+fn finish_fetch_batch(
     rt: &mut Runtime,
     corpus: &ServingCorpus,
-    store: &mut dyn StorageBackend,
     legs: &[(&[f32], &[u32])],
-) -> Result<(Vec<QueryResult>, Duration, u64, u64)> {
+) -> Result<Vec<QueryResult>> {
     let b = SERVE.batch;
     let fd = SERVE.full_dim;
     let k = SERVE.topk;
     let n_real = legs.len();
-    for (q, ids) in legs {
-        anyhow::ensure!(q.len() == fd, "query must be FULL_DIM={fd}, got {}", q.len());
-        anyhow::ensure!(
-            !ids.is_empty() && ids.len() <= k,
-            "fetch leg wants 1..={k} candidates, got {}",
-            ids.len()
-        );
-        for &id in ids.iter() {
-            anyhow::ensure!(
-                corpus.owns(id as usize),
-                "candidate {id} is not owned by this partition [{}, {})",
-                corpus.base,
-                corpus.base + corpus.n
-            );
-        }
-    }
-    let t2_start = Instant::now();
-    let lbas: Vec<u64> = legs
-        .iter()
-        .flat_map(|(_, ids)| ids.iter().map(|&id| corpus.local_lba(id as usize)))
-        .collect();
-    let fetched = storage::fetch_stage2(store, &lbas);
-    let stall_ns = fetched.iter().map(|c| c.device_ns).max().unwrap_or(0);
-    let reads = lbas.len() as u64;
-
     let mut q_full = vec![0f32; b * fd];
     let mut cand = vec![0f32; b * k * fd];
     for qi in 0..b {
@@ -774,7 +921,6 @@ fn run_fetch_batch(
     let out = rt.execute("full_score", &[&q_full_t, &cand_t])?;
     let scores = Runtime::to_vec_f32(&out[0])?;
     let order = Runtime::to_vec_i32(&out[1])?;
-    let t2 = t2_start.elapsed();
 
     // Scores come back rank-sorted with the slot permutation; invert it
     // so each requested candidate reports its own full score (the router
@@ -793,7 +939,44 @@ fn run_fetch_batch(
             batch_size: 0,
         });
     }
-    Ok((results, t2, stall_ns, reads))
+    Ok(results)
+}
+
+/// Resolve how one admitted query is served, from its granted shed plan
+/// and the router's fetch mode: `(stage1_only, promote_k, effective
+/// fetch mode)`. One definition shared by the threaded seam
+/// (`dispatch_partition`) and the reactor's `admit` so governed-plan
+/// handling cannot drift between them: a degraded plan always runs
+/// fetch-after-merge (a shrunk promote set must not multiply into `N×k`
+/// speculative reads), and the adaptive controller only prices
+/// ungoverned full-service queries — pinned by the governed seam arm in
+/// `router_equivalence_prop.rs`.
+pub(crate) fn resolve_dispatch(
+    plan: Option<ShedPlan>,
+    fetch: FetchMode,
+    adaptive: Option<&Arc<AdaptiveController>>,
+    feed: &[WindowCursor],
+) -> (bool, usize, FetchMode) {
+    match plan {
+        Some(p) if p.stage1_only => (true, p.promote_k, FetchMode::AfterMerge),
+        Some(p) if p.promote_k < SERVE.topk => (false, p.promote_k, FetchMode::AfterMerge),
+        _ => {
+            // Adaptive mode resolves to one of the two static protocols
+            // per dispatched query; the answer is bit-identical either
+            // way, so the controller is free to switch mid-stream.
+            let eff = match (fetch, adaptive) {
+                (FetchMode::Adaptive, Some(ctrl)) => ctrl.decide_with(|| {
+                    let mut fused = DeviceWindow::default();
+                    for c in feed {
+                        fused.merge(&c.drain());
+                    }
+                    fused
+                }),
+                (mode, _) => mode,
+            };
+            (false, SERVE.topk, eff)
+        }
+    }
 }
 
 /// How a [`Router`] maps queries onto its workers.
@@ -1305,27 +1488,8 @@ impl Router {
         // controller's in-flight gauge and latency windows; raw submit()
         // traffic on the same router stays invisible to it.
         let counted = plan.is_some();
-        let (stage1_only, promote_k, eff) = match plan {
-            Some(p) if p.stage1_only => (true, p.promote_k, FetchMode::AfterMerge),
-            Some(p) if p.promote_k < SERVE.topk => (false, p.promote_k, FetchMode::AfterMerge),
-            _ => {
-                // Adaptive mode resolves to one of the two static
-                // protocols per dispatched query; the answer is
-                // bit-identical either way, so the controller is free to
-                // switch mid-stream.
-                let eff = match (fetch, &self.adaptive) {
-                    (FetchMode::Adaptive, Some(ctrl)) => ctrl.decide_with(|| {
-                        let mut fused = DeviceWindow::default();
-                        for c in &self.adaptive_feed {
-                            fused.merge(&c.drain());
-                        }
-                        fused
-                    }),
-                    (mode, _) => mode,
-                };
-                (false, SERVE.topk, eff)
-            }
-        };
+        let (stage1_only, promote_k, eff) =
+            resolve_dispatch(plan, fetch, self.adaptive.as_ref(), &self.adaptive_feed);
         let submitted = Instant::now();
         let parts: Vec<_> = self
             .workers

@@ -212,6 +212,11 @@ struct State {
     de_escalations: u64,
     /// Latencies (µs) of queries completed in the current window.
     samples: Vec<f64>,
+    /// Admitted queries that died without a latency in the current
+    /// window. Counted toward the window boundary (so a pure-error storm
+    /// still closes windows and the ladder keeps moving) but excluded
+    /// from the percentiles — an error has no latency to rank.
+    window_errors: usize,
     window_idx: u64,
     depth_peak: usize,
     /// Windows the rung stays pinned after a transition.
@@ -262,6 +267,7 @@ impl OverloadController {
                 escalations: 0,
                 de_escalations: 0,
                 samples: Vec::new(),
+                window_errors: 0,
                 window_idx: 0,
                 depth_peak: 0,
                 dwell_left: 0,
@@ -312,16 +318,24 @@ impl OverloadController {
         if latency_ns.is_finite() && latency_ns >= 0.0 {
             st.samples.push(latency_ns / 1_000.0);
         }
-        if st.samples.len() >= self.cfg.window {
+        if st.samples.len() + st.window_errors >= self.cfg.window {
             self.on_window_boundary(&mut st);
         }
     }
 
     /// An admitted query died without a latency (worker error): release
-    /// its admission slot without polluting the latency window.
+    /// its admission slot without polluting the latency percentiles.
+    /// Errors still count toward the window *boundary* — if they did
+    /// not, a pure-error storm would stop closing windows and the
+    /// ladder would freeze at whatever rung it held when the errors
+    /// began, unable to step back down once healthy traffic returns.
     pub fn on_error(&self) {
         let mut st = self.state.lock().unwrap();
         st.in_flight = st.in_flight.saturating_sub(1);
+        st.window_errors += 1;
+        if st.samples.len() + st.window_errors >= self.cfg.window {
+            self.on_window_boundary(&mut st);
+        }
     }
 
     /// Feed the fused device window (occupancy observability for the
@@ -397,6 +411,7 @@ impl OverloadController {
     fn on_window_boundary(&self, st: &mut State) {
         st.window_idx += 1;
         let mut samples = std::mem::take(&mut st.samples);
+        st.window_errors = 0;
         samples.sort_by(|a, b| a.total_cmp(b));
         let (p50, p95, p99) = (pct(&samples, 0.50), pct(&samples, 0.95), pct(&samples, 0.99));
         let slo = &self.cfg.slo;
@@ -405,7 +420,11 @@ impl OverloadController {
             || p99 > slo.p99_us
             || st.depth_peak > slo.max_queue_depth;
         let m = self.cfg.margin;
-        let healthy = p50 <= m * slo.p50_us
+        // Percentiles of an empty (all-error) window are zero, which
+        // would read as perfectly healthy; require at least one real
+        // latency before a window may feed the healthy streak.
+        let healthy = !samples.is_empty()
+            && p50 <= m * slo.p50_us
             && p95 <= m * slo.p95_us
             && p99 <= m * slo.p99_us
             && (st.depth_peak as f64) <= m * slo.max_queue_depth as f64;
@@ -646,8 +665,55 @@ mod tests {
         let r = c.report();
         assert_eq!(r.in_flight, 0);
         assert_eq!(r.completed, 0);
-        // no sample was pushed: no window boundary can have fired
+        // one error < window of 4: the boundary has not been reached yet
         assert!(r.windows.is_empty());
+    }
+
+    #[test]
+    fn errors_count_toward_the_boundary_but_not_the_percentiles() {
+        let c = ctrl(0);
+        // window=4: two errors + two fast completions close one window
+        for _ in 0..2 {
+            c.try_admit().unwrap();
+            c.on_error();
+        }
+        for _ in 0..2 {
+            c.try_admit().unwrap();
+            c.on_complete(10_000.0); // 10µs
+        }
+        let r = c.report();
+        assert_eq!(r.windows.len(), 1, "errors fill the window boundary");
+        let w = &r.windows[0];
+        assert!((w.p99_us - 10.0).abs() < 1e-9, "percentiles from real latencies only");
+        assert!(w.healthy && !w.tripped);
+    }
+
+    #[test]
+    fn error_storms_close_windows_and_let_the_rung_recover() {
+        let c = ctrl(0);
+        // escalate one rung with a genuinely slow window
+        drive_window(&c, 5_000.0);
+        assert_eq!(c.rung(), Rung::ShrinkK);
+        // pure-error traffic: windows must keep closing (errors count
+        // toward the boundary), but with no latencies they are neither
+        // tripped nor healthy — the rung holds rather than the ladder
+        // freezing with a stale sample buffer
+        let before = c.report().windows.len();
+        for _ in 0..(c.config().window * 3) {
+            c.try_admit().unwrap();
+            c.on_error();
+        }
+        let r = c.report();
+        assert_eq!(r.windows.len(), before + 3, "error-only windows still close");
+        assert_eq!(r.rung, Rung::ShrinkK, "an all-error window is not healthy");
+        assert!(r.windows.iter().skip(before).all(|w| !w.healthy && !w.tripped));
+        // healthy traffic returns: the samples buffer starts clean (no
+        // leftovers from before the storm) and two clean windows step
+        // the rung back down
+        drive_window(&c, 10.0);
+        drive_window(&c, 10.0);
+        assert_eq!(c.rung(), Rung::Normal, "ladder recovers after the storm");
+        assert_eq!(c.report().de_escalations, 1);
     }
 
     #[test]

@@ -46,12 +46,11 @@ use std::time::{Duration, Instant};
 
 use super::batcher::Job;
 use super::{
-    dispatch_fetch_legs, merge_partials, promote_reduced, rank_fetched, stage1_result,
-    AdaptiveConfig, AdaptiveController, FetchMode, OverloadController, QueryResult, Resp,
-    ShedPlan, WorkerRequest,
+    dispatch_fetch_legs, merge_partials, promote_reduced, rank_fetched, resolve_dispatch,
+    stage1_result, AdaptiveConfig, AdaptiveController, FetchMode, OverloadController, QueryResult,
+    Resp, ShedPlan, WorkerRequest,
 };
-use crate::runtime::SERVE;
-use crate::storage::{DeviceWindow, WindowCursor};
+use crate::storage::WindowCursor;
 use crate::util::stats::LatencyHist;
 
 /// Tuning for the reactor event loop.
@@ -202,12 +201,21 @@ enum Progress {
     Done(Resp),
 }
 
+/// Parking bounds for the reactor's no-progress path. The loop starts
+/// fine-grained (a worker leg usually lands within microseconds of the
+/// sweep that missed it) and doubles toward the cap while nothing moves,
+/// resetting on any progress — so a hot loop costs microseconds of extra
+/// latency and an idle loop parks on the inbox instead of burning a core.
+const MIN_PARK: Duration = Duration::from_micros(20);
+const MAX_PARK: Duration = Duration::from_millis(1);
+
 /// The reactor event loop. Runs until the inbox closes *and* every
 /// tracked query has answered; workers outlive the loop (the router
 /// joins this thread before dropping them), so draining always finishes.
 pub(crate) fn run(ctx: ReactorCtx, inbox: mpsc::Receiver<ReactorJob>) {
     let mut pending: Vec<InFlight> = Vec::new();
     let mut open = true;
+    let mut backoff = MIN_PARK;
     while open || !pending.is_empty() {
         let mut progressed = false;
         // ---- admission: fill the window from the inbox, non-blocking ----
@@ -243,21 +251,42 @@ pub(crate) fn run(ctx: ReactorCtx, inbox: mpsc::Receiver<ReactorJob>) {
             }
         }
         if progressed {
+            backoff = MIN_PARK;
             continue;
         }
         if pending.is_empty() {
             if !open {
                 break;
             }
-            // idle reactor: park on the inbox instead of spinning
-            match inbox.recv_timeout(Duration::from_millis(1)) {
-                Ok(job) => pending.push(admit(&ctx, job)),
+            // idle reactor: park on the inbox until work arrives
+            match inbox.recv_timeout(MAX_PARK) {
+                Ok(job) => {
+                    pending.push(admit(&ctx, job));
+                    backoff = MIN_PARK;
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
             }
+        } else if open && pending.len() < ctx.admission {
+            // Legs in flight, none ready, window not full: park on the
+            // inbox with the bounded backoff — a new query doubles as the
+            // wake signal, and a worker completion is at most `backoff`
+            // away. This replaces the old fixed busy-sleep: the reactor
+            // no longer burns a core polling while a stage-2 burst is in
+            // flight on the workers' devices.
+            match inbox.recv_timeout(backoff) {
+                Ok(job) => {
+                    pending.push(admit(&ctx, job));
+                    backoff = MIN_PARK;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => backoff = (backoff * 2).min(MAX_PARK),
+                Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+            }
         } else {
-            // legs in flight but none ready: yield briefly, then re-sweep
-            std::thread::sleep(Duration::from_micros(50));
+            // window full (or inbox closed): nothing can admit — wait out
+            // the backoff before re-sweeping the in-flight legs
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(MAX_PARK);
         }
     }
 }
@@ -269,23 +298,8 @@ pub(crate) fn run(ctx: ReactorCtx, inbox: mpsc::Receiver<ReactorJob>) {
 fn admit(ctx: &ReactorCtx, job: ReactorJob) -> InFlight {
     let ReactorJob { submitted, query, resp, plan } = job;
     let counted = plan.is_some();
-    let (stage1_only, promote_k, eff) = match plan {
-        Some(p) if p.stage1_only => (true, p.promote_k, FetchMode::AfterMerge),
-        Some(p) if p.promote_k < SERVE.topk => (false, p.promote_k, FetchMode::AfterMerge),
-        _ => {
-            let eff = match (ctx.fetch, &ctx.adaptive) {
-                (FetchMode::Adaptive, Some(ctrl)) => ctrl.decide_with(|| {
-                    let mut fused = DeviceWindow::default();
-                    for c in &ctx.adaptive_feed {
-                        fused.merge(&c.drain());
-                    }
-                    fused
-                }),
-                (mode, _) => mode,
-            };
-            (false, SERVE.topk, eff)
-        }
-    };
+    let (stage1_only, promote_k, eff) =
+        resolve_dispatch(plan, ctx.fetch, ctx.adaptive.as_ref(), &ctx.adaptive_feed);
     let two_phase = stage1_only || eff == FetchMode::AfterMerge;
     let legs: Vec<Leg> = ctx
         .worker_txs

@@ -1,7 +1,7 @@
 //! Perf-smoke harness (`fivemin smoke`): a short serving-scenario matrix
 //! — `{mem, sim} × {spec, merge, adaptive} × shards ∈ {1, 2}`, plus
 //! DRAM-tier cells `{mem, sim} × {clock, breakeven} × {2 MB, 8 MB}` and
-//! reactor-seam cells `{mem, sim} × {merge, adaptive}` served through
+//! reactor-seam cells `{mem, sim} × {spec, merge, adaptive}` served through
 //! `Router::partitioned_reactor` — measured end to end and gated against
 //! a checked-in baseline, so a regression in the router protocols, the
 //! adaptive control loop, the tier's accounting, or the completion-driven
@@ -70,7 +70,7 @@ const TIER_SMOKE_RATE: f64 = 100.0;
 
 /// Default queries per cell. Enough for the adaptive controller (tuned to
 /// an 8-query window here) to sample several windows, small enough that
-/// the whole 24-cell matrix (12 static + 8 tier + 4 reactor) stays a
+/// the whole 26-cell matrix (12 static + 8 tier + 6 reactor) stays a
 /// smoke test.
 pub const DEFAULT_QUERIES: usize = 48;
 
@@ -262,10 +262,13 @@ pub fn run_matrix(queries: usize) -> Result<Vec<SmokeCell>> {
         }
     }
     // Reactor-seam cells: the completion-driven event loop over the same
-    // 2-shard scenarios (the threaded mem|sim/{merge,adaptive}/2 cells
-    // are the relative-gate peers).
+    // 2-shard scenarios (the threaded mem|sim/{spec,merge,adaptive}/2
+    // cells are the relative-gate peers). Speculative is here since the
+    // async storage rework: it drives the workers' full-search submit/
+    // sweep path, so a regression in the non-blocking completion flow
+    // shows up as drifted reads per query against the threaded peer.
     for backend in ["mem", "sim"] {
-        for fetch in [FetchMode::AfterMerge, FetchMode::Adaptive] {
+        for fetch in [FetchMode::Speculative, FetchMode::AfterMerge, FetchMode::Adaptive] {
             cells.push(run_cell(backend, fetch, 2, queries, None, "reactor")?);
         }
     }
@@ -855,7 +858,7 @@ mod tests {
             doc.get(&["reactor_cells"]).and_then(|t| t.as_arr()).expect("reactor_cells");
         let mut want = Vec::new();
         for backend in ["mem", "sim"] {
-            for fetch in ["merge", "adaptive"] {
+            for fetch in ["spec", "merge", "adaptive"] {
                 want.push(format!("{backend}/{fetch}/2/reactor"));
             }
         }

@@ -64,7 +64,7 @@ pub mod uring;
 use std::collections::HashMap;
 use std::ops::Range;
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use anyhow::{bail, ensure, Result};
 
@@ -152,6 +152,12 @@ pub struct BackendStats {
     pub write_device_ns: LatencyHist,
     /// Virtual device time spanned by the traffic so far (ns).
     pub virtual_ns: u64,
+    /// Requests submitted but not yet handed back through
+    /// [`StorageBackend::poll`]/[`StorageBackend::wait_all`] — a gauge,
+    /// not a cumulative counter. The async serving worker never blocks on
+    /// a stage-2 burst, so overlap tests read this to prove device reads
+    /// were genuinely in flight while other legs answered.
+    pub inflight: u64,
     /// DRAM-tier counters when a [`TieredBackend`] fronts this traffic
     /// (`None` otherwise). The aggregate counters above are *post-tier*
     /// device traffic — tier hits never reach the device, so
@@ -168,6 +174,7 @@ impl BackendStats {
             read_device_ns: LatencyHist::for_latency_ns(),
             write_device_ns: LatencyHist::for_latency_ns(),
             virtual_ns: 0,
+            inflight: 0,
             tier: None,
         }
     }
@@ -207,6 +214,7 @@ impl BackendStats {
         self.read_device_ns.merge(&other.read_device_ns);
         self.write_device_ns.merge(&other.write_device_ns);
         self.virtual_ns = self.virtual_ns.max(other.virtual_ns);
+        self.inflight += other.inflight;
         match (&mut self.tier, &other.tier) {
             (Some(m), Some(o)) => m.merge(o),
             (None, Some(o)) => self.tier = Some(o.clone()),
@@ -371,14 +379,24 @@ impl WindowBus {
 
     /// Fold one produced window into the bus (sequential same-producer
     /// semantics: spans add). Every live cursor will see it.
+    ///
+    /// Poison recovery: every bus operation is a self-contained
+    /// read-modify-write over plain counters, so a panic mid-critical-
+    /// section cannot leave `BusInner` half-updated in a way later calls
+    /// would misread — the bus keeps working for every other subscriber
+    /// instead of cascading the panic.
     pub fn publish(&self, w: &DeviceWindow) {
-        self.inner.lock().unwrap().total.accumulate(w);
+        self.inner
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .total
+            .accumulate(w);
     }
 
     /// Register a new subscriber. The cursor starts at "now": it sees
     /// only windows published after this call, not history.
     pub fn subscribe(self: &Arc<Self>) -> WindowCursor {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
         let id = inner.next_id;
         inner.next_id += 1;
         let pos = inner.total;
@@ -400,7 +418,11 @@ impl WindowCursor {
     /// [`DeviceWindow::accumulate`] semantics. Empty window when nothing
     /// new was published.
     pub fn drain(&self) -> DeviceWindow {
-        let mut inner = self.bus.inner.lock().unwrap();
+        let mut inner = self
+            .bus
+            .inner
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
         let total = inner.total;
         let pos = inner
             .cursors
@@ -418,11 +440,17 @@ impl WindowCursor {
 
 impl Drop for WindowCursor {
     fn drop(&mut self) {
-        // Free the slot so subscriber churn doesn't grow the bus. A
-        // poisoned mutex is ignored: never panic inside drop.
-        if let Ok(mut inner) = self.bus.inner.lock() {
-            inner.cursors.remove(&self.id);
-        }
+        // Free the slot so subscriber churn doesn't grow the bus — even
+        // when the mutex is poisoned: skipping reclaim here would
+        // silently reintroduce the unbounded-growth leak the slot map
+        // exists to prevent. `into_inner` never panics, so this drop
+        // stays panic-free either way.
+        self.bus
+            .inner
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .cursors
+            .remove(&self.id);
     }
 }
 
@@ -1056,6 +1084,38 @@ mod tests {
         assert_eq!(keeper.drain().reads, 200);
         drop(keeper);
         assert!(bus.inner.lock().unwrap().cursors.is_empty());
+    }
+
+    #[test]
+    fn window_bus_survives_a_poisoned_mutex() {
+        let bus = Arc::new(WindowBus::new());
+        let cursor = bus.subscribe();
+        let w = DeviceWindow { reads: 3, span_ns: 10, ..Default::default() };
+        bus.publish(&w);
+        // Poison the bus mutex: a panic while the lock is held is exactly
+        // what one panicking publisher would leave behind for every other
+        // subscriber.
+        let poisoner = bus.clone();
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _guard = poisoner.inner.lock().unwrap();
+            panic!("poison the bus");
+        }));
+        assert!(unwound.is_err());
+        assert!(bus.inner.is_poisoned());
+        // Every path keeps working: drain sees the pre-poison traffic...
+        assert_eq!(cursor.drain().reads, 3);
+        // ...publish and fresh subscriptions still flow...
+        bus.publish(&w);
+        let late = bus.subscribe();
+        bus.publish(&w);
+        assert_eq!(cursor.drain().reads, 6);
+        assert_eq!(late.drain().reads, 3);
+        // ...and Drop still reclaims slots — skipping reclaim on poison
+        // would reintroduce the unbounded-growth leak.
+        drop(late);
+        drop(cursor);
+        let inner = bus.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        assert!(inner.cursors.is_empty());
     }
 
     #[test]

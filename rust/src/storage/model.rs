@@ -119,7 +119,9 @@ impl StorageBackend for ModelBackend {
     }
 
     fn stats(&self) -> BackendStats {
-        self.stats.clone()
+        let mut s = self.stats.clone();
+        s.inflight = self.ready.len() as u64;
+        s
     }
 
     fn take_window(&mut self) -> DeviceWindow {

@@ -231,6 +231,10 @@ impl StorageBackend for ShardedBackend {
             .map(|b| b.stats().virtual_ns)
             .max()
             .unwrap_or(0);
+        // In flight adds across parallel devices (the front-end `stats`
+        // field only sees completions already absorbed, so the gauge must
+        // come from the shards themselves).
+        s.inflight = self.inner.iter().map(|b| b.stats().inflight).sum();
         s
     }
 

@@ -11,17 +11,21 @@
 //!   decoupled from the wall clock; the caller reads device time from the
 //!   completions and [`SimStats`]. This is the default for tests,
 //!   figures, and equivalence runs.
-//! * [`Pace::WallClock`] — after each burst the worker sleeps until
-//!   `virtual_elapsed / speedup` of wall time has passed, so a demo can
-//!   watch the device *be* the bottleneck in real time.
+//! * [`Pace::WallClock`] — the worker holds each burst's completions back
+//!   until `virtual_elapsed / speedup` of wall time has passed, so a demo
+//!   can watch the device *be* the bottleneck in real time — and an async
+//!   serving worker observably overlaps compute with the in-flight burst.
 //!
 //! The full device-level [`SimStats`] (IOPS, read-latency tail, GC/WA
 //! counters) is available via
-//! [`StorageBackend::device_stats`](super::StorageBackend::device_stats).
+//! [`StorageBackend::device_stats`](super::StorageBackend::device_stats),
+//! served from a snapshot the worker refreshes after every burst — no
+//! device-thread round-trip, so stats and windows never block the caller.
 
 use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -71,13 +75,17 @@ impl Pace {
 
 enum Cmd {
     Submit(Vec<(u64, IoRequest)>),
-    Stats(mpsc::Sender<SimStats>),
     Stop,
 }
 
 pub struct SimBackend {
     cmd_tx: mpsc::Sender<Cmd>,
     done_rx: mpsc::Receiver<IoCompletion>,
+    /// Device snapshot the worker refreshes after every burst (and once
+    /// at spawn): reading it never blocks on the device thread, which is
+    /// what keeps [`StorageBackend::stats`]/`take_window` sweep-safe for
+    /// the async serving worker.
+    dev_stats: Arc<Mutex<SimStats>>,
     handle: Option<JoinHandle<()>>,
     next_id: u64,
     outstanding: u64,
@@ -91,13 +99,16 @@ impl SimBackend {
     pub fn spawn(cfg: SsdConfig, prm: SimParams, pace: Pace) -> Self {
         let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
         let (done_tx, done_rx) = mpsc::channel::<IoCompletion>();
+        let dev_stats = Arc::new(Mutex::new(SimStats::default()));
+        let cache = dev_stats.clone();
         let handle = std::thread::Builder::new()
             .name("fivemin-simdev".into())
-            .spawn(move || worker(cfg, prm, pace, cmd_rx, done_tx))
+            .spawn(move || worker(cfg, prm, pace, cmd_rx, done_tx, cache))
             .expect("spawning sim-backend worker");
         SimBackend {
             cmd_tx,
             done_rx,
+            dev_stats,
             handle: Some(handle),
             next_id: 0,
             outstanding: 0,
@@ -157,20 +168,24 @@ impl StorageBackend for SimBackend {
         if let Some(d) = self.device_stats() {
             s.virtual_ns = d.window_ns;
         }
+        s.inflight = self.outstanding;
         s
     }
 
     fn device_stats(&self) -> Option<SimStats> {
-        let (tx, rx) = mpsc::channel();
-        self.cmd_tx.send(Cmd::Stats(tx)).ok()?;
-        rx.recv().ok()
+        Some(
+            self.dev_stats
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .clone(),
+        )
     }
 
     fn take_window(&mut self) -> DeviceWindow {
-        // stats() folds the device-side virtual span in (one blocking
-        // round-trip to the sim thread — same cost a snapshot capture
-        // already pays per batch); read latencies come from the
-        // completions this front-end has drained.
+        // stats() folds the device-side virtual span in from the worker's
+        // cached snapshot — no round-trip, so a per-sweep window take
+        // never stalls behind an in-flight burst; read latencies come
+        // from the completions this front-end has drained.
         let cur = self.stats();
         self.window.take(&cur)
     }
@@ -191,6 +206,7 @@ fn worker(
     pace: Pace,
     cmd_rx: mpsc::Receiver<Cmd>,
     done_tx: mpsc::Sender<IoCompletion>,
+    cache: Arc<Mutex<SimStats>>,
 ) {
     let l_blk = prm.l_blk;
     let mut sim = SsdSim::new(cfg, prm);
@@ -202,6 +218,9 @@ fn worker(
     // addresses and sizes, not traffic classes, so the front-end counts
     // them and stamps the snapshot (`SimStats::stage2_reads`).
     let mut stage2_done: u64 = 0;
+    // Seed the snapshot cache so device_stats() is meaningful before the
+    // first burst (post-preconditioning steady state, zero traffic).
+    *cache.lock().unwrap_or_else(PoisonError::into_inner) = sim.stats_snapshot();
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
             Cmd::Submit(batch) => {
@@ -220,12 +239,13 @@ fn worker(
                     });
                     by_host.insert(hid, (*bid, req.op, req.lba, req.class));
                 }
+                let mut finished: Vec<IoCompletion> = Vec::with_capacity(batch.len());
                 for (hid, lat) in sim.drain_inflight() {
                     if let Some((id, op, lba, class)) = by_host.remove(&hid) {
                         if op == IoOp::Read && class == IoClass::Stage2 {
                             stage2_done += 1;
                         }
-                        let _ = done_tx.send(IoCompletion { id, op, lba, class, device_ns: lat });
+                        finished.push(IoCompletion { id, op, lba, class, device_ns: lat });
                     }
                 }
                 // A drained queue with unmatched entries cannot happen in a
@@ -236,8 +256,21 @@ fn worker(
                     if op == IoOp::Read && class == IoClass::Stage2 {
                         stage2_done += 1;
                     }
-                    let _ = done_tx.send(IoCompletion { id, op, lba, class, device_ns: 0 });
+                    finished.push(IoCompletion { id, op, lba, class, device_ns: 0 });
                 }
+                // Refresh the snapshot before the completions become
+                // visible: a caller that has absorbed a completion always
+                // reads device stats that cover it.
+                {
+                    let mut s = sim.stats_snapshot();
+                    s.stage2_reads = stage2_done;
+                    *cache.lock().unwrap_or_else(PoisonError::into_inner) = s;
+                }
+                // Pace BEFORE delivery: under WallClock the burst stays
+                // observably in flight for its scaled device time — a
+                // non-blocking poll() on the front end returns nothing
+                // until the wall clock catches up to virtual time, which
+                // is what overlap tests (and demos) watch.
                 if let Pace::WallClock { speedup } = pace {
                     let virt = Duration::from_nanos(sim.now_ns() - virt_origin);
                     let target = virt.div_f64(speedup.max(1e-9));
@@ -246,11 +279,9 @@ fn worker(
                         std::thread::sleep(target - elapsed);
                     }
                 }
-            }
-            Cmd::Stats(tx) => {
-                let mut s = sim.stats_snapshot();
-                s.stage2_reads = stage2_done;
-                let _ = tx.send(s);
+                for c in finished {
+                    let _ = done_tx.send(c);
+                }
             }
             Cmd::Stop => break,
         }
@@ -348,6 +379,24 @@ mod tests {
         assert!(w.mean_read_ns() >= 5_000.0, "windowed mean clears the sense floor");
         assert!(w.span_ns > 0, "device-side virtual span folded in");
         assert_eq!(b.take_window().reads, 0, "second take is empty");
+    }
+
+    #[test]
+    fn paced_burst_is_observably_in_flight() {
+        let (cfg, prm) = small_spec();
+        // Tiny speedup stretches a µs-scale virtual burst to ~100ms+ of
+        // wall time; the worker holds the completions back for that span.
+        let mut b = SimBackend::spawn(cfg, prm, Pace::WallClock { speedup: 1e-4 });
+        b.submit(&(0..8).map(IoRequest::stage2_read).collect::<Vec<_>>());
+        assert_eq!(b.stats().inflight, 8, "gauge counts the submitted burst");
+        assert!(b.poll().is_empty(), "paced completions are not delivered early");
+        // device_stats never blocks on the paced worker: it reads the
+        // cached snapshot even while the burst is being held back
+        assert!(b.device_stats().is_some());
+        let done = b.wait_all();
+        assert_eq!(done.len(), 8);
+        assert_eq!(b.stats().inflight, 0, "gauge drops back after the drain");
+        assert_eq!(b.device_stats().unwrap().stage2_reads, 8);
     }
 
     #[test]

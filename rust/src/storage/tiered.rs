@@ -849,6 +849,9 @@ impl StorageBackend for TieredBackend {
     fn stats(&self) -> BackendStats {
         let mut s = self.inner.stats();
         s.tier = Some(self.tier_stats());
+        // Tier hits waiting in `ready` are in flight from the caller's
+        // view, on top of whatever the device still holds.
+        s.inflight += self.ready.len() as u64;
         s
     }
 

@@ -250,7 +250,11 @@ impl StorageBackend for UringBackend {
     }
 
     fn stats(&self) -> BackendStats {
-        self.stats.clone()
+        let mut s = self.stats.clone();
+        // In flight from the caller's view: still at the device, plus
+        // reaped completions not yet drained through poll()/wait_all().
+        s.inflight = self.inflight + self.ready.len() as u64;
+        s
     }
 
     fn take_window(&mut self) -> DeviceWindow {

@@ -1,0 +1,109 @@
+//! The reactor-phase-2 acceptance proof: a stage-2 fetch burst parks no
+//! thread. The serving worker's storage path is submit/sweep — never a
+//! blocking `wait_all` — so while a wall-clock-paced sim device holds a
+//! fetch burst in flight for hundreds of milliseconds, the *same* worker
+//! keeps answering stage-1 reduce legs, and its published backend
+//! snapshots show the burst as a live `inflight` gauge the whole time.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fivemin::coordinator::batcher::BatchPolicy;
+use fivemin::coordinator::{Coordinator, ServingCorpus, WorkerRequest};
+use fivemin::runtime::{default_artifacts_dir, SERVE};
+use fivemin::storage::{BackendSpec, Pace};
+use fivemin::util::rng::Rng;
+
+/// Poll `f` every millisecond until it returns true or `timeout` expires.
+fn wait_for(timeout: Duration, mut f: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    f()
+}
+
+#[test]
+fn worker_answers_reduce_legs_while_a_fetch_burst_is_in_flight() {
+    let corpus = Arc::new(ServingCorpus::synthetic(1, 0xA51C));
+    // WallClock at 2e-4: the µs-scale virtual burst stretches to roughly
+    // a second of wall time — long enough that overlap is unmistakable,
+    // short enough for CI.
+    let spec = BackendSpec::small_sim(4096)
+        .for_capacity(corpus.n as u64)
+        .with_pace(Pace::WallClock { speedup: 2e-4 });
+    let coord =
+        Coordinator::start(default_artifacts_dir(), corpus.clone(), BatchPolicy::default(), spec)
+            .unwrap();
+
+    let mut rng = Rng::new(41);
+    let k = SERVE.topk;
+    let query = corpus.query_near(0, 0.01, &mut rng);
+    let ids: Vec<u32> = (0..k as u32).collect();
+    let t_submit = Instant::now();
+    let frx = coord.submit_request(WorkerRequest::Fetch { query, ids });
+
+    // The submit half publishes a backend snapshot before any completion
+    // lands, so the burst must become visible as a live inflight gauge.
+    let mut peak_inflight = 0u64;
+    assert!(
+        wait_for(Duration::from_secs(30), || {
+            if let Some(snap) = coord.stats().storage {
+                peak_inflight = peak_inflight.max(snap.stats.inflight);
+            }
+            peak_inflight > 0
+        }),
+        "fetch burst never showed up in the inflight gauge"
+    );
+    assert_eq!(peak_inflight, k as u64, "the whole burst is in flight at once");
+
+    // While the device holds the burst, the same worker keeps serving
+    // stage-1 reduce legs. If the worker were parked in a blocking
+    // wait-for-completions helper, every recv_timeout here would starve.
+    let mut overlapped = 0usize;
+    for i in 0..4usize {
+        let q = corpus.query_near((i * 7) % corpus.n, 0.01, &mut rng);
+        let rrx = coord.submit_request(WorkerRequest::Reduce(q));
+        let r = rrx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("reduce leg starved behind the in-flight fetch burst")
+            .expect("reduce leg failed");
+        assert_eq!(r.ids.len(), k, "reduce answers the local top-k");
+        if matches!(frx.try_recv(), Err(mpsc::TryRecvError::Empty)) {
+            overlapped += 1;
+        }
+    }
+    assert!(
+        overlapped >= 1,
+        "no reduce leg answered while the fetch was pending — the worker \
+         blocked on the device"
+    );
+
+    // The fetch leg itself still completes, with the full accounting: k
+    // stage-2 reads charged at completion, a positive device stall, and
+    // the inflight gauge back at zero once the sweep absorbs the burst.
+    let fr = frx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("fetch leg lost")
+        .expect("fetch leg failed");
+    assert_eq!(fr.ids.len(), k);
+    let held = t_submit.elapsed();
+    assert!(held >= Duration::from_millis(50), "paced burst finished in {held:?} — not paced?");
+    assert!(
+        wait_for(Duration::from_secs(10), || {
+            let st = coord.stats();
+            st.ssd_reads == k as u64
+                && st.storage.as_ref().is_some_and(|s| s.stats.inflight == 0)
+        }),
+        "post-completion accounting never settled"
+    );
+    let st = coord.stats();
+    assert_eq!(st.ssd_reads, k as u64, "fetch leg charged exactly k stage-2 reads");
+    assert_eq!(st.storage_stall_ns.count(), 1, "one burst, one recorded stall");
+    assert!(st.storage_stall_ns.max() > 0.0, "paced device time must surface as storage stall");
+    assert_eq!(st.fetch_legs, 1);
+}

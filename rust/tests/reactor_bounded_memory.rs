@@ -113,6 +113,61 @@ fn ten_thousand_open_loop_queries_complete_within_the_admission_window() {
 }
 
 #[test]
+fn reactor_over_sim_workers_stays_within_the_admission_window() {
+    // The bounded-memory contract re-run against the genuinely async
+    // storage path: sim-backed partitions, so every stage-2 burst goes
+    // through submit/sweep on a real discrete-event device while the
+    // reactor keeps feeding the workers.
+    let shards = 2usize;
+    let admission = 64usize;
+    let n = 256usize;
+    let corpus = Arc::new(ServingCorpus::synthetic(shards, 0xB0E0));
+    let workers = corpus
+        .partitions(shards)
+        .unwrap()
+        .into_iter()
+        .map(|part| {
+            let spec = BackendSpec::small_sim(4096).for_capacity(part.n as u64);
+            Coordinator::start(
+                default_artifacts_dir(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                spec,
+            )
+        })
+        .collect::<anyhow::Result<Vec<_>>>()
+        .unwrap();
+    let router = Router::partitioned_reactor(
+        workers,
+        FetchMode::AfterMerge,
+        ReactorConfig { admission, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = Rng::new(0xB0E1);
+    let pending: Vec<_> = (0..n)
+        .map(|i| router.submit(corpus.query_near((i * 37) % corpus.n, 0.01, &mut rng)))
+        .collect();
+    for rx in pending {
+        rx.recv().expect("reactor dropped a query").expect("query failed");
+    }
+    let rep = router.reactor_report().unwrap();
+    assert_eq!(rep.completed, n as u64, "every query completes on the async path");
+    assert!(
+        rep.peak_pending <= admission as u64,
+        "peak tracked pending {} exceeded the admission window {admission}",
+        rep.peak_pending
+    );
+    // after-merge over sim devices: exactly k stage-2 reads per query in
+    // total, counted at completion time by the async sweep
+    let st = router.settled_stats(std::time::Duration::from_secs(10));
+    assert_eq!(
+        st.ssd_reads,
+        (n * fivemin::runtime::SERVE.topk) as u64,
+        "async completion accounting must match the blocking path exactly"
+    );
+}
+
+#[test]
 fn admission_window_of_one_still_serves_correct_answers() {
     // Degenerate window: the reactor is allowed to track exactly one
     // query at a time, so the other 63 wait in the inbox. Everything

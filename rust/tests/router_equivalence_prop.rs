@@ -352,6 +352,83 @@ fn after_merge_cuts_sim_device_stage2_reads_nx() {
     }
 }
 
+/// The governed seams resolve shed plans identically: for every forced
+/// rung × fetch protocol, the threaded `partitioned_overload` router and
+/// the reactor `partitioned_reactor_overload` router must return
+/// bit-identical answers — including the *degraded* ones (shrunk promote
+/// set at `ShrinkK`, reduced-score-only at `Stage1Only`). Both seams now
+/// route their plans through the same `resolve_dispatch` helper; this
+/// test is the pin that keeps them from drifting apart again.
+#[test]
+fn governed_seams_degrade_bit_identically() {
+    use fivemin::coordinator::{OverloadConfig, Rung, SloConfig};
+
+    let corpus = Arc::new(ServingCorpus::synthetic(2, 733));
+    let mut qrng = Rng::new(409);
+    let queries: Vec<Vec<f32>> = (0..3)
+        .map(|_| corpus.query_near(qrng.below(corpus.n as u64) as usize, 0.02, &mut qrng))
+        .collect();
+
+    // Inert guardrails (unreachable SLOs, effectively-infinite window):
+    // the only rung in play is the one we force, so the comparison
+    // isolates plan *resolution* from ladder dynamics.
+    let slo = SloConfig { p50_us: 1e12, p95_us: 1e12, p99_us: 1e12, max_queue_depth: 1 << 20 };
+    let ocfg = OverloadConfig { window: 1 << 30, shrink_k: 4, ..OverloadConfig::for_slo(slo) };
+
+    let make_workers = || -> Vec<Coordinator> {
+        corpus
+            .partitions(2)
+            .unwrap()
+            .into_iter()
+            .map(|part| {
+                Coordinator::start(
+                    default_artifacts_dir(),
+                    Arc::new(part),
+                    BatchPolicy::default(),
+                    BackendSpec::Mem,
+                )
+                .unwrap()
+            })
+            .collect()
+    };
+
+    for fetch in [FetchMode::Speculative, FetchMode::AfterMerge, FetchMode::Adaptive] {
+        for rung in [Rung::Normal, Rung::ShrinkK, Rung::Stage1Only] {
+            let threaded =
+                Router::partitioned_overload(make_workers(), fetch, ocfg, None).unwrap();
+            let reactor = Router::partitioned_reactor_overload(
+                make_workers(),
+                fetch,
+                ReactorConfig::default(),
+                ocfg,
+                None,
+            )
+            .unwrap();
+            threaded.overload().unwrap().force_rung(rung);
+            reactor.overload().unwrap().force_rung(rung);
+            let a = serve_all(|q| threaded.try_submit(q).expect("admitted"), &queries).unwrap();
+            let b = serve_all(|q| reactor.try_submit(q).expect("admitted"), &queries).unwrap();
+            for (qi, (x, y)) in a.iter().zip(&b).enumerate() {
+                let tag = format!("{}/{} q{qi}", fetch.name(), rung.name());
+                assert_eq!(x.ids, y.ids, "{tag}: ids differ across governed seams");
+                assert_eq!(x.scores, y.scores, "{tag}: scores differ across governed seams");
+                assert_eq!(x.reduced, y.reduced, "{tag}: reduced differ across governed seams");
+            }
+            if rung == Rung::ShrinkK {
+                for (seam, got) in [("threads", &a), ("reactor", &b)] {
+                    for r in got.iter() {
+                        assert_eq!(
+                            r.ids.len(),
+                            ocfg.shrink_k,
+                            "{seam}: ShrinkK must shrink the promote set"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// The tier across an explicit capacity sweep: from a tier that can hold
 /// only a sliver of the promote traffic to one that holds everything,
 /// answers stay bit-identical to the untiered single worker, and

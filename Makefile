@@ -1,8 +1,8 @@
 # Build/verify entry points. `make artifacts` needs jax installed;
 # everything else is pure cargo.
 
-.PHONY: artifacts verify verify-release lint fmt-check doc pytest ci bench-smoke smoke \
-        uring-smoke soak clean figures fig11 fig12 fig13 fig14 fig15
+.PHONY: artifacts verify verify-release lint fmt-check doc pytest ci ci-full bench-smoke \
+        smoke uring-smoke soak soak-nightly clean figures fig11 fig12 fig13 fig14 fig15
 
 # Lower the JAX/Pallas serving graphs to HLO-text artifacts + manifest
 # (a prerequisite only for --features pjrt builds; the native engine
@@ -60,31 +60,49 @@ uring-smoke:
 
 # Overload drill + ladder-behavior gate (mirrors the soak-drill CI job):
 # self-calibrated ramp/burst/sustained-2x/recovery load against the
-# shedding ladder, artifact under results/, per-phase rung ceilings and
-# the sustained-phase SLO/accounting contract gated against the
-# checked-in baseline. Short phases keep the whole drill well under a
-# minute.
+# shedding ladder, artifact under results/, per-phase rung ceilings, the
+# sustained-phase SLO/accounting contract, and the per-tenant fairness
+# bound gated against the checked-in baseline. Short phases keep the
+# whole drill well under a minute.
 soak:
 	cargo run --release -- soak --secs-per-phase 3 --json \
 		--out results/bench_soak.json \
 		--baseline rust/benches/common/soak_baseline.json
 
-# The full CI pipeline, locally: fmt -> build -> clippy -> feature-matrix
-# check -> tests in both profiles -> docs -> bench-smoke -> uring smoke ->
-# soak drill -> quick fig15 (the DRAM-tier policy sweep regenerates end to
-# end). (CI additionally runs `make pytest` in a python job.)
+# The per-push CI pipeline, locally: fmt -> build -> clippy ->
+# feature-matrix check -> tests in both profiles (+ the full suite under
+# --features uring, as the rust CI job runs it) -> docs -> bench-smoke ->
+# uring smoke -> soak drill -> quick fig15 (the DRAM-tier policy sweep
+# regenerates end to end). For everything CI runs anywhere — including
+# the python job and the nightly-length soak — use `make ci-full`.
 ci: fmt-check
 	cargo build --release
 	$(MAKE) lint
 	cargo check --features pjrt
-	cargo check --features uring
 	cargo test -q
 	cargo test --release -q
+	cargo test --release --features uring -q
 	$(MAKE) doc
 	$(MAKE) bench-smoke
 	$(MAKE) uring-smoke
 	$(MAKE) soak
 	cargo run --release -- figures --fig15 --quick
+
+# Nightly-length overload drill (mirrors the nightly-soak CI job): 10s
+# phases give dwell/hysteresis and the per-tenant fairness equilibrium
+# room the 3s drill can't afford.
+soak-nightly:
+	cargo run --release -- soak --secs-per-phase 10 --json \
+		--out results/bench_soak_nightly.json \
+		--baseline rust/benches/common/soak_baseline.json
+
+# Everything CI runs across all jobs, locally: the per-push pipeline plus
+# the python job's pytest and the nightly job's long soak + full figure
+# regeneration. Needs python with pytest/numpy/jax installed.
+ci-full: ci
+	$(MAKE) pytest
+	$(MAKE) soak-nightly
+	cargo run --release -- figures --all
 
 # Figure regeneration (CSV under results/ + ASCII on stdout).
 figures:

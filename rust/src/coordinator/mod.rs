@@ -111,7 +111,7 @@ pub use adaptive::{AdaptiveConfig, AdaptiveController, AdaptiveReport};
 pub use corpus::ServingCorpus;
 pub use overload::{
     GuardrailWindow, OverloadConfig, OverloadController, OverloadReport, Rung, ShedPlan,
-    ShedReject, SloConfig,
+    ShedReject, SloConfig, TenantClass, TenantReport,
 };
 pub use reactor::{ReactorConfig, ReactorReport};
 
@@ -1008,11 +1008,12 @@ enum MergeJob {
         submitted: Instant,
         parts: Vec<mpsc::Receiver<Resp>>,
         resp: mpsc::Sender<Resp>,
-        /// Admitted through the overload controller ([`Router::try_submit`])
-        /// — its completion must be fed back. Plain [`Router::submit`]
-        /// queries are not counted, so mixing the two entry points can
-        /// never underflow the in-flight gauge.
-        counted: bool,
+        /// `Some(tenant)` when admitted through the overload controller
+        /// ([`Router::try_submit_tenant`]) — its completion must be fed
+        /// back to that tenant's accounting. Plain [`Router::submit`]
+        /// queries are `None` (ungoverned), so mixing the two entry
+        /// points can never underflow the in-flight gauge.
+        governed: Option<u32>,
     },
     /// After-merge: merge reduced partials, then fetch the global top-k
     /// from their owners (phase 2) before answering.
@@ -1024,7 +1025,7 @@ enum MergeJob {
         /// Promote-set size: [`SERVE`].topk normally, shrunk by the
         /// ladder's shrink-k rung.
         promote_k: usize,
-        counted: bool,
+        governed: Option<u32>,
     },
     /// Degraded (stage-1-only) answer: merge reduced partials into the
     /// promote set and answer it directly — zero stage-2 device reads.
@@ -1034,7 +1035,7 @@ enum MergeJob {
         parts: Vec<mpsc::Receiver<Resp>>,
         resp: mpsc::Sender<Resp>,
         promote_k: usize,
-        counted: bool,
+        governed: Option<u32>,
     },
 }
 
@@ -1052,8 +1053,8 @@ struct PendingFetch {
     cand: Vec<(f32, u32)>,
     fetch_rx: Vec<mpsc::Receiver<Resp>>,
     batch_size: usize,
-    /// See [`MergeJob::Gather::counted`].
-    counted: bool,
+    /// See [`MergeJob::Gather::governed`].
+    governed: Option<u32>,
 }
 
 /// Router over multiple workers, in replica (round-robin) or partition
@@ -1205,7 +1206,7 @@ impl Router {
             .spawn(move || {
                 while let Ok((pending, resp)) = finish_rx.recv() {
                     let dispatched = pending.dispatched;
-                    let counted = pending.counted;
+                    let governed = pending.governed;
                     let result = finish_two_phase(pending);
                     if let Ok(r) = &result {
                         fin_latency.lock().unwrap().push(r.latency.as_nanos() as f64);
@@ -1214,11 +1215,11 @@ impl Router {
                             ctrl.observe_phase2(dispatched.elapsed().as_nanos() as f64);
                         }
                     }
-                    if counted {
+                    if let Some(tenant) = governed {
                         if let Some(c) = &fin_over {
                             match &result {
-                                Ok(r) => c.on_complete(r.latency.as_nanos() as f64),
-                                Err(_) => c.on_error(),
+                                Ok(r) => c.on_complete_tenant(tenant, r.latency.as_nanos() as f64),
+                                Err(_) => c.on_error_tenant(tenant),
                             }
                         }
                     }
@@ -1230,38 +1231,36 @@ impl Router {
         let merger = std::thread::Builder::new()
             .name("fivemin-gather".into())
             .spawn(move || {
-                // feed one counted completion (or error) to the overload
-                // controller — merger-side answers only; two-phase queries
-                // complete on the finisher thread instead
-                let feed = |counted: bool, result: &Resp| {
-                    if !counted {
-                        return;
-                    }
+                // feed one governed completion (or error) to the overload
+                // controller, per tenant — merger-side answers only;
+                // two-phase queries complete on the finisher thread instead
+                let feed = |governed: Option<u32>, result: &Resp| {
+                    let Some(tenant) = governed else { return };
                     if let Some(c) = &mrg_over {
                         match result {
-                            Ok(r) => c.on_complete(r.latency.as_nanos() as f64),
-                            Err(_) => c.on_error(),
+                            Ok(r) => c.on_complete_tenant(tenant, r.latency.as_nanos() as f64),
+                            Err(_) => c.on_error_tenant(tenant),
                         }
                     }
                 };
                 while let Ok(job) = merge_rx.recv() {
                     match job {
-                        MergeJob::Gather { submitted, parts, resp, counted } => {
+                        MergeJob::Gather { submitted, parts, resp, governed } => {
                             let mut result = gather(parts);
                             if let Ok(r) = &mut result {
                                 r.latency = submitted.elapsed();
                                 ctx.latency.lock().unwrap().push(r.latency.as_nanos() as f64);
                             }
-                            feed(counted, &result);
+                            feed(governed, &result);
                             let _ = resp.send(result);
                         }
-                        MergeJob::Stage1Only { submitted, parts, resp, promote_k, counted } => {
+                        MergeJob::Stage1Only { submitted, parts, resp, promote_k, governed } => {
                             let mut result = stage1_merge(parts, promote_k);
                             if let Ok(r) = &mut result {
                                 r.latency = submitted.elapsed();
                                 ctx.latency.lock().unwrap().push(r.latency.as_nanos() as f64);
                             }
-                            feed(counted, &result);
+                            feed(governed, &result);
                             let _ = resp.send(result);
                         }
                         MergeJob::TwoPhase {
@@ -1270,7 +1269,7 @@ impl Router {
                             parts,
                             resp,
                             promote_k,
-                            counted,
+                            governed,
                         } => {
                             match two_phase_dispatch(&ctx, query, parts, promote_k) {
                                 Ok((cand, fetch_rx, batch_size)) => {
@@ -1282,14 +1281,14 @@ impl Router {
                                             cand,
                                             fetch_rx,
                                             batch_size,
-                                            counted,
+                                            governed,
                                         },
                                         resp,
                                     ));
                                 }
                                 Err(e) => {
                                     let result = Err(e);
-                                    feed(counted, &result);
+                                    feed(governed, &result);
                                     let _ = resp.send(result);
                                 }
                             }
@@ -1452,6 +1451,20 @@ impl Router {
         &self,
         query_full: Vec<f32>,
     ) -> std::result::Result<mpsc::Receiver<Resp>, ShedReject> {
+        self.try_submit_tenant(query_full, 0)
+    }
+
+    /// [`Router::try_submit`] with the admission charged to `tenant`:
+    /// under tenant-aware governance (tenant classes on the
+    /// [`OverloadConfig`]) the granted plan may degrade the over-quota
+    /// tenant harder than a within-quota one at the same rung, and the
+    /// completion feedback credits the same tenant. With no classes the
+    /// tenant id is carried but does not change any decision.
+    pub fn try_submit_tenant(
+        &self,
+        query_full: Vec<f32>,
+        tenant: u32,
+    ) -> std::result::Result<mpsc::Receiver<Resp>, ShedReject> {
         let Some(ctrl) = &self.overload else {
             return Ok(self.submit(query_full));
         };
@@ -1459,7 +1472,7 @@ impl Router {
             // overload routers are partition-mode by construction
             RouteMode::Replicate => Ok(self.submit(query_full)),
             RouteMode::Partition { fetch } => {
-                let plan = ctrl.try_admit()?;
+                let plan = ctrl.try_admit_tenant(tenant)?;
                 Ok(self.dispatch_partition(fetch, query_full, Some(plan)))
             }
         }
@@ -1486,8 +1499,9 @@ impl Router {
         }
         // Only governed (try_submit) queries feed the overload
         // controller's in-flight gauge and latency windows; raw submit()
-        // traffic on the same router stays invisible to it.
-        let counted = plan.is_some();
+        // traffic on the same router stays invisible to it. The plan
+        // carries the tenant the completion must be credited to.
+        let governed = plan.map(|p| p.tenant);
         let (stage1_only, promote_k, eff) =
             resolve_dispatch(plan, fetch, self.adaptive.as_ref(), &self.adaptive_feed);
         let submitted = Instant::now();
@@ -1504,7 +1518,7 @@ impl Router {
             .collect();
         let (rtx, rrx) = mpsc::channel();
         let job = if stage1_only {
-            MergeJob::Stage1Only { submitted, parts, resp: rtx, promote_k, counted }
+            MergeJob::Stage1Only { submitted, parts, resp: rtx, promote_k, governed }
         } else if eff == FetchMode::AfterMerge {
             MergeJob::TwoPhase {
                 submitted,
@@ -1512,10 +1526,10 @@ impl Router {
                 parts,
                 resp: rtx,
                 promote_k,
-                counted,
+                governed,
             }
         } else {
-            MergeJob::Gather { submitted, parts, resp: rtx, counted }
+            MergeJob::Gather { submitted, parts, resp: rtx, governed }
         };
         if let Some(tx) = &self.merge_tx {
             let _ = tx.send(job);

@@ -39,18 +39,39 @@
 //! same reduced scores, same order ([`super::Router`] pins this
 //! bit-identity in its tests and `rust/tests/overload_shedding.rs`).
 //! Rejected queries are *counted and reported*, never silently dropped.
+//!
+//! # Tenant-aware governance
+//!
+//! With [`TenantClass`]es configured the ladder sheds *weighted*, not
+//! uniform: per-tenant windowed accounting tracks each class's recent
+//! admitted share, and a tenant is **shed-eligible** when that share
+//! exceeds its weighted fair share (deficit-style, scaled by a priority
+//! headroom). Above [`Rung::Normal`] an eligible tenant takes the rung's
+//! full degradation while within-quota tenants serve one rung gentler;
+//! at [`Rung::Backpressure`] eligible tenants reject at the depth bar
+//! while within-quota tenants keep a bounded overflow lane. The rung
+//! machinery itself — dwell, hysteresis, escalation order — is entirely
+//! tenant-blind; tenancy only decides *who* absorbs each rung. With no
+//! classes configured every path below reduces exactly to the uniform
+//! ladder.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Mutex;
 
 use crate::runtime::SERVE;
 use crate::storage::{DeviceWindow, TierControl};
+pub use crate::workload::TenantClass;
 
 /// EWMA smoothing for the device-occupancy observability signal.
 const EWMA_ALPHA: f64 = 0.4;
 
 /// Guardrail windows of history kept for reporting.
 const LOG_CAP: usize = 64;
+
+/// Exponential-window decay applied to per-tenant admitted/shed counts at
+/// every guardrail window boundary. Uniform across tenants, so it changes
+/// shares' *freshness* but never their ratios within a window.
+const TENANT_DECAY: f64 = 0.5;
 
 /// Hard latency service-level objectives for accepted queries, plus the
 /// queue-depth bar that backs the final rejection rung.
@@ -110,7 +131,7 @@ impl Rung {
 }
 
 /// Tuning of the [`OverloadController`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct OverloadConfig {
     pub slo: SloConfig,
     /// Completed queries per guardrail window.
@@ -130,6 +151,20 @@ pub struct OverloadConfig {
     /// Tier-budget clamp (permille) applied from [`Rung::TightTier`]
     /// upward; released to 1000 when the ladder steps back below it.
     pub tier_clamp_pm: u64,
+    /// Tenant admission classes for weighted shedding. Empty means
+    /// tenant-blind governance — every query is treated uniformly,
+    /// exactly the pre-tenancy ladder.
+    pub tenants: Vec<TenantClass>,
+    /// Multiplicative headroom on a tenant's fair share before it becomes
+    /// shed-eligible (≥ 1 leaves transient-skew slack; further scaled per
+    /// priority tier).
+    pub share_slack: f64,
+    /// Overflow lane at [`Rung::Backpressure`], as a fraction of
+    /// `max_queue_depth`: within-quota tenants may still be admitted up
+    /// to `depth + max(1, depth × overflow_frac)` in flight while
+    /// over-quota tenants reject at the depth bar. Keeps the queue
+    /// bounded without letting one whale starve the tail.
+    pub overflow_frac: f64,
 }
 
 impl OverloadConfig {
@@ -146,11 +181,16 @@ impl OverloadConfig {
             full_k: SERVE.topk,
             shrink_k: (SERVE.topk / 4).max(1),
             tier_clamp_pm: 500,
+            tenants: Vec::new(),
+            share_slack: 1.2,
+            overflow_frac: 0.25,
         }
     }
 }
 
-/// What an admitted query is allowed to do, per the current rung.
+/// What an admitted query is allowed to do. `rung` is the *effective*
+/// rung for this query: with tenant classes configured, a within-quota
+/// tenant's plan may sit one rung below the ladder's current position.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ShedPlan {
     pub rung: Rung,
@@ -158,6 +198,9 @@ pub struct ShedPlan {
     pub promote_k: usize,
     /// Answer from stage-1 reduced scores only — no stage-2 fetch legs.
     pub stage1_only: bool,
+    /// Tenant the admission was charged to (0 under tenant-blind
+    /// governance). Completion feedback must carry it back.
+    pub tenant: u32,
 }
 
 /// A rejected admission (the caller owns reporting it upstream).
@@ -165,6 +208,8 @@ pub struct ShedPlan {
 pub struct ShedReject {
     pub rung: Rung,
     pub in_flight: usize,
+    /// Tenant the shed was charged to.
+    pub tenant: u32,
 }
 
 /// One guardrail window's record (bounded history for reporting).
@@ -188,6 +233,29 @@ pub struct GuardrailWindow {
     pub rung: Rung,
 }
 
+/// Per-class accounting snapshot (tenant-aware governance only; empty
+/// under the tenant-blind ladder).
+#[derive(Clone, Copy, Debug)]
+pub struct TenantReport {
+    /// Class tenant id; `u32::MAX` for the catch-all slot that absorbs
+    /// tenants outside every configured class.
+    pub tenant: u32,
+    pub weight: f64,
+    pub priority: u8,
+    /// Normalized weighted fair share of admissions.
+    pub fair_share: f64,
+    /// Recent (exponentially windowed) admitted share.
+    pub share: f64,
+    /// Currently past its slack-scaled fair share, i.e. shed-eligible.
+    pub over_quota: bool,
+    pub admitted: u64,
+    pub shed: u64,
+    pub completed: u64,
+    pub errors: u64,
+    /// Mean latency of completed queries (µs); 0 when none completed.
+    pub mean_latency_us: f64,
+}
+
 /// Snapshot of the controller for reporting.
 #[derive(Clone, Debug)]
 pub struct OverloadReport {
@@ -200,9 +268,30 @@ pub struct OverloadReport {
     pub in_flight: usize,
     /// Recent guardrail windows (bounded, oldest first).
     pub windows: Vec<GuardrailWindow>,
+    /// Per-tenant accounting, classes first then the catch-all slot if
+    /// it saw traffic. Empty under tenant-blind governance.
+    pub tenants: Vec<TenantReport>,
+}
+
+/// Windowed per-tenant accounting. The `window_*` counts decay by
+/// [`TENANT_DECAY`] at every guardrail window boundary — an exponential
+/// window, so deficit shares track recent traffic without a second ring
+/// buffer; the plain counters are lifetime totals for reporting.
+#[derive(Clone, Copy, Debug, Default)]
+struct TenantAcct {
+    admitted: u64,
+    shed: u64,
+    completed: u64,
+    errors: u64,
+    lat_sum_us: f64,
+    window_admitted: f64,
+    window_shed: f64,
 }
 
 struct State {
+    /// One slot per configured class plus a trailing catch-all for
+    /// unknown tenants; empty under tenant-blind governance.
+    tenants: Vec<TenantAcct>,
     rung: Rung,
     in_flight: usize,
     admitted: u64,
@@ -234,7 +323,27 @@ pub struct OverloadController {
     cfg: OverloadConfig,
     /// The DRAM tier's live budget knob, when the backend has a tier.
     tier: Option<TierControl>,
+    /// Tenant id → accounting slot (class order); unknown tenants share
+    /// the trailing catch-all slot.
+    tenant_idx: HashMap<u32, usize>,
+    /// Normalized fair share per slot. The catch-all inherits the
+    /// smallest class share: an uncontracted tenant gets no more
+    /// protection than the smallest contract.
+    fair_share: Vec<f64>,
+    /// Priority tier per slot (catch-all is best-effort).
+    priority: Vec<u8>,
     state: Mutex<State>,
+}
+
+/// Priority scales the fair-share headroom: premium tenants (tier 0)
+/// tolerate more transient overshoot before becoming shed-eligible,
+/// best-effort tenants (tier 2+) qualify sooner.
+fn priority_headroom(p: u8) -> f64 {
+    match p {
+        0 => 1.5,
+        1 => 1.0,
+        _ => 0.7,
+    }
 }
 
 /// `samples` must be sorted ascending; nearest-rank percentile.
@@ -253,12 +362,33 @@ impl OverloadController {
             margin: cfg.margin.clamp(0.0, 1.0),
             full_k: cfg.full_k.max(1),
             shrink_k: cfg.shrink_k.clamp(1, cfg.full_k.max(1)),
+            share_slack: cfg.share_slack.max(1.0),
+            overflow_frac: cfg.overflow_frac.clamp(0.0, 1.0),
             ..cfg
         };
+        let mut tenant_idx = HashMap::new();
+        let mut fair_share = Vec::new();
+        let mut priority = Vec::new();
+        let slots = if cfg.tenants.is_empty() { 0 } else { cfg.tenants.len() + 1 };
+        if slots > 0 {
+            let total: f64 = cfg.tenants.iter().map(|c| c.weight.max(1e-9)).sum();
+            for (i, c) in cfg.tenants.iter().enumerate() {
+                tenant_idx.insert(c.tenant, i);
+                fair_share.push(c.weight.max(1e-9) / total);
+                priority.push(c.priority);
+            }
+            // catch-all slot for tenants outside every class
+            fair_share.push(fair_share.iter().cloned().fold(f64::INFINITY, f64::min));
+            priority.push(2);
+        }
         OverloadController {
             cfg,
             tier,
+            tenant_idx,
+            fair_share,
+            priority,
             state: Mutex::new(State {
+                tenants: vec![TenantAcct::default(); slots],
                 rung: Rung::Normal,
                 in_flight: 0,
                 admitted: 0,
@@ -282,45 +412,100 @@ impl OverloadController {
         &self.cfg
     }
 
-    /// Admit one query (or reject it at the final rung). The returned
-    /// plan is what the *router* must do for this query — the plan is
-    /// decided here, atomically with admission, so a rung change between
-    /// admission and dispatch cannot produce a half-degraded query.
+    /// Tenant-blind admission: charges tenant 0 (the catch-all when
+    /// classes are configured but 0 is not among them).
     pub fn try_admit(&self) -> Result<ShedPlan, ShedReject> {
+        self.try_admit_tenant(0)
+    }
+
+    /// Admit one query for `tenant` (or reject it at the final rung).
+    /// The returned plan is what the *router* must do for this query —
+    /// the plan is decided here, atomically with admission, so a rung
+    /// change between admission and dispatch cannot produce a
+    /// half-degraded query.
+    ///
+    /// With tenant classes configured, shed-eligibility is deficit-style
+    /// and computed *before* this admission is recorded (a judgement on
+    /// the recent past, deterministic in admission order): an over-quota
+    /// tenant takes the current rung's full plan and rejects at the
+    /// depth bar, a within-quota tenant serves one rung gentler and
+    /// keeps the bounded overflow lane at [`Rung::Backpressure`]. At
+    /// [`Rung::Normal`] every tenant gets the full plan, so per-tenant
+    /// answers stay bit-identical to the ungoverned router.
+    pub fn try_admit_tenant(&self, tenant: u32) -> Result<ShedPlan, ShedReject> {
         let mut st = self.state.lock().unwrap();
-        if st.rung == Rung::Backpressure && st.in_flight >= self.cfg.slo.max_queue_depth {
+        let aware = !st.tenants.is_empty();
+        let slot = self.slot_of(tenant);
+        let eligible = !aware || self.shed_eligible(&st, slot);
+        let depth = self.cfg.slo.max_queue_depth;
+        let bound = if eligible { depth } else { depth + self.overflow_slots() };
+        if st.rung == Rung::Backpressure && st.in_flight >= bound {
             st.rejected += 1;
-            return Err(ShedReject { rung: st.rung, in_flight: st.in_flight });
+            if aware {
+                let a = &mut st.tenants[slot];
+                a.shed += 1;
+                a.window_shed += 1.0;
+            }
+            return Err(ShedReject { rung: st.rung, in_flight: st.in_flight, tenant });
         }
         st.in_flight += 1;
         st.admitted += 1;
+        if aware {
+            let a = &mut st.tenants[slot];
+            a.admitted += 1;
+            a.window_admitted += 1.0;
+        }
         st.depth_peak = st.depth_peak.max(st.in_flight);
         // The depth guardrail escalates at admission time, bypassing the
         // window dwell: if completions stall there are no window
         // boundaries, and dwelling would mean unbounded queueing. One
         // rung per admission keeps it deterministic and bounds the queue
-        // at max_queue_depth + the rungs left to climb.
-        if st.in_flight > self.cfg.slo.max_queue_depth && st.rung != Rung::Backpressure {
+        // at max_queue_depth + the rungs left to climb (+ the overflow
+        // lane under tenant-aware governance).
+        if st.in_flight > depth && st.rung != Rung::Backpressure {
             let next = st.rung.up();
             self.apply_rung(&mut st, next);
             st.escalations += 1;
             st.healthy_streak = 0;
         }
-        Ok(self.plan(st.rung))
+        // Weighted shedding: above Normal the rung's full degradation
+        // lands on shed-eligible tenants; within-quota tenants get one
+        // rung of grace.
+        let rung = if eligible || st.rung == Rung::Normal { st.rung } else { st.rung.down() };
+        Ok(self.plan(rung, tenant))
     }
 
-    /// Feed back one accepted query's completion latency (ns). Window
-    /// evaluation happens here, every `window` completions.
+    /// Tenant-blind completion feedback: charges tenant 0.
     pub fn on_complete(&self, latency_ns: f64) {
+        self.on_complete_tenant(0, latency_ns);
+    }
+
+    /// Feed back one accepted query's completion latency (ns), credited
+    /// to `tenant`. Window evaluation happens here, every `window`
+    /// completions.
+    pub fn on_complete_tenant(&self, tenant: u32, latency_ns: f64) {
         let mut st = self.state.lock().unwrap();
         st.in_flight = st.in_flight.saturating_sub(1);
         st.completed += 1;
+        if !st.tenants.is_empty() {
+            let slot = self.slot_of(tenant);
+            st.tenants[slot].completed += 1;
+        }
         if latency_ns.is_finite() && latency_ns >= 0.0 {
             st.samples.push(latency_ns / 1_000.0);
+            if !st.tenants.is_empty() {
+                let slot = self.slot_of(tenant);
+                st.tenants[slot].lat_sum_us += latency_ns / 1_000.0;
+            }
         }
         if st.samples.len() + st.window_errors >= self.cfg.window {
             self.on_window_boundary(&mut st);
         }
+    }
+
+    /// Tenant-blind error feedback: charges tenant 0.
+    pub fn on_error(&self) {
+        self.on_error_tenant(0);
     }
 
     /// An admitted query died without a latency (worker error): release
@@ -329,13 +514,47 @@ impl OverloadController {
     /// not, a pure-error storm would stop closing windows and the
     /// ladder would freeze at whatever rung it held when the errors
     /// began, unable to step back down once healthy traffic returns.
-    pub fn on_error(&self) {
+    pub fn on_error_tenant(&self, tenant: u32) {
         let mut st = self.state.lock().unwrap();
         st.in_flight = st.in_flight.saturating_sub(1);
         st.window_errors += 1;
+        if !st.tenants.is_empty() {
+            let slot = self.slot_of(tenant);
+            st.tenants[slot].errors += 1;
+        }
         if st.samples.len() + st.window_errors >= self.cfg.window {
             self.on_window_boundary(&mut st);
         }
+    }
+
+    /// Accounting slot for a tenant id (catch-all when unclassified).
+    /// Only meaningful under tenant-aware governance.
+    fn slot_of(&self, tenant: u32) -> usize {
+        self.tenant_idx.get(&tenant).copied().unwrap_or(self.fair_share.len().saturating_sub(1))
+    }
+
+    /// Deficit test: is `slot`'s recent admitted share past its
+    /// slack-and-priority-scaled fair share? Requires a minimum scope of
+    /// recent admissions before judging anyone — cold-start traffic is
+    /// never shed-eligible on a handful of samples.
+    fn shed_eligible(&self, st: &State, slot: usize) -> bool {
+        let total: f64 = st.tenants.iter().map(|a| a.window_admitted).sum();
+        if total < self.min_scope() {
+            return false;
+        }
+        let share = st.tenants[slot].window_admitted / total;
+        share > self.fair_share[slot] * self.cfg.share_slack * priority_headroom(self.priority[slot])
+    }
+
+    /// Minimum recent-admission mass before the deficit test may judge a
+    /// tenant. Scales down with tiny windows (the exponential window's
+    /// steady-state mass is about one window's worth).
+    fn min_scope(&self) -> f64 {
+        (self.cfg.window as f64 * 0.5).min(8.0).max(1.0)
+    }
+
+    fn overflow_slots(&self) -> usize {
+        ((self.cfg.slo.max_queue_depth as f64 * self.cfg.overflow_frac) as usize).max(1)
     }
 
     /// Feed the fused device window (occupancy observability for the
@@ -368,6 +587,32 @@ impl OverloadController {
 
     pub fn report(&self) -> OverloadReport {
         let st = self.state.lock().unwrap();
+        let total_window: f64 = st.tenants.iter().map(|a| a.window_admitted).sum();
+        let mut tenants = Vec::new();
+        for (slot, acct) in st.tenants.iter().enumerate() {
+            let is_catch_all = slot == st.tenants.len() - 1;
+            if is_catch_all && acct.admitted == 0 && acct.shed == 0 {
+                continue; // no unclassified traffic: keep the report tidy
+            }
+            let class = (!is_catch_all).then(|| &self.cfg.tenants[slot]);
+            tenants.push(TenantReport {
+                tenant: class.map_or(u32::MAX, |c| c.tenant),
+                weight: class.map_or(0.0, |c| c.weight),
+                priority: self.priority[slot],
+                fair_share: self.fair_share[slot],
+                share: if total_window > 0.0 { acct.window_admitted / total_window } else { 0.0 },
+                over_quota: self.shed_eligible(&st, slot),
+                admitted: acct.admitted,
+                shed: acct.shed,
+                completed: acct.completed,
+                errors: acct.errors,
+                mean_latency_us: if acct.completed > 0 {
+                    acct.lat_sum_us / acct.completed as f64
+                } else {
+                    0.0
+                },
+            });
+        }
         OverloadReport {
             rung: st.rung,
             admitted: st.admitted,
@@ -377,18 +622,19 @@ impl OverloadController {
             de_escalations: st.de_escalations,
             in_flight: st.in_flight,
             windows: st.log.iter().copied().collect(),
+            tenants,
         }
     }
 
-    fn plan(&self, rung: Rung) -> ShedPlan {
+    fn plan(&self, rung: Rung, tenant: u32) -> ShedPlan {
         match rung {
             Rung::Normal => {
-                ShedPlan { rung, promote_k: self.cfg.full_k, stage1_only: false }
+                ShedPlan { rung, promote_k: self.cfg.full_k, stage1_only: false, tenant }
             }
             Rung::ShrinkK => {
-                ShedPlan { rung, promote_k: self.cfg.shrink_k, stage1_only: false }
+                ShedPlan { rung, promote_k: self.cfg.shrink_k, stage1_only: false, tenant }
             }
-            _ => ShedPlan { rung, promote_k: self.cfg.shrink_k, stage1_only: true },
+            _ => ShedPlan { rung, promote_k: self.cfg.shrink_k, stage1_only: true, tenant },
         }
     }
 
@@ -464,6 +710,14 @@ impl OverloadController {
         }
         st.log.push_back(entry);
         st.depth_peak = st.in_flight;
+        // Exponential per-tenant window: decay every slot uniformly, so
+        // shares stay comparable while old traffic stops counting — a
+        // cooled-off whale requalifies for full service within a few
+        // windows.
+        for a in st.tenants.iter_mut() {
+            a.window_admitted *= TENANT_DECAY;
+            a.window_shed *= TENANT_DECAY;
+        }
     }
 }
 
@@ -487,10 +741,34 @@ mod tests {
                 full_k: 16,
                 shrink_k: 4,
                 tier_clamp_pm: 500,
-                slo: slo(),
+                ..OverloadConfig::for_slo(slo())
             },
             None,
         )
+    }
+
+    /// Inert guardrails (huge budgets, windows that never close) with
+    /// tenant classes: only forced rungs and admission accounting act.
+    fn tenant_ctrl(classes: Vec<TenantClass>, depth: usize) -> OverloadController {
+        OverloadController::new(
+            OverloadConfig {
+                window: 1 << 30,
+                full_k: 16,
+                shrink_k: 4,
+                tenants: classes,
+                ..OverloadConfig::for_slo(SloConfig {
+                    p50_us: 1e12,
+                    p95_us: 1e12,
+                    p99_us: 1e12,
+                    max_queue_depth: depth,
+                })
+            },
+            None,
+        )
+    }
+
+    fn even_classes(n: u32) -> Vec<TenantClass> {
+        (0..n).map(|t| TenantClass { tenant: t, weight: 1.0 / n as f64, priority: 1 }).collect()
     }
 
     /// Drive one full guardrail window: admit + complete `window`
@@ -506,7 +784,10 @@ mod tests {
     fn normal_rung_grants_the_full_plan() {
         let c = ctrl(0);
         let plan = c.try_admit().unwrap();
-        assert_eq!(plan, ShedPlan { rung: Rung::Normal, promote_k: 16, stage1_only: false });
+        assert_eq!(
+            plan,
+            ShedPlan { rung: Rung::Normal, promote_k: 16, stage1_only: false, tenant: 0 }
+        );
         c.on_complete(50_000.0);
         let r = c.report();
         assert_eq!((r.admitted, r.completed, r.rejected, r.in_flight), (1, 1, 0, 0));
@@ -633,7 +914,7 @@ mod tests {
                 full_k: 16,
                 shrink_k: 4,
                 tier_clamp_pm: 250,
-                slo: slo(),
+                ..OverloadConfig::for_slo(slo())
             },
             Some(tier.clone()),
         );
@@ -742,5 +1023,181 @@ mod tests {
         }
         assert_eq!(Rung::Backpressure.up(), Rung::Backpressure);
         assert_eq!(Rung::Normal.down(), Rung::Normal);
+    }
+
+    #[test]
+    fn tenant_blind_admission_ignores_tenant_ids() {
+        // no classes configured: any tenant id takes the uniform path
+        let c = ctrl(0);
+        let a = c.try_admit_tenant(7).unwrap();
+        let b = c.try_admit().unwrap();
+        assert_eq!((a.rung, a.promote_k, a.stage1_only), (b.rung, b.promote_k, b.stage1_only));
+        assert_eq!((a.tenant, b.tenant), (7, 0));
+        c.on_complete_tenant(7, 1_000.0);
+        c.on_complete(1_000.0);
+        let r = c.report();
+        assert!(r.tenants.is_empty(), "no per-tenant report without classes");
+        assert_eq!((r.admitted, r.completed), (2, 2));
+    }
+
+    #[test]
+    fn over_quota_tenant_takes_the_rung_within_quota_serves_one_gentler() {
+        let c = tenant_ctrl(even_classes(4), 1 << 20);
+        // make tenant 0 dominate the recent window (share 1.0 > 0.25·1.2)
+        for _ in 0..30 {
+            c.try_admit_tenant(0).unwrap();
+            c.on_complete_tenant(0, 1_000.0);
+        }
+        c.force_rung(Rung::ShrinkK);
+        let hot = c.try_admit_tenant(0).unwrap();
+        assert_eq!((hot.rung, hot.promote_k, hot.stage1_only), (Rung::ShrinkK, 4, false));
+        let cold = c.try_admit_tenant(1).unwrap();
+        assert_eq!(
+            (cold.rung, cold.promote_k, cold.stage1_only),
+            (Rung::Normal, 16, false),
+            "within-quota tenant gets one rung of grace"
+        );
+        c.force_rung(Rung::Stage1Only);
+        let hot = c.try_admit_tenant(0).unwrap();
+        assert!(hot.stage1_only);
+        let cold = c.try_admit_tenant(1).unwrap();
+        assert_eq!(
+            (cold.rung, cold.promote_k, cold.stage1_only),
+            (Rung::ShrinkK, 4, false)
+        );
+        // at Normal everyone gets the full plan, over quota or not
+        c.force_rung(Rung::Normal);
+        let hot = c.try_admit_tenant(0).unwrap();
+        assert_eq!((hot.promote_k, hot.stage1_only), (16, false));
+    }
+
+    #[test]
+    fn backpressure_keeps_an_overflow_lane_for_within_quota_tenants() {
+        // depth 8, default overflow_frac 0.25 → overflow lane of 2 slots
+        let c = tenant_ctrl(even_classes(2), 8);
+        // build shares with drained admissions: t0 hot, t1 cold
+        for _ in 0..16 {
+            c.try_admit_tenant(0).unwrap();
+            c.on_complete_tenant(0, 1_000.0);
+        }
+        for _ in 0..2 {
+            c.try_admit_tenant(1).unwrap();
+            c.on_complete_tenant(1, 1_000.0);
+        }
+        c.force_rung(Rung::Backpressure);
+        // the over-quota tenant fills the queue to the depth bar, then
+        // rejects
+        for _ in 0..8 {
+            c.try_admit_tenant(0).unwrap();
+        }
+        let rej = c.try_admit_tenant(0).unwrap_err();
+        assert_eq!((rej.tenant, rej.in_flight), (0, 8));
+        // the within-quota tenant still has the overflow lane
+        for _ in 0..2 {
+            c.try_admit_tenant(1).unwrap();
+        }
+        let rej = c.try_admit_tenant(1).unwrap_err();
+        assert_eq!((rej.tenant, rej.in_flight), (1, 10), "overflow lane is bounded too");
+        let r = c.report();
+        let t0 = r.tenants.iter().find(|t| t.tenant == 0).unwrap();
+        let t1 = r.tenants.iter().find(|t| t.tenant == 1).unwrap();
+        assert!(t0.over_quota && !t1.over_quota);
+        assert_eq!((t0.shed, t1.shed), (1, 1));
+        assert_eq!(r.admitted + r.rejected, 16 + 2 + 9 + 3);
+    }
+
+    #[test]
+    fn priority_tiers_scale_the_fair_share_headroom() {
+        // equal weights, equal shares: only priority separates them
+        let classes = vec![
+            TenantClass { tenant: 0, weight: 0.5, priority: 0 }, // premium
+            TenantClass { tenant: 1, weight: 0.5, priority: 2 }, // best-effort
+        ];
+        let c = tenant_ctrl(classes, 1 << 20);
+        for _ in 0..10 {
+            c.try_admit_tenant(0).unwrap();
+            c.on_complete_tenant(0, 1_000.0);
+            c.try_admit_tenant(1).unwrap();
+            c.on_complete_tenant(1, 1_000.0);
+        }
+        // share 0.5 each; premium bar 0.5·1.2·1.5 = 0.9 (under), best-
+        // effort bar 0.5·1.2·0.7 = 0.42 (over)
+        c.force_rung(Rung::ShrinkK);
+        let premium = c.try_admit_tenant(0).unwrap();
+        assert_eq!(premium.rung, Rung::Normal, "premium keeps headroom at equal share");
+        let best_effort = c.try_admit_tenant(1).unwrap();
+        assert_eq!(best_effort.rung, Rung::ShrinkK, "best-effort sheds first");
+        let r = c.report();
+        assert!(!r.tenants[0].over_quota && r.tenants[1].over_quota);
+    }
+
+    #[test]
+    fn unknown_tenants_land_in_the_catch_all_slot() {
+        let c = tenant_ctrl(even_classes(2), 1 << 20);
+        c.try_admit_tenant(99).unwrap();
+        c.on_complete_tenant(99, 2_000.0);
+        let r = c.report();
+        let catch_all = r.tenants.iter().find(|t| t.tenant == u32::MAX).unwrap();
+        assert_eq!((catch_all.admitted, catch_all.completed), (1, 1));
+        assert_eq!(catch_all.priority, 2, "unclassified traffic is best-effort");
+        assert!((catch_all.mean_latency_us - 2.0).abs() < 1e-9);
+        assert!(
+            (catch_all.fair_share - 0.5).abs() < 1e-9,
+            "catch-all inherits the smallest class share"
+        );
+    }
+
+    #[test]
+    fn window_decay_lets_a_cooled_tenant_requalify() {
+        // real (small) windows so boundaries decay the tenant counters;
+        // huge latency budgets keep the rung at Normal throughout
+        let c = OverloadController::new(
+            OverloadConfig {
+                window: 4,
+                tenants: even_classes(2),
+                ..OverloadConfig::for_slo(SloConfig {
+                    p50_us: 1e12,
+                    p95_us: 1e12,
+                    p99_us: 1e12,
+                    max_queue_depth: 1 << 20,
+                })
+            },
+            None,
+        );
+        for _ in 0..12 {
+            c.try_admit_tenant(0).unwrap();
+            c.on_complete_tenant(0, 10_000.0);
+        }
+        let r = c.report();
+        assert!(r.tenants[0].over_quota, "hot tenant over quota while dominating");
+        // traffic shifts entirely to tenant 1: boundaries halve tenant
+        // 0's windowed share until it requalifies
+        for _ in 0..8 {
+            c.try_admit_tenant(1).unwrap();
+            c.on_complete_tenant(1, 10_000.0);
+        }
+        let r = c.report();
+        assert!(!r.tenants[0].over_quota, "cooled tenant requalifies for full service");
+        assert!(r.tenants[1].over_quota, "the new whale takes its place");
+    }
+
+    #[test]
+    fn report_carries_per_tenant_accounting() {
+        let c = tenant_ctrl(even_classes(2), 1 << 20);
+        c.try_admit_tenant(0).unwrap();
+        c.on_complete_tenant(0, 4_000.0);
+        c.try_admit_tenant(0).unwrap();
+        c.on_complete_tenant(0, 8_000.0);
+        c.try_admit_tenant(1).unwrap();
+        c.on_error_tenant(1);
+        let r = c.report();
+        assert_eq!(r.tenants.len(), 2, "untouched catch-all slot is omitted");
+        let t0 = &r.tenants[0];
+        assert_eq!((t0.admitted, t0.completed, t0.shed, t0.errors), (2, 2, 0, 0));
+        assert!((t0.mean_latency_us - 6.0).abs() < 1e-9);
+        assert!((t0.weight - 0.5).abs() < 1e-9 && (t0.fair_share - 0.5).abs() < 1e-9);
+        let t1 = &r.tenants[1];
+        assert_eq!((t1.admitted, t1.completed, t1.errors), (1, 0, 1));
+        assert_eq!(t1.mean_latency_us, 0.0);
     }
 }

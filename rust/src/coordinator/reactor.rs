@@ -185,8 +185,9 @@ enum QState {
 /// One tracked (admitted) query.
 struct InFlight {
     submitted: Instant,
-    /// See [`ReactorJob::plan`] — governed queries feed the ladder.
-    counted: bool,
+    /// See [`ReactorJob::plan`] — governed queries feed the ladder,
+    /// credited to the tenant the plan charged.
+    governed: Option<u32>,
     state: QState,
     resp: mpsc::Sender<Resp>,
 }
@@ -297,7 +298,7 @@ pub(crate) fn run(ctx: ReactorCtx, inbox: mpsc::Receiver<ReactorJob>) {
 /// controller's per-query protocol decision) identically.
 fn admit(ctx: &ReactorCtx, job: ReactorJob) -> InFlight {
     let ReactorJob { submitted, query, resp, plan } = job;
-    let counted = plan.is_some();
+    let governed = plan.map(|p| p.tenant);
     let (stage1_only, promote_k, eff) =
         resolve_dispatch(plan, ctx.fetch, ctx.adaptive.as_ref(), &ctx.adaptive_feed);
     let two_phase = stage1_only || eff == FetchMode::AfterMerge;
@@ -320,7 +321,7 @@ fn admit(ctx: &ReactorCtx, job: ReactorJob) -> InFlight {
         QState::Gather { legs }
     };
     ctx.metrics.admitted.fetch_add(1, Ordering::Relaxed);
-    InFlight { submitted, counted, state, resp }
+    InFlight { submitted, governed, state, resp }
 }
 
 /// Sweep a leg set with `try_recv`. Returns `(all_answered, any_new)`;
@@ -412,11 +413,11 @@ fn finalize(ctx: &ReactorCtx, f: InFlight, mut result: Resp) {
         r.latency = f.submitted.elapsed();
         ctx.latency.lock().unwrap().push(r.latency.as_nanos() as f64);
     }
-    if f.counted {
+    if let Some(tenant) = f.governed {
         if let Some(c) = &ctx.overload {
             match &result {
-                Ok(r) => c.on_complete(r.latency.as_nanos() as f64),
-                Err(_) => c.on_error(),
+                Ok(r) => c.on_complete_tenant(tenant, r.latency.as_nanos() as f64),
+                Err(_) => c.on_error_tenant(tenant),
             }
         }
     }

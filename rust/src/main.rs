@@ -70,7 +70,7 @@ fn print_help() {
          \x20 config     --dump\n\
          \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N[,map=interleave]]|uring[:path=FILE]] [--pace afap|wall:S] [--fetch spec|merge|adaptive] [--serve threads|reactor] [--admission N] [--tier none|dram:mb=N,rule=breakeven|5min|5s|clock]\n\
          \x20 smoke      [--queries N] [--json] [--out FILE] [--baseline FILE] [--tolerance T]\n\
-         \x20 soak       [--secs-per-phase S] [--shards N] [--max-arrivals N] [--depth N] [--p99-us US] [--backend SPEC] [--tier SPEC] [--json] [--out FILE] [--baseline FILE] [--seed N]"
+         \x20 soak       [--secs-per-phase S] [--shards N] [--max-arrivals N] [--depth N] [--p99-us US] [--backend SPEC] [--tier SPEC] [--tenant-classes N] [--json] [--out FILE] [--baseline FILE] [--seed N]"
     );
 }
 
@@ -441,6 +441,14 @@ fn cmd_soak(args: &[String]) -> Result<(), String> {
     .opt("p50-us", "US", Some("0"), "p50 SLO budget (0 = derive)")
     .opt("seed", "N", Some("20652"), "arrival-process seed")
     .opt(
+        "tenant-classes",
+        "N",
+        Some("8"),
+        "tenant classes for weighted shedding: arrivals carry zipf-skewed tenant ids, the \
+         ladder gets matching derived weight contracts, and the report breaks accept/shed \
+         down per tenant (0 = legacy tenant-blind drill)",
+    )
+    .opt(
         "backend",
         "SPEC",
         Some("mem"),
@@ -492,9 +500,13 @@ fn cmd_soak(args: &[String]) -> Result<(), String> {
         seed: p.u64("seed").map_err(|e| e.to_string())?.unwrap(),
         backend,
         tier,
+        tenant_classes: p.usize("tenant-classes").map_err(|e| e.to_string())?.unwrap(),
     };
     let run = fivemin::soak::run_soak(&cfg).map_err(|e| e.to_string())?;
     println!("{}", fivemin::soak::table(&run).render());
+    if let Some(t) = fivemin::soak::tenant_table(&run) {
+        println!("{}", t.render());
+    }
     if p.flag("json") || p.str("baseline").is_some() {
         let out = PathBuf::from(p.str("out").unwrap());
         fivemin::soak::write_artifact(&out, &run).map_err(|e| e.to_string())?;

@@ -29,6 +29,12 @@
 //!   ends.
 //! * **Worker errors fail the gate unconditionally** — an admitted query
 //!   that dies is a collapse, not a shed.
+//! * **The fairness gate rides the sustained phase** (tenant-aware
+//!   drills, `--tenant-classes N`): arrivals carry zipf-skewed tenant
+//!   ids, the governor runs with the matching derived [`TenantClass`]es,
+//!   and the baseline's `"fairness"` block bounds every cold tenant's
+//!   shed rate by a multiple of the hot tenant's — the hot tenant may
+//!   not starve the tail.
 //!
 //! The JSON artifact (`results/bench_soak.json`) is uploaded by the
 //! `soak-drill` CI job; the gate compares against
@@ -51,10 +57,11 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::Samples;
 use crate::util::table::Table;
-use crate::workload::{ArrivalConfig, ArrivalGen};
+use crate::workload::{ArrivalConfig, ArrivalGen, TenantClass};
 
 /// Artifact/baseline schema tag (bump on breaking shape changes).
-pub const SCHEMA: &str = "fivemin-bench-soak/v1";
+/// v2: per-phase `"tenants"` breakdown + the `"fairness"` gate block.
+pub const SCHEMA: &str = "fivemin-bench-soak/v2";
 
 /// Soak-drill knobs (CLI-facing; zero means "derive").
 #[derive(Clone, Debug)]
@@ -87,6 +94,12 @@ pub struct SoakConfig {
     /// also handed to the overload ladder — the TightTier rung's budget
     /// clamp then squeezes real tier capacity, end to end.
     pub tier: Option<TierSpec>,
+    /// Tenant classes for tenant-aware governance (`--tenant-classes`):
+    /// arrivals are attributed over this many zipf-skewed tenants, the
+    /// ladder gets the matching derived [`TenantClass`] contracts, and
+    /// every phase reports a per-tenant accept/shed/percentile
+    /// breakdown. 0 runs the legacy tenant-blind drill.
+    pub tenant_classes: usize,
 }
 
 impl Default for SoakConfig {
@@ -102,6 +115,7 @@ impl Default for SoakConfig {
             seed: 0x50AC,
             backend: BackendSpec::Mem,
             tier: None,
+            tenant_classes: 8,
         }
     }
 }
@@ -130,6 +144,21 @@ pub fn phase_plan() -> [PhaseSpec; 4] {
     ]
 }
 
+/// One tenant's slice of a phase (tenant-aware drills only).
+#[derive(Clone, Debug)]
+pub struct TenantPhase {
+    pub tenant: u32,
+    pub arrivals: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    /// Accepted queries answered stage-1-only.
+    pub degraded: usize,
+    /// p99 latency of this tenant's accepted completions (µs).
+    pub p99_us: f64,
+    /// `rejected / arrivals` — what the fairness gate bounds.
+    pub shed_rate: f64,
+}
+
 /// One phase's guardrail verdict.
 #[derive(Clone, Debug)]
 pub struct PhaseResult {
@@ -155,6 +184,9 @@ pub struct PhaseResult {
     pub rung_end: usize,
     /// `p99_us` within the derived/configured SLO budget.
     pub within_slo: bool,
+    /// Per-tenant breakdown, tenants with traffic only (empty on
+    /// tenant-blind drills).
+    pub tenants: Vec<TenantPhase>,
 }
 
 /// A complete drill: the calibration, the SLOs it derived, and the
@@ -181,6 +213,16 @@ pub fn derive_slo(capacity_qps: f64, cfg: &SoakConfig) -> SloConfig {
 }
 
 type RespRx = mpsc::Receiver<Result<QueryResult, String>>;
+
+/// Per-tenant accumulator for one phase.
+#[derive(Default)]
+struct TenantAccum {
+    arrivals: usize,
+    accepted: usize,
+    rejected: usize,
+    degraded: usize,
+    lat: Vec<f64>,
+}
 
 /// One partition worker per shard on the configured backend. Each
 /// worker's device is sized to its slice; with a tier configured, every
@@ -231,18 +273,27 @@ fn calibrate(corpus: &Arc<ServingCorpus>, cfg: &SoakConfig) -> Result<f64> {
     Ok(n as f64 / wall)
 }
 
-/// Sweep the pending queue once, recording finished queries.
+/// Sweep the pending queue once, recording finished queries (globally
+/// and into the submitting tenant's accumulator).
 fn drain_completions(
-    pending: &mut Vec<RespRx>,
+    pending: &mut Vec<(u32, RespRx)>,
     lat: &mut Samples,
     degraded: &mut usize,
     errors: &mut usize,
+    tenants: &mut [TenantAccum],
 ) {
-    pending.retain(|rx| match rx.try_recv() {
+    pending.retain(|(tenant, rx)| match rx.try_recv() {
         Ok(Ok(r)) => {
-            lat.push(r.latency.as_nanos() as f64);
+            let ns = r.latency.as_nanos() as f64;
+            lat.push(ns);
             if r.scores.is_empty() {
                 *degraded += 1;
+            }
+            if let Some(acc) = tenants.get_mut(*tenant as usize) {
+                acc.lat.push(ns);
+                if r.scores.is_empty() {
+                    acc.degraded += 1;
+                }
             }
             false
         }
@@ -264,20 +315,27 @@ fn run_phase(
     phase_idx: u64,
     slo: &SloConfig,
 ) -> Result<PhaseResult> {
+    let tenancy = cfg.tenant_classes > 0;
     let acfg = ArrivalConfig {
         rate_qps: capacity_qps * spec.rate_mult,
         burst_factor: spec.burst_factor,
         burst_period_s: (cfg.secs_per_phase / 3.0).max(1e-3),
         burst_duty: spec.burst_duty,
         seed: cfg.seed.wrapping_add(phase_idx),
+        tenants: if tenancy { cfg.tenant_classes } else { ArrivalConfig::default().tenants },
         ..ArrivalConfig::default()
     };
+    let n_tenants = acfg.tenants;
     let mut arrivals =
         ArrivalGen::new(acfg).generate((cfg.secs_per_phase * 1e9) as u64);
     arrivals.truncate(cfg.max_arrivals_per_phase);
     let mut rng = Rng::new(cfg.seed ^ 0x9E37_79B9).fork(phase_idx);
-    let mut pending: Vec<RespRx> = Vec::new();
+    let mut pending: Vec<(u32, RespRx)> = Vec::new();
     let mut lat = Samples::new();
+    let mut accum: Vec<TenantAccum> = Vec::new();
+    if tenancy {
+        accum.resize_with(n_tenants, TenantAccum::default);
+    }
     let (mut accepted, mut rejected, mut degraded, mut errors) = (0usize, 0usize, 0usize, 0usize);
     let mut rung_max = ctrl.rung().level();
     let start = Instant::now();
@@ -289,7 +347,7 @@ fn run_phase(
         // rate does not slow down just because the server did
         let deadline = start + Duration::from_nanos(a.at_ns);
         loop {
-            drain_completions(&mut pending, &mut lat, &mut degraded, &mut errors);
+            drain_completions(&mut pending, &mut lat, &mut degraded, &mut errors, &mut accum);
             let now = Instant::now();
             if now >= deadline {
                 break;
@@ -299,12 +357,29 @@ fn run_phase(
         // tenants map to a fixed popular target set: the zipf skew over
         // tenants becomes key skew over the corpus
         let target = (a.tenant as usize).wrapping_mul(131) % corpus.n;
-        match router.try_submit(corpus.query_near(target, 0.02, &mut rng)) {
+        let query = corpus.query_near(target, 0.02, &mut rng);
+        let submitted = if tenancy {
+            router.try_submit_tenant(query, a.tenant)
+        } else {
+            router.try_submit(query)
+        };
+        if let Some(acc) = accum.get_mut(a.tenant as usize) {
+            acc.arrivals += 1;
+        }
+        match submitted {
             Ok(rx) => {
-                pending.push(rx);
+                pending.push((a.tenant, rx));
                 accepted += 1;
+                if let Some(acc) = accum.get_mut(a.tenant as usize) {
+                    acc.accepted += 1;
+                }
             }
-            Err(_) => rejected += 1,
+            Err(_) => {
+                rejected += 1;
+                if let Some(acc) = accum.get_mut(a.tenant as usize) {
+                    acc.rejected += 1;
+                }
+            }
         }
         rung_max = rung_max.max(ctrl.rung().level());
         if last_obs.elapsed() > Duration::from_millis(50) {
@@ -314,13 +389,39 @@ fn run_phase(
     }
     // drain the tail: every accepted query completes before the verdict
     while !pending.is_empty() {
-        drain_completions(&mut pending, &mut lat, &mut degraded, &mut errors);
+        drain_completions(&mut pending, &mut lat, &mut degraded, &mut errors, &mut accum);
         rung_max = rung_max.max(ctrl.rung().level());
         if !pending.is_empty() {
             std::thread::sleep(Duration::from_micros(200));
         }
     }
     let p99_us = lat.percentile(0.99) / 1e3;
+    // Per-tenant breakdown: tenants that saw traffic only, in id order.
+    let tenants: Vec<TenantPhase> = accum
+        .iter()
+        .enumerate()
+        .filter(|(_, acc)| acc.arrivals > 0)
+        .map(|(t, acc)| {
+            let p99 = if acc.lat.is_empty() {
+                0.0
+            } else {
+                let mut s = Samples::new();
+                for &ns in &acc.lat {
+                    s.push(ns);
+                }
+                s.percentile(0.99) / 1e3
+            };
+            TenantPhase {
+                tenant: t as u32,
+                arrivals: acc.arrivals,
+                accepted: acc.accepted,
+                rejected: acc.rejected,
+                degraded: acc.degraded,
+                p99_us: p99,
+                shed_rate: acc.rejected as f64 / acc.arrivals as f64,
+            }
+        })
+        .collect();
     Ok(PhaseResult {
         name: spec.name,
         rate_mult: spec.rate_mult,
@@ -335,6 +436,7 @@ fn run_phase(
         rung_max,
         rung_end: ctrl.rung().level(),
         within_slo: accepted > 0 && p99_us <= slo.p99_us,
+        tenants,
     })
 }
 
@@ -349,6 +451,15 @@ pub fn run_soak(cfg: &SoakConfig) -> Result<SoakRun> {
     let over_cfg = OverloadConfig {
         // small windows so the guardrails sample several times per phase
         window: 16,
+        // tenant-aware drills hand the ladder the same zipf contract the
+        // arrival generator attributes traffic with — weighted fair
+        // shares match offered skew, so shedding pressure lands on the
+        // tenant that exceeds its contract
+        tenants: if cfg.tenant_classes > 0 {
+            TenantClass::derive(cfg.tenant_classes, ArrivalConfig::default().zipf_theta)
+        } else {
+            Vec::new()
+        },
         ..OverloadConfig::for_slo(slo)
     };
     // With a tier configured, the ladder and every worker's tier share
@@ -415,12 +526,56 @@ pub fn table(run: &SoakRun) -> Table {
     t
 }
 
+/// Render the per-tenant breakdown (tenant-aware drills only): one row
+/// per phase × tenant that saw traffic. `None` when every phase ran
+/// tenant-blind.
+pub fn tenant_table(run: &SoakRun) -> Option<Table> {
+    if run.phases.iter().all(|p| p.tenants.is_empty()) {
+        return None;
+    }
+    let mut t = Table::new(
+        "bench-soak: per-tenant accept/shed breakdown (fairness gate bounds each cold \
+         tenant's shed_rate against the hot tenant's)",
+        &["phase", "tenant", "arrivals", "accepted", "rejected", "shed_rate", "degraded", "p99_us"],
+    );
+    for p in &run.phases {
+        for tp in &p.tenants {
+            t.row(vec![
+                p.name.to_string(),
+                format!("{}", tp.tenant),
+                format!("{}", tp.arrivals),
+                format!("{}", tp.accepted),
+                format!("{}", tp.rejected),
+                format!("{:.3}", tp.shed_rate),
+                format!("{}", tp.degraded),
+                format!("{:.1}", tp.p99_us),
+            ]);
+        }
+    }
+    Some(t)
+}
+
 /// Serialize the drill to the bench_soak.json artifact shape.
 pub fn to_json(run: &SoakRun) -> Json {
     let phases: Vec<Json> = run
         .phases
         .iter()
         .map(|p| {
+            let tenants: Vec<Json> = p
+                .tenants
+                .iter()
+                .map(|tp| {
+                    Json::obj(vec![
+                        ("tenant", Json::Num(tp.tenant as f64)),
+                        ("arrivals", Json::Num(tp.arrivals as f64)),
+                        ("accepted", Json::Num(tp.accepted as f64)),
+                        ("rejected", Json::Num(tp.rejected as f64)),
+                        ("degraded", Json::Num(tp.degraded as f64)),
+                        ("p99_us", Json::Num(tp.p99_us)),
+                        ("shed_rate", Json::Num(tp.shed_rate)),
+                    ])
+                })
+                .collect();
             Json::obj(vec![
                 ("name", Json::Str(p.name.to_string())),
                 ("rate_mult", Json::Num(p.rate_mult)),
@@ -435,6 +590,7 @@ pub fn to_json(run: &SoakRun) -> Json {
                 ("rung_max", Json::Num(p.rung_max as f64)),
                 ("rung_end", Json::Num(p.rung_end as f64)),
                 ("within_slo", Json::Bool(p.within_slo)),
+                ("tenants", Json::Arr(tenants)),
             ])
         })
         .collect();
@@ -512,6 +668,35 @@ pub fn gate(run: &SoakRun, baseline: &Json) -> Vec<String> {
                 got.accepted, got.rejected, got.arrivals
             ));
         }
+        // Fairness: every cold tenant's shed rate is bounded by a
+        // multiple of the hot (most-arrivals) tenant's plus slack.
+        // Uniform tenant-blind shedding at rate s violates the bound
+        // whenever s > slack / (1 - ratio), which sustained 2x overload
+        // forces — so this gate distinguishes weighted shedding from
+        // blind shedding, not merely "shedding happened".
+        if let Some(fair) = want.get(&["fairness"]) {
+            let ratio = fair.get(&["max_shed_ratio"]).and_then(|v| v.as_f64()).unwrap_or(1.0);
+            let slack = fair.get(&["abs_slack"]).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let min_arr =
+                fair.get(&["min_arrivals"]).and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+            if got.tenants.is_empty() {
+                failures.push(format!(
+                    "phase {name}: baseline pins a fairness bound but the drill ran \
+                     tenant-blind (no per-tenant breakdown)"
+                ));
+            } else if let Some(hot) = got.tenants.iter().max_by_key(|t| t.arrivals) {
+                let bound = ratio * hot.shed_rate + slack;
+                for t in &got.tenants {
+                    if t.tenant != hot.tenant && t.arrivals >= min_arr && t.shed_rate > bound {
+                        failures.push(format!(
+                            "phase {name}: tenant {} shed {:.3} of its arrivals — over the \
+                             fairness bound {:.3} ({:.2} x hot tenant {}'s {:.3} + {:.2})",
+                            t.tenant, t.shed_rate, bound, ratio, hot.tenant, hot.shed_rate, slack
+                        ));
+                    }
+                }
+            }
+        }
     }
     for p in &run.phases {
         if !base.contains_key(p.name) {
@@ -555,6 +740,19 @@ mod tests {
             rung_max,
             rung_end,
             within_slo: true,
+            tenants: vec![],
+        }
+    }
+
+    fn tenant(tenant: u32, arrivals: usize, rejected: usize) -> TenantPhase {
+        TenantPhase {
+            tenant,
+            arrivals,
+            accepted: arrivals - rejected,
+            rejected,
+            degraded: 0,
+            p99_us: 400.0,
+            shed_rate: rejected as f64 / arrivals as f64,
         }
     }
 
@@ -580,6 +778,14 @@ mod tests {
                             ("max_rung", Json::Num(4.0)),
                             ("require_within_slo", Json::Bool(true)),
                             ("require_rejects_counted", Json::Bool(true)),
+                            (
+                                "fairness",
+                                Json::obj(vec![
+                                    ("max_shed_ratio", Json::Num(0.8)),
+                                    ("abs_slack", Json::Num(0.08)),
+                                    ("min_arrivals", Json::Num(50.0)),
+                                ]),
+                            ),
                         ]),
                     ),
                     (
@@ -595,12 +801,12 @@ mod tests {
     }
 
     fn matched_run() -> SoakRun {
-        run_of(vec![
-            phase("ramp", 0, 0),
-            phase("burst", 3, 1),
-            phase("sustained", 4, 4),
-            phase("recovery", 2, 0),
-        ])
+        let mut sustained = phase("sustained", 4, 4);
+        // hot tenant sheds 0.50; cold sheds 0.30 <= 0.8*0.50 + 0.08;
+        // the tiny tenant sheds 0.90 but sits under min_arrivals (50)
+        sustained.tenants =
+            vec![tenant(0, 400, 200), tenant(1, 100, 30), tenant(7, 20, 18)];
+        run_of(vec![phase("ramp", 0, 0), phase("burst", 3, 1), sustained, phase("recovery", 2, 0)])
     }
 
     #[test]
@@ -635,6 +841,34 @@ mod tests {
         let failures = gate(&run, &baseline());
         assert_eq!(failures.len(), 1, "{failures:?}");
         assert!(failures[0].contains("dropped uncounted"));
+    }
+
+    #[test]
+    fn gate_enforces_the_fairness_bound() {
+        // a cold tenant shed over the bound: 0.50 > 0.8*0.50 + 0.08
+        let mut run = matched_run();
+        run.phases[2].tenants[1] = tenant(1, 100, 50);
+        let failures = gate(&run, &baseline());
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("fairness bound") && failures[0].contains("tenant 1"));
+        // under min_arrivals the same shed rate is exempt (cold trickles
+        // are all-or-nothing; the bound would be noise)
+        let mut run = matched_run();
+        run.phases[2].tenants[2] = tenant(7, 20, 19);
+        assert!(gate(&run, &baseline()).is_empty());
+        // the hot tenant itself is never bounded against itself
+        let mut run = matched_run();
+        run.phases[2].tenants[0] = tenant(0, 400, 380);
+        assert!(gate(&run, &baseline()).is_empty(), "hot tenant may shed arbitrarily");
+    }
+
+    #[test]
+    fn gate_rejects_a_tenant_blind_run_when_fairness_is_pinned() {
+        let mut run = matched_run();
+        run.phases[2].tenants.clear();
+        let failures = gate(&run, &baseline());
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("tenant-blind"));
     }
 
     #[test]
@@ -701,6 +935,25 @@ mod tests {
         assert_eq!(phases[2].get(&["name"]).and_then(|v| v.as_str()), Some("sustained"));
         assert_eq!(phases[2].get(&["rung_max"]).and_then(|v| v.as_f64()), Some(4.0));
         assert_eq!(phases[2].get(&["within_slo"]).and_then(|v| v.as_bool()), Some(true));
+        // the per-tenant breakdown rides each phase
+        let tenants = phases[2].get(&["tenants"]).unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 3);
+        assert_eq!(tenants[0].get(&["tenant"]).and_then(|v| v.as_f64()), Some(0.0));
+        assert_eq!(tenants[0].get(&["shed_rate"]).and_then(|v| v.as_f64()), Some(0.5));
+        assert_eq!(
+            phases[0].get(&["tenants"]).unwrap().as_arr().map(|a| a.len()),
+            Some(0),
+            "tenant-blind phases serialize an empty breakdown"
+        );
+    }
+
+    #[test]
+    fn tenant_table_renders_only_tenant_aware_runs() {
+        assert!(tenant_table(&run_of(vec![phase("ramp", 0, 0)])).is_none());
+        let t = tenant_table(&matched_run()).expect("matched run has tenant rows");
+        let text = t.render();
+        assert!(text.contains("sustained"), "{text}");
+        assert!(text.contains("0.500"), "hot shed rate rendered: {text}");
     }
 
     #[test]
@@ -720,6 +973,18 @@ mod tests {
         assert_eq!(
             sustained.get(&["require_rejects_counted"]).and_then(|v| v.as_bool()),
             Some(true)
+        );
+        // the fairness bound rides the sustained phase (and matches the
+        // constants the controller-level drill in tests/overload_shedding.rs
+        // is calibrated against)
+        assert_eq!(
+            sustained.get(&["fairness", "max_shed_ratio"]).and_then(|v| v.as_f64()),
+            Some(0.8)
+        );
+        assert_eq!(sustained.get(&["fairness", "abs_slack"]).and_then(|v| v.as_f64()), Some(0.08));
+        assert_eq!(
+            sustained.get(&["fairness", "min_arrivals"]).and_then(|v| v.as_f64()),
+            Some(50.0)
         );
         let recovery = phases.get("recovery").unwrap();
         assert_eq!(recovery.get(&["end_rung"]).and_then(|v| v.as_f64()), Some(0.0));

@@ -27,6 +27,54 @@
 
 use crate::util::rng::{Rng, Zipf};
 
+/// No tenant's contracted share may exceed this multiple of the uniform
+/// share (`CAP_MULT / tenants`). The zipf head would otherwise *contract*
+/// the skew it already sends, and the overload governor's deficit test
+/// (admitted share vs fair share) could never flag it.
+const CAP_MULT: f64 = 2.0;
+
+/// Admission class for one tenant: its contracted (fair) share of serving
+/// capacity and its priority tier. Consumed by the overload governor's
+/// weighted admission policy ([`crate::coordinator::OverloadController`]):
+/// a tenant whose recent admitted share exceeds its weighted fair share is
+/// shed-eligible, so rung escalation lands on over-quota and low-priority
+/// tenants first.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenantClass {
+    /// Tenant id, matching [`Arrival::tenant`].
+    pub tenant: u32,
+    /// Weighted fair share of admissions. Normalized against the sum of
+    /// all class weights at admission time, so any positive scale works.
+    pub weight: f64,
+    /// Priority tier: 0 = premium, 1 = standard, 2+ = best-effort. The
+    /// governor scales a tenant's fair-share headroom by tier, so lower
+    /// priority becomes shed-eligible sooner.
+    pub priority: u8,
+}
+
+impl TenantClass {
+    /// Derive classes from the arrival stream's zipf attribution: each
+    /// tenant's weight is its zipf(θ) popularity mass, capped at
+    /// [`CAP_MULT`] × the uniform share and renormalized — the capacity
+    /// contract mirrors observed demand, but no whale can contract the
+    /// whole front door. All derived classes sit in the standard priority
+    /// tier; priorities are a deployment contract, overridable per class.
+    pub fn derive(tenants: usize, theta: f64) -> Vec<TenantClass> {
+        assert!(tenants > 0);
+        let h: f64 = (1..=tenants).map(|k| 1.0 / (k as f64).powf(theta)).sum();
+        let cap = CAP_MULT / tenants as f64;
+        let capped: Vec<f64> = (1..=tenants)
+            .map(|k| (1.0 / (k as f64).powf(theta) / h).min(cap))
+            .collect();
+        let total: f64 = capped.iter().sum();
+        capped
+            .into_iter()
+            .enumerate()
+            .map(|(t, w)| TenantClass { tenant: t as u32, weight: w / total, priority: 1 })
+            .collect()
+    }
+}
+
 /// One query arrival: when it hits the front door and which tenant sent it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Arrival {
@@ -250,6 +298,35 @@ mod tests {
         let top4: u64 = counts.iter().take(4).sum();
         let frac = top4 as f64 / trace.len() as f64;
         assert!(frac > 0.35, "top-4 tenants carry only {frac}");
+    }
+
+    #[test]
+    fn derived_tenant_classes_follow_capped_zipf_mass() {
+        let classes = TenantClass::derive(8, 1.2);
+        assert_eq!(classes.len(), 8);
+        let sum: f64 = classes.iter().map(|c| c.weight).sum();
+        assert!((sum - 1.0).abs() < 1e-9, "weights sum to {sum}");
+        // monotone non-increasing in tenant rank, and every class standard tier
+        for w in classes.windows(2) {
+            assert!(w[0].weight >= w[1].weight - 1e-12);
+        }
+        assert!(classes.iter().all(|c| c.priority == 1));
+        // the head is capped: raw zipf(8, 1.2) mass for tenant 0 is ~0.43,
+        // but no contract may exceed 2x the uniform share (pre-renormalize)
+        let raw_head = 1.0 / (1..=8).map(|k| 1.0 / (k as f64).powf(1.2)).sum::<f64>();
+        assert!(raw_head > 0.25, "test premise: raw head above cap");
+        let renorm_cap = 0.25 / (1.0 - (raw_head - 0.25));
+        assert!((classes[0].weight - renorm_cap).abs() < 1e-9);
+    }
+
+    #[test]
+    fn derived_classes_are_deterministic_and_ids_are_ranks() {
+        let a = TenantClass::derive(16, 1.1);
+        let b = TenantClass::derive(16, 1.1);
+        assert_eq!(a, b);
+        for (i, c) in a.iter().enumerate() {
+            assert_eq!(c.tenant, i as u32);
+        }
     }
 
     #[test]

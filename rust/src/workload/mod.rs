@@ -5,5 +5,5 @@ pub mod arrival;
 pub mod lognormal;
 pub mod trace;
 
-pub use arrival::{Arrival, ArrivalConfig, ArrivalGen};
+pub use arrival::{Arrival, ArrivalConfig, ArrivalGen, TenantClass};
 pub use lognormal::LognormalProfile;

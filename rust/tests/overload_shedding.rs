@@ -12,15 +12,18 @@
 //! integration: rungs are forced and the answers compared bit for bit
 //! against an ungoverned router serving identical queries.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use fivemin::coordinator::batcher::BatchPolicy;
 use fivemin::coordinator::{
-    Coordinator, FetchMode, OverloadConfig, Router, Rung, ServingCorpus, SloConfig,
+    Coordinator, FetchMode, OverloadConfig, OverloadController, Router, Rung, ServingCorpus,
+    SloConfig, TenantClass,
 };
 use fivemin::runtime::{default_artifacts_dir, SERVE};
 use fivemin::storage::BackendSpec;
 use fivemin::util::rng::Rng;
+use fivemin::workload::{ArrivalConfig, ArrivalGen};
 
 const SHARDS: usize = 2;
 const QUERIES: usize = 24;
@@ -184,4 +187,123 @@ fn shrink_k_rung_serves_the_promote_prefix_with_full_scores() {
         (QUERIES * shrink_k) as u64,
         "shrink-k cuts stage-2 reads to the shrunk promote set"
     );
+}
+
+#[test]
+fn normal_rung_tenant_answers_match_the_ungoverned_router_per_tenant() {
+    // Tenant-aware governance at Normal must be invisible in the
+    // answers: whatever the per-tenant deficit state says, rung 0 serves
+    // every tenant the full plan, bit-identical to an ungoverned router.
+    let corpus = Arc::new(ServingCorpus::synthetic(SHARDS, 0x0_5ED));
+    let qs = queries(&corpus);
+    let full = serve_full(&corpus, &qs);
+    let cfg = OverloadConfig {
+        tenants: TenantClass::derive(4, 1.2),
+        ..inert_config((SERVE.topk / 2).max(1))
+    };
+    let router =
+        Router::partitioned_overload(workers(&corpus), FetchMode::AfterMerge, cfg, None).unwrap();
+    for (i, (q, want)) in qs.iter().zip(&full).enumerate() {
+        let tenant = (i % 4) as u32;
+        let rx = router.try_submit_tenant(q.clone(), tenant).expect("normal rung admits");
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got.ids, want.0, "tenant {tenant}: governed full service changed the answer");
+        assert_eq!(got.scores, want.1);
+        assert_eq!(got.reduced, want.2);
+    }
+    let rep = router.overload_report().unwrap();
+    assert_eq!(rep.rung, Rung::Normal);
+    assert_eq!(rep.admitted, QUERIES as u64);
+    // per-tenant accounting saw every class, and completions drained
+    for t in rep.tenants.iter().filter(|t| t.tenant != u32::MAX) {
+        assert_eq!(t.admitted, (QUERIES / 4) as u64);
+        assert_eq!(t.completed, t.admitted, "tenant completions feed back per class");
+    }
+}
+
+/// Fairness-gate bounds, mirrored from the `"fairness"` block of the
+/// sustained phase in `rust/benches/common/soak_baseline.json`: a cold
+/// tenant's shed rate may not exceed `MAX_SHED_RATIO` × the hot
+/// tenant's, plus `ABS_SLACK`. (Uniform shedding — everyone at the same
+/// rate `s` — violates this whenever `s > ABS_SLACK / (1 −
+/// MAX_SHED_RATIO)` = 40%, which a sustained 2× overload forces, so the
+/// gate discriminates tenant-aware from tenant-blind governance.)
+const MAX_SHED_RATIO: f64 = 0.8;
+const ABS_SLACK: f64 = 0.08;
+const MIN_ARRIVALS: u64 = 50;
+
+#[test]
+fn sustained_2x_overload_sheds_the_hot_tenant_within_the_fairness_bound() {
+    // Controller-level open-loop drill, deterministic (no wall clock): a
+    // 2× overload is modeled by completing one admitted query per two
+    // arrivals — the server has half the capacity the stream demands —
+    // with completion latency far past the p99 budget, so every window
+    // trips. zipf θ=1.2 over 8 tenants makes tenant 0 the whale (~43%
+    // of arrivals against a ~30% capped fair share).
+    let classes = TenantClass::derive(8, 1.2);
+    let slo = SloConfig { p50_us: 250.0, p95_us: 500.0, p99_us: 1_000.0, max_queue_depth: 32 };
+    let ctrl = OverloadController::new(
+        OverloadConfig { window: 16, tenants: classes, ..OverloadConfig::for_slo(slo) },
+        None,
+    );
+    let trace = ArrivalGen::new(ArrivalConfig {
+        rate_qps: 2_000.0,
+        tenants: 8,
+        zipf_theta: 1.2,
+        seed: 0x0_5ED,
+        ..ArrivalConfig::default()
+    })
+    .generate(1_500_000_000);
+    assert!(trace.len() > 2_000, "need a sustained stream, got {}", trace.len());
+
+    let mut arrivals = [0u64; 8];
+    let mut shed = [0u64; 8];
+    let mut queue: VecDeque<u32> = VecDeque::new();
+    for (i, a) in trace.iter().enumerate() {
+        arrivals[a.tenant as usize] += 1;
+        match ctrl.try_admit_tenant(a.tenant) {
+            Ok(_) => queue.push_back(a.tenant),
+            Err(rej) => {
+                assert_eq!(rej.tenant, a.tenant, "the shed is charged to the arriving tenant");
+                shed[a.tenant as usize] += 1;
+            }
+        }
+        // the half-capacity server: one completion per two arrivals,
+        // always far over the latency budget (5 ms)
+        if i % 2 == 1 {
+            if let Some(t) = queue.pop_front() {
+                ctrl.on_complete_tenant(t, 5_000_000.0);
+            }
+        }
+    }
+
+    let rep = ctrl.report();
+    assert_eq!(rep.rung, Rung::Backpressure, "sustained 2× pegs the ladder");
+    let hot = arrivals.iter().enumerate().max_by_key(|(_, n)| **n).unwrap().0;
+    assert_eq!(hot, 0, "zipf attribution makes tenant 0 the whale");
+    let rate = |t: usize| shed[t] as f64 / arrivals[t] as f64;
+    let hot_rate = rate(hot);
+    assert!(hot_rate > 0.3, "the over-quota whale must shed hard, got {hot_rate:.3}");
+    let bound = MAX_SHED_RATIO * hot_rate + ABS_SLACK;
+    for (t, &n) in arrivals.iter().enumerate().skip(1) {
+        if n < MIN_ARRIVALS {
+            continue;
+        }
+        assert!(
+            rate(t) <= bound,
+            "tenant {t} shed {:.3} > fairness bound {bound:.3} (hot {hot_rate:.3})",
+            rate(t)
+        );
+    }
+    // every arrival accounted for, and the report agrees per tenant
+    let total: u64 = arrivals.iter().sum();
+    assert_eq!(rep.admitted + rep.rejected, total);
+    let hot_rep = rep.tenants.iter().find(|t| t.tenant == 0).unwrap();
+    assert_eq!(hot_rep.admitted + hot_rep.shed, arrivals[0]);
+    // the deficit policy's signature: nobody sheds harder than the whale
+    for (t, &n) in arrivals.iter().enumerate().skip(1) {
+        if n >= MIN_ARRIVALS {
+            assert!(rate(t) < hot_rate, "tenant {t} outsheds the whale");
+        }
+    }
 }

@@ -395,12 +395,12 @@ fn governed_seams_degrade_bit_identically() {
     for fetch in [FetchMode::Speculative, FetchMode::AfterMerge, FetchMode::Adaptive] {
         for rung in [Rung::Normal, Rung::ShrinkK, Rung::Stage1Only] {
             let threaded =
-                Router::partitioned_overload(make_workers(), fetch, ocfg, None).unwrap();
+                Router::partitioned_overload(make_workers(), fetch, ocfg.clone(), None).unwrap();
             let reactor = Router::partitioned_reactor_overload(
                 make_workers(),
                 fetch,
                 ReactorConfig::default(),
-                ocfg,
+                ocfg.clone(),
                 None,
             )
             .unwrap();
@@ -423,6 +423,141 @@ fn governed_seams_degrade_bit_identically() {
                             "{seam}: ShrinkK must shrink the promote set"
                         );
                     }
+                }
+            }
+        }
+    }
+}
+
+/// Tenant-class arm of the seam-equivalence matrix: with tenant-aware
+/// governance configured, both seams must stay bit-identical *per
+/// tenant* — same classes, same per-tenant submission order → identical
+/// deficit state (admission happens router-side via `try_admit_tenant`
+/// in both seams, and the inert window means no decay) → identical
+/// plans → identical answers. The test also pins the differentiation
+/// itself: at a degraded rung the over-quota tenant's answers shrink
+/// while within-quota tenants keep one rung of grace, identically on
+/// both seams.
+#[test]
+fn governed_seams_stay_bit_identical_per_tenant_class() {
+    use fivemin::coordinator::{OverloadConfig, Rung, SloConfig, TenantClass};
+
+    let corpus = Arc::new(ServingCorpus::synthetic(2, 733));
+    let mut qrng = Rng::new(977);
+    let queries: Vec<Vec<f32>> = (0..24)
+        .map(|_| corpus.query_near(qrng.below(corpus.n as u64) as usize, 0.02, &mut qrng))
+        .collect();
+    // tenant 0 hot (5 of every 8 submissions), 1..3 cold
+    let tenant_of = |i: usize| -> u32 {
+        match i % 8 {
+            3 => 1,
+            5 => 2,
+            7 => 3,
+            _ => 0,
+        }
+    };
+
+    let slo = SloConfig { p50_us: 1e12, p95_us: 1e12, p99_us: 1e12, max_queue_depth: 1 << 20 };
+    let ocfg = OverloadConfig {
+        window: 1 << 30,
+        shrink_k: 4,
+        tenants: TenantClass::derive(4, 1.2),
+        ..OverloadConfig::for_slo(slo)
+    };
+
+    let make_workers = || -> Vec<Coordinator> {
+        corpus
+            .partitions(2)
+            .unwrap()
+            .into_iter()
+            .map(|part| {
+                Coordinator::start(
+                    default_artifacts_dir(),
+                    Arc::new(part),
+                    BatchPolicy::default(),
+                    BackendSpec::Mem,
+                )
+                .unwrap()
+            })
+            .collect()
+    };
+
+    for rung in [Rung::Normal, Rung::ShrinkK, Rung::Stage1Only] {
+        let threaded =
+            Router::partitioned_overload(make_workers(), FetchMode::AfterMerge, ocfg.clone(), None)
+                .unwrap();
+        let reactor = Router::partitioned_reactor_overload(
+            make_workers(),
+            FetchMode::AfterMerge,
+            ReactorConfig::default(),
+            ocfg.clone(),
+            None,
+        )
+        .unwrap();
+        for r in [&threaded, &reactor] {
+            // identical deficit warm-up on both controllers: tenant 0
+            // past its capped fair share before any query is served
+            let c = r.overload().unwrap();
+            for _ in 0..16 {
+                c.try_admit_tenant(0).expect("warm-up admission");
+                c.on_complete_tenant(0, 1_000.0);
+            }
+            c.force_rung(rung);
+        }
+        let serve = |router: &Router| -> Vec<QueryResult> {
+            let pending: Vec<_> = queries
+                .iter()
+                .enumerate()
+                .map(|(i, q)| {
+                    router.try_submit_tenant(q.clone(), tenant_of(i)).expect("admitted")
+                })
+                .collect();
+            pending.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect()
+        };
+        let a = serve(&threaded);
+        let b = serve(&reactor);
+        for (qi, (x, y)) in a.iter().zip(&b).enumerate() {
+            let tag = format!("{}/t{} q{qi}", rung.name(), tenant_of(qi));
+            assert_eq!(x.ids, y.ids, "{tag}: ids differ across governed seams");
+            assert_eq!(x.scores, y.scores, "{tag}: scores differ across governed seams");
+            assert_eq!(x.reduced, y.reduced, "{tag}: reduced differ across governed seams");
+        }
+        // weighted shedding, pinned identically on both seams: the
+        // over-quota tenant takes the rung, within-quota tenants get
+        // one rung of grace
+        for (seam, got) in [("threads", &a), ("reactor", &b)] {
+            for (qi, r) in got.iter().enumerate() {
+                let hot = tenant_of(qi) == 0;
+                match rung {
+                    Rung::Normal => assert_eq!(
+                        r.ids.len(),
+                        SERVE.topk,
+                        "{seam} q{qi}: Normal serves everyone in full"
+                    ),
+                    Rung::ShrinkK => assert_eq!(
+                        r.ids.len(),
+                        if hot { ocfg.shrink_k } else { SERVE.topk },
+                        "{seam} q{qi}: only the over-quota tenant shrinks"
+                    ),
+                    Rung::Stage1Only => {
+                        assert_eq!(
+                            r.ids.len(),
+                            ocfg.shrink_k,
+                            "{seam} q{qi}: promote set shrunk for all above ShrinkK"
+                        );
+                        if hot {
+                            assert!(
+                                r.scores.is_empty(),
+                                "{seam} q{qi}: over-quota tenant gets stage-1-only"
+                            );
+                        } else {
+                            assert!(
+                                !r.scores.is_empty(),
+                                "{seam} q{qi}: within-quota tenant keeps stage-2 scores"
+                            );
+                        }
+                    }
+                    _ => unreachable!(),
                 }
             }
         }

@@ -33,10 +33,13 @@ pytest:
 	python -m pytest python/tests -q
 
 # Perf-smoke matrix + regression gate (mirrors the bench-smoke CI job):
-# {mem,sim} x {spec,merge,adaptive} x shards {1,2}, artifact under
-# results/, reads/query gated against the checked-in baseline.
+# {mem,sim} x {spec,merge,adaptive} x shards {1,2}, plus tier, reactor,
+# and selective-routing cells; artifact under results/, reads/query gated
+# against the checked-in baseline. Also refreshes BENCH_SMOKE.json at the
+# repo root — the compact perf-trajectory series future PRs diff against.
 bench-smoke:
 	cargo run --release -- smoke --json --out results/bench_smoke.json \
+		--trajectory BENCH_SMOKE.json \
 		--baseline rust/benches/common/smoke_baseline.json
 
 smoke: bench-smoke

@@ -22,6 +22,8 @@
 //!     cargo run --release --example ann_serving -- --backend sim --slo-p99-us 5000
 //!     cargo run --release --example ann_serving -- --serve reactor --queries 5000
 //!     cargo run --release --example ann_serving -- --backend uring --serve reactor
+//!     cargo run --release --example ann_serving -- --backend sim --route topm:2
+//!     cargo run --release --example ann_serving -- --serve reactor --route topm:2
 //!
 //! `mem` reproduces the DRAM-resident baseline; `model` charges the
 //! analytic Eq. 2 + queueing cost; `sim` replays the fetch traffic on
@@ -51,6 +53,17 @@
 //! in-flight at once (the rest wait in the inbox) and bit-identical
 //! answers either way. Composes with every option above, including the
 //! overload governor.
+//! `--route topm:M` turns on heat-aware selective routing: an affinity
+//! predictor (centroid sketch + contribution EWMA) sends each query's
+//! stage-1 scan to only the top-M predicted shards instead of all N,
+//! with weak-margin escalation and periodic full-fan-out probes as the
+//! recall safety net. The corpus is clustered to align with the
+//! partition cut (selective routing on an iid corpus has nothing to
+//! exploit), fetch is forced to after-merge for routed queries, and the
+//! routing line in the results reports the measured stage-1 legs/query
+//! cut plus live probe recall. Under `--slo-p99-us` the shedding
+//! ladder's early ShrinkM rung halves M before answer quality is
+//! touched.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -59,7 +72,8 @@ use fivemin::ann::{ann_throughput, AnnScenario};
 use fivemin::config::{NandKind, PlatformConfig, PlatformKind, SsdConfig};
 use fivemin::coordinator::batcher::BatchPolicy;
 use fivemin::coordinator::{
-    Coordinator, FetchMode, OverloadConfig, ReactorConfig, Router, ServingCorpus, SloConfig,
+    AffinityPredictor, Coordinator, FetchMode, OverloadConfig, ReactorConfig, RouteConfig,
+    RouteSpec, Router, ServingCorpus, SloConfig,
 };
 use fivemin::runtime::{default_artifacts_dir, SERVE};
 use fivemin::storage::{BackendSpec, Pace, TierSpec};
@@ -117,6 +131,12 @@ fn main() -> anyhow::Result<()> {
             "N",
             Some("4096"),
             "reactor admission window: max tracked in-flight queries (reactor seam only)",
+        )
+        .opt(
+            "route",
+            "all|topm:M",
+            Some("all"),
+            "stage-1 routing: full fan-out, or heat-aware selective routing to the top-M predicted shards (escalation + periodic full-fan-out probes keep recall honest; forces after-merge fetch for routed queries)",
         );
     let args: Vec<String> = std::env::args().skip(1).collect();
     let p = match spec.parse(&args) {
@@ -147,24 +167,42 @@ fn main() -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown serve seam '{other}' (want threads|reactor)"),
     };
+    let route = RouteSpec::parse(p.str("route").unwrap())?;
+    let routed = matches!(route, RouteSpec::TopM(_));
 
     // ---- corpus + serving stack ------------------------------------------
     let dir = default_artifacts_dir();
     let n_shards = 4;
-    let corpus = Arc::new(ServingCorpus::synthetic(n_shards, 42));
+    // Selective routing demos a clustered corpus (clusters aligned with
+    // the partition cut) — on an iid corpus every shard is equally
+    // relevant and cutting fan-out necessarily costs recall.
+    let corpus = Arc::new(if routed {
+        ServingCorpus::synthetic_clustered(n_shards, n_shards, 42)
+    } else {
+        ServingCorpus::synthetic(n_shards, 42)
+    });
     println!(
         "corpus: {} embeddings ({} reduced + {} full bytes per vector), {} shards",
         corpus.n, 512, 4096, n_shards
     );
     println!(
         "starting {n_workers} partition workers on the '{}' storage backend \
-         (scatter/gather router, '{}' stage-2 fetch, '{}' serving seam)…",
+         (scatter/gather router, '{}' stage-2 fetch, '{}' serving seam, '{}' routing)…",
         backend.kind().name(),
         fetch.name(),
-        if reactor.is_some() { "reactor" } else { "threads" }
+        if reactor.is_some() { "reactor" } else { "threads" },
+        route.name()
     );
-    let workers = corpus
-        .partitions(n_workers)?
+    let parts = corpus.partitions(n_workers)?;
+    let pred = if routed {
+        Some(Arc::new(AffinityPredictor::from_partitions(
+            &parts,
+            RouteConfig { spec: route, ..RouteConfig::default() },
+        )?))
+    } else {
+        None
+    };
+    let workers = parts
         .into_iter()
         .map(|part| {
             // each partition's device holds exactly its slice of vectors
@@ -180,14 +218,22 @@ fn main() -> anyhow::Result<()> {
             max_queue_depth: 4 * SERVE.batch,
         };
         let ocfg = OverloadConfig::for_slo(slo);
-        match reactor {
-            Some(cfg) => Router::partitioned_reactor_overload(workers, fetch, cfg, ocfg, None)?,
-            None => Router::partitioned_overload(workers, fetch, ocfg, None)?,
+        match (reactor, pred) {
+            (Some(cfg), Some(p)) => {
+                Router::partitioned_reactor_overload_routed(workers, fetch, cfg, ocfg, None, p)?
+            }
+            (Some(cfg), None) => {
+                Router::partitioned_reactor_overload(workers, fetch, cfg, ocfg, None)?
+            }
+            (None, Some(p)) => Router::partitioned_overload_routed(workers, fetch, ocfg, None, p)?,
+            (None, None) => Router::partitioned_overload(workers, fetch, ocfg, None)?,
         }
     } else {
-        match reactor {
-            Some(cfg) => Router::partitioned_reactor(workers, fetch, cfg)?,
-            None => Router::partitioned_with(workers, fetch)?,
+        match (reactor, pred) {
+            (Some(cfg), Some(p)) => Router::partitioned_reactor_routed(workers, fetch, cfg, p)?,
+            (Some(cfg), None) => Router::partitioned_reactor(workers, fetch, cfg)?,
+            (None, Some(p)) => Router::partitioned_routed(workers, fetch, p)?,
+            (None, None) => Router::partitioned_with(workers, fetch)?,
         }
     };
 
@@ -237,6 +283,17 @@ fn main() -> anyhow::Result<()> {
         fmt_secs(e2e.percentile(0.5) / 1e9),
         fmt_secs(e2e.percentile(0.99) / 1e9),
     );
+    if routed {
+        println!(
+            "routing    : {:.2} stage-1 legs/query (vs {} full fan-out), {} escalations, \
+             {} probes (live recall {:.2})",
+            merged.routed_shards as f64 / served.max(1) as f64,
+            router.n_workers(),
+            merged.escalations,
+            merged.probes,
+            merged.probe_recall
+        );
+    }
     if let Some(rep) = router.reactor_report() {
         println!(
             "reactor    : {} admitted / {} completed, peak pending {} (window {})",

@@ -1,0 +1,614 @@
+//! Heat-aware selective routing: predict which shards a query's winners
+//! live on and scatter stage 1 to only those, instead of all N.
+//!
+//! The scatter/gather router historically paid N-way stage-1 fan-out for
+//! every query, so per-query host cost grew linearly with shard count
+//! and swamped the storage savings of fetch-after-merge. Under zipf
+//! traffic most queries' winners live on a small, predictable subset of
+//! shards; this module holds the per-shard affinity state that makes the
+//! prediction and the plan that cuts the fan-out:
+//!
+//! * **Centroid sketch** — one reduced-dim centroid per partition, built
+//!   from [`ServingCorpus`] at startup. Scoring a query is one dot
+//!   product per shard over the reduced prefix (the same dims stage 1
+//!   scans), orders of magnitude cheaper than the scan itself.
+//! * **Heat EWMA** — each shard's observed share of the merged global
+//!   top-k, fed by the merger and folded per measurement window (the
+//!   worker [`WindowCursor`] feed marks boundaries, with a query-count
+//!   fallback so the fold happens even on backends that publish no
+//!   windows). Blended into the centroid score by `heat_blend`, it lets
+//!   live traffic sharpen a stale sketch. `heat_blend = 0` disables the
+//!   blend entirely, making routing a pure function of the query — the
+//!   equivalence suite uses that to keep trials order-insensitive.
+//!
+//! Selective routing is a *prediction*, so two safety nets keep answers
+//! honest (both live in the merger, which sees the evidence):
+//!
+//! * **Escalation** — after merging the selected shards' partials, if
+//!   the promote set's tail score is weak against the best skipped
+//!   shard's centroid score (within `escalate_margin`), the query
+//!   escalates: a second scatter leg covers the remaining shards before
+//!   the answer is formed (reusing the two-phase machinery, like a
+//!   `Fetch` leg).
+//! * **Deterministic probes** — every `probe_every`-th routed query runs
+//!   full fan-out anyway. The probe's answer is bit-identical to the
+//!   unrouted router's (the merge is subset-insensitive), and comparing
+//!   the predicted-M subset's promote set against the full one yields a
+//!   live recall sample (`probe_recall`), so prediction quality is
+//!   measured in production, not asserted in tests.
+//!
+//! The overload ladder composes: rungs at or above `ShrinkM` halve M
+//! before `ShrinkK` starts cutting answer quality, and escalation is
+//! suppressed under governance (a shedding router must not amplify
+//! fan-out).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::corpus::ServingCorpus;
+use crate::storage::WindowCursor;
+
+/// EWMA smoothing for the per-shard heat shares (matches the adaptive
+/// controller's constant: a few windows of history, quick to track a
+/// shifted hot set).
+const HEAT_ALPHA: f64 = 0.4;
+
+/// Recall samples are accumulated in fixed-point millionths so the
+/// counters can live in lock-free atomics next to the leg counts.
+const RECALL_SCALE: u64 = 1_000_000;
+
+/// How many shards a query scatters to: everything (today's router) or
+/// the top-M predicted by the affinity state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteSpec {
+    /// Full fan-out — every partition worker scans stage 1.
+    All,
+    /// Selective — only the M highest-affinity shards scan stage 1;
+    /// escalation and probes backstop the prediction.
+    TopM(usize),
+}
+
+impl RouteSpec {
+    /// Parse the CLI form: `all` or `topm:M`.
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "all" {
+            return Ok(RouteSpec::All);
+        }
+        if let Some(m) = s.strip_prefix("topm:") {
+            let m: usize = m
+                .parse()
+                .map_err(|_| anyhow!("bad route spec '{s}': M must be an integer"))?;
+            ensure!(m >= 1, "bad route spec '{s}': M must be >= 1");
+            return Ok(RouteSpec::TopM(m));
+        }
+        Err(anyhow!("unknown route spec '{s}' (expected 'all' or 'topm:M')"))
+    }
+
+    /// Stable name for cell keys and reports (`all` | `topm:M`).
+    pub fn name(&self) -> String {
+        match self {
+            RouteSpec::All => "all".to_string(),
+            RouteSpec::TopM(m) => format!("topm:{m}"),
+        }
+    }
+}
+
+/// Routing policy knobs. `RouteConfig::default()` is full fan-out — the
+/// predictor only changes behaviour when the spec asks for it.
+#[derive(Clone, Debug)]
+pub struct RouteConfig {
+    pub spec: RouteSpec,
+    /// Every `probe_every`-th routed query runs full fan-out to refresh
+    /// the heat EWMA and sample live recall (0 disables probes).
+    pub probe_every: u64,
+    /// Escalate when the promote tail's reduced score is within this
+    /// margin of the best skipped shard's centroid score. Larger values
+    /// escalate more (a huge margin ≈ always full coverage; the
+    /// equivalence suite uses that to pin escalated == full fan-out).
+    pub escalate_margin: f64,
+    /// Weight of the heat EWMA in the blended affinity score (0 = pure
+    /// centroid scoring, deterministic per query).
+    pub heat_blend: f64,
+    /// Query-count fallback for the EWMA fold window when the worker
+    /// window feed is silent.
+    pub window: usize,
+}
+
+impl Default for RouteConfig {
+    fn default() -> Self {
+        RouteConfig {
+            spec: RouteSpec::All,
+            probe_every: 32,
+            escalate_margin: 0.05,
+            heat_blend: 0.25,
+            window: 32,
+        }
+    }
+}
+
+impl RouteConfig {
+    /// Selective top-M with the default safety nets.
+    pub fn top_m(m: usize) -> Self {
+        RouteConfig { spec: RouteSpec::TopM(m), ..RouteConfig::default() }
+    }
+}
+
+/// One query's routing decision: which shards scan stage 1 now, which
+/// are held back (escalation targets), and whether this query is a
+/// full-fan-out probe.
+#[derive(Clone, Debug)]
+pub struct RoutePlan {
+    /// Partition indices to scatter stage 1 to, ascending.
+    pub legs: Vec<usize>,
+    /// Partition indices held back (empty for full fan-out). Escalation
+    /// scatters to exactly these.
+    pub skipped: Vec<usize>,
+    /// The top-M predicted set (== `legs` for routed queries; on probes
+    /// `legs` is everything but this is still the prediction, so the
+    /// probe can measure its recall).
+    pub predicted: Vec<usize>,
+    /// Blended affinity score per partition (centroid dot, heat-blended).
+    pub scores: Vec<f64>,
+    /// This query runs full fan-out to refresh affinity + sample recall.
+    pub probe: bool,
+}
+
+impl RoutePlan {
+    /// Full fan-out over `n` shards (the legacy router's plan).
+    pub fn all(n: usize) -> Self {
+        RoutePlan {
+            legs: (0..n).collect(),
+            skipped: Vec::new(),
+            predicted: (0..n).collect(),
+            scores: vec![0.0; n],
+            probe: false,
+        }
+    }
+
+    /// Does this plan hold any shard back?
+    pub fn selective(&self) -> bool {
+        !self.skipped.is_empty()
+    }
+}
+
+/// Router-level routing counters, shared by the dispatch path (legs),
+/// the merger (escalations, probe recall), and `ServeStats`/
+/// `ReactorReport` (readers). Atomics because the threaded seam's
+/// router, merger, and finisher all touch them concurrently.
+#[derive(Debug, Default)]
+pub struct RouteStats {
+    /// Stage-1 search/reduce legs dispatched (escalation legs included).
+    pub stage1_legs: AtomicU64,
+    /// Queries that took the escalation leg.
+    pub escalations: AtomicU64,
+    /// Full-fan-out probe queries.
+    pub probes: AtomicU64,
+    /// Probe recall accumulator, millionths (`RECALL_SCALE`).
+    recall_num: AtomicU64,
+    /// Probe recall sample count.
+    recall_den: AtomicU64,
+}
+
+impl RouteStats {
+    pub fn add_legs(&self, n: usize) {
+        self.stage1_legs.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_escalation(&self, extra_legs: usize) {
+        self.escalations.fetch_add(1, Ordering::Relaxed);
+        self.add_legs(extra_legs);
+    }
+
+    pub fn record_probe(&self, recall: f64) {
+        self.probes.fetch_add(1, Ordering::Relaxed);
+        self.recall_num
+            .fetch_add((recall.clamp(0.0, 1.0) * RECALL_SCALE as f64) as u64, Ordering::Relaxed);
+        self.recall_den.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean recall over every probe sample so far (1.0 before the first
+    /// probe: an unmeasured router is not a failing one).
+    pub fn probe_recall(&self) -> f64 {
+        let den = self.recall_den.load(Ordering::Relaxed);
+        if den == 0 {
+            return 1.0;
+        }
+        self.recall_num.load(Ordering::Relaxed) as f64 / (den as f64 * RECALL_SCALE as f64)
+    }
+
+    /// Snapshot for stats merging: (legs, escalations, probes, recall).
+    pub fn snapshot(&self) -> (u64, u64, u64, f64) {
+        (
+            self.stage1_legs.load(Ordering::Relaxed),
+            self.escalations.load(Ordering::Relaxed),
+            self.probes.load(Ordering::Relaxed),
+            self.probe_recall(),
+        )
+    }
+}
+
+/// Mutable heat state behind the predictor's lock: the per-shard EWMA
+/// plus the counts pending the next window fold.
+struct HeatState {
+    /// EWMA of each shard's share of merged top-k contributions.
+    ewma: Vec<f64>,
+    /// Top-k contribution counts accumulated since the last fold.
+    pending: Vec<u64>,
+    /// Queries observed since the last fold (query-count fallback).
+    pending_queries: usize,
+    /// Worker window cursors: a non-empty drain marks a fold boundary.
+    feed: Vec<WindowCursor>,
+}
+
+/// Per-shard affinity state + the routing decision. One per router,
+/// shared (`Arc`) between the dispatch path and the merger/reactor.
+pub struct AffinityPredictor {
+    cfg: RouteConfig,
+    /// One normalized reduced-dim centroid per partition.
+    centroids: Vec<Vec<f32>>,
+    heat: Mutex<HeatState>,
+    /// Routed-query counter driving the deterministic probe cadence.
+    seq: AtomicU64,
+}
+
+impl AffinityPredictor {
+    /// Build the centroid sketch from the partitions a router is about
+    /// to serve (call before `Coordinator::start` consumes them).
+    pub fn from_partitions(parts: &[ServingCorpus], cfg: RouteConfig) -> Result<Self> {
+        ensure!(!parts.is_empty(), "affinity predictor needs at least one partition");
+        if let RouteSpec::TopM(m) = cfg.spec {
+            ensure!(
+                m >= 1,
+                "route topm:{m} needs M >= 1 (got {m} over {} shards)",
+                parts.len()
+            );
+        }
+        let rd = crate::runtime::SERVE.reduced_dim;
+        let centroids = parts
+            .iter()
+            .map(|p| {
+                let mut c = vec![0f64; rd];
+                let mut rows = 0usize;
+                for shard in &p.reduced_shards {
+                    for row in shard.chunks_exact(rd) {
+                        for (acc, x) in c.iter_mut().zip(row) {
+                            *acc += *x as f64;
+                        }
+                        rows += 1;
+                    }
+                }
+                let inv = 1.0 / rows.max(1) as f64;
+                let mut norm = 0f64;
+                for x in c.iter_mut() {
+                    *x *= inv;
+                    norm += *x * *x;
+                }
+                let norm = norm.sqrt().max(1e-12);
+                c.iter().map(|x| (x / norm) as f32).collect::<Vec<f32>>()
+            })
+            .collect::<Vec<_>>();
+        let n = centroids.len();
+        Ok(AffinityPredictor {
+            cfg,
+            centroids,
+            heat: Mutex::new(HeatState {
+                ewma: vec![0.0; n],
+                pending: vec![0; n],
+                pending_queries: 0,
+                feed: Vec::new(),
+            }),
+            seq: AtomicU64::new(0),
+        })
+    }
+
+    /// Attach the per-worker window feed: a drain that shows published
+    /// device traffic marks an EWMA fold boundary (the measurement
+    /// window the rest of the serving stack already uses).
+    pub fn attach_feed(&self, feed: Vec<WindowCursor>) {
+        self.heat.lock().unwrap_or_else(PoisonError::into_inner).feed = feed;
+    }
+
+    pub fn config(&self) -> &RouteConfig {
+        &self.cfg
+    }
+
+    pub fn shards(&self) -> usize {
+        self.centroids.len()
+    }
+
+    /// Effective M after the overload ladder's say: rungs at or above
+    /// `ShrinkM` halve the fan-out (floor 1) before `ShrinkK` starts
+    /// cutting answer quality.
+    fn effective_m(&self, m: usize, shrink_m: bool) -> usize {
+        let m = m.min(self.centroids.len()).max(1);
+        if shrink_m {
+            (m / 2).max(1)
+        } else {
+            m
+        }
+    }
+
+    /// Blended affinity score per shard for one query (centroid dot over
+    /// the reduced prefix + heat EWMA).
+    pub fn scores(&self, query: &[f32]) -> Vec<f64> {
+        let rd = self.centroids[0].len().min(query.len());
+        let heat: Option<Vec<f64>> = if self.cfg.heat_blend > 0.0 {
+            Some(self.heat.lock().unwrap_or_else(PoisonError::into_inner).ewma.clone())
+        } else {
+            None
+        };
+        self.centroids
+            .iter()
+            .enumerate()
+            .map(|(s, c)| {
+                let dot: f64 = c[..rd]
+                    .iter()
+                    .zip(&query[..rd])
+                    .map(|(a, b)| *a as f64 * *b as f64)
+                    .sum();
+                match &heat {
+                    Some(h) => (1.0 - self.cfg.heat_blend) * dot + self.cfg.heat_blend * h[s],
+                    None => dot,
+                }
+            })
+            .collect()
+    }
+
+    /// Decide one query's routing. `shrink_m` is the overload ladder's
+    /// input: true when the governed rung is at or above `ShrinkM`.
+    pub fn plan(&self, query: &[f32], shrink_m: bool) -> RoutePlan {
+        let n = self.centroids.len();
+        let m = match self.cfg.spec {
+            RouteSpec::All => return RoutePlan::all(n),
+            RouteSpec::TopM(m) => self.effective_m(m, shrink_m),
+        };
+        let scores = self.scores(query);
+        // top-M by blended score, ties broken by shard index so the
+        // plan is deterministic for a given query + heat state
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        let mut predicted: Vec<usize> = order[..m.min(n)].to_vec();
+        predicted.sort_unstable();
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        // no probes while the ladder is shrinking M: an overloaded router
+        // must not amplify its own fan-out
+        let probe = !shrink_m
+            && m < n
+            && self.cfg.probe_every > 0
+            && seq % self.cfg.probe_every == 0;
+        let (legs, skipped) = if probe || m >= n {
+            ((0..n).collect(), Vec::new())
+        } else {
+            let skipped =
+                (0..n).filter(|s| !predicted.contains(s)).collect::<Vec<_>>();
+            (predicted.clone(), skipped)
+        };
+        RoutePlan { legs, skipped, predicted, scores, probe }
+    }
+
+    /// The merger's escalation test: with the selected shards' promote
+    /// set merged, is its tail score `tail` safe against the best
+    /// skipped shard's predicted bound? Weak tails escalate.
+    pub fn should_escalate(&self, tail: f32, plan: &RoutePlan) -> bool {
+        let Some(best) = plan
+            .skipped
+            .iter()
+            .map(|&s| plan.scores[s])
+            .max_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+        else {
+            return false;
+        };
+        (tail as f64) < best + self.cfg.escalate_margin
+    }
+
+    /// Feed one merged top-k's per-shard contribution counts (from the
+    /// merger). Folds the EWMA when a measurement window closes — the
+    /// worker window feed marks boundaries, with the query-count window
+    /// as fallback.
+    pub fn observe_topk(&self, counts: &[u64]) {
+        if self.cfg.heat_blend <= 0.0 {
+            return;
+        }
+        let mut st = self.heat.lock().unwrap_or_else(PoisonError::into_inner);
+        for (p, c) in st.pending.iter_mut().zip(counts) {
+            *p += *c;
+        }
+        st.pending_queries += 1;
+        let boundary = st.pending_queries >= self.cfg.window.max(1)
+            || st.feed.iter().any(|cur| cur.drain().span_ns > 0);
+        if boundary {
+            let total: u64 = st.pending.iter().sum();
+            if total > 0 {
+                let shares: Vec<f64> =
+                    st.pending.iter().map(|&c| c as f64 / total as f64).collect();
+                for (e, s) in st.ewma.iter_mut().zip(&shares) {
+                    *e = (1.0 - HEAT_ALPHA) * *e + HEAT_ALPHA * *s;
+                }
+            }
+            for p in st.pending.iter_mut() {
+                *p = 0;
+            }
+            st.pending_queries = 0;
+        }
+    }
+
+    /// Current heat EWMA (test/report hook).
+    pub fn heat(&self) -> Vec<f64> {
+        self.heat.lock().unwrap_or_else(PoisonError::into_inner).ewma.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SERVE;
+
+    fn parts(n: usize) -> Vec<ServingCorpus> {
+        ServingCorpus::synthetic_clustered(n, n, 0xAFF1)
+            .partitions(n)
+            .unwrap()
+    }
+
+    #[test]
+    fn route_spec_parses_cli_forms() {
+        assert_eq!(RouteSpec::parse("all").unwrap(), RouteSpec::All);
+        assert_eq!(RouteSpec::parse("topm:2").unwrap(), RouteSpec::TopM(2));
+        assert_eq!(RouteSpec::parse("topm:2").unwrap().name(), "topm:2");
+        assert_eq!(RouteSpec::All.name(), "all");
+        assert!(RouteSpec::parse("topm:0").is_err());
+        assert!(RouteSpec::parse("topm:x").is_err());
+        assert!(RouteSpec::parse("some").is_err());
+    }
+
+    #[test]
+    fn centroid_scoring_picks_the_home_shard() {
+        let n = 4;
+        let corpus = ServingCorpus::synthetic_clustered(n, n, 0xAFF2);
+        let parts = corpus.partitions(n).unwrap();
+        let pred =
+            AffinityPredictor::from_partitions(&parts, RouteConfig::top_m(1)).unwrap();
+        // a query near a vector of partition p must score p highest
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut hits = 0usize;
+        let trials = 32;
+        for t in 0..trials {
+            let p = t % n;
+            let id = p * SERVE.shard + (t * 131) % SERVE.shard;
+            let q = corpus.query_near(id, 0.02, &mut rng);
+            let plan = pred.plan(&q, false);
+            if plan.predicted == vec![p] {
+                hits += 1;
+            }
+        }
+        assert!(hits * 10 >= trials * 9, "centroid routing hit only {hits}/{trials}");
+    }
+
+    #[test]
+    fn plan_shapes_follow_the_spec() {
+        let parts = parts(4);
+        let q = vec![0.5f32; SERVE.full_dim];
+        let all =
+            AffinityPredictor::from_partitions(&parts, RouteConfig::default()).unwrap();
+        let plan = all.plan(&q, false);
+        assert_eq!(plan.legs, vec![0, 1, 2, 3]);
+        assert!(plan.skipped.is_empty() && !plan.probe && !plan.selective());
+
+        let mut cfg = RouteConfig::top_m(2);
+        cfg.probe_every = 0; // isolate selection from probe cadence
+        cfg.heat_blend = 0.0;
+        let top = AffinityPredictor::from_partitions(&parts, cfg).unwrap();
+        let plan = top.plan(&q, false);
+        assert_eq!(plan.legs.len(), 2);
+        assert_eq!(plan.skipped.len(), 2);
+        assert_eq!(plan.predicted, plan.legs);
+        assert!(plan.selective());
+        // legs + skipped tile the shard set
+        let mut union: Vec<usize> =
+            plan.legs.iter().chain(&plan.skipped).copied().collect();
+        union.sort_unstable();
+        assert_eq!(union, vec![0, 1, 2, 3]);
+        // M >= N degenerates to full fan-out
+        let mut cfg = RouteConfig::top_m(9);
+        cfg.probe_every = 0;
+        let wide = AffinityPredictor::from_partitions(&parts, cfg).unwrap();
+        let plan = wide.plan(&q, false);
+        assert_eq!(plan.legs, vec![0, 1, 2, 3]);
+        assert!(!plan.selective());
+    }
+
+    #[test]
+    fn probe_cadence_is_deterministic() {
+        let parts = parts(4);
+        let mut cfg = RouteConfig::top_m(2);
+        cfg.probe_every = 4;
+        cfg.heat_blend = 0.0;
+        let pred = AffinityPredictor::from_partitions(&parts, cfg).unwrap();
+        let q = vec![0.25f32; SERVE.full_dim];
+        let probes: Vec<bool> = (0..8).map(|_| pred.plan(&q, false).probe).collect();
+        assert_eq!(probes, vec![true, false, false, false, true, false, false, false]);
+        // probe queries scatter everywhere but still carry the prediction
+        let pred2 =
+            AffinityPredictor::from_partitions(&parts(4), RouteConfig::top_m(2)).unwrap();
+        let plan = pred2.plan(&q, false);
+        assert!(plan.probe);
+        assert_eq!(plan.legs.len(), 4);
+        assert_eq!(plan.predicted.len(), 2);
+    }
+
+    #[test]
+    fn shrink_m_halves_the_fanout_with_a_floor() {
+        let parts = parts(4);
+        let mut cfg = RouteConfig::top_m(4);
+        cfg.probe_every = 0;
+        let pred = AffinityPredictor::from_partitions(&parts, cfg).unwrap();
+        let q = vec![0.1f32; SERVE.full_dim];
+        assert_eq!(pred.plan(&q, false).legs.len(), 4);
+        assert_eq!(pred.plan(&q, true).legs.len(), 2);
+        let mut cfg = RouteConfig::top_m(1);
+        cfg.probe_every = 0;
+        let one = AffinityPredictor::from_partitions(&parts, cfg).unwrap();
+        assert_eq!(one.plan(&q, true).legs.len(), 1, "shrink floors at M=1");
+    }
+
+    #[test]
+    fn escalation_fires_on_weak_tails_only() {
+        let parts = parts(4);
+        let mut cfg = RouteConfig::top_m(2);
+        cfg.probe_every = 0;
+        cfg.heat_blend = 0.0;
+        cfg.escalate_margin = 0.05;
+        let pred = AffinityPredictor::from_partitions(&parts, cfg).unwrap();
+        let q = vec![0.3f32; SERVE.full_dim];
+        let plan = pred.plan(&q, false);
+        assert!(plan.selective());
+        let best_skipped =
+            plan.skipped.iter().map(|&s| plan.scores[s]).fold(f64::MIN, f64::max);
+        // a tail comfortably above the bound holds; a weak tail escalates
+        assert!(!pred.should_escalate((best_skipped + 0.2) as f32, &plan));
+        assert!(pred.should_escalate((best_skipped - 0.01) as f32, &plan));
+        // full-fan-out plans never escalate (nothing is skipped)
+        assert!(!pred.should_escalate(-1.0, &RoutePlan::all(4)));
+    }
+
+    #[test]
+    fn heat_ewma_folds_on_the_query_window() {
+        let parts = parts(2);
+        let mut cfg = RouteConfig::top_m(1);
+        cfg.heat_blend = 0.5;
+        cfg.window = 4;
+        let pred = AffinityPredictor::from_partitions(&parts, cfg).unwrap();
+        assert_eq!(pred.heat(), vec![0.0, 0.0]);
+        // shard 1 contributes the whole top-k for a window of queries
+        for _ in 0..4 {
+            pred.observe_topk(&[0, 8]);
+        }
+        let h = pred.heat();
+        assert!(h[1] > h[0], "hot shard must gain heat: {h:?}");
+        assert!((h[1] - HEAT_ALPHA).abs() < 1e-9, "one fold of share 1.0: {h:?}");
+        // heat_blend = 0 keeps the predictor pure (no state movement)
+        let mut cfg = RouteConfig::top_m(1);
+        cfg.heat_blend = 0.0;
+        let pure = AffinityPredictor::from_partitions(&parts(2), cfg).unwrap();
+        for _ in 0..64 {
+            pure.observe_topk(&[0, 8]);
+        }
+        assert_eq!(pure.heat(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn route_stats_accumulate_and_average() {
+        let st = RouteStats::default();
+        assert_eq!(st.probe_recall(), 1.0, "unmeasured recall reads 1.0");
+        st.add_legs(4);
+        st.add_escalation(2);
+        st.record_probe(1.0);
+        st.record_probe(0.5);
+        let (legs, esc, probes, recall) = st.snapshot();
+        assert_eq!((legs, esc, probes), (6, 1, 2));
+        assert!((recall - 0.75).abs() < 1e-6);
+    }
+}

@@ -80,6 +80,73 @@ impl ServingCorpus {
         ServingCorpus { reduced_shards, full, n, base: 0 }
     }
 
+    /// Like [`ServingCorpus::synthetic`], but with *placement locality*:
+    /// vectors are drawn around `n_clusters` random cluster directions,
+    /// and clusters are laid out shard-contiguous, so after
+    /// [`ServingCorpus::partitions`] each partition owns whole clusters.
+    /// This is the corpus selective routing is built for — a query near
+    /// a clustered vector has its true top-k concentrated on the owning
+    /// partition, so a per-partition centroid sketch can predict the
+    /// winner shards. The iid `synthetic` corpus is the adversarial
+    /// opposite (every query's winners spread uniformly over shards);
+    /// both matter: iid pins the escalation/probe safety nets, clustered
+    /// pins the recall floor.
+    ///
+    /// Cluster energy is concentrated in the reduced prefix (like the
+    /// base corpus's decaying-energy layout), so stage-1 scores and the
+    /// affinity centroids see the same structure.
+    pub fn synthetic_clustered(n_shards: usize, n_clusters: usize, seed: u64) -> Self {
+        assert!(n_clusters >= 1 && n_shards % n_clusters == 0,
+            "{n_shards} shard(s) must split evenly over {n_clusters} cluster(s)");
+        let n = n_shards * SERVE.shard;
+        let fd = SERVE.full_dim;
+        let rd = SERVE.reduced_dim;
+        let per_cluster = n / n_clusters;
+        let mut rng = Rng::new(seed);
+        // cluster directions: unit vectors with the corpus's decaying
+        // per-dim energy, so they live where the reduced prefix looks
+        let dirs: Vec<Vec<f32>> = (0..n_clusters)
+            .map(|_| {
+                let mut d = vec![0f32; fd];
+                let mut norm = 0f32;
+                for (i, x) in d.iter_mut().enumerate() {
+                    let decay = 1.0 / (1.0 + i as f32 * 0.01);
+                    *x = rng.gaussian() as f32 * decay;
+                    norm += *x * *x;
+                }
+                let norm = norm.sqrt().max(1e-9);
+                d.iter().map(|x| x / norm).collect()
+            })
+            .collect();
+        const ALPHA: f32 = 0.75; // cluster pull vs residual noise
+        let mut full = vec![0f32; n * fd];
+        for v in 0..n {
+            let dir = &dirs[v / per_cluster];
+            let row = &mut full[v * fd..(v + 1) * fd];
+            let mut norm = 0f32;
+            for (i, x) in row.iter_mut().enumerate() {
+                let decay = 1.0 / (1.0 + i as f32 * 0.01);
+                *x = ALPHA * dir[i] + (1.0 - ALPHA) * rng.gaussian() as f32 * decay;
+                norm += *x * *x;
+            }
+            let norm = norm.sqrt().max(1e-9);
+            for x in row.iter_mut() {
+                *x /= norm;
+            }
+        }
+        let mut reduced_shards = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let mut shard = vec![0f32; SERVE.shard * rd];
+            for i in 0..SERVE.shard {
+                let v = s * SERVE.shard + i;
+                shard[i * rd..(i + 1) * rd]
+                    .copy_from_slice(&full[v * fd..v * fd + rd]);
+            }
+            reduced_shards.push(shard);
+        }
+        ServingCorpus { reduced_shards, full, n, base: 0 }
+    }
+
     /// Split into `n_parts` contiguous partitions (ownership, not
     /// replicas): partition `p` holds shards `[p*spp, (p+1)*spp)` and the
     /// matching full vectors, with `base` recording its global-id offset.
@@ -189,6 +256,45 @@ mod tests {
         assert_eq!(parts.iter().map(|p| p.n).sum::<usize>(), c.n);
         assert!(c.partitions(3).is_err(), "4 shards cannot split 3 ways");
         assert!(c.partitions(0).is_err());
+    }
+
+    #[test]
+    fn clustered_corpus_keeps_winners_on_the_home_partition() {
+        let n_shards = 4;
+        let c = ServingCorpus::synthetic_clustered(n_shards, n_shards, 0xC1);
+        assert_eq!(c.n, n_shards * SERVE.shard);
+        assert_eq!(c.reduced_shards.len(), n_shards);
+        // normalized, reduced is prefix — same contract as synthetic
+        for i in [0usize, SERVE.shard, c.n - 1] {
+            let n2: f32 = c.full_vector(i).iter().map(|x| x * x).sum();
+            assert!((n2 - 1.0).abs() < 1e-3, "norm^2 {n2}");
+        }
+        // a query near a vector has its nearest neighbours (by full dot)
+        // overwhelmingly on the owning partition
+        let parts = c.partitions(n_shards).unwrap();
+        let mut rng = Rng::new(5);
+        for probe in [1usize, SERVE.shard + 7, 3 * SERVE.shard + 11] {
+            let q = c.query_near(probe, 0.02, &mut rng);
+            let mut scored: Vec<(usize, f32)> = (0..c.n)
+                .map(|v| {
+                    let dot = c
+                        .full_vector(v)
+                        .iter()
+                        .zip(&q)
+                        .map(|(a, b)| a * b)
+                        .sum::<f32>();
+                    (v, dot)
+                })
+                .collect();
+            scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+            let home = parts.iter().position(|p| p.owns(probe)).unwrap();
+            let on_home =
+                scored[..16].iter().filter(|(v, _)| parts[home].owns(*v)).count();
+            assert!(on_home >= 15, "only {on_home}/16 of top-16 on home partition");
+        }
+        // clusters must tile shards evenly
+        let r = std::panic::catch_unwind(|| ServingCorpus::synthetic_clustered(4, 3, 1));
+        assert!(r.is_err());
     }
 
     #[test]

@@ -85,6 +85,7 @@
 //!   ([`merge_partials`]-family), which the equivalence suite pins.
 
 pub mod adaptive;
+pub mod affinity;
 pub mod batcher;
 pub mod corpus;
 pub mod overload;
@@ -108,6 +109,7 @@ use crate::storage::{
 use crate::util::stats::LatencyHist;
 use batcher::{collect_batch, collect_batch_timeout, BatchPolicy, Job};
 pub use adaptive::{AdaptiveConfig, AdaptiveController, AdaptiveReport};
+pub use affinity::{AffinityPredictor, RouteConfig, RoutePlan, RouteSpec, RouteStats};
 pub use corpus::ServingCorpus;
 pub use overload::{
     GuardrailWindow, OverloadConfig, OverloadController, OverloadReport, Rung, ShedPlan,
@@ -216,6 +218,19 @@ pub struct ServeStats {
     /// Rolling snapshot of the worker's backend (traffic histograms plus
     /// device-level stats when MQSim-Next serves the reads).
     pub storage: Option<StorageSnapshot>,
+    /// Stage-1 scatter legs the router dispatched (selective routing's
+    /// measured fan-out — escalation legs included, so `routed_shards /
+    /// queries` is the true average fan-out). Router-level: only
+    /// [`Router::merged_stats`]/[`Router::settled_stats`] carry it;
+    /// per-worker stats read 0.
+    pub routed_shards: u64,
+    /// Queries that took the escalation safety net's second scatter leg.
+    pub escalations: u64,
+    /// Full-fan-out probe queries the affinity predictor scheduled.
+    pub probes: u64,
+    /// Mean live recall measured on probe queries (1.0 when no probe has
+    /// run — an unmeasured router is not a failing one).
+    pub probe_recall: f64,
 }
 
 impl ServeStats {
@@ -232,6 +247,10 @@ impl ServeStats {
             ssd_reads: 0,
             storage_stall_ns: LatencyHist::for_latency_ns(),
             storage: None,
+            routed_shards: 0,
+            escalations: 0,
+            probes: 0,
+            probe_recall: 1.0,
         }
     }
 }
@@ -979,6 +998,30 @@ pub(crate) fn resolve_dispatch(
     }
 }
 
+/// Resolve one admitted query's stage-1 routing: which partition workers
+/// scan now, which are held back as escalation targets, and whether this
+/// query is a full-fan-out probe. One definition shared by the threaded
+/// seam (`dispatch_partition`) and the reactor's `admit` so selective
+/// routing cannot drift between them — the seam×route equivalence arm in
+/// `router_equivalence_prop.rs` pins that. Routers without a predictor
+/// (and replica routers) get the legacy full fan-out. The overload
+/// ladder composes here: a granted plan at or above [`Rung::ShrinkM`]
+/// halves M (and suppresses probes) before shrink-k bites.
+pub(crate) fn route_query(
+    route: Option<&Arc<AffinityPredictor>>,
+    n_workers: usize,
+    query: &[f32],
+    plan: Option<&ShedPlan>,
+) -> RoutePlan {
+    let Some(pred) = route else {
+        return RoutePlan::all(n_workers);
+    };
+    let shrink = plan
+        .map(|p| p.rung.level() >= Rung::ShrinkM.level())
+        .unwrap_or(false);
+    pred.plan(query, shrink)
+}
+
 /// How a [`Router`] maps queries onto its workers.
 #[derive(Clone, Copy)]
 enum RouteMode {
@@ -997,6 +1040,12 @@ struct MergerCtx {
     worker_txs: Vec<mpsc::Sender<Job<WorkerRequest, Resp>>>,
     owners: Vec<Range<u32>>,
     latency: Arc<Mutex<LatencyHist>>,
+    /// The affinity predictor when this router routes selectively — the
+    /// merger hosts both safety nets (escalation and probe recall) and
+    /// feeds the heat EWMA from merged top-k evidence.
+    route: Option<Arc<AffinityPredictor>>,
+    /// Shared routing counters (legs / escalations / probes / recall).
+    route_stats: Arc<RouteStats>,
 }
 
 /// One scatter/gather merge awaiting its partition answers. `submitted`
@@ -1026,6 +1075,10 @@ enum MergeJob {
         /// ladder's shrink-k rung.
         promote_k: usize,
         governed: Option<u32>,
+        /// The routing decision this query scattered under, when the
+        /// router routes selectively (`None` on full-fan-out routers).
+        /// `parts` receivers are aligned with `route.legs`.
+        route: Option<RoutePlan>,
     },
     /// Degraded (stage-1-only) answer: merge reduced partials into the
     /// promote set and answer it directly — zero stage-2 device reads.
@@ -1087,6 +1140,14 @@ pub struct Router {
     /// [`Router::take_device_window`]'s own per-worker subscribers —
     /// independent of the adaptive feed, so the two can share a router.
     device_cursors: Vec<WindowCursor>,
+    /// Present iff the router routes selectively
+    /// ([`Router::partitioned_routed`]-family): the per-shard affinity
+    /// state both seams consult through [`route_query`].
+    route: Option<Arc<AffinityPredictor>>,
+    /// Routing counters — present on *every* router (full-fan-out legs
+    /// are counted too), so the smoke matrix reports exact stage-1
+    /// legs/query for `route=all` and `route=topm` cells alike.
+    route_stats: Arc<RouteStats>,
 }
 
 impl Router {
@@ -1110,6 +1171,8 @@ impl Router {
             reactor_metrics: None,
             adaptive_feed: Vec::new(),
             device_cursors,
+            route: None,
+            route_stats: Arc::new(RouteStats::default()),
         })
     }
 
@@ -1141,14 +1204,57 @@ impl Router {
             FetchMode::Adaptive => Some(AdaptiveConfig::default()),
             _ => None,
         };
-        Self::partitioned_inner(workers, fetch, ctrl, None)
+        Self::partitioned_inner(workers, fetch, ctrl, None, None)
     }
 
     /// Adaptive scatter/gather router with explicit controller tuning
     /// (window size, hysteresis, probe cadence — see [`AdaptiveConfig`]).
     /// `partitioned_with(.., FetchMode::Adaptive)` uses the defaults.
     pub fn partitioned_adaptive(workers: Vec<Coordinator>, cfg: AdaptiveConfig) -> Result<Self> {
-        Self::partitioned_inner(workers, FetchMode::Adaptive, Some(cfg), None)
+        Self::partitioned_inner(workers, FetchMode::Adaptive, Some(cfg), None, None)
+    }
+
+    /// Scatter/gather router with **heat-aware selective routing**: an
+    /// [`AffinityPredictor`] (build it with
+    /// [`AffinityPredictor::from_partitions`] *before* handing the
+    /// partitions to [`Coordinator::start`]) decides per query which
+    /// top-M shards scan stage 1, instead of all N. Selective queries
+    /// always run fetch-after-merge (a routed scatter must not multiply
+    /// into `N×k` speculative reads), the merger escalates weak-tail
+    /// queries to the remaining shards before answering, and every
+    /// `probe_every`-th query runs full fan-out to refresh the heat
+    /// EWMA and sample live recall — see [`affinity`]. A predictor with
+    /// [`RouteSpec::All`] behaves exactly like
+    /// [`Router::partitioned_with`].
+    pub fn partitioned_routed(
+        workers: Vec<Coordinator>,
+        fetch: FetchMode,
+        route: Arc<AffinityPredictor>,
+    ) -> Result<Self> {
+        let ctrl = match fetch {
+            FetchMode::Adaptive => Some(AdaptiveConfig::default()),
+            _ => None,
+        };
+        Self::partitioned_inner(workers, fetch, ctrl, None, Some(route))
+    }
+
+    /// [`Router::partitioned_routed`] governed by the shedding ladder:
+    /// the ladder's early [`Rung::ShrinkM`] rung halves the routed
+    /// fan-out (and suppresses probes) before shrink-k starts cutting
+    /// answer quality.
+    pub fn partitioned_overload_routed(
+        workers: Vec<Coordinator>,
+        fetch: FetchMode,
+        cfg: OverloadConfig,
+        tier: Option<TierControl>,
+        route: Arc<AffinityPredictor>,
+    ) -> Result<Self> {
+        let ctrl = match fetch {
+            FetchMode::Adaptive => Some(AdaptiveConfig::default()),
+            _ => None,
+        };
+        let over = Arc::new(OverloadController::new(cfg, tier));
+        Self::partitioned_inner(workers, fetch, ctrl, Some(over), Some(route))
     }
 
     /// Scatter/gather router governed by an overload controller: queries
@@ -1170,7 +1276,7 @@ impl Router {
             _ => None,
         };
         let over = Arc::new(OverloadController::new(cfg, tier));
-        Self::partitioned_inner(workers, fetch, ctrl, Some(over))
+        Self::partitioned_inner(workers, fetch, ctrl, Some(over), None)
     }
 
     fn partitioned_inner(
@@ -1178,8 +1284,21 @@ impl Router {
         fetch: FetchMode,
         ctrl_cfg: Option<AdaptiveConfig>,
         overload: Option<Arc<OverloadController>>,
+        route: Option<Arc<AffinityPredictor>>,
     ) -> Result<Self> {
         ensure!(!workers.is_empty(), "router needs at least one worker");
+        if let Some(r) = &route {
+            ensure!(
+                r.shards() == workers.len(),
+                "affinity predictor covers {} partition(s), router has {}",
+                r.shards(),
+                workers.len()
+            );
+            // the predictor folds its heat EWMA on the same measurement
+            // windows the rest of the serving stack uses
+            r.attach_feed(workers.iter().map(|w| w.subscribe_window()).collect());
+        }
+        let route_stats = Arc::new(RouteStats::default());
         let adaptive = ctrl_cfg
             .map(|cfg| Arc::new(AdaptiveController::new(workers.len(), SERVE.topk, cfg)));
         let gather_latency = Arc::new(Mutex::new(LatencyHist::for_latency_ns()));
@@ -1191,6 +1310,8 @@ impl Router {
             worker_txs,
             owners: workers.iter().map(|w| w.owned.clone()).collect(),
             latency: gather_latency.clone(),
+            route: route.clone(),
+            route_stats: route_stats.clone(),
         };
         // The finisher completes two-phase queries (awaits their fetch
         // legs) so the merger thread never blocks on a phase-2 round-trip:
@@ -1270,8 +1391,9 @@ impl Router {
                             resp,
                             promote_k,
                             governed,
+                            route,
                         } => {
-                            match two_phase_dispatch(&ctx, query, parts, promote_k) {
+                            match two_phase_dispatch(&ctx, query, parts, promote_k, route) {
                                 Ok((cand, fetch_rx, batch_size)) => {
                                     let dispatched = Instant::now();
                                     let _ = finish_tx.send((
@@ -1319,6 +1441,8 @@ impl Router {
             reactor_metrics: None,
             adaptive_feed,
             device_cursors,
+            route,
+            route_stats,
         })
     }
 
@@ -1338,7 +1462,21 @@ impl Router {
         fetch: FetchMode,
         cfg: ReactorConfig,
     ) -> Result<Self> {
-        Self::reactor_inner(workers, fetch, cfg, None)
+        Self::reactor_inner(workers, fetch, cfg, None, None)
+    }
+
+    /// [`Router::partitioned_routed`] on the reactor seam: the event
+    /// loop consults the same [`route_query`] helper at admission, holds
+    /// escalation as one more `Phase1` pass of the query's state
+    /// machine, and shares the routing counters with the threaded seam's
+    /// report shape.
+    pub fn partitioned_reactor_routed(
+        workers: Vec<Coordinator>,
+        fetch: FetchMode,
+        cfg: ReactorConfig,
+        route: Arc<AffinityPredictor>,
+    ) -> Result<Self> {
+        Self::reactor_inner(workers, fetch, cfg, None, Some(route))
     }
 
     /// [`Router::partitioned_reactor`] governed by the PR 6 shedding
@@ -1354,7 +1492,23 @@ impl Router {
         tier: Option<TierControl>,
     ) -> Result<Self> {
         let over = Arc::new(OverloadController::new(ocfg, tier));
-        Self::reactor_inner(workers, fetch, cfg, Some(over))
+        Self::reactor_inner(workers, fetch, cfg, Some(over), None)
+    }
+
+    /// [`Router::partitioned_reactor_routed`] governed by the shedding
+    /// ladder ([`Rung::ShrinkM`] halves M before shrink-k) — the
+    /// reactor-seam counterpart of
+    /// [`Router::partitioned_overload_routed`].
+    pub fn partitioned_reactor_overload_routed(
+        workers: Vec<Coordinator>,
+        fetch: FetchMode,
+        cfg: ReactorConfig,
+        ocfg: OverloadConfig,
+        tier: Option<TierControl>,
+        route: Arc<AffinityPredictor>,
+    ) -> Result<Self> {
+        let over = Arc::new(OverloadController::new(ocfg, tier));
+        Self::reactor_inner(workers, fetch, cfg, Some(over), Some(route))
     }
 
     fn reactor_inner(
@@ -1362,8 +1516,19 @@ impl Router {
         fetch: FetchMode,
         cfg: ReactorConfig,
         overload: Option<Arc<OverloadController>>,
+        route: Option<Arc<AffinityPredictor>>,
     ) -> Result<Self> {
         ensure!(!workers.is_empty(), "router needs at least one worker");
+        if let Some(r) = &route {
+            ensure!(
+                r.shards() == workers.len(),
+                "affinity predictor covers {} partition(s), router has {}",
+                r.shards(),
+                workers.len()
+            );
+            r.attach_feed(workers.iter().map(|w| w.subscribe_window()).collect());
+        }
+        let route_stats = Arc::new(RouteStats::default());
         let adaptive = match fetch {
             FetchMode::Adaptive => Some(Arc::new(AdaptiveController::new(
                 workers.len(),
@@ -1377,7 +1542,8 @@ impl Router {
         for w in &workers {
             worker_txs.push(w.tx.clone().ok_or_else(|| anyhow!("worker already stopped"))?);
         }
-        let metrics = Arc::new(reactor::ReactorMetrics::new(cfg.admission.max(1)));
+        let metrics =
+            Arc::new(reactor::ReactorMetrics::new(cfg.admission.max(1), route_stats.clone()));
         let ctx = reactor::ReactorCtx {
             worker_txs,
             owners: workers.iter().map(|w| w.owned.clone()).collect(),
@@ -1390,6 +1556,8 @@ impl Router {
             fetch,
             metrics: metrics.clone(),
             admission: cfg.admission.max(1),
+            route: route.clone(),
+            route_stats: route_stats.clone(),
         };
         let (job_tx, job_rx) = mpsc::channel::<reactor::ReactorJob>();
         let handle = std::thread::Builder::new()
@@ -1411,6 +1579,8 @@ impl Router {
             reactor_metrics: Some(metrics),
             adaptive_feed: Vec::new(),
             device_cursors,
+            route,
+            route_stats,
         })
     }
 
@@ -1502,14 +1672,29 @@ impl Router {
         // traffic on the same router stays invisible to it. The plan
         // carries the tenant the completion must be credited to.
         let governed = plan.map(|p| p.tenant);
-        let (stage1_only, promote_k, eff) =
+        let rplan = route_query(self.route.as_ref(), self.workers.len(), &query_full, plan.as_ref());
+        let (stage1_only, promote_k, mut eff) =
             resolve_dispatch(plan, fetch, self.adaptive.as_ref(), &self.adaptive_feed);
+        // Selective routers always run fetch-after-merge: a routed
+        // scatter feeding speculative fetches would still pay per-leg
+        // stage-2 bursts, and the merger needs the reduce partials to
+        // judge escalation. Probe queries stay two-phase too, so their
+        // answers are bit-identical to the unrouted after-merge router.
+        let routed = self
+            .route
+            .as_ref()
+            .map(|r| matches!(r.config().spec, RouteSpec::TopM(_)))
+            .unwrap_or(false);
+        if routed {
+            eff = FetchMode::AfterMerge;
+        }
         let submitted = Instant::now();
-        let parts: Vec<_> = self
-            .workers
+        self.route_stats.add_legs(rplan.legs.len());
+        let parts: Vec<_> = rplan
+            .legs
             .iter()
-            .map(|w| {
-                w.submit_request(if stage1_only || eff == FetchMode::AfterMerge {
+            .map(|&p| {
+                self.workers[p].submit_request(if stage1_only || eff == FetchMode::AfterMerge {
                     WorkerRequest::Reduce(query_full.clone())
                 } else {
                     WorkerRequest::Search(query_full.clone())
@@ -1527,6 +1712,7 @@ impl Router {
                 resp: rtx,
                 promote_k,
                 governed,
+                route: routed.then_some(rplan),
             }
         } else {
             MergeJob::Gather { submitted, parts, resp: rtx, governed }
@@ -1647,6 +1833,13 @@ impl Router {
             }
         }
         out.storage = storage;
+        // router-level routing counters (the workers know nothing of
+        // routing — a skipped shard never saw the query)
+        let (legs, escalations, probes, recall) = self.route_stats.snapshot();
+        out.routed_shards = legs;
+        out.escalations = escalations;
+        out.probes = probes;
+        out.probe_recall = recall;
         out
     }
 
@@ -1674,10 +1867,18 @@ impl Router {
                         + s.stats.tier.as_ref().map(|t| t.stage2_hits).unwrap_or(0)
                 })
                 .unwrap_or(0);
-            if snap_reads >= st.ssd_reads || Instant::now() > deadline {
+            // An already-settled router returns immediately — no poll
+            // sleep is ever paid after the counters reconcile (the unit
+            // test in serving_integration.rs pins this), and the poll is
+            // an order of magnitude tighter than the old 5 ms so a
+            // just-about-to-settle router isn't held a full interval.
+            if snap_reads >= st.ssd_reads {
                 return st;
             }
-            std::thread::sleep(Duration::from_millis(5));
+            if Instant::now() >= deadline {
+                return st;
+            }
+            std::thread::sleep(Duration::from_micros(500));
         }
     }
 }
@@ -1778,16 +1979,131 @@ fn two_phase_dispatch(
     query: Vec<f32>,
     parts: Vec<mpsc::Receiver<Resp>>,
     promote_k: usize,
+    route: Option<RoutePlan>,
 ) -> Result<(Vec<(f32, u32)>, Vec<mpsc::Receiver<Resp>>, usize), String> {
-    // ---- phase 1: gather local reduced top-k from every partition ----
+    // ---- phase 1: gather local reduced top-k from every routed leg ----
     let mut partials = Vec::with_capacity(parts.len());
     for rx in parts {
         partials.push(recv_partial(&rx)?);
+    }
+    // ---- selective routing's safety nets (escalation, probe recall) ---
+    if let Some(rp) = route {
+        partials = settle_route(ctx, &query, &rp, partials, promote_k)?;
     }
     let (cand, batch_size) = promote_reduced(partials, promote_k)?;
     // ---- phase 2 dispatch: one fetch leg per owning partition --------
     let fetch_rx = dispatch_fetch_legs(&ctx.worker_txs, &ctx.owners, &query, &cand)?;
     Ok((cand, fetch_rx, batch_size))
+}
+
+/// The merger's routing epilogue for one query's gathered stage-1
+/// partials: on probes, sample live recall and feed the heat EWMA; on
+/// selective queries, apply the escalation safety net — when the promote
+/// set's tail is weak against the best skipped shard's predicted bound,
+/// scatter a second reduce leg to the remaining shards and fold their
+/// partials in before promotion. Returns the partial set promotion runs
+/// over. The merge itself is subset- and order-insensitive
+/// ([`promote_cmp`] over the candidate union), so an escalated query's
+/// answer equals the full-fan-out answer bit for bit, and a probe's does
+/// trivially — the equivalence suite pins both.
+fn settle_route(
+    ctx: &MergerCtx,
+    query: &[f32],
+    rp: &RoutePlan,
+    mut partials: Vec<QueryResult>,
+    promote_k: usize,
+) -> Result<Vec<QueryResult>, String> {
+    let Some(pred) = &ctx.route else {
+        return Ok(partials);
+    };
+    if rp.probe {
+        ctx.route_stats.record_probe(probe_recall_sample(&partials, &rp.predicted, promote_k));
+        pred.observe_topk(&topk_owner_counts(&partials, &ctx.owners, promote_k));
+        return Ok(partials);
+    }
+    if rp.selective() {
+        let tail = promote_tail(&partials, promote_k);
+        if pred.should_escalate(tail, rp) {
+            let mut esc = Vec::with_capacity(rp.skipped.len());
+            for &s in &rp.skipped {
+                let (job, rx) = Job::with_channel(WorkerRequest::Reduce(query.to_vec()));
+                if ctx.worker_txs[s].send(job).is_err() {
+                    return Err("partition worker gone".into());
+                }
+                esc.push(rx);
+            }
+            ctx.route_stats.add_escalation(esc.len());
+            for rx in esc {
+                partials.push(recv_partial(&rx)?);
+            }
+            // escalated queries carry full-coverage evidence — feed the
+            // heat EWMA (selected-only top-ks are biased toward the
+            // shards already predicted hot, so those are not fed)
+            pred.observe_topk(&topk_owner_counts(&partials, &ctx.owners, promote_k));
+        }
+    }
+    Ok(partials)
+}
+
+/// The promote set's tail reduced score over `partials` — the `k`-th
+/// best candidate by [`promote_cmp`] order. `f32::MIN` when the union
+/// holds fewer than one candidate (an empty promote set is never safe,
+/// so it always escalates).
+fn promote_tail(partials: &[QueryResult], promote_k: usize) -> f32 {
+    let mut cand: Vec<(f32, u32)> = partials
+        .iter()
+        .flat_map(|p| p.reduced.iter().copied().zip(p.ids.iter().copied()))
+        .collect();
+    cand.sort_by(promote_cmp);
+    cand.truncate(promote_k.min(SERVE.topk).max(1));
+    cand.last().map(|c| c.0).unwrap_or(f32::MIN)
+}
+
+/// One live recall sample from a full-fan-out probe: the fraction of the
+/// *true* promote set (over every shard's partial) the predicted top-M
+/// subset would have found on its own. Measured on stage-1 promoted ids
+/// — exactly the candidates a selective query would have fetched.
+/// `partials[i]` must be shard `i`'s partial (probes scatter to all
+/// shards in order).
+fn probe_recall_sample(partials: &[QueryResult], predicted: &[usize], promote_k: usize) -> f64 {
+    let promote = |take: &dyn Fn(usize) -> bool| -> Vec<u32> {
+        let mut cand: Vec<(f32, u32)> = partials
+            .iter()
+            .enumerate()
+            .filter(|(s, _)| take(*s))
+            .flat_map(|(_, p)| p.reduced.iter().copied().zip(p.ids.iter().copied()))
+            .collect();
+        cand.sort_by(promote_cmp);
+        cand.truncate(promote_k.min(SERVE.topk));
+        cand.into_iter().map(|c| c.1).collect()
+    };
+    let full = promote(&|_| true);
+    if full.is_empty() {
+        return 1.0;
+    }
+    let subset = promote(&|s| predicted.contains(&s));
+    let hit = full.iter().filter(|id| subset.contains(id)).count();
+    hit as f64 / full.len() as f64
+}
+
+/// Per-shard contribution counts of the merged promote set (the heat
+/// EWMA's evidence): how many of the global top `promote_k` each
+/// partition owns. Ownership is by global-id range, so the counts do not
+/// depend on partial arrival order.
+fn topk_owner_counts(partials: &[QueryResult], owners: &[Range<u32>], promote_k: usize) -> Vec<u64> {
+    let mut cand: Vec<(f32, u32)> = partials
+        .iter()
+        .flat_map(|p| p.reduced.iter().copied().zip(p.ids.iter().copied()))
+        .collect();
+    cand.sort_by(promote_cmp);
+    cand.truncate(promote_k.min(SERVE.topk));
+    let mut counts = vec![0u64; owners.len()];
+    for (_, id) in cand {
+        if let Some(p) = owners.iter().position(|r| r.contains(&id)) {
+            counts[p] += 1;
+        }
+    }
+    counts
 }
 
 /// Promote the global top `promote_k` from gathered reduce legs: exactly
@@ -1965,6 +2281,90 @@ mod tests {
         assert!(Router::partitioned_with(Vec::new(), FetchMode::AfterMerge).is_err());
         assert!(Router::partitioned_with(Vec::new(), FetchMode::Adaptive).is_err());
         assert!(Router::partitioned_adaptive(Vec::new(), AdaptiveConfig::default()).is_err());
+        let corpus = ServingCorpus::synthetic(1, 3);
+        let parts = corpus.partitions(1).unwrap();
+        let pred = Arc::new(
+            AffinityPredictor::from_partitions(&parts, RouteConfig::top_m(1)).unwrap(),
+        );
+        assert!(
+            Router::partitioned_routed(Vec::new(), FetchMode::AfterMerge, pred.clone()).is_err()
+        );
+        assert!(Router::partitioned_reactor_routed(
+            Vec::new(),
+            FetchMode::AfterMerge,
+            ReactorConfig::default(),
+            pred
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn route_query_defaults_to_full_fanout_without_a_predictor() {
+        let rp = route_query(None, 3, &[0.0; 4], None);
+        assert_eq!(rp.legs, vec![0, 1, 2]);
+        assert!(!rp.selective() && !rp.probe);
+    }
+
+    #[test]
+    fn route_query_shrinks_m_at_the_shrink_m_rung() {
+        let corpus = ServingCorpus::synthetic_clustered(4, 4, 0x51);
+        let parts = corpus.partitions(4).unwrap();
+        let mut cfg = RouteConfig::top_m(4);
+        cfg.probe_every = 0;
+        let pred = Arc::new(AffinityPredictor::from_partitions(&parts, cfg).unwrap());
+        let q = vec![0.2f32; SERVE.full_dim];
+        let normal = ShedPlan {
+            rung: Rung::Normal,
+            promote_k: SERVE.topk,
+            stage1_only: false,
+            tenant: 0,
+        };
+        assert_eq!(route_query(Some(&pred), 4, &q, Some(&normal)).legs.len(), 4);
+        let shed = ShedPlan { rung: Rung::ShrinkM, ..normal };
+        assert_eq!(route_query(Some(&pred), 4, &q, Some(&shed)).legs.len(), 2);
+        // deeper rungs keep the shrink (the ladder never widens fan-out
+        // while degraded)
+        let deep = ShedPlan { rung: Rung::Stage1Only, stage1_only: true, ..normal };
+        assert_eq!(route_query(Some(&pred), 4, &q, Some(&deep)).legs.len(), 2);
+    }
+
+    #[test]
+    fn promote_tail_is_the_kth_best_reduced_score() {
+        let a = partial(&[1, 2], &[0.9, 0.5], &[0.0, 0.0]);
+        let b = partial(&[7], &[0.7], &[0.0]);
+        let parts = vec![a, b];
+        assert_eq!(promote_tail(&parts, 1), 0.9);
+        assert_eq!(promote_tail(&parts, 2), 0.7);
+        assert_eq!(promote_tail(&parts, 3), 0.5);
+        // deeper than the union: tail is the worst candidate
+        assert_eq!(promote_tail(&parts, 10), 0.5);
+        assert_eq!(promote_tail(&[], 4), f32::MIN, "empty promote set never looks safe");
+    }
+
+    #[test]
+    fn probe_recall_counts_subset_coverage_of_the_true_promote_set() {
+        // shard 0 holds the two best candidates, shard 1 one, shard 2 one
+        let parts = vec![
+            partial(&[1, 2], &[0.9, 0.8], &[0.0, 0.0]),
+            partial(&[10], &[0.7], &[0.0]),
+            partial(&[20], &[0.6], &[0.0]),
+        ];
+        assert_eq!(probe_recall_sample(&parts, &[0, 1, 2], 4), 1.0);
+        assert_eq!(probe_recall_sample(&parts, &[0, 1], 4), 0.75);
+        assert_eq!(probe_recall_sample(&parts, &[0], 2), 1.0, "top-2 lives on shard 0");
+        assert_eq!(probe_recall_sample(&parts, &[2], 2), 0.0);
+        assert_eq!(probe_recall_sample(&[], &[0], 4), 1.0, "no candidates, nothing missed");
+    }
+
+    #[test]
+    fn topk_owner_counts_attribute_by_global_id_range() {
+        let owners = vec![0u32..100, 100..200];
+        let parts = vec![
+            partial(&[1, 2], &[0.9, 0.2], &[0.0, 0.0]),
+            partial(&[150], &[0.5], &[0.0]),
+        ];
+        assert_eq!(topk_owner_counts(&parts, &owners, 2), vec![1, 1]);
+        assert_eq!(topk_owner_counts(&parts, &owners, 3), vec![2, 1]);
     }
 
     #[test]

@@ -15,11 +15,20 @@
 //!
 //! ```text
 //! rung 0  Normal        full service (configured fetch mode, full k)
-//! rung 1  ShrinkK       shrink the promote set: fewer stage-2 fetches
-//! rung 2  Stage1Only    reduced-score answers only: zero stage-2 reads
-//! rung 3  TightTier     + clamp the DRAM tier budget (shed memory rent)
-//! rung 4  Backpressure  + reject new queries once the queue is full
+//! rung 1  ShrinkM       halve selective-routing fan-out (no-op unrouted)
+//! rung 2  ShrinkK       shrink the promote set: fewer stage-2 fetches
+//! rung 3  Stage1Only    reduced-score answers only: zero stage-2 reads
+//! rung 4  TightTier     + clamp the DRAM tier budget (shed memory rent)
+//! rung 5  Backpressure  + reject new queries once the queue is full
 //! ```
+//!
+//! [`Rung::ShrinkM`] is the cheapest rung because it sheds *stage-1*
+//! legs, which answers keep surviving: on a selectively routed router
+//! (`--route topm:M`) the shared `route_query` helper halves M (floor 1)
+//! and suppresses full-fan-out probes for plans at or above this rung,
+//! before any answer-visible degradation. On an unrouted router the plan
+//! still carries full `promote_k`, so the rung costs nothing — the
+//! ladder just passes through it one window sooner.
 //!
 //! Escalation: one rung per tripped guardrail window (latency percentile
 //! over budget, or queue depth over the bar). The depth guardrail alone
@@ -91,6 +100,10 @@ pub struct SloConfig {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Rung {
     Normal,
+    /// Halve the selective-routing fan-out M (and suppress probes) —
+    /// free on unrouted routers, so it sits below every answer-visible
+    /// degradation. Enforced by `route_query` in the parent module.
+    ShrinkM,
     ShrinkK,
     Stage1Only,
     TightTier,
@@ -98,22 +111,30 @@ pub enum Rung {
 }
 
 impl Rung {
-    pub const ALL: [Rung; 5] =
-        [Rung::Normal, Rung::ShrinkK, Rung::Stage1Only, Rung::TightTier, Rung::Backpressure];
+    pub const ALL: [Rung; 6] = [
+        Rung::Normal,
+        Rung::ShrinkM,
+        Rung::ShrinkK,
+        Rung::Stage1Only,
+        Rung::TightTier,
+        Rung::Backpressure,
+    ];
 
     pub fn level(self) -> usize {
         match self {
             Rung::Normal => 0,
-            Rung::ShrinkK => 1,
-            Rung::Stage1Only => 2,
-            Rung::TightTier => 3,
-            Rung::Backpressure => 4,
+            Rung::ShrinkM => 1,
+            Rung::ShrinkK => 2,
+            Rung::Stage1Only => 3,
+            Rung::TightTier => 4,
+            Rung::Backpressure => 5,
         }
     }
 
     pub fn name(self) -> &'static str {
         match self {
             Rung::Normal => "normal",
+            Rung::ShrinkM => "shrink-m",
             Rung::ShrinkK => "shrink-k",
             Rung::Stage1Only => "stage1-only",
             Rung::TightTier => "tight-tier",
@@ -628,7 +649,9 @@ impl OverloadController {
 
     fn plan(&self, rung: Rung, tenant: u32) -> ShedPlan {
         match rung {
-            Rung::Normal => {
+            // ShrinkM degrades only the routing fan-out (route_query keys
+            // on the plan's rung level); the answer path stays full.
+            Rung::Normal | Rung::ShrinkM => {
                 ShedPlan { rung, promote_k: self.cfg.full_k, stage1_only: false, tenant }
             }
             Rung::ShrinkK => {
@@ -798,6 +821,7 @@ mod tests {
     fn tripped_windows_escalate_in_ladder_order_and_saturate() {
         let c = ctrl(0);
         let expect = [
+            Rung::ShrinkM,
             Rung::ShrinkK,
             Rung::Stage1Only,
             Rung::TightTier,
@@ -809,7 +833,7 @@ mod tests {
             assert_eq!(c.rung(), want);
         }
         let r = c.report();
-        assert_eq!(r.escalations, 4);
+        assert_eq!(r.escalations, 5);
         assert_eq!(r.de_escalations, 0);
         assert!(r.windows.iter().all(|w| w.tripped));
     }
@@ -817,6 +841,10 @@ mod tests {
     #[test]
     fn plans_follow_the_rung() {
         let c = ctrl(0);
+        c.force_rung(Rung::ShrinkM);
+        let p = c.try_admit().unwrap();
+        assert_eq!((p.rung, p.promote_k, p.stage1_only), (Rung::ShrinkM, 16, false));
+        c.on_complete(1_000.0);
         c.force_rung(Rung::ShrinkK);
         let p = c.try_admit().unwrap();
         assert_eq!((p.promote_k, p.stage1_only), (4, false));
@@ -835,14 +863,14 @@ mod tests {
     fn de_escalation_requires_a_healthy_streak_under_the_margin() {
         let c = ctrl(0);
         drive_window(&c, 5_000.0);
-        assert_eq!(c.rung(), Rung::ShrinkK);
+        assert_eq!(c.rung(), Rung::ShrinkM);
         // within budget but above margin×budget (0.5 · 100µs = 50µs at
         // p50): neither tripped nor healthy — the rung holds
         drive_window(&c, 80.0);
-        assert_eq!(c.rung(), Rung::ShrinkK, "in-band window must hold the rung");
+        assert_eq!(c.rung(), Rung::ShrinkM, "in-band window must hold the rung");
         // first clean window: still holding (streak 1 < 2)
         drive_window(&c, 10.0);
-        assert_eq!(c.rung(), Rung::ShrinkK);
+        assert_eq!(c.rung(), Rung::ShrinkM);
         // second consecutive clean window: step down
         drive_window(&c, 10.0);
         assert_eq!(c.rung(), Rung::Normal);
@@ -854,14 +882,14 @@ mod tests {
         let c = ctrl(0);
         drive_window(&c, 5_000.0);
         drive_window(&c, 5_000.0);
-        assert_eq!(c.rung(), Rung::Stage1Only);
+        assert_eq!(c.rung(), Rung::ShrinkK);
         drive_window(&c, 10.0); // streak 1
         drive_window(&c, 5_000.0); // trip: streak back to 0, escalate
-        assert_eq!(c.rung(), Rung::TightTier);
+        assert_eq!(c.rung(), Rung::Stage1Only);
         drive_window(&c, 10.0); // streak 1 again — not 2
-        assert_eq!(c.rung(), Rung::TightTier);
+        assert_eq!(c.rung(), Rung::Stage1Only);
         drive_window(&c, 10.0);
-        assert_eq!(c.rung(), Rung::Stage1Only, "only now does it step down");
+        assert_eq!(c.rung(), Rung::ShrinkK, "only now does it step down");
     }
 
     #[test]
@@ -878,9 +906,9 @@ mod tests {
         assert_eq!(r.rung, Rung::Backpressure);
         assert!(rejected > 0, "the final rung must reject");
         assert_eq!(r.rejected, rejected);
-        // depth crossing escalates one rung per admission: 4 rungs past
-        // the bar of 16 → at most 20 in flight, the rest rejected
-        assert!(r.in_flight <= 16 + 4, "queue must stay bounded, got {}", r.in_flight);
+        // depth crossing escalates one rung per admission: 5 rungs past
+        // the bar of 16 → at most 21 in flight, the rest rejected
+        assert!(r.in_flight <= 16 + 5, "queue must stay bounded, got {}", r.in_flight);
         assert_eq!(r.admitted as usize, r.in_flight);
         assert_eq!(r.admitted + r.rejected, 40, "every arrival accounted for");
     }
@@ -918,7 +946,7 @@ mod tests {
             },
             Some(tier.clone()),
         );
-        for want in [Rung::ShrinkK, Rung::Stage1Only] {
+        for want in [Rung::ShrinkM, Rung::ShrinkK, Rung::Stage1Only] {
             drive_window(&c, 5_000.0);
             assert_eq!(c.rung(), want);
             assert_eq!(tier.permille(), 1000, "clamp must wait for TightTier");
@@ -974,7 +1002,7 @@ mod tests {
         let c = ctrl(0);
         // escalate one rung with a genuinely slow window
         drive_window(&c, 5_000.0);
-        assert_eq!(c.rung(), Rung::ShrinkK);
+        assert_eq!(c.rung(), Rung::ShrinkM);
         // pure-error traffic: windows must keep closing (errors count
         // toward the boundary), but with no latencies they are neither
         // tripped nor healthy — the rung holds rather than the ladder
@@ -986,7 +1014,7 @@ mod tests {
         }
         let r = c.report();
         assert_eq!(r.windows.len(), before + 3, "error-only windows still close");
-        assert_eq!(r.rung, Rung::ShrinkK, "an all-error window is not healthy");
+        assert_eq!(r.rung, Rung::ShrinkM, "an all-error window is not healthy");
         assert!(r.windows.iter().skip(before).all(|w| !w.healthy && !w.tripped));
         // healthy traffic returns: the samples buffer starts clean (no
         // leftovers from before the storm) and two clean windows step
@@ -1015,7 +1043,10 @@ mod tests {
     #[test]
     fn rung_names_and_order_are_stable() {
         let names: Vec<&str> = Rung::ALL.iter().map(|r| r.name()).collect();
-        assert_eq!(names, vec!["normal", "shrink-k", "stage1-only", "tight-tier", "backpressure"]);
+        assert_eq!(
+            names,
+            vec!["normal", "shrink-m", "shrink-k", "stage1-only", "tight-tier", "backpressure"]
+        );
         for w in Rung::ALL.windows(2) {
             assert!(w[0].level() < w[1].level());
             assert_eq!(w[0].up(), w[1]);
@@ -1054,7 +1085,7 @@ mod tests {
         let cold = c.try_admit_tenant(1).unwrap();
         assert_eq!(
             (cold.rung, cold.promote_k, cold.stage1_only),
-            (Rung::Normal, 16, false),
+            (Rung::ShrinkM, 16, false),
             "within-quota tenant gets one rung of grace"
         );
         c.force_rung(Rung::Stage1Only);
@@ -1124,7 +1155,7 @@ mod tests {
         // effort bar 0.5·1.2·0.7 = 0.42 (over)
         c.force_rung(Rung::ShrinkK);
         let premium = c.try_admit_tenant(0).unwrap();
-        assert_eq!(premium.rung, Rung::Normal, "premium keeps headroom at equal share");
+        assert_eq!(premium.rung, Rung::ShrinkM, "premium keeps headroom at equal share");
         let best_effort = c.try_admit_tenant(1).unwrap();
         assert_eq!(best_effort.rung, Rung::ShrinkK, "best-effort sheds first");
         let r = c.report();

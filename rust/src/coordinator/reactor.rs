@@ -39,6 +39,14 @@
 //! reactor-owned measurement-bus cursors, and governed queries (a
 //! [`ShedPlan`] from the overload ladder) dispatch degraded and feed
 //! their completions back.
+//!
+//! Selective routing composes the same way: `admit` resolves the shared
+//! `route_query` plan (scattering only the predicted legs), and the
+//! Phase-1 completion runs the same safety-net epilogue as the threaded
+//! merger's `settle_route` — probes sample live recall, weak tails
+//! escalate to the skipped shards — except non-blocking: an escalation
+//! wave re-enters `Phase1` with fresh legs instead of parking on its
+//! receivers.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -46,9 +54,10 @@ use std::time::{Duration, Instant};
 
 use super::batcher::Job;
 use super::{
-    dispatch_fetch_legs, merge_partials, promote_reduced, rank_fetched, resolve_dispatch,
-    stage1_result, AdaptiveConfig, AdaptiveController, FetchMode, OverloadController, QueryResult,
-    Resp, ShedPlan, WorkerRequest,
+    dispatch_fetch_legs, merge_partials, probe_recall_sample, promote_reduced, promote_tail,
+    rank_fetched, resolve_dispatch, route_query, stage1_result, topk_owner_counts, AdaptiveConfig,
+    AdaptiveController, AffinityPredictor, FetchMode, OverloadController, QueryResult, Resp,
+    RoutePlan, RouteSpec, RouteStats, ShedPlan, WorkerRequest,
 };
 use crate::storage::WindowCursor;
 use crate::util::stats::LatencyHist;
@@ -85,6 +94,15 @@ pub struct ReactorReport {
     pub peak_pending: u64,
     /// The configured admission window.
     pub admission: usize,
+    /// Stage-1 search/reduce legs dispatched, escalation legs included —
+    /// the routing counters shared with `ServeStats::routed_shards`.
+    pub routed_shards: u64,
+    /// Queries that took the escalation safety net.
+    pub escalations: u64,
+    /// Full-fan-out probe queries.
+    pub probes: u64,
+    /// Mean live recall over probe samples (1.0 before the first probe).
+    pub probe_recall: f64,
 }
 
 /// Shared counters the loop updates and the router snapshots.
@@ -93,24 +111,34 @@ pub(crate) struct ReactorMetrics {
     completed: AtomicU64,
     peak_pending: AtomicU64,
     admission: u64,
+    /// Router-level routing counters — the same [`RouteStats`] the
+    /// reactor's admit/escalation paths feed, so the report and
+    /// `Router::merged_stats` read one source of truth.
+    route: Arc<RouteStats>,
 }
 
 impl ReactorMetrics {
-    pub(crate) fn new(admission: usize) -> Self {
+    pub(crate) fn new(admission: usize, route: Arc<RouteStats>) -> Self {
         ReactorMetrics {
             admitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             peak_pending: AtomicU64::new(0),
             admission: admission as u64,
+            route,
         }
     }
 
     pub(crate) fn report(&self) -> ReactorReport {
+        let (legs, escalations, probes, recall) = self.route.snapshot();
         ReactorReport {
             admitted: self.admitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             peak_pending: self.peak_pending.load(Ordering::Relaxed),
             admission: self.admission as usize,
+            routed_shards: legs,
+            escalations,
+            probes,
+            probe_recall: recall,
         }
     }
 }
@@ -141,6 +169,11 @@ pub(crate) struct ReactorCtx {
     pub(crate) fetch: FetchMode,
     pub(crate) metrics: Arc<ReactorMetrics>,
     pub(crate) admission: usize,
+    /// The affinity predictor when this router routes selectively — the
+    /// reactor hosts the same safety nets as the threaded merger.
+    pub(crate) route: Option<Arc<AffinityPredictor>>,
+    /// Shared routing counters (legs / escalations / probes / recall).
+    pub(crate) route_stats: Arc<RouteStats>,
 }
 
 /// One pending scatter leg: its response channel and, once swept, its
@@ -167,9 +200,18 @@ enum QState {
     },
     Phase1 {
         legs: Vec<Leg>,
+        /// Partials gathered by an earlier wave: an escalation fires a
+        /// second scatter and the first wave's answers park here.
+        done: Vec<QueryResult>,
         query: Vec<f32>,
         promote_k: usize,
         stage1_only: bool,
+        /// Routing context for the safety-net epilogue; `None` on
+        /// unrouted and stage1-only queries (degraded service is governed
+        /// at rungs that suppress the nets, same as the threaded seam).
+        route: Option<RoutePlan>,
+        /// The escalation wave already fired — never escalate twice.
+        escalated: bool,
     },
     Phase2 {
         legs: Vec<Leg>,
@@ -299,24 +341,37 @@ pub(crate) fn run(ctx: ReactorCtx, inbox: mpsc::Receiver<ReactorJob>) {
 fn admit(ctx: &ReactorCtx, job: ReactorJob) -> InFlight {
     let ReactorJob { submitted, query, resp, plan } = job;
     let governed = plan.map(|p| p.tenant);
-    let (stage1_only, promote_k, eff) =
+    let rplan = route_query(ctx.route.as_ref(), ctx.worker_txs.len(), &query, plan.as_ref());
+    let (stage1_only, promote_k, mut eff) =
         resolve_dispatch(plan, ctx.fetch, ctx.adaptive.as_ref(), &ctx.adaptive_feed);
+    // selective routers always run fetch-after-merge — same coercion,
+    // same reason as the threaded seam's `dispatch_partition`
+    let routed = ctx
+        .route
+        .as_ref()
+        .map(|r| matches!(r.config().spec, RouteSpec::TopM(_)))
+        .unwrap_or(false);
+    if routed {
+        eff = FetchMode::AfterMerge;
+    }
     let two_phase = stage1_only || eff == FetchMode::AfterMerge;
-    let legs: Vec<Leg> = ctx
-        .worker_txs
+    ctx.route_stats.add_legs(rplan.legs.len());
+    let legs: Vec<Leg> = rplan
+        .legs
         .iter()
-        .map(|tx| {
+        .map(|&p| {
             let (j, rx) = Job::with_channel(if two_phase {
                 WorkerRequest::Reduce(query.clone())
             } else {
                 WorkerRequest::Search(query.clone())
             });
-            let _ = tx.send(j);
+            let _ = ctx.worker_txs[p].send(j);
             Leg::new(rx)
         })
         .collect();
     let state = if two_phase {
-        QState::Phase1 { legs, query, promote_k, stage1_only }
+        let route = (!stage1_only && routed).then_some(rplan);
+        QState::Phase1 { legs, done: Vec::new(), query, promote_k, stage1_only, route, escalated: false }
     } else {
         QState::Gather { legs }
     };
@@ -371,8 +426,48 @@ fn advance(ctx: &ReactorCtx, f: &mut InFlight) -> Progress {
     let state = std::mem::replace(&mut f.state, QState::Gather { legs: Vec::new() });
     match state {
         QState::Gather { legs } => Progress::Done(merge_partials(collect(legs))),
-        QState::Phase1 { legs, query, promote_k, stage1_only } => {
-            let (cand, batch_size) = match promote_reduced(collect(legs), promote_k) {
+        QState::Phase1 { legs, mut done, query, promote_k, stage1_only, route, escalated } => {
+            done.extend(collect(legs));
+            let partials = done;
+            // ---- routing epilogue: the reactor's copy of the threaded
+            // merger's `settle_route`, non-blocking — an escalation wave
+            // re-enters Phase1 with fresh legs instead of parking -------
+            if let (Some(rp), Some(pred)) = (route.as_ref(), ctx.route.as_ref()) {
+                if rp.probe {
+                    ctx.route_stats
+                        .record_probe(probe_recall_sample(&partials, &rp.predicted, promote_k));
+                    pred.observe_topk(&topk_owner_counts(&partials, &ctx.owners, promote_k));
+                } else if rp.selective() && !escalated {
+                    let tail = promote_tail(&partials, promote_k);
+                    if pred.should_escalate(tail, rp) {
+                        let mut esc = Vec::with_capacity(rp.skipped.len());
+                        for &s in &rp.skipped {
+                            let (j, rx) = Job::with_channel(WorkerRequest::Reduce(query.clone()));
+                            if ctx.worker_txs[s].send(j).is_err() {
+                                return Progress::Done(Err("partition worker gone".into()));
+                            }
+                            esc.push(Leg::new(rx));
+                        }
+                        ctx.route_stats.add_escalation(esc.len());
+                        f.state = QState::Phase1 {
+                            legs: esc,
+                            done: partials,
+                            query,
+                            promote_k,
+                            stage1_only,
+                            route,
+                            escalated: true,
+                        };
+                        return Progress::Moved;
+                    }
+                } else if escalated {
+                    // the escalation wave just landed: full coverage —
+                    // feed the heat EWMA (same rule as the threaded seam:
+                    // selected-only top-ks are biased, so never fed)
+                    pred.observe_topk(&topk_owner_counts(&partials, &ctx.owners, promote_k));
+                }
+            }
+            let (cand, batch_size) = match promote_reduced(partials, promote_k) {
                 Ok(x) => x,
                 Err(e) => return Progress::Done(Err(e)),
             };
@@ -437,16 +532,24 @@ mod tests {
 
     #[test]
     fn metrics_report_round_trips_counters() {
-        let m = ReactorMetrics::new(256);
+        let route = Arc::new(RouteStats::default());
+        let m = ReactorMetrics::new(256, route.clone());
         m.admitted.fetch_add(7, Ordering::Relaxed);
         m.completed.fetch_add(5, Ordering::Relaxed);
         m.peak_pending.fetch_max(3, Ordering::Relaxed);
         m.peak_pending.fetch_max(2, Ordering::Relaxed); // max, not last
+        route.add_legs(4);
+        route.add_escalation(2); // 1 escalation, +2 legs
+        route.record_probe(0.5);
         let r = m.report();
         assert_eq!(r.admitted, 7);
         assert_eq!(r.completed, 5);
         assert_eq!(r.peak_pending, 3);
         assert_eq!(r.admission, 256);
+        assert_eq!(r.routed_shards, 6);
+        assert_eq!(r.escalations, 1);
+        assert_eq!(r.probes, 1);
+        assert!((r.probe_recall - 0.5).abs() < 1e-9);
     }
 
     #[test]

@@ -68,8 +68,8 @@ fn print_help() {
          \x20 simulate   --blk N --read-pct N [--measure-us N] [--p-bch P] [--ch-bw GBps]\n\
          \x20 figures    [--all | --fig3 --tab2 --fig4 --tab4 --fig5 --fig6 --fig7 --fig8 --fig10 --fig11 --fig12 --fig13 --fig14 --fig15] [--out DIR] [--quick]\n\
          \x20 config     --dump\n\
-         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N[,map=interleave]]|uring[:path=FILE]] [--pace afap|wall:S] [--fetch spec|merge|adaptive] [--serve threads|reactor] [--admission N] [--tier none|dram:mb=N,rule=breakeven|5min|5s|clock]\n\
-         \x20 smoke      [--queries N] [--json] [--out FILE] [--baseline FILE] [--tolerance T]\n\
+         \x20 serve      [--shards N] [--queries N] [--artifacts DIR] [--backend mem|model|sim[:shards=N[,map=interleave]]|uring[:path=FILE]] [--pace afap|wall:S] [--fetch spec|merge|adaptive] [--serve threads|reactor] [--admission N] [--route all|topm:M] [--tier none|dram:mb=N,rule=breakeven|5min|5s|clock]\n\
+         \x20 smoke      [--queries N] [--json] [--out FILE] [--trajectory FILE] [--baseline FILE] [--tolerance T]\n\
          \x20 soak       [--secs-per-phase S] [--shards N] [--max-arrivals N] [--depth N] [--p99-us US] [--backend SPEC] [--tier SPEC] [--tenant-classes N] [--json] [--out FILE] [--baseline FILE] [--seed N]"
     );
 }
@@ -396,6 +396,13 @@ fn cmd_smoke(args: &[String]) -> Result<(), String> {
         "T",
         Some("0.25"),
         "relative tolerance when the baseline has no 'tolerance' field",
+    )
+    .opt(
+        "trajectory",
+        "FILE",
+        None,
+        "also write the compact perf-trajectory artifact (BENCH_SMOKE.json at the repo root \
+         via 'make smoke'): per-cell reads/query, stage-1 legs/query, and p99",
     );
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
     let queries = p.usize("queries").map_err(|e| e.to_string())?.unwrap();
@@ -409,6 +416,11 @@ fn cmd_smoke(args: &[String]) -> Result<(), String> {
         let out = PathBuf::from(p.str("out").unwrap());
         fivemin::smoke::write_artifact(&out, &cells).map_err(|e| e.to_string())?;
         println!("wrote {}", out.display());
+    }
+    if let Some(traj) = p.str("trajectory") {
+        let traj = PathBuf::from(traj);
+        fivemin::smoke::write_trajectory(&traj, &cells).map_err(|e| e.to_string())?;
+        println!("wrote {}", traj.display());
     }
     if let Some(base_path) = p.str("baseline") {
         let baseline =
@@ -594,6 +606,14 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         "N",
         Some("4096"),
         "reactor admission window: max tracked in-flight queries (reactor seam only)",
+    )
+    .opt(
+        "route",
+        "all|topm:M",
+        Some("all"),
+        "stage-1 routing: full fan-out, or heat-aware selective routing to the top-M \
+         predicted shards (escalation + periodic full-fan-out probes keep recall honest; \
+         forces after-merge fetch for routed queries)",
     );
     let p = spec.parse(args).map_err(|e| cli_err(e, &spec))?;
     let shards = p.usize("shards").map_err(|e| e.to_string())?.unwrap();
@@ -626,12 +646,14 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         }
         other => return Err(format!("unknown serve seam '{other}' (want threads|reactor)")),
     };
+    let route = fivemin::coordinator::RouteSpec::parse(p.str("route").unwrap())
+        .map_err(|e| e.to_string())?;
     let queries = p.usize("queries").map_err(|e| e.to_string())?.unwrap();
     let dir = p
         .str("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(fivemin::runtime::default_artifacts_dir);
-    serve_demo(dir, shards, queries, backend, fetch, reactor).map_err(|e| e.to_string())
+    serve_demo(dir, shards, queries, backend, fetch, reactor, route).map_err(|e| e.to_string())
 }
 
 fn serve_demo(
@@ -641,23 +663,43 @@ fn serve_demo(
     backend: fivemin::storage::BackendSpec,
     fetch: fivemin::coordinator::FetchMode,
     reactor: Option<fivemin::coordinator::ReactorConfig>,
+    route: fivemin::coordinator::RouteSpec,
 ) -> anyhow::Result<()> {
     use fivemin::coordinator::batcher::BatchPolicy;
-    use fivemin::coordinator::{Coordinator, Router, ServingCorpus};
+    use fivemin::coordinator::{
+        AffinityPredictor, Coordinator, RouteConfig, RouteSpec, Router, ServingCorpus,
+    };
     use fivemin::util::rng::Rng;
     use std::sync::Arc;
 
-    let corpus = Arc::new(ServingCorpus::synthetic(shards, 42));
+    // Selective routing demos serve a clustered corpus (clusters aligned
+    // with the partition cut) — on an iid corpus every shard is equally
+    // relevant and cutting fan-out necessarily costs recall.
+    let routed = matches!(route, RouteSpec::TopM(_));
+    let corpus = Arc::new(if routed {
+        ServingCorpus::synthetic_clustered(shards, shards, 42)
+    } else {
+        ServingCorpus::synthetic(shards, 42)
+    });
     println!(
         "corpus: {} vectors across {shards} shard(s); one partition worker per shard, \
-         '{}' backend per worker, '{}' stage-2 fetch, '{}' serving seam",
+         '{}' backend per worker, '{}' stage-2 fetch, '{}' serving seam, '{}' routing",
         corpus.n,
         backend.kind().name(),
         fetch.name(),
-        if reactor.is_some() { "reactor" } else { "threads" }
+        if reactor.is_some() { "reactor" } else { "threads" },
+        route.name()
     );
-    let workers = corpus
-        .partitions(shards)?
+    let parts = corpus.partitions(shards)?;
+    let pred = if routed {
+        Some(Arc::new(AffinityPredictor::from_partitions(
+            &parts,
+            RouteConfig { spec: route, ..RouteConfig::default() },
+        )?))
+    } else {
+        None
+    };
+    let workers = parts
         .into_iter()
         .map(|part| {
             // each worker's device holds exactly its slice of vectors
@@ -665,9 +707,11 @@ fn serve_demo(
             Coordinator::start(dir.clone(), Arc::new(part), BatchPolicy::default(), spec)
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
-    let router = match reactor {
-        Some(cfg) => Router::partitioned_reactor(workers, fetch, cfg)?,
-        None => Router::partitioned_with(workers, fetch)?,
+    let router = match (reactor, pred) {
+        (Some(cfg), Some(p)) => Router::partitioned_reactor_routed(workers, fetch, cfg, p)?,
+        (Some(cfg), None) => Router::partitioned_reactor(workers, fetch, cfg)?,
+        (None, Some(p)) => Router::partitioned_routed(workers, fetch, p)?,
+        (None, None) => Router::partitioned_with(workers, fetch)?,
     };
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
@@ -707,6 +751,17 @@ fn serve_demo(
         println!(
             "phases   : {} reduce legs, {} fetch legs (two-phase protocol)",
             st.reduce_legs, st.fetch_legs
+        );
+    }
+    if routed {
+        println!(
+            "routing  : {:.2} stage-1 legs/query (vs {} full fan-out), {} escalations, \
+             {} probes (live recall {:.2})",
+            st.routed_shards as f64 / queries.max(1) as f64,
+            router.n_workers(),
+            st.escalations,
+            st.probes,
+            st.probe_recall
         );
     }
     if let Some(rep) = router.reactor_report() {

@@ -1,11 +1,14 @@
 //! Perf-smoke harness (`fivemin smoke`): a short serving-scenario matrix
 //! — `{mem, sim} × {spec, merge, adaptive} × shards ∈ {1, 2}`, plus
-//! DRAM-tier cells `{mem, sim} × {clock, breakeven} × {2 MB, 8 MB}` and
+//! DRAM-tier cells `{mem, sim} × {clock, breakeven} × {2 MB, 8 MB}`,
 //! reactor-seam cells `{mem, sim} × {spec, merge, adaptive}` served through
-//! `Router::partitioned_reactor` — measured end to end and gated against
-//! a checked-in baseline, so a regression in the router protocols, the
-//! adaptive control loop, the tier's accounting, or the completion-driven
-//! serving core is caught mechanically in CI rather than by eyeball.
+//! `Router::partitioned_reactor`, and selective-routing cells
+//! `{mem, sim} × {route=all, route=topm:2}` on a 4-shard clustered corpus
+//! — measured end to end and gated against a checked-in baseline, so a
+//! regression in the router protocols, the adaptive control loop, the
+//! tier's accounting, the completion-driven serving core, or the
+//! affinity router's fan-out cut is caught mechanically in CI rather
+//! than by eyeball.
 //!
 //! Per cell the harness reports stage-2 reads per query (submitted and
 //! post-tier device), the p50/p99 end-to-end (merged-answer) latency,
@@ -35,6 +38,13 @@
 //!   set so a silently dropped tier cell fails the gate. The absolute
 //!   hit rate is reported, not gated — it shifts with any intentional
 //!   change to the workload shape, while the invariants above cannot.
+//! * **Route cells are gated relative to the same run's `route=all`
+//!   peer**: the `topm` cell's stage-1 legs/query must stay under
+//!   M plus the deterministic probe quota (and a bounded escalation
+//!   allowance — a predictor that escalates on most queries is not
+//!   cutting work), its p99 must be no worse than the full-fan-out peer
+//!   (with same-run headroom), and the probe-measured live recall must
+//!   clear a floor. The baseline's `route_cells` list pins the set.
 //! * **Latencies are reported, not gated by default** (shared CI runners
 //!   jitter far more than 25%); a baseline cell may opt in to an absolute
 //!   ceiling via `p99_budget_us`.
@@ -47,7 +57,8 @@ use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::{
-    AdaptiveConfig, Coordinator, FetchMode, ReactorConfig, Router, ServingCorpus,
+    AdaptiveConfig, AffinityPredictor, Coordinator, FetchMode, ReactorConfig, RouteConfig,
+    RouteSpec, Router, ServingCorpus,
 };
 use crate::runtime::default_artifacts_dir;
 use crate::storage::{BackendSpec, TierRule, TierSpec};
@@ -60,7 +71,39 @@ use crate::util::table::Table;
 /// v2: tier cells + device_reads_per_query / tier_hits / tier_hit_rate.
 /// v3: per-cell `serve` seam field + reactor cells pinned by
 /// `reactor_cells`.
-pub const SCHEMA: &str = "fivemin-bench-smoke/v3";
+/// v4: per-cell `stage1_legs_per_query` + selective-routing cells
+/// (`route` segment/field) pinned by `route_cells`.
+pub const SCHEMA: &str = "fivemin-bench-smoke/v4";
+
+/// Schema tag for the perf-trajectory artifact (`BENCH_SMOKE.json` at the
+/// repo root): the compact per-cell series future PRs diff against.
+pub const TRAJECTORY_SCHEMA: &str = "fivemin-bench-trajectory/v1";
+
+/// Shard count for the selective-routing cells (the fan-out cut needs
+/// room to show: M = N/2 on 4 shards halves stage-1 work).
+const ROUTE_SHARDS: usize = 4;
+
+/// Predicted-set size for the `route=topm` cells.
+const ROUTE_M: usize = 2;
+
+/// Probe cadence for the route cells (kept explicit so the gate's probe
+/// quota and the measurement agree).
+const ROUTE_PROBE_EVERY: u64 = 32;
+
+/// Escalation allowance in the route gate, as a fraction of queries: a
+/// predictor may escalate a minority of queries and still win; one that
+/// escalates more than this is not cutting work and should fail.
+const ROUTE_ESC_ALLOWANCE: f64 = 0.25;
+
+/// p99 headroom for the route-vs-full-fan-out comparison. Same-run
+/// relative bounds jitter less than absolute budgets, but shared runners
+/// still wobble; the point is catching a tail *regression*, not a tie.
+const ROUTE_P99_HEADROOM: f64 = 0.5;
+
+/// Smoke-level floor on probe-measured live recall. The strict 0.95
+/// floor is pinned by the seeded equivalence suite; the smoke gate
+/// leaves slack for its handful of probe samples.
+const ROUTE_RECALL_FLOOR: f64 = 0.9;
 
 /// Reference arrival rate (accesses/s) for the smoke tier cells: sized so
 /// the break-even bar bites within a 48-query cell (only the hottest
@@ -69,9 +112,10 @@ pub const SCHEMA: &str = "fivemin-bench-smoke/v3";
 const TIER_SMOKE_RATE: f64 = 100.0;
 
 /// Default queries per cell. Enough for the adaptive controller (tuned to
-/// an 8-query window here) to sample several windows, small enough that
-/// the whole 26-cell matrix (12 static + 8 tier + 6 reactor) stays a
-/// smoke test.
+/// an 8-query window here) to sample several windows — and for the route
+/// cells' probe cadence to fire more than once — small enough that the
+/// whole 30-cell matrix (12 static + 8 tier + 6 reactor + 4 route) stays
+/// a smoke test.
 pub const DEFAULT_QUERIES: usize = 48;
 
 /// One measured (backend, fetch mode, shard count[, tier][, seam])
@@ -88,6 +132,9 @@ pub struct SmokeCell {
     /// Serving seam: `threads` (merger + finisher threads) or `reactor`
     /// (completion-driven event loop).
     pub serve: &'static str,
+    /// Routing spec label (`all` | `topm:M`) when the cell runs the
+    /// affinity router; `None` for the legacy unrouted cells.
+    pub route: Option<String>,
     pub queries: usize,
     /// Stage-2 reads *submitted* per query (coordinator-side counter,
     /// settled against the backend snapshot). With a tier, each lands on
@@ -105,6 +152,15 @@ pub struct SmokeCell {
     /// Fraction of queries the adaptive controller dispatched as
     /// fetch-after-merge (0 for static cells).
     pub merge_share: f64,
+    /// Stage-1 search/reduce legs dispatched per query (escalation legs
+    /// included). Exact for every partition cell: N unrouted, ≈M routed.
+    pub stage1_legs_per_query: f64,
+    /// Full-fan-out probe queries (route cells only; 0 otherwise).
+    pub probes: u64,
+    /// Escalated queries (route cells only; 0 otherwise).
+    pub escalations: u64,
+    /// Probe-measured live recall (1.0 when nothing was probed).
+    pub probe_recall: f64,
 }
 
 impl SmokeCell {
@@ -116,6 +172,10 @@ impl SmokeCell {
         if let Some(t) = &self.tier {
             key.push('/');
             key.push_str(t);
+        }
+        if let Some(r) = &self.route {
+            key.push_str("/route=");
+            key.push_str(r);
         }
         if self.serve == "reactor" {
             key.push_str("/reactor");
@@ -131,8 +191,17 @@ fn run_cell(
     queries: usize,
     tier: Option<TierSpec>,
     serve: &'static str,
+    route: Option<RouteSpec>,
 ) -> Result<SmokeCell> {
-    let corpus = Arc::new(ServingCorpus::synthetic(shards, 0x5140C + shards as u64));
+    // Route cells serve a *clustered* corpus (clusters aligned with the
+    // partition cut): selective routing is only meaningful when shards
+    // differ — on an iid corpus every shard is equally relevant and a
+    // top-M cut necessarily loses recall.
+    let corpus = Arc::new(if route.is_some() {
+        ServingCorpus::synthetic_clustered(shards, shards, 0x5140C + shards as u64)
+    } else {
+        ServingCorpus::synthetic(shards, 0x5140C + shards as u64)
+    });
     let device = match backend {
         "mem" => BackendSpec::Mem,
         "sim" => BackendSpec::small_sim(4096),
@@ -142,8 +211,17 @@ fn run_cell(
         Some(t) => device.tiered(t.clone()),
         None => device,
     };
-    let workers = corpus
-        .partitions(shards)?
+    let parts = corpus.partitions(shards)?;
+    // the predictor sketches each partition's centroid before the parts
+    // move into their Coordinators
+    let pred = match route {
+        Some(spec) => Some(Arc::new(AffinityPredictor::from_partitions(
+            &parts,
+            RouteConfig { spec, probe_every: ROUTE_PROBE_EVERY, ..RouteConfig::default() },
+        )?)),
+        None => None,
+    };
+    let workers = parts
         .into_iter()
         .map(|part| {
             let spec = spec.clone().for_capacity(part.n as u64);
@@ -158,27 +236,34 @@ fn run_cell(
     // small window so the controller actually samples within a
     // smoke-sized run; rare refresh keeps probes out of the tail
     let acfg = AdaptiveConfig { window: 8, refresh: 32, ..AdaptiveConfig::default() };
-    let router = match serve {
-        "reactor" => Router::partitioned_reactor(
+    let router = match (serve, pred) {
+        ("reactor", Some(p)) => Router::partitioned_reactor_routed(
+            workers,
+            fetch,
+            ReactorConfig { adaptive: acfg, ..ReactorConfig::default() },
+            p,
+        )?,
+        ("reactor", None) => Router::partitioned_reactor(
             workers,
             fetch,
             ReactorConfig { adaptive: acfg, ..ReactorConfig::default() },
         )?,
-        "threads" => match fetch {
+        ("threads", Some(p)) => Router::partitioned_routed(workers, fetch, p)?,
+        ("threads", None) => match fetch {
             FetchMode::Adaptive => Router::partitioned_adaptive(workers, acfg)?,
             mode => Router::partitioned_with(workers, mode)?,
         },
-        other => return Err(anyhow!("unknown serve seam '{other}'")),
+        (other, _) => return Err(anyhow!("unknown serve seam '{other}'")),
     };
     // one shared query stream per (backend, shards): every fetch mode
     // serves identical queries, so cells differ only in protocol. Tier
-    // cells draw zipf-popular targets instead — reuse is the thing a
-    // tier cell exists to measure.
+    // and route cells draw zipf-popular targets instead — reuse (tier)
+    // and skew (routing's reason to exist) are what those cells measure.
     let mut rng = Rng::new(0x5140C);
     let zipf = Zipf::new(corpus.n, 1.1);
     let pending: Vec<_> = (0..queries)
         .map(|_| {
-            let target = if tier.is_some() {
+            let target = if tier.is_some() || route.is_some() {
                 zipf.sample(&mut rng).min(corpus.n - 1)
             } else {
                 rng.below(corpus.n as u64) as usize
@@ -220,6 +305,7 @@ fn run_cell(
         shards,
         tier: tier.as_ref().map(|t| t.label()),
         serve,
+        route: route.as_ref().map(|s| s.name()),
         queries,
         reads_per_query: st.ssd_reads as f64 / queries.max(1) as f64,
         device_reads_per_query: snap.stats.stage2_reads as f64 / queries.max(1) as f64,
@@ -228,6 +314,10 @@ fn run_cell(
         p50_us: lat.percentile(0.5) / 1e3,
         p99_us: lat.percentile(0.99) / 1e3,
         merge_share,
+        stage1_legs_per_query: st.routed_shards as f64 / queries.max(1) as f64,
+        probes: st.probes,
+        escalations: st.escalations,
+        probe_recall: st.probe_recall,
     })
 }
 
@@ -239,7 +329,7 @@ pub fn run_matrix(queries: usize) -> Result<Vec<SmokeCell>> {
     for backend in ["mem", "sim"] {
         for shards in [1usize, 2] {
             for fetch in [FetchMode::Speculative, FetchMode::AfterMerge, FetchMode::Adaptive] {
-                cells.push(run_cell(backend, fetch, shards, queries, None, "threads")?);
+                cells.push(run_cell(backend, fetch, shards, queries, None, "threads", None)?);
             }
         }
     }
@@ -257,6 +347,7 @@ pub fn run_matrix(queries: usize) -> Result<Vec<SmokeCell>> {
                     queries,
                     Some(tier),
                     "threads",
+                    None,
                 )?);
             }
         }
@@ -269,7 +360,25 @@ pub fn run_matrix(queries: usize) -> Result<Vec<SmokeCell>> {
     // shows up as drifted reads per query against the threaded peer.
     for backend in ["mem", "sim"] {
         for fetch in [FetchMode::Speculative, FetchMode::AfterMerge, FetchMode::Adaptive] {
-            cells.push(run_cell(backend, fetch, 2, queries, None, "reactor")?);
+            cells.push(run_cell(backend, fetch, 2, queries, None, "reactor", None)?);
+        }
+    }
+    // Selective-routing cells: a 4-shard clustered corpus served
+    // fetch-after-merge, once with full fan-out (`route=all`, the gate's
+    // same-run peer) and once with the affinity router cutting stage-1
+    // fan-out to top-M (`route=topm:2`). Zipf traffic keeps a skewed
+    // cluster heat, which is the regime the predictor exists for.
+    for backend in ["mem", "sim"] {
+        for spec in [RouteSpec::All, RouteSpec::TopM(ROUTE_M)] {
+            cells.push(run_cell(
+                backend,
+                FetchMode::AfterMerge,
+                ROUTE_SHARDS,
+                queries,
+                None,
+                "threads",
+                Some(spec),
+            )?);
         }
     }
     Ok(cells)
@@ -279,18 +388,21 @@ pub fn run_matrix(queries: usize) -> Result<Vec<SmokeCell>> {
 pub fn table(cells: &[SmokeCell]) -> Table {
     let mut t = Table::new(
         "bench-smoke: serve scenario matrix — stage-2 reads/query (submitted \
-         and post-tier device) and end-to-end latency per \
-         {backend, fetch, shards[, tier], seam} cell",
+         and post-tier device), stage-1 legs/query, and end-to-end latency \
+         per {backend, fetch, shards[, tier][, route], seam} cell",
         &[
             "backend",
             "fetch",
             "shards",
             "tier",
+            "route",
             "serve",
             "queries",
             "reads_per_query",
             "dev_reads_per_query",
+            "s1_legs_per_query",
             "tier_hit_rate",
+            "probe_recall",
             "p50_us",
             "p99_us",
             "merge_share",
@@ -302,11 +414,14 @@ pub fn table(cells: &[SmokeCell]) -> Table {
             c.fetch.name().to_string(),
             format!("{}", c.shards),
             c.tier.clone().unwrap_or_else(|| "-".into()),
+            c.route.clone().unwrap_or_else(|| "-".into()),
             c.serve.to_string(),
             format!("{}", c.queries),
             format!("{:.1}", c.reads_per_query),
             format!("{:.1}", c.device_reads_per_query),
+            format!("{:.2}", c.stage1_legs_per_query),
             if c.tier.is_some() { format!("{:.2}", c.tier_hit_rate) } else { "-".into() },
+            if c.route.is_some() { format!("{:.2}", c.probe_recall) } else { "-".into() },
             format!("{:.1}", c.p50_us),
             format!("{:.1}", c.p99_us),
             format!("{:.2}", c.merge_share),
@@ -331,11 +446,18 @@ pub fn to_json(cells: &[SmokeCell]) -> Json {
                 ("p50_us", Json::Num(c.p50_us)),
                 ("p99_us", Json::Num(c.p99_us)),
                 ("merge_share", Json::Num(c.merge_share)),
+                ("stage1_legs_per_query", Json::Num(c.stage1_legs_per_query)),
             ];
             if let Some(t) = &c.tier {
                 fields.push(("tier", Json::Str(t.clone())));
                 fields.push(("tier_hits", Json::Num(c.tier_hits as f64)));
                 fields.push(("tier_hit_rate", Json::Num(c.tier_hit_rate)));
+            }
+            if let Some(r) = &c.route {
+                fields.push(("route", Json::Str(r.clone())));
+                fields.push(("probes", Json::Num(c.probes as f64)));
+                fields.push(("escalations", Json::Num(c.escalations as f64)));
+                fields.push(("probe_recall", Json::Num(c.probe_recall)));
             }
             Json::obj(fields)
         })
@@ -344,6 +466,39 @@ pub fn to_json(cells: &[SmokeCell]) -> Json {
         ("schema", Json::Str(SCHEMA.to_string())),
         ("cells", Json::Arr(arr)),
     ])
+}
+
+/// Serialize the compact perf-trajectory document: one entry per cell
+/// with just the numbers future PRs diff — stage-2 reads/query, stage-1
+/// legs/query, and the p99. `make smoke` writes this as
+/// `BENCH_SMOKE.json` at the repo root so the perf trajectory is a
+/// first-class reviewed artifact, not a CI-only upload.
+pub fn trajectory_json(cells: &[SmokeCell]) -> Json {
+    let arr: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("cell", Json::Str(c.key())),
+                ("reads_per_query", Json::Num(c.reads_per_query)),
+                ("stage1_legs_per_query", Json::Num(c.stage1_legs_per_query)),
+                ("p99_us", Json::Num(c.p99_us)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::Str(TRAJECTORY_SCHEMA.to_string())),
+        ("cells", Json::Arr(arr)),
+    ])
+}
+
+/// Write the perf-trajectory artifact (creating parent directories).
+pub fn write_trajectory(path: &Path, cells: &[SmokeCell]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    std::fs::write(path, format!("{}\n", trajectory_json(cells)))
+        .with_context(|| format!("writing {}", path.display()))
 }
 
 /// Write the artifact (creating parent directories).
@@ -371,7 +526,11 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
     // static cells: compare against the checked-in expectation (reactor
     // cells are gated against their in-run threaded peer instead)
     for c in cells {
-        if c.fetch == FetchMode::Adaptive || c.tier.is_some() || c.serve == "reactor" {
+        if c.fetch == FetchMode::Adaptive
+            || c.tier.is_some()
+            || c.route.is_some()
+            || c.serve == "reactor"
+        {
             continue;
         }
         let key = c.key();
@@ -417,6 +576,7 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
                     && p.shards == c.shards
                     && p.fetch == m
                     && p.tier.is_none()
+                    && p.route.is_none()
                     && p.serve == "threads"
             })
         };
@@ -451,6 +611,7 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
                 && p.shards == c.shards
                 && p.fetch == c.fetch
                 && p.tier.is_none()
+                && p.route.is_none()
                 && p.serve == "threads"
         });
         let Some(peer) = peer else {
@@ -487,7 +648,7 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
     // cell (both are equivalence-pinned); adaptive reactor cells were
     // already bounded by the threaded static peers above.
     for c in cells {
-        if c.serve != "reactor" || c.tier.is_some() {
+        if c.serve != "reactor" || c.tier.is_some() || c.route.is_some() {
             continue;
         }
         let peer = cells.iter().find(|p| {
@@ -495,6 +656,7 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
                 && p.shards == c.shards
                 && p.fetch == c.fetch
                 && p.tier.is_none()
+                && p.route.is_none()
                 && p.serve == "threads"
         });
         let Some(peer) = peer else {
@@ -513,9 +675,79 @@ pub fn gate(cells: &[SmokeCell], baseline: &Json, default_tol: f64) -> Vec<Strin
             ));
         }
     }
-    // tier / reactor scenarios the baseline pins but the run never
-    // produced (a silently dropped scenario must fail the gate)
-    for pin in ["tier_cells", "reactor_cells"] {
+    // route cells: the topm cell is gated against the same run's
+    // route=all peer — stage-1 legs/query must stay under M plus the
+    // deterministic probe quota and a bounded escalation allowance, its
+    // p99 must not regress past the full-fan-out peer (with headroom),
+    // and the probe-measured live recall must clear the floor. The
+    // route=all cell itself must report *exactly* N legs/query: it is
+    // the affinity code path with the cut disabled, so any drift there
+    // is a routing accounting bug, not noise.
+    for c in cells {
+        let Some(label) = &c.route else { continue };
+        if label == "all" {
+            if (c.stage1_legs_per_query - c.shards as f64).abs() > 1e-6 {
+                failures.push(format!(
+                    "cell {}: route=all legs/query {:.2} != shard count {} — \
+                     routing accounting drifted",
+                    c.key(),
+                    c.stage1_legs_per_query,
+                    c.shards
+                ));
+            }
+            continue;
+        }
+        let Some(m) = label.strip_prefix("topm:").and_then(|m| m.parse::<f64>().ok()) else {
+            failures.push(format!("cell {}: unparseable route label '{label}'", c.key()));
+            continue;
+        };
+        let q = c.queries.max(1) as f64;
+        // probe quota: every probe_every-th query fans out to all N, so
+        // the skipped (N−M) shards each cost ceil(q/probe_every) extra
+        // legs across the run; escalations may add up to the allowance.
+        let extra_per_skipped =
+            ((q / ROUTE_PROBE_EVERY as f64).ceil() + ROUTE_ESC_ALLOWANCE * q) / q;
+        let bound = m + (c.shards as f64 - m) * extra_per_skipped;
+        if c.stage1_legs_per_query > bound {
+            failures.push(format!(
+                "cell {}: legs/query {:.2} over the selective bound {bound:.2} \
+                 (M={m} + probe/escalation quota) — the fan-out cut is not happening",
+                c.key(),
+                c.stage1_legs_per_query
+            ));
+        }
+        if c.probe_recall < ROUTE_RECALL_FLOOR {
+            failures.push(format!(
+                "cell {}: probe-measured recall {:.3} under floor {ROUTE_RECALL_FLOOR}",
+                c.key(),
+                c.probe_recall
+            ));
+        }
+        let peer = cells.iter().find(|p| {
+            p.backend == c.backend
+                && p.shards == c.shards
+                && p.fetch == c.fetch
+                && p.serve == c.serve
+                && p.route.as_deref() == Some("all")
+        });
+        let Some(peer) = peer else {
+            failures.push(format!("cell {}: route=all peer missing from run", c.key()));
+            continue;
+        };
+        if c.p99_us > peer.p99_us * (1.0 + ROUTE_P99_HEADROOM) {
+            failures.push(format!(
+                "cell {}: p99 {:.1}us worse than full-fan-out peer {:.1}us \
+                 (+{:.0}% headroom) — routing must not cost tail latency",
+                c.key(),
+                c.p99_us,
+                peer.p99_us,
+                ROUTE_P99_HEADROOM * 100.0
+            ));
+        }
+    }
+    // tier / reactor / route scenarios the baseline pins but the run
+    // never produced (a silently dropped scenario must fail the gate)
+    for pin in ["tier_cells", "reactor_cells", "route_cells"] {
         if let Some(list) = baseline.get(&[pin]).and_then(|t| t.as_arr()) {
             for want in list {
                 let Some(key) = want.as_str() else { continue };
@@ -558,6 +790,7 @@ mod tests {
             shards,
             tier: None,
             serve: "threads",
+            route: None,
             queries: 8,
             reads_per_query: rpq,
             device_reads_per_query: rpq,
@@ -566,6 +799,10 @@ mod tests {
             p50_us: p99 / 2.0,
             p99_us: p99,
             merge_share: if fetch == FetchMode::Adaptive { 0.5 } else { 0.0 },
+            stage1_legs_per_query: shards as f64,
+            probes: 0,
+            escalations: 0,
+            probe_recall: 1.0,
         }
     }
 
@@ -582,6 +819,7 @@ mod tests {
             shards: 2,
             tier: Some(label.to_string()),
             serve: "threads",
+            route: None,
             queries: 8,
             reads_per_query: submitted_rpq,
             device_reads_per_query: device_rpq,
@@ -590,6 +828,10 @@ mod tests {
             p50_us: 100.0,
             p99_us: 200.0,
             merge_share: 0.0,
+            stage1_legs_per_query: 2.0,
+            probes: 0,
+            escalations: 0,
+            probe_recall: 1.0,
         }
     }
 
@@ -796,6 +1038,116 @@ mod tests {
         assert!(gate(&run, &b, 0.25).is_empty());
     }
 
+    fn route_cell(label: &str, legs: f64, p99: f64) -> SmokeCell {
+        SmokeCell {
+            route: Some(label.to_string()),
+            stage1_legs_per_query: legs,
+            probes: 2,
+            escalations: 2,
+            probe_recall: 0.97,
+            queries: 48,
+            ..cell("mem", FetchMode::AfterMerge, 4, 64.0, p99)
+        }
+    }
+
+    #[test]
+    fn gate_passes_route_cells_under_the_selective_bound() {
+        let mut run = matched_run();
+        run.push(route_cell("all", 4.0, 500.0));
+        // bound at M=2, 4 shards, 48 queries: 2 + 2*((2 + 12)/48) ≈ 2.58
+        run.push(route_cell("topm:2", 2.25, 400.0));
+        let b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        let failures = gate(&run, &b, 0.25);
+        assert!(failures.is_empty(), "unexpected failures: {failures:?}");
+    }
+
+    #[test]
+    fn gate_catches_a_route_cell_that_stopped_cutting_fanout() {
+        let mut run = matched_run();
+        run.push(route_cell("all", 4.0, 500.0));
+        run.push(route_cell("topm:2", 3.8, 400.0)); // nearly full fan-out
+        let b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("selective bound"), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_catches_route_p99_regressions_and_recall_floor() {
+        let mut run = matched_run();
+        run.push(route_cell("all", 4.0, 500.0));
+        run.push(route_cell("topm:2", 2.25, 900.0)); // > 500 * 1.5
+        let b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("full-fan-out peer"), "{failures:?}");
+        run.last_mut().unwrap().p99_us = 400.0;
+        run.last_mut().unwrap().probe_recall = 0.5;
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("under floor"), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_requires_the_route_all_peer_and_exact_all_accounting() {
+        let b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        // a topm cell with no route=all peer in the run fails
+        let mut run = matched_run();
+        run.push(route_cell("topm:2", 2.25, 400.0));
+        let failures = gate(&run, &b, 0.25);
+        assert!(
+            failures.iter().any(|f| f.contains("route=all peer missing")),
+            "{failures:?}"
+        );
+        // a route=all cell that doesn't report exactly N legs/query is an
+        // accounting bug, not noise
+        let mut run = matched_run();
+        run.push(route_cell("all", 3.5, 500.0));
+        run.push(route_cell("topm:2", 2.25, 400.0));
+        let failures = gate(&run, &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("accounting drifted"), "{failures:?}");
+    }
+
+    #[test]
+    fn gate_flags_route_cells_pinned_but_not_measured() {
+        let mut b = baseline(&[("mem/spec/2", 128.0), ("mem/merge/2", 64.0)]);
+        if let Json::Obj(fields) = &mut b {
+            fields.insert(
+                "route_cells".into(),
+                Json::Arr(vec![Json::Str("mem/merge/4/route=topm:2".into())]),
+            );
+        }
+        let failures = gate(&matched_run(), &b, 0.25);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("route_cells"), "{failures:?}");
+        let mut run = matched_run();
+        run.push(route_cell("all", 4.0, 500.0));
+        run.push(route_cell("topm:2", 2.25, 400.0));
+        assert!(gate(&run, &b, 0.25).is_empty());
+    }
+
+    #[test]
+    fn trajectory_json_round_trips() {
+        let mut run = matched_run();
+        run.push(route_cell("all", 4.0, 500.0));
+        run.push(route_cell("topm:2", 2.25, 400.0));
+        let doc = trajectory_json(&run);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get(&["schema"]).unwrap().as_str(), Some(TRAJECTORY_SCHEMA));
+        let cells = parsed.get(&["cells"]).unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 5);
+        assert_eq!(
+            cells[4].get(&["cell"]).and_then(|v| v.as_str()),
+            Some("mem/merge/4/route=topm:2")
+        );
+        assert_eq!(
+            cells[4].get(&["stage1_legs_per_query"]).and_then(|v| v.as_f64()),
+            Some(2.25)
+        );
+        assert_eq!(cells[4].get(&["p99_us"]).and_then(|v| v.as_f64()), Some(400.0));
+    }
+
     #[test]
     fn artifact_json_round_trips() {
         let mut run = matched_run();
@@ -867,5 +1219,18 @@ mod tests {
             assert!(got.contains(&w.as_str()), "baseline reactor_cells missing {w}");
         }
         assert_eq!(got.len(), want.len(), "unexpected extra reactor cells pinned");
+        // and the route scenario set: exactly what run_matrix runs
+        let route_keys = doc.get(&["route_cells"]).and_then(|t| t.as_arr()).expect("route_cells");
+        let mut want = Vec::new();
+        for backend in ["mem", "sim"] {
+            for spec in ["all", "topm:2"] {
+                want.push(format!("{backend}/merge/{ROUTE_SHARDS}/route={spec}"));
+            }
+        }
+        let got: Vec<&str> = route_keys.iter().filter_map(|k| k.as_str()).collect();
+        for w in &want {
+            assert!(got.contains(&w.as_str()), "baseline route_cells missing {w}");
+        }
+        assert_eq!(got.len(), want.len(), "unexpected extra route cells pinned");
     }
 }

@@ -23,13 +23,23 @@
 //! `device reads == tier misses`, `tier hits + misses == submitted
 //! stage-2 reads`. A KV arm pins GET equivalence through the migrated
 //! `BackedStore` the same way.
+//!
+//! A fifth arm pins the selective-routing safety nets: with a routed
+//! (`topm:M`) router forced into all-probes (`probe_every = 1`) or
+//! all-escalations (huge `escalate_margin`), every answer must stay
+//! bit-identical to the unrouted control — full coverage through either
+//! net must reach the same merge. Dedicated tests below pin the
+//! degenerate `M = N` router against today's router on both seams and
+//! hold the live `probe_recall` floor (≥ 0.95) at `M = N/2` under zipf
+//! traffic on a clustered corpus.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use fivemin::coordinator::batcher::BatchPolicy;
 use fivemin::coordinator::{
-    Coordinator, FetchMode, QueryResult, ReactorConfig, Router, ServingCorpus,
+    AffinityPredictor, Coordinator, FetchMode, QueryResult, ReactorConfig, RouteConfig,
+    RouteSpec, Router, ServingCorpus,
 };
 use fivemin::runtime::{default_artifacts_dir, SERVE};
 use fivemin::storage::{BackendSpec, TierRule, TierSpec};
@@ -56,6 +66,11 @@ struct Trial {
     /// in the inbox behind the window — the equivalence claim must hold
     /// under that pressure too.
     admission: usize,
+    /// Routed-arm fan-out (`topm:route_m`), 1..=n_parts.
+    route_m: usize,
+    /// Routed-arm seam: the probe/escalation bit-identity claims must
+    /// hold on both, so trials alternate.
+    route_reactor: bool,
 }
 
 fn gen_trial(rng: &mut Rng) -> Trial {
@@ -82,6 +97,8 @@ fn gen_trial(rng: &mut Rng) -> Trial {
         tier_rule: [TierRule::Clock, TierRule::Breakeven][rng.below(2) as usize],
         tier_fetch: [FetchMode::Speculative, FetchMode::AfterMerge][rng.below(2) as usize],
         admission: [1usize, 2, 4096][rng.below(3) as usize],
+        route_m: 1 + rng.below(n_parts as u64) as usize,
+        route_reactor: rng.below(2) == 1,
     }
 }
 
@@ -138,6 +155,38 @@ fn start_router(
     match reactor {
         Some(cfg) => Router::partitioned_reactor(workers, fetch, cfg),
         None => Router::partitioned_with(workers, fetch),
+    }
+    .map_err(|e| e.to_string())
+}
+
+/// Start a heat-aware routed router (fetch-after-merge — routed scatters
+/// force it anyway) with the given routing config, on either seam.
+fn start_routed(
+    corpus: &Arc<ServingCorpus>,
+    n_parts: usize,
+    worker_spec: &BackendSpec,
+    cfg: RouteConfig,
+    reactor: Option<ReactorConfig>,
+) -> Result<Router, String> {
+    let parts = corpus.partitions(n_parts).map_err(|e| e.to_string())?;
+    let pred =
+        Arc::new(AffinityPredictor::from_partitions(&parts, cfg).map_err(|e| e.to_string())?);
+    let workers = parts
+        .into_iter()
+        .map(|part| {
+            let spec = worker_spec.clone().for_capacity(part.n as u64);
+            Coordinator::start(
+                default_artifacts_dir(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                spec,
+            )
+        })
+        .collect::<anyhow::Result<Vec<_>>>()
+        .map_err(|e| e.to_string())?;
+    match reactor {
+        Some(rc) => Router::partitioned_reactor_routed(workers, FetchMode::AfterMerge, rc, pred),
+        None => Router::partitioned_routed(workers, FetchMode::AfterMerge, pred),
     }
     .map_err(|e| e.to_string())
 }
@@ -295,6 +344,73 @@ fn check_trial(t: &Trial) -> Result<(), String> {
             "{label}: device stage-2 {} + stage-2 hits {} != submitted {}",
             snap.stats.stage2_reads, ts.stage2_hits, st.ssd_reads
         ));
+    }
+
+    // ---- routed arm: either safety net forced wide open means every
+    // query gets full shard coverage, so answers must match the unrouted
+    // control bit for bit — probes via the deterministic cadence,
+    // escalations via an unbeatable margin. heat_blend = 0 keeps the
+    // predictor a pure function of the query (order-insensitive).
+    for (net, rcfg) in [
+        (
+            "all-probes",
+            RouteConfig { probe_every: 1, heat_blend: 0.0, ..RouteConfig::top_m(t.route_m) },
+        ),
+        (
+            "all-escalations",
+            RouteConfig {
+                probe_every: 0,
+                escalate_margin: 1e9,
+                heat_blend: 0.0,
+                ..RouteConfig::top_m(t.route_m)
+            },
+        ),
+    ] {
+        let reactor = t
+            .route_reactor
+            .then(|| ReactorConfig { admission: t.admission, ..Default::default() });
+        let seam = if reactor.is_some() { "reactor" } else { "threads" };
+        let router = start_routed(&corpus, t.n_parts, &worker_spec, rcfg, reactor)?;
+        let got = serve_all(|q| router.submit(q), &queries)?;
+        for (qi, (a, b)) in base.iter().zip(&got).enumerate() {
+            if a.ids != b.ids || a.scores != b.scores || a.reduced != b.reduced {
+                return Err(format!(
+                    "routed({net})/{seam} topm:{} answers differ from the unrouted \
+                     control on query {qi}",
+                    t.route_m
+                ));
+            }
+        }
+        let st = router.settled_stats(SETTLE);
+        // routed scatters run fetch-after-merge: exactly k stage-2 reads
+        // per query, routing or not
+        if st.ssd_reads != t.n_queries as u64 * k {
+            return Err(format!(
+                "routed({net})/{seam} issued {} stage-2 reads, want {}",
+                st.ssd_reads,
+                t.n_queries as u64 * k
+            ));
+        }
+        // full coverage through either net: every query cost n_parts legs
+        let want_legs = (t.n_queries * t.n_parts) as u64;
+        if st.routed_shards != want_legs {
+            return Err(format!(
+                "routed({net})/{seam} dispatched {} stage-1 legs, want {want_legs}",
+                st.routed_shards
+            ));
+        }
+        // the nets only exist when the plan is actually selective
+        let selective = t.route_m < t.n_parts;
+        let want_probes = if selective && net == "all-probes" { t.n_queries as u64 } else { 0 };
+        let want_esc =
+            if selective && net == "all-escalations" { t.n_queries as u64 } else { 0 };
+        if st.probes != want_probes || st.escalations != want_esc {
+            return Err(format!(
+                "routed({net})/{seam} counted {} probes / {} escalations, \
+                 want {want_probes} / {want_esc}",
+                st.probes, st.escalations
+            ));
+        }
     }
     Ok(())
 }
@@ -601,6 +717,79 @@ fn tiered_router_is_bit_identical_across_capacities() {
             assert_eq!(snap.stats.reads, ts.misses, "mb={mb} {}", rule.name());
         }
     }
+}
+
+/// The degenerate routing spec: a `topm:N` router holds nothing back, so
+/// it must behave exactly like today's unrouted router on both seams —
+/// bit-identical answers, the after-merge read cost, full-N stage-1
+/// legs, and zero probes/escalations (nothing is ever skipped, so the
+/// safety nets have nothing to do).
+#[test]
+fn routed_m_equals_n_matches_the_unrouted_router_bit_for_bit() {
+    let n = 4usize;
+    let corpus = Arc::new(ServingCorpus::synthetic_clustered(n, n, 3371));
+    let mut qrng = Rng::new(811);
+    let queries: Vec<Vec<f32>> = (0..6)
+        .map(|_| corpus.query_near(qrng.below(corpus.n as u64) as usize, 0.02, &mut qrng))
+        .collect();
+    let control = start_router(&corpus, n, &BackendSpec::Mem, FetchMode::AfterMerge, None).unwrap();
+    let base = serve_all(|q| control.submit(q), &queries).unwrap();
+    for reactor in [None, Some(ReactorConfig::default())] {
+        let seam = if reactor.is_some() { "reactor" } else { "threads" };
+        let cfg = RouteConfig { heat_blend: 0.0, ..RouteConfig::top_m(n) };
+        let router = start_routed(&corpus, n, &BackendSpec::Mem, cfg, reactor).unwrap();
+        let got = serve_all(|q| router.submit(q), &queries).unwrap();
+        for (qi, (a, b)) in base.iter().zip(&got).enumerate() {
+            assert_eq!(a.ids, b.ids, "{seam} q{qi}: topm:N ids differ from unrouted");
+            assert_eq!(a.scores, b.scores, "{seam} q{qi}: topm:N scores differ");
+            assert_eq!(a.reduced, b.reduced, "{seam} q{qi}: topm:N reduced differ");
+        }
+        let st = router.settled_stats(SETTLE);
+        assert_eq!(st.ssd_reads, (queries.len() * SERVE.topk) as u64, "{seam}: after-merge cost");
+        assert_eq!(st.routed_shards, (queries.len() * n) as u64, "{seam}: full-N legs");
+        assert_eq!((st.probes, st.escalations), (0, 0), "{seam}: no nets at M=N");
+        assert_eq!(st.probe_recall, 1.0, "{seam}: unmeasured recall reads 1.0");
+    }
+}
+
+/// The live-recall floor from ISSUE 10's acceptance bar: at `M = N/2` on
+/// a clustered corpus under zipf traffic, the deterministic probes'
+/// measured recall of the predicted-M subset against full fan-out must
+/// clear 0.95 — while total stage-1 legs stay strictly below full
+/// fan-out (the fan-out cut is real, not escalated away).
+#[test]
+fn selective_routing_holds_the_recall_floor_under_zipf() {
+    use fivemin::util::rng::Zipf;
+
+    let n = 4usize;
+    let corpus = Arc::new(ServingCorpus::synthetic_clustered(n, n, 6089));
+    // default heat_blend so the EWMA feed path is exercised end to end;
+    // probes every 4th query give 16 recall samples over 64 queries
+    let cfg = RouteConfig { probe_every: 4, ..RouteConfig::top_m(n / 2) };
+    let router = start_routed(&corpus, n, &BackendSpec::Mem, cfg, None).unwrap();
+    let zipf = Zipf::new(corpus.n, 1.1);
+    let mut rng = Rng::new(0x51AB);
+    let queries: Vec<Vec<f32>> = (0..64)
+        .map(|_| {
+            let t = zipf.sample(&mut rng).min(corpus.n - 1);
+            corpus.query_near(t, 0.02, &mut rng)
+        })
+        .collect();
+    serve_all(|q| router.submit(q), &queries).unwrap();
+    let st = router.settled_stats(SETTLE);
+    assert_eq!(st.probes, 16, "deterministic cadence: every 4th of 64 queries probes");
+    assert!(
+        st.probe_recall >= 0.95,
+        "live probe recall {:.3} under the 0.95 floor at M=N/2",
+        st.probe_recall
+    );
+    assert!(
+        st.routed_shards < (queries.len() * n) as u64,
+        "selective routing dispatched {} legs — no cut vs {} full fan-out",
+        st.routed_shards,
+        queries.len() * n
+    );
+    assert_eq!(st.ssd_reads, (queries.len() * SERVE.topk) as u64, "after-merge read cost holds");
 }
 
 /// KV GET equivalence through the migrated `BackedStore`: the same

@@ -151,6 +151,52 @@ fn partitioned_router_scatter_gathers_with_high_recall() {
     assert_eq!(snap.shards.len(), 2, "per-partition snapshots preserved");
 }
 
+/// `Router::settled_stats` on an already-settled router must return as
+/// soon as the storage snapshot reconciles with the coordinator-side
+/// read counters — not after a fixed poll sleep. The serial queries
+/// below guarantee every fetch burst's snapshot has landed before the
+/// call, so the generous timeout must never be approached.
+#[test]
+fn settled_stats_returns_immediately_once_reconciled() {
+    let corpus = Arc::new(ServingCorpus::synthetic(2, 37));
+    let workers: Vec<_> = corpus
+        .partitions(2)
+        .unwrap()
+        .into_iter()
+        .map(|part| {
+            Coordinator::start(
+                artifacts(),
+                Arc::new(part),
+                BatchPolicy::default(),
+                BackendSpec::Mem,
+            )
+            .unwrap()
+        })
+        .collect();
+    let router = Router::partitioned(workers).unwrap();
+    let mut rng = Rng::new(41);
+    for _ in 0..8 {
+        // blocking queries: each answer implies its batch completed, and
+        // a follow-up stats() read forces the snapshot to be visible
+        router
+            .query(corpus.query_near(rng.below(corpus.n as u64) as usize, 0.02, &mut rng))
+            .unwrap();
+    }
+    // settle once (absorbing any final in-flight snapshot), then time
+    // the already-settled call: it must be instant, far under timeout
+    let st = router.settled_stats(Duration::from_secs(10));
+    assert!(st.storage.is_some(), "settled stats carry the snapshot");
+    let t0 = std::time::Instant::now();
+    let again = router.settled_stats(Duration::from_secs(10));
+    let dt = t0.elapsed();
+    assert_eq!(again.ssd_reads, st.ssd_reads, "stable counters on a quiet router");
+    assert!(
+        dt < Duration::from_millis(500),
+        "settled router took {dt:?} — settled_stats must return on reconciliation, \
+         not wait out a poll interval"
+    );
+}
+
 #[test]
 fn malformed_query_rejected_not_fatal() {
     let corpus = Arc::new(ServingCorpus::synthetic(1, 19));
